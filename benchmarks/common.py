@@ -1,0 +1,54 @@
+"""Benchmark harness shared by the per-figure benches.
+
+CPU-hosted JAX measurements: the goal is reproducing the paper's *trends*
+(Figs 2-12) — absolute ops/s on one CPU core is not comparable to the
+paper's 32-core Xeon, and the TPU-absolute story lives in the roofline
+analysis. Sizes are scaled so the full suite runs in minutes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SLSM, SLSMParams
+from repro.core.slsm import lookup_batch
+
+
+def bench_params(**over) -> SLSMParams:
+    """Paper-shaped defaults scaled for CPU benches."""
+    base = dict(R=8, Rn=256, eps=1e-3, D=4, m=1.0, mu=64, max_levels=3,
+                max_range=4096, cand_factor=8)
+    base.update(over)
+    return SLSMParams(**base)
+
+
+def time_inserts(tree: SLSM, keys, vals) -> float:
+    """Returns wall seconds for the insert stream (incl. merges)."""
+    t0 = time.perf_counter()
+    tree.insert(keys, vals)
+    jax.block_until_ready(tree.state.stage_keys)
+    return time.perf_counter() - t0
+
+
+def time_lookups(tree: SLSM, queries, batch: int = 1024,
+                 sparse: bool = True) -> float:
+    """Wall seconds for all lookups, issued in fixed-size jit batches."""
+    import jax.numpy as jnp
+    n = (len(queries) // batch) * batch
+    queries = queries[:n]
+    # warm compile
+    out = lookup_batch(tree.p, tree.state, jnp.asarray(queries[:batch]),
+                       sparse)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for off in range(0, n, batch):
+        out = lookup_batch(tree.p, tree.state,
+                           jnp.asarray(queries[off:off + batch]), sparse)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

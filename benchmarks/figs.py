@@ -1,0 +1,286 @@
+"""One benchmark per paper table/figure (Section 3).
+
+Each function returns CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_params, row, time_inserts, time_lookups
+from repro.core import SLSM
+from repro.core.slsm import (compact_last_level, lookup_batch,
+                             merge_buffer_to_level0, range_query)
+from repro.data import make_kv_workload
+
+N_DEFAULT = 60_000
+N_LOOKUP = 8_192
+
+
+def _fresh(params, n=N_DEFAULT, seed=0, kind="uniform", **wargs):
+    """Build a store from the workload; time only the steady-state 75%
+    (the first quarter warms jit caches and the level structure, so
+    cross-size throughput comparisons are not dominated by compiles)."""
+    w = make_kv_workload(kind, n, seed=seed, **wargs)
+    t = SLSM(params)
+    warm = n // 4
+    time_inserts(t, w.keys[:warm], w.vals[:warm])
+    ins_s = time_inserts(t, w.keys[warm:], w.vals[warm:])
+    return t, w, ins_s * n / max(1, (n - warm))  # scale to per-n rate
+
+
+def fig02_r_sweep():
+    """Fig 2: insert/lookup throughput tradeoff vs number of runs R."""
+    rows = []
+    for r in (2, 4, 8, 16, 32):
+        t, w, ins_s = _fresh(bench_params(R=r), seed=r)
+        lk_s = time_lookups(t, w.lookups[:N_LOOKUP])
+        rows.append(row(f"fig02/R={r}/insert", ins_s / N_DEFAULT * 1e6,
+                        f"inserts_per_s={N_DEFAULT/ins_s:.0f}"))
+        rows.append(row(f"fig02/R={r}/lookup", lk_s / N_LOOKUP * 1e6,
+                        f"lookups_per_s={N_LOOKUP/lk_s:.0f}"))
+    return rows
+
+
+def fig03_buffer_grid():
+    """Fig 3: R x Rn grid (small R x Rn cells need deeper trees)."""
+    rows = []
+    for r in (2, 8, 32):
+        for rn in (64, 256, 1024):
+            t, w, ins_s = _fresh(bench_params(R=r, Rn=rn, max_levels=5),
+                                 n=30_000, seed=r * 100 + rn)
+            lk_s = time_lookups(t, w.lookups[:4096], batch=1024)
+            rows.append(row(
+                f"fig03/R={r}/Rn={rn}", ins_s / 30_000 * 1e6,
+                f"ins_per_s={30_000/ins_s:.0f};lk_per_s={4096/lk_s:.0f}"))
+    return rows
+
+
+def fig04_disk_grid():
+    """Fig 4: D x m grid. Note the paper's own finding reappears
+    structurally: m=0.5 with D=2 gives level growth factor ceil(mD)=1 —
+    no geometric growth (the paper hit file-descriptor exhaustion; we hit
+    level-count exhaustion), so deep trees are required."""
+    rows = []
+    import math as _m
+    for d in (2, 4, 8):
+        for m in (0.5, 1.0):
+            dm = max(1, _m.ceil(m * d))
+            n = 10_000 if dm == 1 else 20_000  # dm=1: linear capacity
+            t, w, ins_s = _fresh(bench_params(D=d, m=m, max_levels=8),
+                                 n=n, seed=int(d * 10 + m * 10))
+            lk_s = time_lookups(t, w.lookups[:4096], batch=1024)
+            rows.append(row(
+                f"fig04/D={d}/m={m}", ins_s / n * 1e6,
+                f"Dm={d*m:.0f};ins_per_s={n/ins_s:.0f};"
+                f"lk_per_s={4096/lk_s:.0f};levels={t.n_levels}"))
+    return rows
+
+
+def fig05_bloom():
+    """Fig 5: Bloom filter FP rate sweep (paper: 3.6k/s -> 340k/s).
+
+    eps=0.9999 degenerates the filter (k=1, saturated bits) == 'off'.
+    Derived column reports the measured disk-run ADMIT RATE on absent
+    keys — the quantity the paper's speedup is made of. On this engine
+    the wall-time effect is muted: the TPU-adapted lookup is a batched
+    vector pipeline whose fixed costs dominate at bench scale, whereas
+    the paper's CPU build pays a pointer-chasing skiplist walk per
+    admitted run (98.9% of CPU time without filters). The filter's
+    *work-elimination* is reproduced exactly (admit ~ eps); on TPU it
+    gates the mu-page HBM reads (see kernels/fence_lookup)."""
+    from repro.core import bloom as BL
+    rows = []
+    for eps, label in ((0.9999, "off"), (0.1, "0.1"), (0.01, "0.01"),
+                       (0.001, "0.001"), (0.0001, "1e-4"), (0.00001, "1e-5")):
+        t, w, _ = _fresh(bench_params(eps=eps, cand_factor=16), seed=5)
+        absent = (w.lookups.astype(np.int64) + 2**30).astype(np.int32)
+        lk_s = time_lookups(t, absent[:N_LOOKUP])  # misses: worst case
+        # measured admit rate over disk runs for absent keys
+        admits, runs = 0.0, 0
+        _, _, kk = t.p.bloom_geometry(t.p.level_cap(0))
+        for lv in t.state.levels:
+            nr = int(lv.n_runs)
+            for d in range(nr):
+                pos = BL.bloom_probe(lv.blooms[d],
+                                     jnp.asarray(absent[:2048]), kk)
+                admits += float(pos.mean())
+                runs += 1
+        rate = admits / max(runs, 1)
+        rows.append(row(f"fig05/eps={label}", lk_s / N_LOOKUP * 1e6,
+                        f"lookups_per_s={N_LOOKUP/lk_s:.0f};"
+                        f"admit_rate={rate:.2e}"))
+    return rows
+
+
+def fig06_range():
+    """Fig 6: range query latency is linear in range size."""
+    t, w, _ = _fresh(bench_params(max_range=16384), seed=6,
+                     key_space=1 << 20)
+    rows = []
+    rq = jax.jit(range_query, static_argnums=0)
+    for span in (1 << 12, 1 << 14, 1 << 16, 1 << 18):
+        lo = 1 << 10
+        out = rq(t.p, t.state, jnp.int32(lo), jnp.int32(lo + span))
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for i in range(8):
+            out = rq(t.p, t.state, jnp.int32(lo + i), jnp.int32(lo + i + span))
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / 8
+        hits = int(out[2])
+        rows.append(row(f"fig06/span={span}", dt * 1e6,
+                        f"hits={hits};us_per_hit={dt*1e6/max(hits,1):.2f}"))
+    return rows
+
+
+def fig07_data_size():
+    """Fig 7: throughput vs dataset size (expect <= logarithmic slowdown)."""
+    rows = []
+    tputs = []
+    for n in (20_000, 60_000, 180_000):
+        t, w, ins_s = _fresh(bench_params(max_levels=4), n=n, seed=7)
+        lk_s = time_lookups(t, w.lookups[:4096], batch=1024)
+        tputs.append(n / ins_s)
+        rows.append(row(f"fig07/n={n}", ins_s / n * 1e6,
+                        f"ins_per_s={n/ins_s:.0f};lk_per_s={4096/lk_s:.0f}"))
+    # slowdown factor across 9x data growth (paper: ~log)
+    rows.append(row("fig07/slowdown_9x", 0.0,
+                    f"tput_ratio={tputs[0]/max(tputs[-1],1e-9):.2f}"))
+    return rows
+
+
+def fig08_workload_mix():
+    """Fig 8: completion time vs update:lookup ratio, R=4 vs R=32."""
+    rows = []
+    n = 40_000
+    for r in (4, 32):
+        for lf in (0.1, 0.5, 0.9):
+            w = make_kv_workload("uniform", n, seed=8, lookup_frac=lf)
+            t = SLSM(bench_params(R=r))
+            t0 = time.perf_counter()
+            t.insert(w.keys, w.vals)
+            _ = time_lookups(t, w.lookups, batch=1024)
+            total = time.perf_counter() - t0
+            n_ops = n + len(w.lookups) // 1024 * 1024
+            rows.append(row(f"fig08/R={r}/lookup_frac={lf}",
+                            total / n_ops * 1e6,
+                            f"total_s={total:.2f}"))
+    return rows
+
+
+def fig09_insert_skew():
+    """Fig 9: insert throughput vs key variance (update-in-place on dups
+    defers merges — low variance = fast)."""
+    rows = []
+    for var in (1e2, 1e4, 1e6, 1e10):
+        t, w, ins_s = _fresh(bench_params(), n=40_000, seed=9,
+                             kind="normal", variance=var)
+        rows.append(row(f"fig09/var={var:.0e}", ins_s / 40_000 * 1e6,
+                        f"ins_per_s={40_000/ins_s:.0f};live={t.n_live}"))
+    return rows
+
+
+def fig10_lookup_skew():
+    """Fig 10: clustered lookups are faster (fewer candidate pages)."""
+    rows = []
+    for var in (1e2, 1e5, 1e8, 1e12):
+        t, w, _ = _fresh(bench_params(cand_factor=16), n=40_000, seed=10,
+                         kind="cluster-lookup", lookup_variance=var)
+        lk_s = time_lookups(t, w.lookups[:N_LOOKUP])
+        rows.append(row(f"fig10/lookup_var={var:.0e}",
+                        lk_s / N_LOOKUP * 1e6,
+                        f"lookups_per_s={N_LOOKUP/lk_s:.0f}"))
+    return rows
+
+
+def fig11_concurrency():
+    """Fig 11: parallel lookup scaling. TPU analogue of lookup threads =
+    batched query lanes per dispatch; near-linear scaling in batch."""
+    t, w, _ = _fresh(bench_params(), seed=11)
+    rows = []
+    base = None
+    for batch in (256, 1024, 4096):
+        lk_s = time_lookups(t, w.lookups[:8192], batch=batch)
+        tput = 8192 / lk_s
+        base = base or tput
+        rows.append(row(f"fig11/batch={batch}", lk_s / 8192 * 1e6,
+                        f"lookups_per_s={tput:.0f};scale={tput/base:.2f}"))
+    return rows
+
+
+def fig12_merge_overlap():
+    """Fig 12: merge threading cuts tail latency. JAX analogue: the merge
+    is dispatched asynchronously; the host can issue lookups against the
+    snapshot without blocking. We compare max per-chunk insert latency
+    with eager blocking after each merge vs async overlap."""
+    import repro.core.slsm as S
+
+    def run(block_merges: bool):
+        t = SLSM(bench_params(R=4, Rn=512, D=4, mu=64, max_levels=3))
+        w = make_kv_workload("uniform", 60_000, seed=12)
+        worst = 0.0
+        for off in range(0, 60_000, 512):
+            t0 = time.perf_counter()
+            t.insert(w.keys[off:off + 512], w.vals[off:off + 512])
+            if block_merges:
+                jax.block_until_ready(t.state)  # wait for any merge now
+            worst = max(worst, time.perf_counter() - t0)
+        jax.block_until_ready(t.state)
+        return worst
+
+    worst_block = run(True)
+    worst_async = run(False)
+    return [
+        row("fig12/blocking", worst_block * 1e6, "max_insert_chunk_latency"),
+        row("fig12/async_merge", worst_async * 1e6,
+            f"tail_reduction={worst_block/max(worst_async,1e-9):.2f}x"),
+    ]
+
+
+def kernels_bench():
+    """Kernel-level: HeapMerge tournament vs XLA sort-merge; Bloom probe."""
+    from repro.core import runs as RU
+    from repro.core.params import KEY_EMPTY
+    from repro.kernels.heap_merge import heap_merge_op
+
+    rng = np.random.default_rng(0)
+    k, cap = 4, 8192
+    ks, vs, ss = [], [], []
+    for i in range(k):
+        kk = np.sort(rng.choice(1 << 22, cap, replace=False)).astype(np.int32)
+        ks.append(kk)
+        vs.append(rng.integers(0, 99, cap).astype(np.int32))
+        ss.append((np.arange(cap) + i * cap).astype(np.int32))
+    K, V, S = (jnp.asarray(np.stack(x)) for x in (ks, vs, ss))
+
+    sort_fn = jax.jit(lambda a, b, c: RU.merge_runs(a, b, c, False))
+    out = sort_fn(K, V, S); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = sort_fn(K, V, S)
+    jax.block_until_ready(out)
+    t_sort = (time.perf_counter() - t0) / 10
+
+    out = heap_merge_op(K, V, S, False); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out = heap_merge_op(K, V, S, False)
+    jax.block_until_ready(out)
+    t_rank = (time.perf_counter() - t0) / 10
+
+    return [
+        row("kernels/merge_sort_based", t_sort * 1e6,
+            f"elems={k*cap};Melem_per_s={k*cap/t_sort/1e6:.1f}"),
+        row("kernels/merge_rankpath_pallas", t_rank * 1e6,
+            f"elems={k*cap};Melem_per_s={k*cap/t_rank/1e6:.1f}"),
+    ]
+
+
+ALL_FIGS = [fig02_r_sweep, fig03_buffer_grid, fig04_disk_grid, fig05_bloom,
+            fig06_range, fig07_data_size, fig08_workload_mix,
+            fig09_insert_skew, fig10_lookup_skew, fig11_concurrency,
+            fig12_merge_overlap, kernels_bench]

@@ -1,0 +1,256 @@
+"""Generate EXPERIMENTS.md from dry-run results (baseline + optimized).
+
+Run after a sweep:  PYTHONPATH=src python benchmarks/make_experiments.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "../src"))
+
+from repro.launch.report import (OUT, before_after, dryrun_summary,  # noqa: E402
+                                 load, roofline_table)
+
+HILLCLIMB_CELLS = [("deepseek-7b", "decode_32k"),
+                   ("qwen3-moe-30b-a3b", "train_4k"),
+                   ("deepseek-7b", "long_500k")]
+
+HEADER = """# EXPERIMENTS — sLSM-JAX
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI per chip. Meshes: single pod (data=16, model=16) = 256 chips;
+multi-pod (pod=2, data=16, model=16) = 512 chips. This container is
+CPU-only: every number below is derived from the *compiled* artifact
+(`lower().compile()`), not wall-clock — see §Method.
+
+## §Method
+
+* `launch/dryrun.py` lowers + compiles every (arch x shape x mesh) cell
+  with ShapeDtypeStruct inputs (no allocation) and records
+  `memory_analysis()` / `cost_analysis()` / the optimized HLO.
+* **Trip-count correction**: XLA's `cost_analysis()` counts `while`
+  bodies once; every model here scans over layers, so flops/bytes/
+  collectives are recomputed by `launch/hlo_cost.py`, a walker that
+  multiplies loop bodies by their `known_trip_count` (validated against
+  unrolled references; the raw XLA numbers are kept in the records as
+  `xla_*`). Verified empirically: a 10-step scanned matmul reports 10x
+  the flops under the walker and 1x under `cost_analysis`.
+* All per-device quantities: the compiled module is SPMD-partitioned, so
+  `cost_analysis`/HLO payloads/`memory_analysis` are per-device
+  (verified: a 4-way-sharded input reports 1/4 the argument bytes).
+* Roofline terms (seconds, per device):
+  `t_compute = flops / 197e12`, `t_memory = bytes / 819e9`,
+  `t_collective = collective_payload_bytes / 50e9`.
+  `t_collective` treats every collective payload as crossing one ICI
+  link — a deliberate upper bound (it ignores algorithm factors like
+  ring all-reduce's 2(n-1)/n, and DCN for the pod axis would be slower);
+  consistent across cells, so *relative* comparisons are meaningful.
+* `useful-FLOP ratio` = analytic MODEL_FLOPs (6ND train / 2ND inference,
+  N_active for MoE) / (per-device HLO flops x chips) — catches remat and
+  routing waste. Values < 1 are expected (remat recompute, attention
+  O(S^2) terms, MoE capacity slack); dense-train cells land at 0.35-0.97.
+
+## §Dry-run
+
+"""
+
+ROOFLINE_INTRO = """
+## §Roofline
+
+Baseline = paper-faithful implementation, first full sweep (preserved in
+`benchmarks/results/dryrun_baseline/`). Optimized = after the §Perf
+iterations (current `benchmarks/results/dryrun/`). Single-pod (16,16)
+mesh; the multi-pod (2,16,16) sweep compiles the same cells (that pass
+proves the pod axis shards) and its records sit alongside.
+
+`long_500k` cells: `sLSM-KV decode` marks the paper's technique standing
+in for dense attention (hot window + summary-gated blocks — without it,
+dense 524k decode for full-attention archs would not fit; the *baseline
+skip* is thereby converted into a lowerable cell). mamba2/zamba2 run
+long_500k natively (O(1)/hybrid state). whisper-tiny long_500k is skipped
+by design (448-position decoder) — see DESIGN.md §4.
+
+### Baseline (paper-faithful), single pod
+
+"""
+
+PERF = """
+## §Perf — hypothesis -> change -> measure -> validate
+
+The three hillclimbed cells (picked per the brief: worst roofline
+fraction family, most collective-bound, most representative of the
+paper's technique):
+
+1. **deepseek-7b x decode_32k** (all dense-decode cells were collective-
+   bound at fraction ~0)
+2. **qwen3-moe-30b-a3b x train_4k** (most collective-bound overall:
+   t_coll = 107 s/step)
+3. **deepseek-7b x long_500k** (sLSM-KV tiered decode — the paper's
+   technique)
+
+### Iteration 1 — decode cache replication (CONFIRMED, 13.6x)
+
+* **Hypothesis**: dense decode cells show 2 x 128.8 GB all-gathers/step.
+  Napkin: the whole KV cache (1 TB global / 30 layers x 128 x 32k x 32 x
+  128 bf16) is being replicated. Suspect the per-batch ragged cache
+  write — `vmap(dynamic_update_slice)` is a data-dependent scatter GSPMD
+  cannot partition — plus an `astype(f32)` that forces a full-cache
+  f32 copy, and q's head-axis sharding landing on hd instead of kv.
+* **Change**: (a) uniform-position cache writes (scalar-start
+  `dynamic_update_slice` — static batching; continuous batching would use
+  a paged layout instead); (b) contract in cache dtype with
+  `preferred_element_type=f32` (no f32 cache copy); (c) pin q's layout
+  with a sharding constraint so the kv axis carries the model sharding;
+  (d) shard the cache's kv axis over model where divisible.
+* **Measured** (deepseek-7b decode_32k, per device/step): collective
+  257.7 GB -> 0.008 GB (32,233x); memory 0.72 GB/step halved (no f32
+  copy). Step-time bound 5.15 s -> 0.378 s (**13.6x**). Bottleneck:
+  collective -> memory, which is correct physics for decode (reading the
+  cache IS the work). All dense-decode cells inherit the fix.
+* **Validated**: teacher-forcing tests unchanged; remaining collectives
+  are the per-layer TP all-reduces (0.1 MB x 30 x 2).
+
+### Iteration 2 — MoE token all-gather (first attempt: REFUTED)
+
+* **Hypothesis**: qwen3-moe train_4k t_coll = 107 s/step comes from
+  global routing: argsort/gather over all 1M tokens forces token
+  all-gathers. Predicted fix: split routing into DP-aligned groups via
+  reshape+vmap so sorts/gathers are shard-local.
+* **Change**: `moe_dp_groups=16` (batch-major groups + vmap).
+* **Measured**: t_coll unchanged (107 s). **Refuted** — the forward
+  gathers did become local, but the *backward* of the expert GEMM
+  re-gathered dispatched tokens for weight gradients: 85.9 GB x 48
+  layers of all-gather (diagnosed with `launch/diagnose.py`, which
+  attributes per-op collective bytes x trip counts).
+
+### Iteration 2b — explicit-collective MoE via shard_map (CONFIRMED, 25.5x on the dominant term)
+
+* **Hypothesis**: the partitioner cannot be coaxed; make data motion
+  structural. Inside `shard_map` over (dp, model): routing is computed
+  per DP shard (replicated across model — cheap), each model shard
+  slices its local experts' dispatch slots, gathers only local tokens,
+  runs its (E/16, C, d) GEMMs, and the ONLY collective is the
+  expert-output partial-sum all-reduce (537 MB x 48) plus its transpose
+  in backward. Napkin: 48 x 0.54 GB / 50 GB/s ~ 0.5 s vs 107 s.
+* **Measured** (qwen3-moe train_4k, per device/step): collective
+  5,345 GB -> 209.7 GB (**25.5x**); what remains is attention/embedding
+  TP all-reduce (1.6 GB x 48 — qwen3's kv=4 < 16 forces replicated-KV
+  attention) and the designed MoE combine psum. Bonus: per-device
+  compute dropped 9.4x (6.35 -> 0.68 s) because per-shard capacity
+  (C_local = C_global/16) eliminates 16x of dispatch-padding GEMM work.
+  Step-time bound 107 s -> 7.64 s (memory-bound now): **14.0x**.
+* **Validated**: `test_perf_opts.py` — shard-local routing is
+  bit-identical to global routing absent capacity overflow; per-shard
+  capacity accounting is the standard EP policy.
+
+### Iteration 3 — hierarchical sLSM block selection (REFUTED, kept as documentation)
+
+* **Hypothesis**: long_500k's block top-k gather over data-sharded
+  blocks would all-gather block payloads; a local-top-k-then-rerank
+  (exact: global top-k is a subset of the union of local top-ks) should
+  keep gathers local.
+* **Measured**: 16x WORSE (t_coll 0.65 -> 10.3 s) — the (G, NBl) grouped
+  gather triggered "involuntary full rematerialization" in the SPMD
+  partitioner. Meanwhile the *baseline* selection was already fine once
+  Iteration 1's uniform-position writes landed: the dominant long_500k
+  collective had been the same cache-write pathology, not the block
+  gather. **Kept the baseline selection** (`lsm_dp_groups=1`); the
+  hierarchical path remains implemented + tested
+  (`test_grouped_lsm_selection_exact`) for partitioners that handle
+  batched gathers. A refuted hypothesis recorded per the method.
+* After iteration 1 the cell was unchanged (0.646 s): with batch=1 the
+  cache-write pathology never applied; the true cost was diagnosed as
+  the *selected-block payload all-reduce*: GSPMD implements the
+  data-dependent block gather as masked-local-gather + all-reduce of the
+  gathered 268 MB x 30 layers — i.e. it ships the selected KV blocks to
+  every shard.
+
+### Iteration 4 — compute-at-data cold attention (CONFIRMED, 88x)
+
+* **Hypothesis**: moving selected block *payloads* is the wrong
+  dataflow; attention should run where the blocks live and only
+  online-softmax stats (m, l, acc — O(KV x g x hd) ~ KBs) should cross
+  shards. Napkin: payload all-reduce 0.65 s vs stats ~0.1 ms; the cell
+  should become memory-bound at ~the cost of reading the selected
+  blocks once.
+* **Change**: `_lsm_cold_stats_shardmap` — shard_map over (data, model):
+  each shard masks the global top-k ids to its local block range,
+  gathers locally, computes partial softmax stats for its local kv
+  heads, then pmax + 2 psums over 'data' merge the stats; the hot-window
+  stats merge in at the end (standard flash combine).
+* **Measured** (deepseek-7b long_500k, per device/step):
+  collective 0.646 s -> 63 us (**10,252x lower**); memory 85 ms ->
+  7.4 ms (only selected blocks + hot window are read); step-time bound
+  0.646 s -> **7.4 ms (88x)**, now memory-bound — the physical floor
+  for "read what the filter admits". All eligible long_500k cells
+  (kv % |model| == 0) inherit the path; others keep the gather path.
+* **Validated**: subprocess test `test_lsm_stats_merge_matches_dense_path`
+  — sharded stats-merge logits == single-device gather-path logits.
+
+### Stopping criterion
+
+After iteration 4, the three cells are memory-bound with collectives
+< 20% of the bound; further candidates (remat policy tuning, attention
+KV-replication all-gather for kv<16 archs, fused one-hot dispatch) each
+napkin-math to <5% on the dominant term of these cells — stopped per the
+3-strike rule. The paper-faithful baseline AND the optimized runs are
+both preserved.
+
+### Paper-faithful vs beyond-paper summary
+
+| | paper-faithful baseline | beyond-paper optimized | gain |
+|---|---|---|---|
+| decode_32k (deepseek) | 5.15 s/step, collective-bound | 0.378 s/step, memory-bound | 13.6x |
+| train_4k (qwen3-moe) | 107 s/step, collective-bound | 7.6 s/step, memory-bound | 14.0x |
+| long_500k (deepseek, sLSM) | 0.646 s/step, collective-bound | 0.0074 s/step, memory-bound | 87x |
+
+## §Paper-reproduction benchmarks (Figs 2-12)
+
+`python -m benchmarks.run` reproduces every figure's *trend* on CPU-hosted
+JAX (absolute ops/s are not comparable to the paper's 32-core Xeon; the
+TPU-absolute story is the roofline above). See `bench_output.txt` for the
+full CSV. Highlights (from the committed run):
+
+* Fig 2: insert throughput rises with R (fewer, later merges), as
+  published (3.7k -> 7.7k ins/s over R=2..32 at bench scale).
+* Fig 5: the filter's work-elimination is reproduced exactly: measured
+  disk-run ADMIT RATE on absent keys tracks eps (off -> 1.0, 0.1 ->
+  0.083, 0.01 -> 0.0092, 0.001 -> 4.9e-4, 1e-4 -> 0; no false
+  negatives ever). Wall-time is flat on THIS engine because the batched
+  vector lookup has no pointer-chasing skiplist walk to skip (the
+  paper's build spent 98.9% of CPU there); on TPU the admit rate gates
+  the mu-page HBM reads (kernels/fence_lookup, kernels/bloom_probe).
+* Fig 7: lookups degrade gracefully as data grows (more levels/runs to
+  consult), the paper's effect; insert throughput *rises* with n here
+  because host-side merge orchestration amortizes — an artifact of the
+  batched CPU harness, noted for honesty.
+* Fig 9: low-variance (duplicate-heavy) insert streams are far faster
+  (504k/s at var=1e2 vs 286k/s uniform) — update-in-place defers
+  merges, as published.
+* Fig 11: batched query lanes (the TPU analogue of lookup threads)
+  scale near-linearly with batch size.
+* Fig 12: async merge dispatch cuts max insert-chunk latency **60x** vs
+  blocking on every merge — the paper's merge-threading tail-latency
+  result (their Fig 12), reproduced via JAX async dispatch.
+* Kernels: the Pallas merge-path HeapMerge beats the XLA sort-based
+  merge even in interpret mode (3.3 vs 2.7 Melem/s) — on TPU the gap
+  widens (O(n log k) work vs O(n log^2 n) bitonic comparisons).
+"""
+
+
+def main():
+    base = load("dryrun_baseline")
+    opt = load("dryrun")
+    parts = [HEADER, dryrun_summary(opt), ROOFLINE_INTRO,
+             roofline_table(base, "pod16x16"),
+             "\n### Optimized (beyond-paper), single pod\n",
+             roofline_table(opt, "pod16x16"),
+             "\n### Hillclimbed cells, before/after (single pod)\n",
+             before_after(base, opt, HILLCLIMB_CELLS),
+             PERF]
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {os.path.abspath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

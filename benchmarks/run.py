@@ -1,0 +1,37 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--fig figNN`` runs one;
+default runs the full suite (Figs 2-12 + kernel micro-benches).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import figs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fig", default="all",
+                    help="e.g. fig05 | fig12 | kernels | all")
+    args = ap.parse_args()
+
+    fns = figs.ALL_FIGS
+    if args.fig != "all":
+        fns = [f for f in figs.ALL_FIGS if f.__name__.startswith(args.fig)]
+        if not fns:
+            sys.exit(f"unknown figure {args.fig}")
+
+    print("name,us_per_call,derived")
+    for fn in fns:
+        t0 = time.perf_counter()
+        for line in fn():
+            print(line, flush=True)
+        print(f"# {fn.__name__} took {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

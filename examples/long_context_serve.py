@@ -1,0 +1,47 @@
+"""Serve a small LM with an sLSM-tiered KV cache — the paper's technique
+applied to long-context decode.
+
+Generates with (a) a dense cache and (b) the tiered cache (hot window +
+summary-gated cold blocks), compares outputs, and prints tier statistics
+— the token-level analogue of "Bloom filter skips the run".
+
+Run:  PYTHONPATH=src python examples/long_context_serve.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import generate
+
+cfg = get_config("deepseek-7b").smoke()          # tiny same-family model
+params = lm.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+prompt_len, gen_steps = 96, 24
+prompt = {"tokens": jnp.asarray(
+    rng.integers(0, cfg.vocab, (2, prompt_len)), jnp.int32)}
+
+print(f"model: {cfg.name} (smoke, {lm.param_count(params):,} params)")
+print(f"prompt {prompt_len} tokens; generating {gen_steps} tokens\n")
+
+dense_toks, _ = generate(cfg, params, prompt, steps=gen_steps, kind="dense")
+lsm_toks, caches = generate(cfg, params, prompt, steps=gen_steps,
+                            kind="lsm", max_len=prompt_len + gen_steps + 64)
+
+agree = (np.asarray(dense_toks) == np.asarray(lsm_toks)).mean()
+nb = int(caches["n_blocks"].reshape(-1)[0])
+hot = int(caches["hot_len"].reshape(-1)[0])
+total_ctx = prompt_len + gen_steps
+attended = hot + min(cfg.lsm_topk, nb) * cfg.lsm_block
+
+print(f"dense vs tiered token agreement: {agree:.1%}")
+print(f"tiered cache: {nb} cold blocks x {cfg.lsm_block} tokens "
+      f"+ {hot} hot tokens")
+print(f"per-step attention reads: {attended}/{total_ctx} tokens "
+      f"({attended/total_ctx:.0%}) — the rest are filtered out by block "
+      f"summaries, exactly as Bloom misses skip runs")
+print("\nAt 524,288-token context (long_500k cell) the same math reads "
+      f"{cfg.lsm_hot_window + 16*1024:,}/524,288 tokens = 3.9% — "
+      "what makes the cell lowerable for attention archs.")

@@ -1,0 +1,47 @@
+"""Quickstart: the Skiplist-Based LSM Tree as a JAX key-value engine.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.slsm_paper import paper_params
+from repro.core import SLSM
+
+# The paper's tuned baseline (Section 3), scaled to laptop size:
+# mu=512 -> 64, R=50 -> 8, Rn=800 -> 256, D=20 -> 4, eps=1e-3 kept.
+params = paper_params(R=8, Rn=256, D=4, mu=64, max_levels=3)
+store = SLSM(params)
+
+rng = np.random.default_rng(0)
+keys = rng.choice(2**24, size=50_000, replace=False).astype(np.int32)
+vals = rng.integers(0, 2**20, size=keys.shape).astype(np.int32)
+
+print(f"inserting {len(keys):,} keys "
+      f"(R={params.R}, Rn={params.Rn}, eps={params.eps}, "
+      f"D={params.D}, m={params.m}, mu={params.mu}) ...")
+store.insert(keys, vals)
+print(f"  -> {store.n_levels} disk levels, ~{store.n_live:,} stored entries")
+
+# point lookups (batched, jit-compiled; Bloom + min/max gated)
+got, found = store.lookup(keys[:1000])
+assert found.all() and (got == vals[:1000]).all()
+print("lookup of 1,000 present keys: all found, all correct")
+
+absent = (keys[:1000].astype(np.int64) + 2**25).astype(np.int32)
+_, found = store.lookup(absent)
+print(f"lookup of 1,000 absent keys: {found.sum()} false positives")
+
+# deletes are tombstones (paper 2.8)
+store.delete(keys[:10])
+_, found = store.lookup(keys[:10])
+assert not found.any()
+print("deleted 10 keys: lookups now miss")
+
+# range query (paper 2.9): newest-wins, tombstones dropped, key-sorted
+lo, hi = 2**20, 2**20 + 2**16
+rk, rv = store.range(lo, hi)
+expect = np.sort(keys[(keys >= lo) & (keys < hi)])
+expect = expect[~np.isin(expect, keys[:10])]
+assert (rk == expect).all()
+print(f"range [{lo}, {hi}): {len(rk)} results, key-sorted, verified")
+print("quickstart OK")

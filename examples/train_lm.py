@@ -1,0 +1,81 @@
+"""End-to-end LM training driver with sLSM incremental checkpointing.
+
+Trains a small model (default ~10M params, CPU-feasible) for a few hundred
+steps on the synthetic sharded TokenStream, checkpointing incrementally
+through the LSM store (deltas only) and atomically (full, hash-verified).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
+(Use --d-model 512 --layers 12 for a ~100M-param run on real hardware.)
+"""
+import argparse
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, LSMCheckpointStore
+from repro.configs import get_config
+from repro.data import TokenStream
+from repro.models import lm
+from repro.train import adamw_init, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/slsm_train_ckpt")
+    args = ap.parse_args()
+
+    cfg = replace(get_config("deepseek-7b"),
+                  n_layers=args.layers, d_model=args.d_model,
+                  n_heads=max(4, args.d_model // 32),
+                  n_kv=max(2, args.d_model // 64),
+                  d_ff=args.d_model * 4, vocab=8192, dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"training {cfg.name}-derived model: "
+          f"{lm.param_count(params):,} params, "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, base_lr=1e-3, warmup=20,
+                                      total_steps=args.steps))
+    stream = iter(TokenStream(cfg.vocab, args.batch, args.seq, seed=0))
+    mgr = CheckpointManager(args.ckpt_dir + "/full", keep_last=2)
+    inc = LSMCheckpointStore(args.ckpt_dir + "/incremental")
+
+    t0 = time.perf_counter()
+    for step in range(1, args.steps + 1):
+        batch = {k: jnp.asarray(v) for k, v in next(stream).items()}
+        params, opt, m = step_fn(params, opt, batch)
+        if step % 20 == 0 or step == 1:
+            dt = time.perf_counter() - t0
+            tok_s = step * args.batch * args.seq / dt
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.3f}  {tok_s:,.0f} tok/s")
+        if step % args.ckpt_every == 0:
+            mgr.save(step, params, blocking=False)       # atomic full
+            stats = inc.save_delta(params)               # LSM delta
+            print(f"  ckpt @ {step}: incremental wrote "
+                  f"{stats['written_chunks']}/{stats['total_chunks']} chunks "
+                  f"({stats['write_bytes']/1e6:.1f} MB of "
+                  f"{stats['full_bytes']/1e6:.1f} MB)")
+    mgr.wait()
+
+    # restart drill: restore from the incremental store, verify
+    restored = inc.restore(params)
+    diff = max(float(jnp.abs(a.astype(jnp.float32)
+                             - b.astype(jnp.float32)).max())
+               for a, b in zip(jax.tree_util.tree_leaves(params),
+                               jax.tree_util.tree_leaves(restored)))
+    print(f"restore drill: max |param diff| = {diff:.2e} (exact bitwise "
+          f"restore expected: {'OK' if diff == 0 else 'MISMATCH'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.lsm_store import LSMCheckpointStore  # noqa: F401

@@ -1,0 +1,45 @@
+"""Assigned-architecture registry: --arch <id> selects one of these.
+
+Every config cites its public source; shapes are the exact assigned ones.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen2_vl_7b",
+    "granite_moe_1b_a400m",
+    "qwen3_moe_30b_a3b",
+    "mamba2_370m",
+    "phi4_mini_3_8b",
+    "qwen1_5_4b",
+    "deepseek_7b",
+    "gemma_7b",
+    "whisper_tiny",
+    "zamba2_1_2b",
+]
+
+# canonical ids as assigned (hyphens) -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+ALIASES.update({
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "mamba2-370m": "mamba2_370m",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "deepseek-7b": "deepseek_7b",
+    "gemma-7b": "gemma_7b",
+    "whisper-tiny": "whisper_tiny",
+    "zamba2-1.2b": "zamba2_1_2b",
+})
+
+
+def get_config(arch: str):
+    mod_name = ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_arch_ids() -> list[str]:
+    return [a.replace("_", "-") for a in ARCHS]

@@ -1,0 +1,16 @@
+"""Qwen2-VL-7B backbone [arXiv:2409.12191; hf].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064 — M-RoPE, dynamic
+resolution. The vision frontend is a STUB per the assignment brief:
+input_specs() provides precomputed patch embeddings; the text backbone
+carries M-RoPE with (t, h, w) position streams (all equal for text).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", family="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv=4,
+    d_ff=18944, vocab=152064,
+    act="swiglu", qkv_bias=True,        # qwen2 uses QKV bias
+    rope_theta=1e6, mrope=True, mrope_sections=(16, 24, 24),
+)

@@ -1,0 +1,12 @@
+"""The paper's own tuned baseline (Section 3): mu=512, eps=0.001, R=50,
+Rn=800, D=20, m=1.0 — used by benchmarks and examples."""
+from repro.core.params import SLSMParams
+
+PAPER_BASELINE = SLSMParams(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512,
+                            max_levels=3)
+
+
+def paper_params(**overrides) -> SLSMParams:
+    base = dict(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512, max_levels=3)
+    base.update(overrides)
+    return SLSMParams(**base)

@@ -1,0 +1,19 @@
+"""Whisper-tiny [arXiv:2212.04356].
+
+4L enc + 4L dec, d_model=384 6H (kv=6) d_ff=1536 vocab=51865 — enc-dec,
+conv frontend STUBBED per the brief: input_specs() provides precomputed
+frame embeddings (B, 1500, d); sinusoidal positions added in-encoder.
+LayerNorm + GELU (not RMS/SwiGLU), learned decoder positions (448 max).
+
+long_500k: skipped — the decoder is bounded at 448 positions by design
+(out-of-family shape; recorded in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="encdec",
+    n_layers=4, d_model=384, n_heads=6, n_kv=6,
+    d_ff=1536, vocab=51865,
+    act="gelu", norm="layernorm", rope=False,
+    encoder_layers=4, encoder_seq=1500,
+)

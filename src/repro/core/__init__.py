@@ -1,0 +1,5 @@
+"""sLSM core: the paper's contribution as a composable JAX module."""
+from repro.core.params import (KEY_EMPTY, SEQ_NONE, TOMBSTONE,  # noqa: F401
+                               SLSMParams)
+from repro.core.slsm import (SLSM, LevelState, SLSMState,  # noqa: F401
+                             init_state, lookup_batch, range_query)

@@ -1,0 +1,74 @@
+"""Bloom filters (paper 2.3) — Murmur3-style double hashing, vectorized.
+
+The paper pairs one filter per run (memory and disk), uses Murmur3 and the
+double-hashing trick h_i = h1 + i*h2 so k probe positions cost two hashes.
+We keep all of that; the bitset is a uint32 word array and insert/probe are
+batched scatter/gather ops (TPU-native form of "bitset + test").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEED1 = np.uint32(0x9E3779B9)
+SEED2 = np.uint32(0x85EBCA77)
+
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+def fmix32(x: jax.Array) -> jax.Array:
+    """Murmur3 32-bit finalizer (the avalanche core of Murmur3)."""
+    x = x ^ (x >> np.uint32(16))
+    x = x * _C1
+    x = x ^ (x >> np.uint32(13))
+    x = x * _C2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def _as_u32(keys: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(keys.astype(jnp.int32), jnp.uint32)
+
+
+def probe_positions(keys: jax.Array, k: int, bits: int) -> jax.Array:
+    """(..., k) uint32 bit positions via double hashing (paper 2.3)."""
+    u = _as_u32(keys)
+    h1 = fmix32(u ^ SEED1)
+    h2 = fmix32(u ^ SEED2) | np.uint32(1)  # odd => full-period stride
+    i = jnp.arange(k, dtype=jnp.uint32)
+    pos = h1[..., None] + i * h2[..., None]
+    return pos % np.uint32(bits)
+
+
+def bloom_build(keys: jax.Array, valid: jax.Array, words: int, k: int) -> jax.Array:
+    """Build a (words,) uint32 filter over `keys` where `valid`."""
+    bits = words * 32
+    pos = probe_positions(keys, k, bits).astype(jnp.int32)
+    # invalid keys -> out-of-range position, dropped by the scatter
+    pos = jnp.where(valid[..., None], pos, bits)
+    hot = jnp.zeros((bits,), jnp.bool_).at[pos.reshape(-1)].set(True, mode="drop")
+    weights = jnp.left_shift(np.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    return (hot.reshape(words, 32).astype(jnp.uint32) * weights).sum(
+        axis=1, dtype=jnp.uint32
+    )
+
+
+def bloom_insert(filter_words: jax.Array, keys: jax.Array, valid: jax.Array,
+                 k: int) -> jax.Array:
+    """OR new keys into an existing filter."""
+    add = bloom_build(keys, valid, filter_words.shape[-1], k)
+    return filter_words | add
+
+
+def bloom_probe(filter_words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
+    """Membership test. No false negatives; false positives at rate ~eps.
+
+    filter_words: (words,) uint32;  keys: (...,) int32  ->  (...,) bool
+    """
+    bits = filter_words.shape[-1] * 32
+    pos = probe_positions(keys, k, bits).astype(jnp.int32)
+    w = filter_words[pos // 32]
+    bit = (w >> (pos % 32).astype(jnp.uint32)) & np.uint32(1)
+    return jnp.all(bit == np.uint32(1), axis=-1)

@@ -1,0 +1,43 @@
+"""Reference semantics model: a plain dict with LSM-visible behaviour.
+
+Property tests drive identical op sequences through SLSM and this model
+and require identical observable results (lookup values / found flags,
+range contents). The model is the ground truth for *what* the structure
+stores; `skiplist_ref.py` is the ground truth for *how* the paper's
+in-memory component behaves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.params import TOMBSTONE
+
+
+class DictOracle:
+    def __init__(self):
+        self.d: dict[int, int] = {}
+
+    def insert(self, keys, vals) -> None:
+        for k, v in zip(np.asarray(keys).reshape(-1).tolist(),
+                        np.asarray(vals).reshape(-1).tolist()):
+            self.d[int(k)] = int(v)
+
+    def delete(self, keys) -> None:
+        self.insert(keys, [int(TOMBSTONE)] * len(np.asarray(keys).reshape(-1)))
+
+    def lookup(self, keys):
+        vals, found = [], []
+        for k in np.asarray(keys).reshape(-1).tolist():
+            v = self.d.get(int(k))
+            ok = v is not None and v != int(TOMBSTONE)
+            vals.append(v if ok else 0)
+            found.append(ok)
+        return np.asarray(vals, np.int32), np.asarray(found, bool)
+
+    def range(self, lo: int, hi: int):
+        items = sorted((k, v) for k, v in self.d.items()
+                       if lo <= k < hi and v != int(TOMBSTONE))
+        if not items:
+            return np.zeros(0, np.int32), np.zeros(0, np.int32)
+        ks, vs = zip(*items)
+        return np.asarray(ks, np.int32), np.asarray(vs, np.int32)

@@ -1,0 +1,99 @@
+"""sLSM tuning parameters — Table 1 of the paper.
+
+| Parm | Meaning                       | Range    |
+|------|-------------------------------|----------|
+| R    | Number of runs                | Z > 0    |
+| Rn   | Elements per run              | Z > 0    |
+| eps  | Bloom filter FP rate          | (0, 1)   |
+| D    | Number of disk runs per level | Z > 0    |
+| m    | Fraction of runs merged       | (0, 1]   |
+| mu   | Fence pointer page size       | Z > 0    |
+
+Paper baseline (Section 3): mu=512, eps=0.001, R=50, Rn=800, D=20, m=1.0.
+
+TPU-adaptation-only knobs (static shapes require bounds):
+  max_levels  — preallocated tier count (paper: levels grow unboundedly).
+  max_range   — static bound on range-query result size.
+  cand_factor — per-query candidate bound for the Bloom-compacted lookup.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+# Key/value sentinels. Keys are int32 (paper: 32-bit integer keys).
+KEY_EMPTY = np.int32(np.iinfo(np.int32).max)   # reserved: empty slot / padding
+TOMBSTONE = np.int32(np.iinfo(np.int32).min)   # reserved value: deleted key
+SEQ_NONE = np.int32(-1)                        # "no match" sequence number
+
+
+@dataclass(frozen=True)
+class SLSMParams:
+    """Hashable (usable as a jit static argument) parameter set."""
+
+    R: int = 50          # number of memory-buffer runs
+    Rn: int = 800        # elements per memory run
+    eps: float = 1e-3    # Bloom filter false-positive rate
+    D: int = 20          # runs per disk level
+    m: float = 1.0       # fraction of runs merged
+    mu: int = 512        # fence-pointer page size
+    max_levels: int = 3  # preallocated disk tiers (grown lazily host-side)
+    max_range: int = 4096
+    cand_factor: int = 8
+
+    def __post_init__(self):
+        assert self.R > 0 and self.Rn > 0 and self.D > 0 and self.mu > 0
+        assert 0.0 < self.eps < 1.0 and 0.0 < self.m <= 1.0
+
+    # ---- derived geometry -------------------------------------------------
+    @property
+    def runs_merged(self) -> int:
+        """ceil(m*R) memory runs flushed per buffer merge (paper 2.1)."""
+        return max(1, math.ceil(self.m * self.R))
+
+    @property
+    def disk_runs_merged(self) -> int:
+        """ceil(m*D) disk runs merged when a level spills (paper 2.5)."""
+        return max(1, math.ceil(self.m * self.D))
+
+    def level_cap(self, level: int) -> int:
+        """Capacity (elements) of one run at `level`.
+
+        cap(0) = ceil(m*R)*Rn rounded up to a mu multiple (fence pages must
+        tile the run exactly); cap(l+1) = ceil(m*D)*cap(l) — the paper's
+        geometric growth ("number of elements at level k is O((mD)^k)").
+        The deepest preallocated level gets a x D bonus so a full-level
+        in-place compaction fits.
+        """
+        c0 = self.runs_merged * self.Rn
+        c = ((c0 + self.mu - 1) // self.mu) * self.mu  # mu-aligned
+        c *= self.disk_runs_merged ** level
+        if level == self.max_levels - 1:
+            c *= self.D
+        return c
+
+    def n_fences(self, level: int) -> int:
+        return self.level_cap(level) // self.mu
+
+    @property
+    def stage_cap(self) -> int:
+        """Staging (active-run) capacity: 2*Rn so an Rn-chunk always fits."""
+        return 2 * self.Rn
+
+    @property
+    def max_candidates(self) -> int:
+        """Static bound used by the Bloom-compacted (sparse) disk lookup."""
+        return self.cand_factor
+
+    def bloom_geometry(self, n: int) -> tuple[int, int, int]:
+        """(bits, words, k) for an n-element run at FP rate eps.
+
+        bits = ceil(-n ln eps / ln(2)^2), k = round(-log2 eps) — standard
+        Bloom sizing; the paper's double-hashing needs only two base hashes.
+        """
+        bits = int(math.ceil(-n * math.log(self.eps) / (math.log(2.0) ** 2)))
+        bits = max(64, ((bits + 31) // 32) * 32)
+        k = max(1, int(round(-math.log(self.eps) / math.log(2.0))))
+        return bits, bits // 32, k

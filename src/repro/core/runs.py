@@ -1,0 +1,142 @@
+"""Sorted-run primitives: sort, newest-wins dedup, k-way merge, fences.
+
+TPU adaptation of the paper's run machinery:
+  * a run is a dense sorted (keys, vals, seqs) triple padded with KEY_EMPTY;
+  * HeapMerge (paper 2.5, O(n log k) serial heap) becomes either
+      - a multi-operand stable `lax.sort` on (key, seq) — XLA's bitonic
+        network, O(n log^2 n) comparisons but fully parallel; or
+      - `merge_kway_ranked` — the rank-merge: every element's output slot is
+        its own index plus its rank in every other run, computed with
+        vectorized binary searches. O(n log k) *work*, data-independent
+        control flow. Same asymptotics as the paper's heap, no heap.
+  * newest-wins dedup: after a (key, seq)-ordered sort, the last element of
+    every equal-key block carries the max seqno — a shift-compare mask.
+  * tombstone elision happens only when merging into the deepest level
+    (paper 2.5/2.8: deletes are "committed" there).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import KEY_EMPTY, TOMBSTONE
+
+
+def sort_by_key_seq(keys, vals, seqs):
+    """Stable lexicographic sort by (key, seq). Sentinels sort to the end."""
+    keys, seqs, vals = jax.lax.sort((keys, seqs, vals), num_keys=2)
+    return keys, vals, seqs
+
+
+def newest_wins_mask(keys: jax.Array, vals: jax.Array,
+                     drop_tombstones: bool) -> jax.Array:
+    """Valid-mask over a (key, seq)-sorted run: keep the last (newest) copy
+    of each key; drop padding; optionally commit deletes."""
+    nxt = jnp.concatenate([keys[1:], jnp.full((1,), KEY_EMPTY, keys.dtype)])
+    valid = (keys != KEY_EMPTY) & (keys != nxt)
+    if drop_tombstones:
+        valid &= vals != TOMBSTONE
+    return valid
+
+
+def compact(keys, vals, seqs, valid):
+    """Stable-partition valid elements to the front; pad the rest.
+
+    Returns (keys, vals, seqs, count). Order among valid elements is
+    preserved (stable argsort on the invalid flag).
+    """
+    order = jnp.argsort((~valid).astype(jnp.int32), stable=True)
+    keys = jnp.where(valid[order], keys[order], KEY_EMPTY)
+    vals = jnp.where(valid[order], vals[order], 0)
+    seqs = jnp.where(valid[order], seqs[order], 0)
+    return keys, vals, seqs, valid.sum(dtype=jnp.int32)
+
+
+def merge_runs(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+    """Merge k sorted runs (k, cap) -> one compacted run (k*cap,).
+
+    Sort-based path (XLA bitonic network). Newest-wins is free because the
+    sort is keyed on (key, seq) and dedup keeps the last copy — exactly the
+    paper's "highest-ranked run's value is written" rule, with run recency
+    generalized to global seqnos.
+    """
+    k, v, s = keys2d.reshape(-1), vals2d.reshape(-1), seqs2d.reshape(-1)
+    k, v, s = sort_by_key_seq(k, v, s)
+    valid = newest_wins_mask(k, v, drop_tombstones)
+    return compact(k, v, s, valid)
+
+
+def merge_two_ranked(ak, av, as_, bk, bv, bs):
+    """Rank-merge of two sorted runs — the TPU HeapMerge step.
+
+    out_pos(a[i]) = i + #{b[j] < a[i] by (key, seq)};  symmetrical for b.
+    Both ranks come from two vectorized binary searches; the scatter is a
+    permutation, so the result is sorted by (key, seq) and stable.
+    Padding (KEY_EMPTY) naturally ranks to the tail.
+    """
+    n, mth = ak.shape[0], bk.shape[0]
+
+    # rank = lexicographic lower_bound over (key, seq): runs are sorted by
+    # (key, seq) — including intermediate tournament rounds, which may hold
+    # duplicate keys — so a branch-free binary search with the pairwise
+    # comparator is exact. O(n log m) work, fully lane-parallel.
+    def rank_in(other_k, other_s, qk, qs):
+        size = other_k.shape[0]
+        steps = max(1, math.ceil(math.log2(size + 1)))
+        lo = jnp.zeros(qk.shape, jnp.int32)
+        hi = jnp.full(qk.shape, size, jnp.int32)
+
+        def body(_, lohi):
+            lo, hi = lohi
+            mid = (lo + hi) // 2
+            midc = jnp.clip(mid, 0, size - 1)
+            ok_, os_mid = other_k[midc], other_s[midc]
+            before = (ok_ < qk) | ((ok_ == qk) & (os_mid < qs))
+            active = lo < hi
+            new_lo = jnp.where(before, mid + 1, lo)
+            new_hi = jnp.where(before, hi, mid)
+            return (jnp.where(active, new_lo, lo),
+                    jnp.where(active, new_hi, hi))
+
+        lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+        return lo
+
+    pa = jnp.arange(n, dtype=jnp.int32) + rank_in(bk, bs, ak, as_)
+    pb = jnp.arange(mth, dtype=jnp.int32) + rank_in(ak, as_, bk, bs)
+    total = n + mth
+    ok = jnp.full((total,), KEY_EMPTY, ak.dtype).at[pa].set(ak).at[pb].set(bk)
+    ov = jnp.zeros((total,), av.dtype).at[pa].set(av).at[pb].set(bv)
+    os_ = jnp.zeros((total,), as_.dtype).at[pa].set(as_).at[pb].set(bs)
+    return ok, ov, os_
+
+
+def merge_kway_ranked(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+    """Tournament of rank-merges: log2(k) parallel passes (paper-equivalent
+    O(n log k) work). Used by benchmarks to compare against `merge_runs`."""
+    runs = [(keys2d[i], vals2d[i], seqs2d[i]) for i in range(keys2d.shape[0])]
+    while len(runs) > 1:
+        nxt = []
+        for i in range(0, len(runs) - 1, 2):
+            nxt.append(merge_two_ranked(*runs[i], *runs[i + 1]))
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    k, v, s = runs[0]
+    valid = newest_wins_mask(k, v, drop_tombstones)
+    return compact(k, v, s, valid)
+
+
+def build_fences(keys: jax.Array, mu: int, n_fences: int) -> jax.Array:
+    """Fence pointers (paper 2.4): the key at every mu-th slot."""
+    idx = jnp.arange(n_fences, dtype=jnp.int32) * mu
+    return keys[jnp.clip(idx, 0, keys.shape[0] - 1)]
+
+
+def run_minmax(keys: jax.Array, count: jax.Array):
+    """(min, max) key of a compacted sorted run (paper 2.3 max/min filter)."""
+    mn = jnp.where(count > 0, keys[0], KEY_EMPTY)
+    mx = jnp.where(count > 0, keys[jnp.maximum(count - 1, 0)], TOMBSTONE)
+    return mn, mx

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (KVWorkload, TokenStream,  # noqa: F401
+                                 make_kv_workload)

@@ -1,0 +1,89 @@
+"""Data pipeline.
+
+Two workload kinds:
+
+1. `TokenStream` — deterministic synthetic LM batches (seeded, shardable
+   by (host_id, n_hosts): each host draws only its slice — no cross-host
+   data motion, the standard MaxText-style input pipeline contract).
+
+2. `KVWorkload` — the paper's benchmark workloads (Section 3): uniform
+   random 32-bit integer keys, normal insert skew with variable variance
+   (3.9.1), clustered lookup skew (3.9.2), update:lookup ratio mixes
+   (3.8), zipf for good measure. All host-side numpy: the benches measure
+   engine throughput, not generator throughput.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+
+class TokenStream:
+    """Deterministic sharded synthetic token batches."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0,
+                 host_id: int = 0, n_hosts: int = 1):
+        assert batch % n_hosts == 0
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.local_batch = batch // n_hosts
+        self.host_id, self.n_hosts = host_id, n_hosts
+        self.seed = seed
+        self.step = 0
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        rng = np.random.default_rng(
+            (self.seed, self.step, self.host_id))
+        toks = rng.integers(0, self.vocab,
+                            size=(self.local_batch, self.seq + 1),
+                            dtype=np.int32)
+        self.step += 1
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@dataclass
+class KVWorkload:
+    keys: np.ndarray      # insert keys, int32
+    vals: np.ndarray      # insert values, int32
+    lookups: np.ndarray   # lookup keys, int32
+    name: str
+
+
+def make_kv_workload(kind: str, n: int, seed: int = 0, *,
+                     variance: float = 1e6, lookup_variance: float = 1e6,
+                     lookup_frac: float = 0.5, zipf_a: float = 1.2,
+                     key_space: int = 2**31 - 2) -> KVWorkload:
+    """Paper Section 3 workload generators.
+
+    kind: uniform | normal | zipf | cluster-lookup
+    """
+    rng = np.random.default_rng(seed)
+    n_lookup = int(n * lookup_frac)
+    if kind == "uniform":
+        keys = rng.integers(0, key_space, n, dtype=np.int64)
+        lookups = rng.integers(0, key_space, n_lookup, dtype=np.int64)
+    elif kind == "normal":
+        keys = np.rint(rng.normal(0.0, np.sqrt(variance), n)).astype(np.int64)
+        lookups = np.rint(
+            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)).astype(np.int64)
+    elif kind == "zipf":
+        keys = rng.zipf(zipf_a, n).astype(np.int64) % key_space
+        lookups = rng.zipf(zipf_a, n_lookup).astype(np.int64) % key_space
+    elif kind == "cluster-lookup":
+        keys = rng.integers(0, key_space, n, dtype=np.int64)
+        centre = rng.integers(0, key_space, dtype=np.int64)
+        lookups = (centre + np.rint(
+            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)
+        ).astype(np.int64))
+    else:
+        raise ValueError(kind)
+    clip = 2**31 - 2
+    keys = np.clip(keys, -clip, clip).astype(np.int32)
+    lookups = np.clip(lookups, -clip, clip).astype(np.int32)
+    vals = rng.integers(-2**30, 2**30, n, dtype=np.int32)
+    return KVWorkload(keys=keys, vals=vals, lookups=lookups,
+                      name=f"{kind}-n{n}")

@@ -1,0 +1,76 @@
+"""Elastic scaling + straggler mitigation.
+
+Elastic: checkpoints are mesh-agnostic (host numpy per leaf); on restore,
+`make_elastic_mesh` factors whatever device count survived into
+(data, model) preserving the TP degree when possible, and `reshard` lays
+the tree out under the new mesh. Losing a pod (512 -> 256) or growing one
+is a restore, not a retrain.
+
+Stragglers: `StragglerMonitor` tracks per-step wall times; a step beyond
+`k x` the rolling median marks its host as suspect. Policy hooks: `skip`
+(drop the step, standard for synchronous SGD with grad accumulation
+slack) or `quarantine` (exclude the host at the next elastic re-mesh).
+The detection logic is pure and unit-tested; the actuation is the restore
+path above.
+"""
+from __future__ import annotations
+
+import collections
+import statistics
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+def factor_devices(n_devices: int, prefer_model: int = 16) -> tuple[int, int]:
+    """(data, model) factoring of an arbitrary surviving device count,
+    preserving the preferred TP degree when it divides."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return n_devices // model, model
+
+
+def make_elastic_mesh(n_devices: int, prefer_model: int = 16):
+    """Factor an arbitrary surviving device count into a usable mesh."""
+    data, model = factor_devices(n_devices, prefer_model)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def reshard(host_tree, mesh, pspec_tree):
+    """Host numpy pytree -> device arrays under `mesh` with `pspec_tree`."""
+    from jax.sharding import NamedSharding
+
+    def put(x, spec):
+        return jax.device_put(np.asarray(x), NamedSharding(mesh, spec))
+    return jax.tree.map(put, host_tree, pspec_tree)
+
+
+@dataclass
+class StragglerMonitor:
+    threshold: float = 2.0       # x rolling median
+    window: int = 32
+    min_samples: int = 8
+    times: collections.deque = field(default_factory=lambda:
+                                     collections.deque(maxlen=256))
+    suspects: collections.Counter = field(default_factory=collections.Counter)
+    quarantine_after: int = 3
+
+    def record(self, host_id: int, step_time: float) -> str:
+        """Returns action: 'ok' | 'skip' | 'quarantine'."""
+        recent = list(self.times)[-self.window:]
+        self.times.append(step_time)
+        if len(recent) < self.min_samples:
+            return "ok"
+        med = statistics.median(recent)
+        if step_time <= self.threshold * med:
+            return "ok"
+        self.suspects[host_id] += 1
+        if self.suspects[host_id] >= self.quarantine_after:
+            return "quarantine"
+        return "skip"
+
+    def healthy_hosts(self, all_hosts: list[int]) -> list[int]:
+        return [h for h in all_hosts
+                if self.suspects[h] < self.quarantine_after]

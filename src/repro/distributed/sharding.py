@@ -1,0 +1,204 @@
+"""Sharding rules: DP / TP / EP / SP over the production mesh.
+
+Philosophy: GSPMD makes sharding a *layout* choice, not a semantics choice
+— every rule here is safe; the rules choose layouts that keep the big
+GEMMs local and push collectives onto activations:
+
+  * TP (model axis): attention QKVO, FFN in/out, vocab/embedding, and the
+    MoE expert axis (EP == experts over the model axis);
+  * DP (pod+data axes): batch; ZeRO-1 re-shards optimizer moments over DP;
+  * SP (data axis): sequence/KV-block axis when batch cannot fill DP
+    (long_500k batch=1, prefill_32k batch < |DP|).
+
+Dims that don't divide their axis stay replicated (e.g. kv=4 heads on a
+16-way model axis — KV projections replicate, the standard GQA-TP rule).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+
+
+def _div(n: int, d: int) -> bool:
+    return d > 0 and n % d == 0
+
+
+def _path_names(path) -> list[str]:
+    """Key names along a pytree path (dicts, namedtuples, sequences)."""
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "conv_w"}
+_ROW = {"wo", "w_down", "out_proj"}
+
+
+def _param_spec(path_keys: list[str], shape: tuple[int, ...], tp: int):
+    name = path_keys[-1]
+    stacked = path_keys[0] in ("layers", "enc_layers")  # leading L axis
+    off = 1 if stacked else 0
+    pre = (None,) * off
+
+    def col(ix):  # shard output/column dim
+        if _div(shape[ix + off], tp):
+            return P(*pre, *(None,) * ix, "model")
+        return P()
+
+    if name == "embed":
+        return P("model", None) if _div(shape[0], tp) else P()
+    if name == "lm_head":
+        return P(None, "model") if _div(shape[1], tp) else P()
+    if name == "dec_pos":
+        return P()
+    if name == "router":
+        return P()
+    if name in ("w_gate", "w_up", "w_down") and len(shape) - off == 3:
+        # MoE expert stacks (E, d, f): expert-parallel over model axis
+        if _div(shape[off], tp):
+            return P(*pre, "model", None, None)
+        return P()
+    if name in _COL:
+        return col(len(shape) - off - 1)
+    if name in _ROW:
+        if _div(shape[off], tp):
+            return P(*pre, "model", *(None,) * (len(shape) - off - 1))
+        return P()
+    return P()  # norms, biases, scalars: replicated
+
+
+def param_pspecs(cfg, params_tree, mesh):
+    """Pytree of PartitionSpec matching params (shapes or arrays)."""
+    tp = axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        keys = _path_names(path)
+        return _param_spec(keys, leaf.shape, tp)
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def zero1_pspecs(cfg, params_tree, mesh):
+    """ZeRO-1: optimizer moments additionally sharded over DP on the first
+    axis that divides (usually the stacked-layer axis or d_model)."""
+    dp = dp_axes(mesh)
+    dpn = axis_size(mesh, *dp)
+    tp = axis_size(mesh, "model")
+
+    def rule(path, leaf):
+        keys = _path_names(path)
+        base = _param_spec(keys, leaf.shape, tp)
+        spec = list(base) + [None] * (len(leaf.shape) - len(base))
+        for i, s in enumerate(leaf.shape):
+            if spec[i] is None and _div(s, dpn):
+                spec[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+# --------------------------------------------------------------------------
+# batches / caches
+# --------------------------------------------------------------------------
+
+def batch_pspecs(cfg, batch_tree, mesh):
+    """Shard batch dim over DP when divisible; else sequence over data."""
+    dp = dp_axes(mesh)
+    dpn = axis_size(mesh, *dp)
+    dp_s = dp if len(dp) > 1 else dp[0]
+
+    def rule(path, leaf):
+        keys = _path_names(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if name == "positions3":  # (3, B, S)
+            if _div(shape[1], dpn):
+                return P(None, dp_s, None)
+            return (P(None, None, "data")
+                    if _div(shape[2], axis_size(mesh, "data")) else P())
+        if len(shape) >= 1 and _div(shape[0], dpn):
+            return P(dp_s, *(None,) * (len(shape) - 1))
+        if len(shape) >= 2 and _div(shape[1], axis_size(mesh, "data")):
+            return P(None, "data", *(None,) * (len(shape) - 2))
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def cache_pspecs(cfg, cache_tree, mesh):
+    """Decode caches: batch over DP when it divides; otherwise shard the
+    long axis (sequence / block-count / heads) — SP for decode."""
+    dp = dp_axes(mesh)
+    dpn = axis_size(mesh, *dp)
+    dp_s = dp if len(dp) > 1 else dp[0]
+    data_n = axis_size(mesh, "data")
+
+    def rule(path, leaf):
+        keys = _path_names(path)
+        name = keys[-1]
+        shape = leaf.shape
+        if name == "pos" or len(shape) <= 1:
+            return P()
+        if name in ("hot_len", "n_blocks"):
+            return P()
+        # stacked (L, B, ...) leaves
+        b_ix = 1
+        tp_n = axis_size(mesh, "model")
+        if _div(shape[b_ix], dpn):
+            # dense/enc KV caches: also shard kv heads over model when they
+            # divide (aligns with model-sharded q, attention stays local);
+            # otherwise shard the sequence axis over model — scores/output
+            # reduce over s with tiny stat all-reduces, and the cache
+            # never replicates across the model axis (a kv=20 32k cache
+            # replicated 16x would be >300 GB/device).
+            if name in ("k", "v", "enc_k", "enc_v", "hot_k", "hot_v") \
+                    and len(shape) == 5:
+                if _div(shape[3], tp_n):
+                    return P(None, dp_s, None, "model", None)
+                if _div(shape[2], tp_n):
+                    return P(None, dp_s, "model", None, None)
+            if name in ("blk_k", "blk_v") and len(shape) == 6:
+                if _div(shape[4], tp_n):
+                    return P(None, dp_s, None, None, "model", None)
+                if _div(shape[3], tp_n):
+                    return P(None, dp_s, None, "model", None, None)
+            return P(None, dp_s, *(None,) * (len(shape) - 2))
+        # batch too small: shard the long axis over data (+ kv heads over
+        # model when they divide — halves the per-device KV footprint again)
+        tp = axis_size(mesh, "model")
+        if name in ("k", "v", "hot_k", "hot_v") and _div(shape[2], data_n):
+            kv_ax = "model" if _div(shape[3], tp) else None
+            return P(None, None, "data", kv_ax,
+                     *(None,) * (len(shape) - 4))
+        if name in ("blk_k", "blk_v") and _div(shape[2], data_n):
+            kv_ax = "model" if _div(shape[4], tp) else None
+            return P(None, None, "data", None, kv_ax,
+                     *(None,) * (len(shape) - 5))
+        if name == "summ" and _div(shape[2], data_n):
+            return P(None, None, "data", *(None,) * (len(shape) - 3))
+        if name in ("enc_k", "enc_v") and _div(shape[2], data_n):
+            return P(None, None, "data", *(None,) * (len(shape) - 3))
+        if name == "ssm" and _div(shape[2], tp):
+            return P(None, None, "model", *(None,) * (len(shape) - 3))
+        if name == "conv" and _div(shape[-1], tp):
+            return P(*(None,) * (len(shape) - 1), "model")
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, cache_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the sLSM hot paths.
+
+Each subpackage holds:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (interpret=True off-TPU)
+  ref.py    — the pure-jnp oracle the kernel is tested against
+
+Kernels:
+  bloom_probe   — batched Bloom-filter membership tests (paper 2.3)
+  heap_merge    — HeapMerge (paper 2.5) as a merge-path binary-search
+                  network: k-way newest-wins merge in log2(k) dense passes
+  fence_lookup  — fence-pointer page search on sorted runs (paper 2.4)
+  lsm_attention — tiered decode attention over an sLSM KV cache (hot
+                  window + summary-gated cold blocks) — the paper's
+                  read path fused into attention
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.bloom_probe.ops import bloom_probe_op  # noqa: F401
+from repro.kernels.bloom_probe.ref import bloom_probe_ref  # noqa: F401

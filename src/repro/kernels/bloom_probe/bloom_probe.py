@@ -1,0 +1,63 @@
+"""Pallas kernel: batched Bloom-filter probes (paper 2.3).
+
+Design (TPU): the bitset lives in VMEM for the whole grid (its BlockSpec
+index_map is constant, so it is copied HBM->VMEM once and reused across
+grid steps). Queries stream through in tiles of Q_TILE lanes; each lane
+computes its k double-hashed probe positions (Murmur3 finalizer — pure
+VPU integer ops) and gathers k words from the resident bitset. The paper's
+"filter test is far cheaper than the deep search" becomes: a probe tile
+touches k*Q_TILE words of VMEM instead of paging a mu-wide run window
+from HBM.
+
+VMEM budget per grid step (defaults): bitset (<= 2^20 words = 4 MiB)
++ Q_TILE=1024 queries (4 KiB) + out (1 KiB) — fits v5e VMEM (~16 MiB)
+with headroom for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.bloom import SEED1, SEED2, fmix32
+
+Q_TILE = 1024
+
+
+def _probe_kernel(keys_ref, words_ref, out_ref, *, k: int, bits: int):
+    keys = keys_ref[...]                                   # (Q_TILE,) int32
+    words = words_ref[...]                                 # (W,) uint32
+    u = jax.lax.bitcast_convert_type(keys, jnp.uint32)
+    h1 = fmix32(u ^ SEED1)
+    h2 = fmix32(u ^ SEED2) | np.uint32(1)
+    hit = jnp.ones(keys.shape, jnp.int32)
+    for i in range(k):  # unrolled: k is small (paper: k = -log2(eps))
+        pos = ((h1 + np.uint32(i) * h2) % np.uint32(bits)).astype(jnp.int32)
+        w = jnp.take(words, pos // 32, axis=0)
+        bit = (w >> (pos % 32).astype(jnp.uint32)) & np.uint32(1)
+        hit &= bit.astype(jnp.int32)
+    out_ref[...] = hit
+
+
+def bloom_probe_pallas(words: jax.Array, keys: jax.Array, k: int,
+                       interpret: bool = True) -> jax.Array:
+    """(W,) uint32 filter, (Q,) int32 keys -> (Q,) int32 {0,1} membership."""
+    q = keys.shape[0]
+    assert q % Q_TILE == 0, f"pad queries to a multiple of {Q_TILE}"
+    bits = words.shape[0] * 32
+    grid = (q // Q_TILE,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, k=k, bits=bits),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),     # query tile
+            pl.BlockSpec((words.shape[0],), lambda i: (0,)),  # resident bitset
+        ],
+        out_specs=pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+        interpret=interpret,
+        name="slsm_bloom_probe",
+    )(keys, words)

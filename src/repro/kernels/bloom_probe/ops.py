@@ -1,0 +1,23 @@
+"""Public jit'd wrapper: pads queries to the tile size, picks the backend."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bloom_probe.bloom_probe import Q_TILE, bloom_probe_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def bloom_probe_op(words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
+    """(W,) uint32, (Q,) int32 -> (Q,) bool. Tile-padded Pallas probe."""
+    q = keys.shape[0]
+    qp = ((q + Q_TILE - 1) // Q_TILE) * Q_TILE
+    padded = jnp.zeros((qp,), jnp.int32).at[:q].set(keys.astype(jnp.int32))
+    hit = bloom_probe_pallas(words, padded, k, interpret=not _on_tpu())
+    return hit[:q].astype(bool)

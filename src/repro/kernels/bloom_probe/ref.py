@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the bloom_probe kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bloom import bloom_probe
+
+
+def bloom_probe_ref(words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
+    return bloom_probe(words, keys, k).astype(jnp.int32)

@@ -1,0 +1,43 @@
+"""Shared in-kernel primitives: vectorized binary searches.
+
+`jnp.searchsorted` does not lower inside Pallas TPU kernels; these are
+branch-free fori_loop binary searches over VMEM-resident sorted arrays,
+vectorized across query lanes (every lane halves its interval in lockstep
+— log2(n) dense compare/select steps on the VPU).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def _bsearch(arr: jax.Array, q: jax.Array, strict: bool) -> jax.Array:
+    n = arr.shape[0]
+    steps = max(1, math.ceil(math.log2(n + 1)))
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        v = arr[jnp.clip(mid, 0, n - 1)]
+        go_right = (v <= q) if strict else (v < q)
+        active = lo < hi
+        new_lo = jnp.where(go_right, mid + 1, lo)
+        new_hi = jnp.where(go_right, hi, mid)
+        return (jnp.where(active, new_lo, lo), jnp.where(active, new_hi, hi))
+
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, n, jnp.int32)
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def lower_bound(arr: jax.Array, q: jax.Array) -> jax.Array:
+    """First index i with arr[i] >= q (searchsorted side='left')."""
+    return _bsearch(arr, q, strict=False)
+
+
+def upper_bound(arr: jax.Array, q: jax.Array) -> jax.Array:
+    """First index i with arr[i] > q (searchsorted side='right')."""
+    return _bsearch(arr, q, strict=True)

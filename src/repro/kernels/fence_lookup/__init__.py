@@ -1,0 +1,2 @@
+from repro.kernels.fence_lookup.ops import fence_lookup_op  # noqa: F401
+from repro.kernels.fence_lookup.ref import fence_lookup_ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Pallas kernel: fence-pointer page lookup on a sorted run (paper 2.4).
+
+Paper read path per disk run: binary-search the fence pointers (one key per
+mu-slot page), then binary-search the single page they bound. TPU form:
+
+  * fences and the run both stay VMEM-resident across the grid (constant
+    index_map) — fences are tiny, the run is the paged payload;
+  * a tile of queries binary-searches the fences in lockstep (branch-free
+    lane-parallel search, log2(F) steps);
+  * the bounded page is then scanned with a *dense vectorized compare*
+    rather than a second binary search: mu contiguous int32 lanes per query
+    are a handful of VPU ops, and the gather of (Q_TILE, mu) contiguous
+    windows is the TPU analogue of "load one disk page per lookup".
+
+Output is the element index of the hit (or -1): value/seq gathers and
+Bloom/min-max gating live in ops.py where they compose with the engine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import upper_bound
+
+Q_TILE = 256
+
+
+def _fence_kernel(q_ref, fences_ref, keys_ref, count_ref, out_ref, *, mu: int):
+    qs = q_ref[...]                       # (Q_TILE,)
+    fences = fences_ref[...]              # (F,)
+    keys = keys_ref[...]                  # (cap,)
+    count = count_ref[0]
+
+    f = upper_bound(fences, qs) - 1       # page index per query
+    start = jnp.clip(f, 0, fences.shape[0] - 1) * mu
+
+    # dense page scan: gather each query's mu-window and compare
+    win_idx = start[:, None] + jnp.arange(mu, dtype=jnp.int32)[None, :]
+    win = jnp.take(keys, win_idx, axis=0)            # (Q_TILE, mu)
+    eq = win == qs[:, None]
+    off = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    hit = jnp.any(eq, axis=1) & (start + off < count)
+    out_ref[...] = jnp.where(hit, start + off, -1)
+
+
+def fence_lookup_pallas(queries: jax.Array, fences: jax.Array,
+                        keys: jax.Array, count: jax.Array, mu: int,
+                        interpret: bool = True) -> jax.Array:
+    """(Q,) queries over one sorted run -> (Q,) hit indices (or -1)."""
+    q = queries.shape[0]
+    assert q % Q_TILE == 0, f"pad queries to a multiple of {Q_TILE}"
+    cap, f_n = keys.shape[0], fences.shape[0]
+    assert cap == f_n * mu, "fences must tile the run exactly"
+    grid = (q // Q_TILE,)
+    return pl.pallas_call(
+        functools.partial(_fence_kernel, mu=mu),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+            pl.BlockSpec((f_n,), lambda i: (0,)),
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((Q_TILE,), lambda i: (i,)),
+        interpret=interpret,
+        name="slsm_fence_lookup",
+    )(queries, fences, keys, count)

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper for the fence_lookup kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import KEY_EMPTY
+from repro.kernels.fence_lookup.fence_lookup import (Q_TILE,
+                                                     fence_lookup_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=4)
+def fence_lookup_op(queries, fences, keys, count, mu: int):
+    """Batched fence-pointer lookup. Returns hit indices, -1 for misses."""
+    q = queries.shape[0]
+    qp = ((q + Q_TILE - 1) // Q_TILE) * Q_TILE
+    padded = jnp.full((qp,), KEY_EMPTY, jnp.int32).at[:q].set(
+        queries.astype(jnp.int32))
+    idx = fence_lookup_pallas(padded, fences.astype(jnp.int32),
+                              keys.astype(jnp.int32),
+                              jnp.asarray(count, jnp.int32).reshape(1),
+                              mu, interpret=not _on_tpu())
+    return idx[:q]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: searchsorted over the full run (index semantics only
+depend on the run being sorted — the fence decomposition must not change
+the answer)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fence_lookup_ref(queries, fences, keys, count, mu: int):
+    del fences, mu  # the oracle ignores the index structure entirely
+    i = jnp.searchsorted(keys, queries).astype(jnp.int32)
+    ic = jnp.minimum(i, keys.shape[0] - 1)
+    hit = (i < count) & (keys[ic] == queries)
+    return jnp.where(hit, i, -1)

@@ -1,0 +1,2 @@
+from repro.kernels.heap_merge.ops import heap_merge_op  # noqa: F401
+from repro.kernels.heap_merge.ref import heap_merge_ref, merge_two_ref  # noqa: F401

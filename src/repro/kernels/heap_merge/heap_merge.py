@@ -1,0 +1,96 @@
+"""Pallas kernel: HeapMerge (paper Algorithm 1) as a merge-path network.
+
+The paper's min-heap pops one element per step — inherently serial, no TPU
+analogue. The TPU-native equivalent keeps the O(n log k) work bound but
+makes every step dense:
+
+  * two-way merge = "merge path" (Green et al.): output position t is
+    produced by exactly one (i, j = t - i) split of the two inputs; the
+    split is found by a branch-free binary search on the diagonal, one
+    search per output lane, all lanes in lockstep on the VPU;
+  * k-way merge = a log2(k) tournament of two-way merges (ops.py);
+  * newest-wins / tombstone-commit = a shift-compare epilogue (ops.py),
+    exactly the paper's "only the highest-ranked run's value is written".
+
+Ordering is lexicographic on (key, seq) — the paper's run-recency rule
+generalized to global seqnos.
+
+VMEM: both inputs are grid-resident (constant index_map); each grid step
+writes one OUT_TILE of the output. Inputs up to ~256K elements/side
+(3 arrays x 2 sides x 4B ≈ 6 MiB) fit v5e VMEM; larger merges split at
+the tournament layer in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OUT_TILE = 512
+
+
+def _before(ak, as_, bk, bs):
+    """(key, seq) lexicographic strict less-than."""
+    return (ak < bk) | ((ak == bk) & (as_ < bs))
+
+
+def _merge_kernel(ak_ref, av_ref, as_ref, bk_ref, bv_ref, bs_ref,
+                  ok_ref, ov_ref, os_ref, *, n: int, m: int):
+    tile = ok_ref.shape[0]
+    t = pl.program_id(0) * tile + jnp.arange(tile, dtype=jnp.int32)
+
+    ak, av, as_ = ak_ref[...], av_ref[...], as_ref[...]
+    bk, bv, bs = bk_ref[...], bv_ref[...], bs_ref[...]
+
+    # merge-path diagonal binary search: find i = #elements taken from a
+    # among the first t outputs. Invariant: i in [max(0, t-m), min(t, n)].
+    lo = jnp.maximum(t - m, 0)
+    hi = jnp.minimum(t, n)
+    steps = max(1, math.ceil(math.log2(max(n, m) + 1)) + 1)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        # a[mid] precedes b[t-mid-1]  =>  a[mid] is within the first t
+        # outputs  =>  i > mid.
+        ai = jnp.clip(mid, 0, n - 1)
+        bj = jnp.clip(t - mid - 1, 0, m - 1)
+        go_right = _before(ak[ai], as_[ai], bk[bj], bs[bj]) | (t - mid - 1 >= m)
+        go_right &= mid < n
+        active = lo < hi
+        new_lo = jnp.where(go_right, mid + 1, lo)
+        new_hi = jnp.where(go_right, hi, mid)
+        return (jnp.where(active, new_lo, lo), jnp.where(active, new_hi, hi))
+
+    i, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    j = t - i
+    ai = jnp.clip(i, 0, n - 1)
+    bj = jnp.clip(j, 0, m - 1)
+    take_a = (j >= m) | ((i < n) & _before(ak[ai], as_[ai], bk[bj], bs[bj]))
+    ok_ref[...] = jnp.where(take_a, ak[ai], bk[bj])
+    ov_ref[...] = jnp.where(take_a, av[ai], bv[bj])
+    os_ref[...] = jnp.where(take_a, as_[ai], bs[bj])
+
+
+def merge_two_pallas(ak, av, as_, bk, bv, bs, interpret: bool = True):
+    """Merge two (key, seq)-sorted runs into one sorted (N+M,) run."""
+    n, m = ak.shape[0], bk.shape[0]
+    total = n + m
+    assert total % OUT_TILE == 0, f"pad inputs so N+M % {OUT_TILE} == 0"
+    grid = (total // OUT_TILE,)
+    resident = lambda shape: pl.BlockSpec((shape,), lambda i: (0,))
+    out_spec = pl.BlockSpec((OUT_TILE,), lambda i: (i,))
+    shapes = [jax.ShapeDtypeStruct((total,), jnp.int32)] * 3
+    return pl.pallas_call(
+        functools.partial(_merge_kernel, n=n, m=m),
+        out_shape=shapes,
+        grid=grid,
+        in_specs=[resident(n), resident(n), resident(n),
+                  resident(m), resident(m), resident(m)],
+        out_specs=[out_spec, out_spec, out_spec],
+        interpret=interpret,
+        name="slsm_heap_merge",
+    )(ak, av, as_, bk, bv, bs)

@@ -1,0 +1,59 @@
+"""Public HeapMerge op: tournament of Pallas two-way merges + newest-wins.
+
+Matches the engine's `merge_runs` output exactly (same compaction layout)
+— the engine can swap this in for the sort-based path on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import runs as RU
+from repro.core.params import KEY_EMPTY
+from repro.kernels.heap_merge.heap_merge import OUT_TILE, merge_two_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(arr, total, fill):
+    pad = total - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return jnp.concatenate([arr, jnp.full((pad,), fill, arr.dtype)])
+
+
+@functools.partial(jax.jit, static_argnums=3)
+def heap_merge_op(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+    """Merge k sorted runs (k, cap) -> compacted run (k*cap,), newest wins.
+
+    log2(k) tournament passes of the merge-path kernel, then the dedup /
+    tombstone-commit epilogue. Returns (keys, vals, seqs, count).
+    """
+    k = keys2d.shape[0]
+    runs = [(keys2d[i].astype(jnp.int32), vals2d[i].astype(jnp.int32),
+             seqs2d[i].astype(jnp.int32)) for i in range(k)]
+    interpret = not _on_tpu()
+    while len(runs) > 1:
+        nxt = []
+        for i in range(0, len(runs) - 1, 2):
+            (ak, av, as_), (bk, bv, bs) = runs[i], runs[i + 1]
+            tgt_a = ((ak.shape[0] + OUT_TILE - 1) // OUT_TILE) * OUT_TILE
+            tgt_b = ((bk.shape[0] + OUT_TILE - 1) // OUT_TILE) * OUT_TILE
+            ak = _pad_to(ak, tgt_a, KEY_EMPTY)
+            av, as_ = _pad_to(av, tgt_a, 0), _pad_to(as_, tgt_a, 0)
+            bk = _pad_to(bk, tgt_b, KEY_EMPTY)
+            bv, bs = _pad_to(bv, tgt_b, 0), _pad_to(bs, tgt_b, 0)
+            nxt.append(merge_two_pallas(ak, av, as_, bk, bv, bs,
+                                        interpret=interpret))
+        if len(runs) % 2:
+            nxt.append(runs[-1])
+        runs = nxt
+    mk, mv, ms = runs[0]
+    valid = RU.newest_wins_mask(mk, mv, drop_tombstones)
+    out_k, out_v, out_s, cnt = RU.compact(mk, mv, ms, valid)
+    total = keys2d.shape[0] * keys2d.shape[1]
+    return out_k[:total], out_v[:total], out_s[:total], cnt

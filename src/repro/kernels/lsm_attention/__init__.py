@@ -1,0 +1,4 @@
+from repro.kernels.lsm_attention.ops import (  # noqa: F401
+    decode_attention_op, lsm_decode_attention_op, select_blocks)
+from repro.kernels.lsm_attention.ref import (  # noqa: F401
+    decode_attention_ref, select_blocks_ref)

@@ -1,0 +1,100 @@
+"""Pallas kernel: single-token (decode) attention over an sLSM-tiered KV
+cache — the paper's read path fused into attention.
+
+Mapping (DESIGN.md §3): the KV cache is managed like the sLSM —
+  * hot window  == memory buffer (recent tokens, always searched),
+  * cold blocks == disk runs of mu tokens each, with per-block summary
+    vectors playing the Bloom-filter/fence-pointer role: a cheap test that
+    rules blocks out before any of their bytes are paged in,
+  * block selection (ops.py) == "skip the run on a filter miss": only the
+    top-k scoring blocks are gathered; everything else is never read.
+
+This kernel is the fused *search*: one query token attends over the
+selected token set with a numerically-stable online softmax (flash-decode
+schedule). Grid = (batch, q_heads, length_tiles); the length axis is the
+reduction, carried in VMEM scratch (m, l, acc). GQA is folded into the
+BlockSpec index_map: q-head h reads kv-head h // (H // KV) — no K/V
+expansion is materialized. Masking is a per-(batch, kv-head) validity
+bitmap so ragged hot windows and partially-selected block sets stay exact.
+
+Per grid step VMEM: K,V tiles 2 x (L_TILE, dh) + q (dh,) + valid (L_TILE,)
++ scratch (dh + 2) f32 — ~0.5 MiB at L_TILE=512, dh=256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+L_TILE = 512
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, scale: float):
+    lt = pl.program_id(2)
+
+    @pl.when(lt == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)              # (dh,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (L_TILE, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)           # (L_TILE, dh)
+    valid = valid_ref[0, 0, :] != 0                     # (L_TILE,)
+
+    s = (k @ q) * scale                                  # (L_TILE,)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)        # (L_TILE,)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[0] = l_ref[0] * corr + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * corr + p @ v
+    m_ref[0] = m_new
+
+    @pl.when(lt == pl.num_programs(2) - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            valid: jax.Array, scale: float,
+                            interpret: bool = True) -> jax.Array:
+    """q (B, H, dh); k, v (B, L, KV, dh); valid (B, KV, L) int8
+    -> out (B, H, dh)."""
+    b, h, dh = q.shape
+    _, l, kv, _ = k.shape
+    assert l % L_TILE == 0, f"pad cache length to a multiple of {L_TILE}"
+    assert h % kv == 0
+    group = h // kv
+    grid = (b, h, l // L_TILE)
+    return pl.pallas_call(
+        functools.partial(_decode_attn_kernel, scale=scale),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi, li: (bi, hi, 0)),
+            pl.BlockSpec((1, L_TILE, 1, dh),
+                         lambda bi, hi, li: (bi, li, hi // group, 0)),
+            pl.BlockSpec((1, L_TILE, 1, dh),
+                         lambda bi, hi, li: (bi, li, hi // group, 0)),
+            pl.BlockSpec((1, 1, L_TILE),
+                         lambda bi, hi, li: (bi, hi // group, li)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bi, hi, li: (bi, hi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),     # running max
+            pltpu.VMEM((1,), jnp.float32),     # running denominator
+            pltpu.VMEM((dh,), jnp.float32),    # running numerator
+        ],
+        interpret=interpret,
+        name="slsm_decode_attention",
+    )(q, k, v, valid)

@@ -1,0 +1,116 @@
+"""Public ops for sLSM-tiered decode attention.
+
+`decode_attention_op`      — flash-decode over a dense (ragged) KV cache.
+`lsm_decode_attention_op`  — the paper's technique: hot window (memory
+    buffer) + summary-gated top-k cold blocks (Bloom/fence-pointer skip),
+    then one fused attention over the ~O(W + k*mu) selected tokens instead
+    of O(L). This is what makes 524k-token decode lowerable for attention
+    architectures (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lsm_attention.lsm_attention import (L_TILE,
+                                                       decode_attention_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_len(x, target, axis):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnums=4)
+def decode_attention_op(q, k, v, lengths, scale: float):
+    """q (B, H, dh); k, v (B, L, KV, dh); lengths (B,) -> (B, H, dh)."""
+    b, h, dh = q.shape
+    _, l, kv, _ = k.shape
+    lp = ((l + L_TILE - 1) // L_TILE) * L_TILE
+    k = _pad_len(k, lp, 1)
+    v = _pad_len(v, lp, 1)
+    valid = (jnp.arange(lp, dtype=jnp.int32)[None, :]
+             < lengths[:, None]).astype(jnp.int8)
+    valid = jnp.broadcast_to(valid[:, None, :], (b, kv, lp))
+    return decode_attention_pallas(q, k, v, valid, scale,
+                                   interpret=not _on_tpu())
+
+
+def select_blocks(q, summaries, n_blocks, topk: int):
+    """Score cold blocks against the query and pick top-k per kv-head.
+
+    The summary vector is the block's "filter": q . summary upper-bounds
+    how much the block can matter; low scores are skipped without reading
+    the block — exactly the paper's Bloom-gated run skip.
+
+    q (B, H, dh); summaries (B, NB, KV, dh); n_blocks (B,)
+    -> ids (B, KV, topk) int32, ok (B, KV, topk) bool
+    """
+    b, h, dh = q.shape
+    _, nb, kv, _ = summaries.shape
+    group = h // kv
+    qg = q.reshape(b, kv, group, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bnkd->bkgn", qg, summaries.astype(jnp.float32))
+    score = s.max(axis=2)                                    # (B, KV, NB)
+    blk_ok = jnp.arange(nb, dtype=jnp.int32)[None, :] < n_blocks[:, None]
+    score = jnp.where(blk_ok[:, None, :], score, -jnp.inf)
+    top_score, ids = jax.lax.top_k(score, topk)
+    return ids.astype(jnp.int32), jnp.isfinite(top_score)
+
+
+@functools.partial(jax.jit, static_argnums=(8, 9))
+def lsm_decode_attention_op(q, hot_k, hot_v, hot_len,
+                            blk_k, blk_v, summaries, n_blocks,
+                            topk: int, scale: float):
+    """Tiered decode attention.
+
+    q (B, H, dh)
+    hot_k/v (B, W, KV, dh), hot_len (B,)        — memory buffer
+    blk_k/v (B, NB, mu, KV, dh)                 — sealed cold blocks
+    summaries (B, NB, KV, dh), n_blocks (B,)    — block index (the filter)
+    -> (B, H, dh)
+    """
+    b, h, dh = q.shape
+    _, nb, mu, kv, _ = blk_k.shape
+    w = hot_k.shape[1]
+    ids, ok = select_blocks(q, summaries, n_blocks, topk)    # (B, KV, topk)
+
+    # gather the selected blocks, per batch x kv-head
+    def per_b(bk, bv, idb):                                  # over batch
+        def per_kv(kvi):
+            sel_k = bk[idb[kvi], :, kvi, :]                  # (topk, mu, dh)
+            sel_v = bv[idb[kvi], :, kvi, :]
+            return sel_k, sel_v
+        sk, sv = jax.vmap(per_kv)(jnp.arange(kv))            # (KV, topk, mu, dh)
+        return sk, sv
+
+    sel_k, sel_v = jax.vmap(per_b)(blk_k, blk_v, ids)        # (B, KV, topk, mu, dh)
+    cold_k = sel_k.reshape(b, kv, topk * mu, dh).transpose(0, 2, 1, 3)
+    cold_v = sel_v.reshape(b, kv, topk * mu, dh).transpose(0, 2, 1, 3)
+
+    k_all = jnp.concatenate([hot_k, cold_k], axis=1)         # (B, W+k*mu, KV, dh)
+    v_all = jnp.concatenate([hot_v, cold_v], axis=1)
+
+    valid_hot = (jnp.arange(w, dtype=jnp.int32)[None, :]
+                 < hot_len[:, None])[:, None, :]             # (B, 1, W)
+    valid_hot = jnp.broadcast_to(valid_hot, (b, kv, w))
+    valid_cold = jnp.repeat(ok, mu, axis=2)                  # (B, KV, topk*mu)
+    valid = jnp.concatenate([valid_hot, valid_cold], axis=2).astype(jnp.int8)
+
+    l = k_all.shape[1]
+    lp = ((l + L_TILE - 1) // L_TILE) * L_TILE
+    k_all = _pad_len(k_all, lp, 1)
+    v_all = _pad_len(v_all, lp, 1)
+    valid = _pad_len(valid, lp, 2)
+    return decode_attention_pallas(q, k_all, v_all, valid, scale,
+                                   interpret=not _on_tpu())

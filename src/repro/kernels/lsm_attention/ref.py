@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for lsm_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths, scale: float):
+    """Dense masked softmax decode attention.
+
+    q (B, H, dh); k, v (B, L, KV, dh); lengths (B,) -> (B, H, dh)
+    """
+    b, h, dh = q.shape
+    _, l, kv, _ = k.shape
+    group = h // kv
+    kx = jnp.repeat(k, group, axis=2)        # (B, L, H, dh)
+    vx = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    mask = jnp.arange(l)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhl,blhd->bhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def select_blocks_ref(q, summaries, topk: int):
+    """Top-k cold blocks by summary score (the Bloom/fence analogue).
+
+    q (B, H, dh); summaries (B, NB, KV, dh) -> (B, KV, topk) block ids.
+    Scores are max over the kv-group's query heads of q . summary.
+    """
+    b, h, dh = q.shape
+    _, nb, kv, _ = summaries.shape
+    group = h // kv
+    qg = q.reshape(b, kv, group, dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bnkd->bkgn", qg, summaries.astype(jnp.float32))
+    score = s.max(axis=2)                     # (B, KV, NB)
+    _, ids = jax.lax.top_k(score, topk)
+    return ids.astype(jnp.int32)

@@ -1,0 +1,69 @@
+"""Per-op collective breakdown for one dry-run cell (hillclimb tooling)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import get_config
+from repro.launch.dryrun import SHAPES, build_cell
+from repro.launch.hlo_cost import (_COLLECTIVES, _OPNAME, _SHAPE_RE,
+                                   HloCostModel, _shape_bytes)
+from repro.launch.mesh import make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=False)
+    with mesh:
+        fn, cell_args = build_cell(cfg, args.shape, mesh)
+        compiled = fn.lower(*cell_args).compile()
+    txt = compiled.as_text()
+    model = HloCostModel(txt)
+
+    # trip-count multipliers per computation (1-level approximation: find
+    # whiles in entry & bodies)
+    mult = defaultdict(lambda: 1)
+    trip_re = re.compile(r'known_trip_count[^0-9]*(\d+)')
+    called_re = re.compile(r"(?:body=|condition=)%?([\w\.\-]+)")
+    for comp, lines in model.comps.items():
+        for line in lines:
+            if " while(" in line:
+                t = trip_re.search(line)
+                trip = int(t.group(1)) if t else 1
+                for c in called_re.findall(line):
+                    mult[c] = mult[comp] * trip
+
+    rows = []
+    for comp, lines in model.comps.items():
+        m = mult[comp]
+        for line in lines:
+            rhs = line.split("=", 1)[1] if "=" in line else ""
+            opm = _OPNAME.search(rhs)
+            if not opm:
+                continue
+            op = opm.group(1)
+            if any(op == c or op == f"{c}-start" for c in _COLLECTIVES):
+                b = _shape_bytes(rhs[:opm.start()])
+                meta = re.search(r'op_name="([^"]+)"', line)
+                rows.append((b * m, b, m, op,
+                             (meta.group(1) if meta else "?")[:110]))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"total collective bytes/dev (trip-adjusted): {total/1e9:.2f} GB")
+    for tb, b, m, op, name in rows[:args.top]:
+        print(f"{tb/1e9:9.3f} GB  ({b/1e6:8.1f} MB x{m:4d})  {op:20s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,228 @@
+"""Trip-count-aware cost model over optimized (SPMD-partitioned) HLO text.
+
+XLA's `compiled.cost_analysis()` counts a `while` body ONCE, so every
+lax.scan-over-layers model under-reports flops/bytes/collectives by a
+factor of n_layers (verified empirically — see EXPERIMENTS.md §Dry-run).
+This walker parses the HLO text, memoizes per-computation costs, and
+multiplies `while` bodies by their `known_trip_count`.
+
+Counted:
+  flops       — dot ops: 2 * prod(result dims) * prod(contracting dims),
+                plus 1 flop/element for elementwise arithmetic;
+  bytes       — operands + result of compute ops (fusion internals are
+                register-resident and excluded — only the fusion's own
+                operands/result touch HBM, which is how XLA fuses);
+  collectives — result-shape bytes per op type, loop-multiplied.
+`conditional` branches contribute their max (one branch executes).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|"
+    r"f8e5m2|c64|c128)\[([0-9,]*)\]")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "power", "tanh", "exponential",
+    "log", "rsqrt", "sqrt", "maximum", "minimum", "negate", "abs", "floor",
+    "cosine", "sine", "logistic", "compare", "select", "and", "or", "xor",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(dim_str: str) -> list[int]:
+    return [int(d) for d in dim_str.split(",")] if dim_str else []
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n
+    return total
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = field(default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for c in _COLLECTIVES:
+            self.coll[c] += other.coll[c] * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->")
+_INSTR = re.compile(r"^(ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(r"(?:calls=|body=|condition=|branch_computations=\{|"
+                     r"to_apply=)%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPNAME = re.compile(r"([\w\-]+)\(")
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            m = _COMP_HEADER.match(line)
+            if m and line.endswith("{"):
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if line == "}":
+                cur = None
+                continue
+            if cur is not None and line:
+                self.comps[cur].append(line)
+
+    # -- per-computation symbol table (name -> shape text) ------------------
+    def _symbols(self, comp: str) -> dict[str, str]:
+        syms: dict[str, str] = {}
+        for line in self.comps[comp]:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(2), m.group(3)
+            opm = _OPNAME.search(rhs)
+            shape_txt = rhs[:opm.start()] if opm else rhs
+            syms[name] = shape_txt
+            if "parameter(" in rhs:
+                syms[name] = shape_txt
+        return syms
+
+    def _dot_flops(self, rhs: str, syms: dict[str, str]) -> float:
+        # result shape precedes 'dot('
+        m = re.search(r"\bdot\(", rhs)
+        result = rhs[:m.start()]
+        out_elems = _shape_elems(result)
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+        contract = _dims(cm.group(1)) if cm else []
+        # lhs operand name
+        args = rhs[m.end():].split(")")[0]
+        lhs_name = args.split(",")[0].strip().lstrip("%")
+        lhs_shape = syms.get(lhs_name, "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        k = 1
+        if sm:
+            ld = _dims(sm.group(2))
+            for c in contract:
+                if c < len(ld):
+                    k *= ld[c]
+        return 2.0 * out_elems * k
+
+    def cost(self, comp: str | None = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # breaks cycles (none expected)
+        syms = self._symbols(comp)
+        for line in self.comps[comp]:
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            rhs = m.group(3)
+            opm = _OPNAME.search(rhs)
+            if not opm:
+                continue
+            op = opm.group(1)
+            result_txt = rhs[:opm.start()]
+
+            if op == "while":
+                trip = 1
+                tm = _TRIP.search(rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                called = _CALLED.findall(rhs)
+                for c in called:
+                    if c in self.comps:
+                        total.add(self.cost(c), mult=trip)
+                continue
+            if op == "conditional":
+                branches = [c for c in _CALLED.findall(rhs)
+                            if c in self.comps]
+                if branches:
+                    worst = max((self.cost(c) for c in branches),
+                                key=lambda x: (x.flops, x.bytes))
+                    total.add(worst)
+                total.bytes += _shape_bytes(result_txt)
+                continue
+            if op in ("fusion", "call"):
+                for c in _CALLED.findall(rhs):
+                    if c in self.comps:
+                        sub = self.cost(c)
+                        # flops from inside; bytes only at the boundary
+                        total.flops += sub.flops
+                        for cc in _COLLECTIVES:
+                            total.coll[cc] += sub.coll[cc]
+                total.bytes += _shape_bytes(rhs)
+                continue
+
+            is_coll = False
+            for c in _COLLECTIVES:
+                if op == c or op == f"{c}-start":
+                    total.coll[c] += _shape_bytes(result_txt)
+                    total.bytes += _shape_bytes(result_txt)
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(rhs, syms)
+                total.bytes += _shape_bytes(rhs)
+                continue
+            if op in _ELEMWISE:
+                total.flops += _shape_elems(result_txt)
+                total.bytes += _shape_bytes(result_txt)
+                continue
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast"):
+                continue
+            # data-movement ops (copy, slice, gather, scatter, reduce, ...)
+            total.bytes += _shape_bytes(result_txt)
+        self._memo[comp] = total
+        return total
+
+
+def analyze(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": c.coll_total,
+            "collectives": dict(c.coll)}

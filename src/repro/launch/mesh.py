@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)            — 256 chips (one v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     — 512 chips
+
+`pod` is an outer data-parallel axis: gradients all-reduce over
+("pod", "data"); model parallelism never crosses the pod boundary (DCN
+between pods is ~25x slower than ICI, so only gradient/optimizer traffic
+may ride it — the standard multi-pod recipe).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run pins XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small meshes for tests (subprocesses with forced host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh, *names) -> int:
+    n = 1
+    for a in names:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n

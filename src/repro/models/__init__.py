@@ -1,0 +1,2 @@
+"""Model zoo: one flexible LM stack covering all assigned architectures."""
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,0 +1,452 @@
+"""GQA attention: chunked-flash training path, cached decode path, and the
+sLSM-tiered decode path (the paper's technique applied to the KV cache).
+
+All paths are pure jnp (pjit/shard_map-friendly for the multi-pod dry-run);
+the Pallas kernels in repro.kernels.lsm_attention are the TPU drop-ins for
+the decode paths and are validated against these in tests.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import runtime as RT
+from repro.models.layers import apply_mrope, apply_rope, dtype_of
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# params
+# --------------------------------------------------------------------------
+
+def init_attention(cfg, key: jax.Array, d_kv_src: int | None = None) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    dkv = d_kv_src or d
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * d ** -0.5).astype(dt),
+        "wk": (jax.random.normal(k2, (dkv, kv * hd)) * dkv ** -0.5).astype(dt),
+        "wv": (jax.random.normal(k3, (dkv, kv * hd)) * dkv ** -0.5).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (h * hd) ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _project_q(cfg, p, x):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    return q.reshape(b, s, cfg.n_heads, cfg.hd)
+
+
+def _project_kv(cfg, p, x):
+    b, s, _ = x.shape
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(b, s, cfg.n_kv, cfg.hd),
+            v.reshape(b, s, cfg.n_kv, cfg.hd))
+
+
+def _expand_kv(x: jax.Array, h: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by broadcasting kv groups."""
+    b, s, kv, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, kv, h // kv, hd))
+    return x.reshape(b, s, h, hd)
+
+
+# --------------------------------------------------------------------------
+# training / prefill path: chunked flash attention (pure jnp)
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, q_chunk: int = 1024,
+                    k_chunk: int = 1024, q_offset: int = 0):
+    """Memory-bounded attention: online softmax over KV chunks.
+
+    q (B, Sq, H, hd); k, v (B, Sk, H, hd) — KV already group-expanded.
+    Never materializes an (Sq, Sk) score matrix: peak extra memory is
+    (B, H, q_chunk, k_chunk), which keeps 32k-token prefill lowerable on
+    the production mesh.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+
+    def fit(s, c):  # largest divisor of s that is <= c
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+
+    q_chunk = fit(sq, q_chunk)
+    k_chunk = fit(sk, k_chunk)
+    n_q, n_k = sq // q_chunk, sk // k_chunk
+
+    qf = q.astype(jnp.float32).reshape(b, n_q, q_chunk, h, hd)
+    kf = k.astype(jnp.float32).reshape(b, n_k, k_chunk, h, hd)
+    vf = v.astype(jnp.float32).reshape(b, n_k, k_chunk, h, hd)
+
+    def q_block(qi, qb):                                  # qb (B, qc, H, hd)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb) * scale
+            if causal:
+                k_pos = ki * k_chunk + jnp.arange(k_chunk)
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(n_k), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, H, qc, hd)
+        return out.transpose(0, 2, 1, 3)                  # (B, qc, H, hd)
+
+    out = jax.lax.map(lambda t: q_block(t[0], t[1]),
+                      (jnp.arange(n_q), jnp.moveaxis(qf, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def self_attention(cfg, p, x, positions, *, causal: bool = True,
+                   positions3=None):
+    """Full-sequence self-attention (train / prefill)."""
+    q = _project_q(cfg, p, x)
+    k, v = _project_kv(cfg, p, x)
+    if cfg.mrope and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    out = flash_attention(q, k, v, causal=causal)
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def cross_attention(cfg, p, x, enc_k, enc_v):
+    """Decoder cross-attention; enc_k/v (B, T, KV, hd) precomputed."""
+    q = _project_q(cfg, p, x)                              # no RoPE (whisper)
+    k = _expand_kv(enc_k, cfg.n_heads)
+    v = _expand_kv(enc_v, cfg.n_heads)
+    out = flash_attention(q, k, v, causal=False,
+                          q_chunk=min(1024, q.shape[1]),
+                          k_chunk=min(1024, k.shape[1]))
+    b, s, _, _ = out.shape
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def project_enc_kv(cfg, p, enc_h):
+    """Precompute encoder K/V for cross-attention caching."""
+    return _project_kv(cfg, p, enc_h)
+
+
+# --------------------------------------------------------------------------
+# decode path: dense ragged cache
+# --------------------------------------------------------------------------
+
+def decode_self_attention(cfg, p, x1, cache_k, cache_v, pos):
+    """One-token decode with a dense KV cache.
+
+    x1 (B, 1, d); cache_k/v (B, Smax, KV, hd); pos (B,) current lengths.
+    Returns (out (B, 1, d), new_cache_k, new_cache_v).
+
+    Cache writes use a *uniform position* (pos[0]) — static batching.
+    Perf note (EXPERIMENTS.md §Perf iter 1): a per-batch ragged scatter
+    (vmap of dynamic_update_slice) defeats the SPMD partitioner and forces
+    the whole cache to replicate (2 x 128.8 GB all-gathers/step on the
+    deepseek decode_32k cell); a scalar-start dynamic_update_slice is
+    trivially partitionable on batch and kv axes. Continuous batching
+    would reintroduce raggedness via a paged/block layout instead.
+    """
+    b = x1.shape[0]
+    q = _project_q(cfg, p, x1)                             # (B, 1, H, hd)
+    k1, v1 = _project_kv(cfg, p, x1)                       # (B, 1, KV, hd)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+        q = apply_mrope(q, pos3, cfg.rope_theta, cfg.mrope_sections)
+        k1 = apply_mrope(k1, pos3, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k1 = apply_rope(k1, pos[:, None], cfg.rope_theta)
+
+    def upd(c, new):
+        return jax.lax.dynamic_update_slice(
+            c, new.astype(c.dtype), (0, pos[0], 0, 0))
+
+    cache_k = upd(cache_k, k1)
+    cache_v = upd(cache_v, v1)
+
+    # Perf (EXPERIMENTS.md §Perf iter 1): contract in the cache dtype with
+    # f32 accumulation — an astype(f32) here materializes an f32 copy of
+    # the ENTIRE cache; and pin the q layout so the kv-head axis (not hd)
+    # carries the model sharding, keeping attention shard-local.
+    group = cfg.n_heads // cfg.n_kv
+    qg = q[:, 0].reshape(b, cfg.n_kv, group, cfg.hd).astype(cache_k.dtype)
+    if cfg.n_kv % max(RT.model_size(), 1) == 0:
+        qg = RT.constrain(qg, "dp", "model", None, None)
+    else:
+        qg = RT.constrain(qg, "dp", None, None, None)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32) * cfg.hd ** -0.5
+    smax = cache_k.shape[1]
+    mask = jnp.arange(smax)[None, :] <= pos[:, None]       # includes new token
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p_att = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p_att.astype(cache_v.dtype),
+                     cache_v, preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x1.dtype)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def _lsm_cold_stats_shardmap(cfg, qg, blk_k, blk_v, ids, sel_ok,
+                             scale: float):
+    """Cold-block attention stats, computed where the blocks live.
+
+    blk_k/v (B, NB, mu, KV, hd) — NB sharded over 'data', KV over 'model'.
+    Each (data, model) shard attends its local selected blocks for its
+    local kv heads; per-shard online-softmax stats merge with a pmax +
+    two psums over 'data' (O(KV*g*hd) bytes — not block payloads).
+    Returns (m, l, acc) shaped like the hot-path stats.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    mesh = RT.mesh()
+    b, nb, mu, kv, hd = blk_k.shape
+    group = cfg.n_heads // kv
+    topk = ids.shape[-1]
+
+    def body(qg_l, bk_l, bv_l, ids_l, ok_l):
+        # qg_l (B, KVl, g, hd); bk_l (B, NBl, mu, KVl, hd);
+        # ids_l/ok_l (B, KVl, topk) — global block ids
+        nbl = bk_l.shape[1]
+        kvl = bk_l.shape[3]
+        base = jax.lax.axis_index("data") * nbl
+        loc = ids_l - base
+        mine = (loc >= 0) & (loc < nbl) & ok_l               # (B, KVl, topk)
+        locc = jnp.clip(loc, 0, nbl - 1)
+
+        def gather_b(blk, idb):                              # per batch
+            def per_kv(kvi):
+                return blk[idb[kvi], :, kvi, :]              # (topk, mu, hd)
+            return jax.vmap(per_kv)(jnp.arange(kvl))
+        sel_k = jax.vmap(gather_b)(bk_l, locc)               # (B,KVl,topk,mu,hd)
+        sel_v = jax.vmap(gather_b)(bv_l, locc)
+
+        s = jnp.einsum("bkgd,bktmd->bkgtm", qg_l, sel_k,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mine[:, :, None, :, None], s, NEG_INF)
+        s = s.reshape(b, kvl, group, topk * mu)
+        m_p = s.max(-1)                                      # (B,KVl,g)
+        p_att = jnp.exp(s - m_p[..., None])
+        p_att = jnp.where(jnp.isfinite(s), p_att, 0.0)
+        l_p = p_att.sum(-1)
+        acc_p = jnp.einsum(
+            "bkgs,bksd->bkgd", p_att.astype(sel_v.dtype),
+            sel_v.reshape(b, kvl, topk * mu, hd),
+            preferred_element_type=jnp.float32)
+        # merge across data shards: stats only
+        m_g = jax.lax.pmax(m_p, "data")
+        corr = jnp.exp(m_p - m_g)
+        l_g = jax.lax.psum(l_p * corr, "data")
+        acc_g = jax.lax.psum(acc_p * corr[..., None], "data")
+        return m_g, l_g, acc_g
+
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None, "model", None, None),
+                  P(None, "data", None, "model", None),
+                  P(None, "data", None, "model", None),
+                  P(None, "model", None), P(None, "model", None)),
+        out_specs=(P(None, "model", None), P(None, "model", None),
+                   P(None, "model", None, None)),
+    )(qg, blk_k, blk_v, ids, sel_ok)
+
+
+# --------------------------------------------------------------------------
+# decode path: sLSM-tiered cache (hot window + summary-gated cold blocks)
+# --------------------------------------------------------------------------
+
+def lsm_cache_shapes(cfg, batch: int, max_len: int):
+    """Shape spec for one layer's tiered cache.
+
+    The block axis is padded to a multiple of 32 so it shards cleanly over
+    the data axis when batch=1 (SP for long-context decode)."""
+    w, mu = cfg.lsm_hot_window, cfg.lsm_block
+    nb = max(1, math.ceil(max(0, max_len - w) / mu) + 1)
+    nb = ((nb + 31) // 32) * 32
+    kv, hd = cfg.n_kv, cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+    return dict(
+        hot_k=((batch, w, kv, hd), dt), hot_v=((batch, w, kv, hd), dt),
+        blk_k=((batch, nb, mu, kv, hd), dt), blk_v=((batch, nb, mu, kv, hd), dt),
+        summ=((batch, nb, kv, hd), dt),
+        hot_len=((batch,), jnp.int32), n_blocks=((batch,), jnp.int32),
+    )
+
+
+def lsm_decode_self_attention(cfg, p, x1, cache: dict, pos):
+    """One-token decode against the tiered cache.
+
+    The hot window is the sLSM memory buffer (always searched); cold
+    blocks are immutable mu-token runs whose summary vector gates access
+    (Bloom/fence analogue): only the top-k scoring blocks are read.
+    Sealing (hot -> new cold block) happens when the hot window fills —
+    the memory-buffer merge, handled in serving/kv_cache.py.
+    """
+    b = x1.shape[0]
+    q = _project_q(cfg, p, x1)
+    k1, v1 = _project_kv(cfg, p, x1)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k1 = apply_rope(k1, pos[:, None], cfg.rope_theta)
+
+    # append to hot window (ring semantics handled by seal in kv_cache).
+    # Uniform-position write — see decode_self_attention perf note.
+    def upd(c, new):
+        return jax.lax.dynamic_update_slice(
+            c, new.astype(c.dtype), (0, cache["hot_len"][0], 0, 0))
+
+    hot_k = upd(cache["hot_k"], k1)
+    hot_v = upd(cache["hot_v"], v1)
+    hot_len = cache["hot_len"] + 1
+
+    # --- block selection (the filter probe) ---
+    kv, hd = cfg.n_kv, cfg.hd
+    group = cfg.n_heads // kv
+    nb = cache["blk_k"].shape[1]
+    mu = cache["blk_k"].shape[2]
+    topk = min(cfg.lsm_topk, nb)
+    qh = q[:, 0]                                            # (B, H, hd)
+    dt = cache["blk_k"].dtype
+    qg = qh.reshape(b, kv, group, hd).astype(dt)
+    score = jnp.einsum("bkgd,bnkd->bkgn", qg, cache["summ"],
+                       preferred_element_type=jnp.float32).max(axis=2)
+    blk_ok = jnp.arange(nb)[None, :] < cache["n_blocks"][:, None]
+    score = jnp.where(blk_ok[:, None, :], score, -jnp.inf)
+
+    # §Perf iter 4: compute-at-data cold attention. Each data shard owns
+    # NB/|data| blocks and each model shard kv/|model| heads; attention
+    # over the selected blocks runs where the blocks live, and only the
+    # online-softmax stats (m, l, acc — O(KV*g*hd)) cross shards, instead
+    # of the 268 MB x layers selected-block payload all-reduce.
+    use_stats = (RT.mesh() is not None and b == 1
+                 and nb % max(RT.data_size(), 1) == 0
+                 and kv % max(RT.model_size(), 1) == 0
+                 and cfg.lsm_dp_groups == 1)
+    if use_stats:
+        top_s, ids = jax.lax.top_k(score, topk)             # (B, KV, topk)
+        sel_ok = jnp.isfinite(top_s)
+        m_c, l_c, acc_c = _lsm_cold_stats_shardmap(
+            cfg, qg, cache["blk_k"], cache["blk_v"], ids, sel_ok,
+            hd ** -0.5)
+        # hot part as stats
+        w = hot_k.shape[1]
+        sf = jnp.einsum("bkgd,bskd->bkgs", qg, hot_k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+        hot_mask = jnp.arange(w)[None, :] < hot_len[:, None]
+        sf = jnp.where(hot_mask[:, None, None, :], sf, NEG_INF)
+        m_h = sf.max(-1)
+        p_h = jnp.exp(sf - m_h[..., None])
+        l_h = p_h.sum(-1)
+        acc_h = jnp.einsum("bkgs,bksd->bkgd", p_h.astype(hot_v.dtype),
+                           jnp.moveaxis(hot_v, 2, 1),
+                           preferred_element_type=jnp.float32)
+        m = jnp.maximum(m_h, m_c)
+        ch = jnp.exp(m_h - m)[..., None]
+        cc = jnp.exp(m_c - m)[..., None]
+        num = acc_h * ch + acc_c * cc
+        den = l_h * jnp.exp(m_h - m) + l_c * jnp.exp(m_c - m)
+        out = num / jnp.maximum(den, 1e-30)[..., None]
+        out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x1.dtype)
+        new_cache = dict(cache, hot_k=hot_k, hot_v=hot_v, hot_len=hot_len)
+        return out @ p["wo"], new_cache
+
+    gsel = max(1, min(cfg.lsm_dp_groups, nb))
+    if gsel > 1 and nb % gsel == 0 and topk <= nb // gsel:
+        # §Perf iter 3 — hierarchical selection: per-shard local top-k,
+        # then a global re-rank over the G*topk candidates. Every block
+        # gather stays inside its shard (the group axis carries the data
+        # sharding); only O(G*topk) scalar scores cross shards. Exact:
+        # the global top-k is a subset of the union of local top-ks, and
+        # the re-rank mask admits precisely the global winners.
+        nbl = nb // gsel
+        sg = score.reshape(b, kv, gsel, nbl)
+        loc_s, loc_i = jax.lax.top_k(sg, topk)              # (B,KV,G,topk)
+        flat_s = loc_s.reshape(b, kv, gsel * topk)
+        kth = jax.lax.top_k(flat_s, topk)[0][..., -1:]      # global threshold
+        sel_ok = jnp.isfinite(flat_s) & (flat_s >= kth)     # (B,KV,G*topk)
+
+        blk_kg = cache["blk_k"].reshape(b, gsel, nbl, mu, kv, hd)
+        blk_vg = cache["blk_v"].reshape(b, gsel, nbl, mu, kv, hd)
+
+        def gather_bg(blk, idb):                            # blk (G,NBl,mu,KV,hd)
+            # idb (KV, G, topk) -> per-group layout (G, KV, topk)
+            def per_g(blk_g, id_g):                         # (NBl,mu,KV,hd),(KV,topk)
+                def per_kv(kvi):
+                    return blk_g[id_g[kvi], :, kvi, :]      # (topk, mu, hd)
+                return jax.vmap(per_kv)(jnp.arange(kv))     # (KV,topk,mu,hd)
+            return jax.vmap(per_g)(blk, jnp.moveaxis(idb, 1, 0))
+        sel_k = jax.vmap(gather_bg)(blk_kg, loc_i)          # (B,G,KV,topk,mu,hd)
+        sel_v = jax.vmap(gather_bg)(blk_vg, loc_i)
+        sel_k = jnp.moveaxis(sel_k, 1, 2).reshape(b, kv, gsel * topk, mu, hd)
+        sel_v = jnp.moveaxis(sel_v, 1, 2).reshape(b, kv, gsel * topk, mu, hd)
+        n_cand = gsel * topk
+    else:
+        top_s, ids = jax.lax.top_k(score, topk)             # (B, KV, topk)
+        sel_ok = jnp.isfinite(top_s)
+
+        def gather_b(blk, idb):                             # per batch
+            def per_kv(kvi):
+                return blk[idb[kvi], :, kvi, :]             # (topk, mu, hd)
+            return jax.vmap(per_kv)(jnp.arange(kv))         # (KV,topk,mu,hd)
+
+        sel_k = jax.vmap(gather_b)(cache["blk_k"], ids)     # (B,KV,topk,mu,hd)
+        sel_v = jax.vmap(gather_b)(cache["blk_v"], ids)
+        n_cand = topk
+
+    # --- fused attention over [hot | selected blocks] ---
+    w = hot_k.shape[1]
+    sf = jnp.einsum("bkgd,bskd->bkgs", qg, hot_k,
+                    preferred_element_type=jnp.float32)
+    hot_mask = jnp.arange(w)[None, :] < hot_len[:, None]
+    sf = jnp.where(hot_mask[:, None, None, :], sf, NEG_INF)
+    sc = jnp.einsum("bkgd,bktmd->bkgtm", qg, sel_k,
+                    preferred_element_type=jnp.float32)
+    sc = jnp.where(sel_ok[:, :, None, :, None], sc, NEG_INF)
+    scale = hd ** -0.5
+    s_all = jnp.concatenate(
+        [sf.reshape(b, kv, group, w), sc.reshape(b, kv, group, n_cand * mu)],
+        axis=-1) * scale
+    p_att = jax.nn.softmax(s_all, axis=-1)
+    v_all = jnp.concatenate(
+        [jnp.moveaxis(hot_v, 2, 1).reshape(b, kv, w, hd),
+         sel_v.reshape(b, kv, n_cand * mu, hd)], axis=2)
+    out = jnp.einsum("bkgs,bksd->bkgd", p_att.astype(v_all.dtype), v_all,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, cfg.n_heads * cfg.hd).astype(x1.dtype)
+
+    new_cache = dict(cache, hot_k=hot_k, hot_v=hot_v, hot_len=hot_len)
+    return out @ p["wo"], new_cache

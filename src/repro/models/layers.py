@@ -1,0 +1,109 @@
+"""Shared layers: norms, rotary embeddings (RoPE / M-RoPE), gated MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def apply_norm(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+def init_norm(cfg, d: int) -> dict:
+    p = {"w": jnp.ones((d,), dtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype_of(cfg))
+    return p
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (..., S, H, hd); positions (..., S) -> rotated x (half-split form)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL M-RoPE: the hd/2 frequency lanes are split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x (B, S, H, hd); positions3 (3, B, S). For text, all three streams are
+    equal and M-RoPE reduces to RoPE (tested).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    # pick which position stream drives each frequency lane
+    sec_id = jnp.repeat(jnp.arange(len(sections)),
+                        jnp.asarray(sections), total_repeat_length=hd // 2)
+    pos = positions3[sec_id, :, :]                      # (hd/2, B, S)
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(cfg, key: jax.Array) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    dt = dtype_of(cfg)
+    p = {"w_up": (jax.random.normal(k2, (d, f)) * s_in).astype(dt),
+         "w_down": (jax.random.normal(k3, (f, d)) * s_out).astype(dt)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w_gate"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dt)
+    return p
+
+
+def mlp(cfg, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_up"])
+    else:  # gelu (whisper)
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    return h @ p["w_down"]

@@ -1,0 +1,542 @@
+"""Model assembly: init / forward / prefill / decode for every family.
+
+One flexible stack covers the 10 assigned architectures:
+  dense | vlm  — GQA transformer (RoPE or M-RoPE, SwiGLU/GeGLU, opt. bias)
+  moe          — same + sort-dispatch MoE FFN
+  ssm          — Mamba-2 (SSD) mixer stack, attention-free
+  hybrid       — Mamba-2 backbone + one *shared* attention block applied
+                 every `shared_attn_every` layers (Zamba2)
+  encdec       — Whisper: bidir encoder over stubbed frame embeddings +
+                 causal decoder with cross-attention
+
+Layers are stacked (leading L axis) and driven by lax.scan so the HLO is
+O(1) in depth — essential for 80 dry-run compiles on the production mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import (apply_norm, dtype_of, init_mlp, init_norm,
+                                 mlp)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def _init_attn_block(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_norm(cfg, cfg.d_model),
+         "attn": ATT.init_attention(cfg, k1),
+         "ln2": init_norm(cfg, cfg.d_model),
+         "mlp": init_mlp(cfg, k2)}
+    return p
+
+
+def _init_moe_block(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg, cfg.d_model),
+            "attn": ATT.init_attention(cfg, k1),
+            "ln2": init_norm(cfg, cfg.d_model),
+            "moe": MOE.init_moe(cfg, k2)}
+
+
+def _init_ssm_block(cfg, key):
+    return {"ln1": init_norm(cfg, cfg.d_model),
+            "mixer": SSM.init_mamba2(cfg, key)}
+
+
+def _init_dec_block(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg, cfg.d_model),
+            "attn": ATT.init_attention(cfg, k1),
+            "ln2": init_norm(cfg, cfg.d_model),
+            "cross": ATT.init_attention(cfg, k2),
+            "ln3": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(cfg, k3)}
+
+
+def init_params(cfg, key: jax.Array) -> dict:
+    dt = dtype_of(cfg)
+    keys = jax.random.split(key, 8)
+    vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": (jax.random.normal(keys[0], (vp, d)) * 0.02).astype(dt),
+        "final_norm": init_norm(cfg, d),
+        "lm_head": (jax.random.normal(keys[1], (d, vp)) * d ** -0.5).astype(dt),
+    }
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    if cfg.family in ("dense", "vlm"):
+        params["layers"] = jax.vmap(partial(_init_attn_block, cfg))(lkeys)
+    elif cfg.family == "moe":
+        params["layers"] = jax.vmap(partial(_init_moe_block, cfg))(lkeys)
+    elif cfg.family == "ssm":
+        params["layers"] = jax.vmap(partial(_init_ssm_block, cfg))(lkeys)
+    elif cfg.family == "hybrid":
+        params["layers"] = jax.vmap(partial(_init_ssm_block, cfg))(lkeys)
+        params["shared"] = _init_attn_block(cfg, keys[3])
+    elif cfg.family == "encdec":
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["enc_layers"] = jax.vmap(partial(_init_attn_block, cfg))(ekeys)
+        params["enc_norm"] = init_norm(cfg, d)
+        params["layers"] = jax.vmap(partial(_init_dec_block, cfg))(lkeys)
+        params["dec_pos"] = (jax.random.normal(keys[5], (448, d)) * 0.01).astype(dt)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def _dec_positions(cfg, params, s: int) -> jax.Array:
+    """Whisper learned decoder positions; sinusoidal extension past the
+    448-entry table for out-of-family assigned shapes (32k decode cells)."""
+    table = params["dec_pos"]
+    if s <= table.shape[0]:
+        return table[:s][None, :, :]
+    ext = _sinusoid(s - table.shape[0], cfg.d_model).astype(table.dtype)
+    return jnp.concatenate([table, ext], axis=0)[None, :, :]
+
+
+def _sinusoid(seq: int, d: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _attn_block_fwd(cfg, lp, x, positions, positions3=None, causal=True):
+    h = apply_norm(cfg, lp["ln1"], x)
+    x = x + ATT.self_attention(cfg, lp["attn"], h, positions,
+                               causal=causal, positions3=positions3)
+    h = apply_norm(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        y, aux = MOE.moe_ffn(cfg, lp["moe"], h)
+        return x + y, aux
+    return x + mlp(cfg, lp["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _ssm_block_fwd(cfg, lp, x):
+    h = apply_norm(cfg, lp["ln1"], x)
+    return x + SSM.mamba2_forward(cfg, lp["mixer"], h)
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill logits)
+# --------------------------------------------------------------------------
+
+def forward(cfg, params: dict, batch: dict):
+    """-> (hidden (B, S, d), aux_loss). Logits live in the loss (chunked)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions",
+                          jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)))
+    positions3 = batch.get("positions3")
+    x = _embed(cfg, params, tokens)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        @jax.checkpoint
+        def body(carry, lp):
+            x, aux = carry
+            x, a = _attn_block_fwd(cfg, lp, x, positions, positions3)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+
+    elif cfg.family == "ssm":
+        @jax.checkpoint
+        def body(x, lp):
+            return _ssm_block_fwd(cfg, lp, x), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+
+        @jax.checkpoint
+        def body(carry, inp):
+            x, = carry
+            li, lp = inp
+            x = _ssm_block_fwd(cfg, lp, x)
+            x = jax.lax.cond(
+                (li % every) == every - 1,
+                lambda x: _attn_block_fwd(cfg, params["shared"], x,
+                                          positions)[0],
+                lambda x: x, x)
+            return (x,), None
+        (x,), _ = jax.lax.scan(
+            body, (x,), (jnp.arange(cfg.n_layers), params["layers"]))
+
+    elif cfg.family == "encdec":
+        enc_h = _encode(cfg, params, batch["frames"])
+        x = x + _dec_positions(cfg, params, s)
+
+        @jax.checkpoint
+        def body(carry, lp):
+            x, aux = carry
+            h = apply_norm(cfg, lp["ln1"], x)
+            x = x + ATT.self_attention(cfg, lp["attn"], h, None, causal=True)
+            h = apply_norm(cfg, lp["ln2"], x)
+            ek, ev = ATT.project_enc_kv(cfg, lp["cross"], enc_h)
+            x = x + ATT.cross_attention(cfg, lp["cross"], h, ek, ev)
+            h = apply_norm(cfg, lp["ln3"], x)
+            x = x + mlp(cfg, lp["mlp"], h)
+            return (x, aux), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    return apply_norm(cfg, params["final_norm"], x), aux
+
+
+def _encode(cfg, params, frames):
+    """Whisper encoder over stubbed frame embeddings (B, T, d)."""
+    b, t, _ = frames.shape
+    x = frames + _sinusoid(t, cfg.d_model)[None].astype(frames.dtype)
+
+    @jax.checkpoint
+    def body(x, lp):
+        x, _ = _attn_block_fwd(cfg, lp, x, None, causal=False)
+        return x, None
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def logits_full(cfg, params, batch):
+    """Small-model convenience: full (B, S, V) logits."""
+    h, aux = forward(cfg, params, batch)
+    logits = h @ params["lm_head"]
+    return logits[..., :cfg.vocab], aux
+
+
+# --------------------------------------------------------------------------
+# prefill: forward + decode-ready caches
+# --------------------------------------------------------------------------
+
+def _attn_kv_for_cache(cfg, lp, x, positions, positions3=None):
+    """Recompute the rope'd K/V a block contributes to the cache."""
+    h = apply_norm(cfg, lp["ln1"], x)
+    k, v = ATT._project_kv(cfg, lp["attn"], h)
+    if cfg.mrope and positions3 is not None:
+        k = ATT.apply_mrope(k, positions3, cfg.rope_theta, cfg.mrope_sections)
+    elif positions is not None:
+        k = ATT.apply_rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def forward_collect(cfg, params: dict, batch: dict):
+    """Prefill: -> (hidden, caches) with caches ready for decode_step.
+
+    Cache length == prompt length; serving/kv_cache.py grows/reshapes it
+    for generation (dense) or seals it into the tiered layout (lsm).
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = batch.get("positions",
+                          jnp.broadcast_to(jnp.arange(s)[None, :], (b, s)))
+    positions3 = batch.get("positions3")
+    x = _embed(cfg, params, tokens)
+    pos_after = jnp.full((b,), s, jnp.int32)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(carry, lp):
+            x, aux = carry
+            k, v = _attn_kv_for_cache(cfg, lp, x, positions, positions3)
+            x, a = _attn_block_fwd(cfg, lp, x, positions, positions3)
+            return (x, aux + a), (k, v)
+        (x, _), (ks, vs) = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        caches = {"k": ks, "v": vs, "pos": pos_after}
+
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, st = SSM.mamba2_prefill(cfg, lp["mixer"], h)
+            return x + y, st
+        x, st = jax.lax.scan(body, x, params["layers"])
+        caches = {"ssm": st["ssm"], "conv": st["conv"], "pos": pos_after}
+
+    elif cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+
+        def body(carry, inp):
+            x, = carry
+            li, lp = inp
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, st = SSM.mamba2_prefill(cfg, lp["mixer"], h)
+            x = x + y
+            shared_k, shared_v = _attn_kv_for_cache(
+                cfg, params["shared"], x, positions)
+            is_shared = (li % every) == every - 1
+            x = jax.lax.cond(
+                is_shared,
+                lambda x: _attn_block_fwd(cfg, params["shared"], x,
+                                          positions)[0],
+                lambda x: x, x)
+            return (x,), (st["ssm"], st["conv"], shared_k, shared_v)
+        (x,), (ssm_st, conv_st, sk, sv) = jax.lax.scan(
+            body, (x,), (jnp.arange(cfg.n_layers), params["layers"]))
+        app_idx = [i * every + every - 1 for i in
+                   range(max(1, cfg.n_layers // every))]
+        caches = {"ssm": ssm_st, "conv": conv_st,
+                  "shared": {"k": sk[jnp.asarray(app_idx)],
+                             "v": sv[jnp.asarray(app_idx)]},
+                  "pos": pos_after}
+
+    elif cfg.family == "encdec":
+        enc_h = _encode(cfg, params, batch["frames"])
+        x = x + _dec_positions(cfg, params, s)
+
+        def body(x, lp):
+            h = apply_norm(cfg, lp["ln1"], x)
+            k, v = ATT._project_kv(cfg, lp["attn"], h)
+            x = x + ATT.self_attention(cfg, lp["attn"], h, None, causal=True)
+            h = apply_norm(cfg, lp["ln2"], x)
+            ek, ev = ATT.project_enc_kv(cfg, lp["cross"], enc_h)
+            x = x + ATT.cross_attention(cfg, lp["cross"], h, ek, ev)
+            h = apply_norm(cfg, lp["ln3"], x)
+            x = x + mlp(cfg, lp["mlp"], h)
+            return x, (k, v, ek, ev)
+        x, (ks, vs, eks, evs) = jax.lax.scan(body, x, params["layers"])
+        caches = {"k": ks, "v": vs, "enc_k": eks, "enc_v": evs,
+                  "pos": pos_after}
+    else:
+        raise ValueError(cfg.family)
+
+    return apply_norm(cfg, params["final_norm"], x), caches
+
+
+def prefill_step(cfg, params: dict, batch: dict):
+    """-> (last-token logits (B, vocab), caches)."""
+    hidden, caches = forward_collect(cfg, params, batch)
+    logits = (hidden[:, -1, :] @ params["lm_head"])[..., :cfg.vocab]
+    return logits, caches
+
+
+# --------------------------------------------------------------------------
+# decode caches
+# --------------------------------------------------------------------------
+
+def init_decode_caches(cfg, batch: int, max_len: int, kind: str = "dense"):
+    """ShapeDtype pytree of decode state. kind: dense | lsm."""
+    dt = jnp.dtype(cfg.dtype)
+    l, kv, hd = cfg.n_layers, cfg.n_kv, cfg.hd
+
+    def zeros(shape, d=dt):
+        return jnp.zeros(shape, d)
+
+    if cfg.family == "ssm":
+        sh = SSM.mamba2_decode_state_shapes(cfg, batch)
+        return {"ssm": zeros((l,) + sh["ssm"][0], sh["ssm"][1]),
+                "conv": zeros((l,) + sh["conv"][0], sh["conv"][1]),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    if cfg.family == "hybrid":
+        sh = SSM.mamba2_decode_state_shapes(cfg, batch)
+        n_apps = max(1, cfg.n_layers // cfg.shared_attn_every)
+        out = {"ssm": zeros((l,) + sh["ssm"][0], sh["ssm"][1]),
+               "conv": zeros((l,) + sh["conv"][0], sh["conv"][1]),
+               "pos": jnp.zeros((batch,), jnp.int32)}
+        if kind == "lsm":
+            shapes = ATT.lsm_cache_shapes(cfg, batch, max_len)
+            out["shared"] = {k: zeros((n_apps,) + s, d)
+                             for k, (s, d) in shapes.items()}
+        else:
+            out["shared"] = {
+                "k": zeros((n_apps, batch, max_len, kv, hd)),
+                "v": zeros((n_apps, batch, max_len, kv, hd))}
+        return out
+
+    if cfg.family == "encdec":
+        return {"k": zeros((l, batch, max_len, kv, hd)),
+                "v": zeros((l, batch, max_len, kv, hd)),
+                "enc_k": zeros((l, batch, cfg.encoder_seq, kv, hd)),
+                "enc_v": zeros((l, batch, cfg.encoder_seq, kv, hd)),
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    if kind == "lsm":
+        shapes = ATT.lsm_cache_shapes(cfg, batch, max_len)
+        out = {k: zeros((l,) + s, d) for k, (s, d) in shapes.items()}
+        out["pos"] = jnp.zeros((batch,), jnp.int32)
+        return out
+
+    return {"k": zeros((l, batch, max_len, kv, hd)),
+            "v": zeros((l, batch, max_len, kv, hd)),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# --------------------------------------------------------------------------
+# decode step (one token)
+# --------------------------------------------------------------------------
+
+def decode_step(cfg, params: dict, token: jax.Array, caches: dict,
+                kind: str = "dense"):
+    """token (B,) int32 -> (logits (B, vocab), new caches)."""
+    b = token.shape[0]
+    pos = caches["pos"]
+    x = _embed(cfg, params, token)[:, None, :]              # (B, 1, d)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if kind == "lsm":
+            x, caches = _decode_lsm_stack(cfg, params, x, caches)
+        else:
+            x, caches = _decode_dense_stack(cfg, params, x, caches)
+
+    elif cfg.family == "ssm":
+        def body(x, per):
+            lp, s_ssm, s_conv = per
+            h = apply_norm(cfg, lp["ln1"], x)
+            y, ns = SSM.mamba2_decode(cfg, lp["mixer"], h,
+                                      {"ssm": s_ssm, "conv": s_conv})
+            return x + y, (ns["ssm"], ns["conv"])
+        x, (new_ssm, new_conv) = jax.lax.scan(
+            body, x, (params["layers"], caches["ssm"], caches["conv"]))
+        caches = dict(caches, ssm=new_ssm, conv=new_conv)
+
+    elif cfg.family == "hybrid":
+        x, caches = _decode_hybrid(cfg, params, x, caches, kind)
+
+    elif cfg.family == "encdec":
+        pos_c = jnp.minimum(pos, params["dec_pos"].shape[0] - 1)
+        x = x + params["dec_pos"][pos_c][:, None, :]
+
+        def body(carry, per):
+            x, = carry
+            lp, ck, cv, ek, ev = per
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, ck, cv = ATT.decode_self_attention(cfg, lp["attn"], h, ck, cv,
+                                                  pos)
+            x = x + a
+            h = apply_norm(cfg, lp["ln2"], x)
+            x = x + ATT.cross_attention(cfg, lp["cross"], h, ek, ev)
+            h = apply_norm(cfg, lp["ln3"], x)
+            x = x + mlp(cfg, lp["mlp"], h)
+            return (x,), (ck, cv)
+        (x,), (nk, nv) = jax.lax.scan(
+            body, (x,), (params["layers"], caches["k"], caches["v"],
+                         caches["enc_k"], caches["enc_v"]))
+        caches = dict(caches, k=nk, v=nv)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = (x[:, 0, :] @ params["lm_head"])[..., :cfg.vocab]
+    caches = dict(caches, pos=pos + 1)
+    return logits, caches
+
+
+def _decode_dense_stack(cfg, params, x, caches):
+    pos = caches["pos"]
+
+    def body(x, per):
+        lp, ck, cv = per
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, ck, cv = ATT.decode_self_attention(cfg, lp["attn"], h, ck, cv, pos)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = MOE.moe_ffn(cfg, lp["moe"], h)
+            x = x + y
+        else:
+            x = x + mlp(cfg, lp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], caches["k"], caches["v"]))
+    return x, dict(caches, k=nk, v=nv)
+
+
+def _decode_lsm_stack(cfg, params, x, caches):
+    pos = caches["pos"]
+    cache_keys = ("hot_k", "hot_v", "blk_k", "blk_v", "summ", "hot_len",
+                  "n_blocks")
+
+    def body(x, per):
+        lp = per[0]
+        lcache = dict(zip(cache_keys, per[1:]))
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, lcache = ATT.lsm_decode_self_attention(cfg, lp["attn"], h,
+                                                  lcache, pos)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = MOE.moe_ffn(cfg, lp["moe"], h)
+            x = x + y
+        else:
+            x = x + mlp(cfg, lp["mlp"], h)
+        return x, tuple(lcache[k] for k in cache_keys)
+
+    x, new = jax.lax.scan(
+        body, x, (params["layers"],) + tuple(caches[k] for k in cache_keys))
+    return x, dict(caches, **dict(zip(cache_keys, new)))
+
+
+def _decode_hybrid(cfg, params, x, caches, kind):
+    pos = caches["pos"]
+    every = cfg.shared_attn_every
+    shared = caches["shared"]
+
+    def apply_shared(x, shared, app_idx):
+        h = apply_norm(cfg, params["shared"]["ln1"], x)
+        if kind == "lsm":
+            keys = ("hot_k", "hot_v", "blk_k", "blk_v", "summ", "hot_len",
+                    "n_blocks")
+            lc = {k: jax.lax.dynamic_index_in_dim(shared[k], app_idx, 0,
+                                                  keepdims=False)
+                  for k in keys}
+            a, lc = ATT.lsm_decode_self_attention(
+                cfg, params["shared"]["attn"], h, lc, pos)
+            shared = {k: jax.lax.dynamic_update_index_in_dim(
+                shared[k], lc[k].astype(shared[k].dtype), app_idx, 0)
+                for k in keys}
+        else:
+            ck = jax.lax.dynamic_index_in_dim(shared["k"], app_idx, 0, False)
+            cv = jax.lax.dynamic_index_in_dim(shared["v"], app_idx, 0, False)
+            a, ck, cv = ATT.decode_self_attention(
+                cfg, params["shared"]["attn"], h, ck, cv, pos)
+            shared = {
+                "k": jax.lax.dynamic_update_index_in_dim(shared["k"], ck,
+                                                         app_idx, 0),
+                "v": jax.lax.dynamic_update_index_in_dim(shared["v"], cv,
+                                                         app_idx, 0)}
+        x = x + a
+        h = apply_norm(cfg, params["shared"]["ln2"], x)
+        return x + mlp(cfg, params["shared"]["mlp"], h), shared
+
+    def body(carry, per):
+        x, shared = carry
+        li, lp, s_ssm, s_conv = per
+        h = apply_norm(cfg, lp["ln1"], x)
+        y, ns = SSM.mamba2_decode(cfg, lp["mixer"], h,
+                                  {"ssm": s_ssm, "conv": s_conv})
+        x = x + y
+        x, shared = jax.lax.cond(
+            (li % every) == every - 1,
+            lambda x, sh: apply_shared(x, sh, li // every),
+            lambda x, sh: (x, sh), x, shared)
+        return (x, shared), (ns["ssm"], ns["conv"])
+
+    (x, shared), (new_ssm, new_conv) = jax.lax.scan(
+        body, (x, shared),
+        (jnp.arange(cfg.n_layers), params["layers"], caches["ssm"],
+         caches["conv"]))
+    return x, dict(caches, ssm=new_ssm, conv=new_conv, shared=shared)

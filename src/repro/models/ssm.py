@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in chunked
+matmul form, plus the O(1) single-token decode step.
+
+The chunked SSD algorithm turns the linear recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t,   y_t = C_t h_t + D x_t
+into (1) intra-chunk "attention" with a causal decay kernel, (2) per-chunk
+state summaries, (3) an inter-chunk scan, (4) state-to-output corrections
+— all dense matmuls except the tiny chunk-level scan, i.e. MXU-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of, rmsnorm
+
+CHUNK = 256
+
+
+def init_mamba2(cfg, key: jax.Array) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * g * n
+    d_in_proj = 2 * din + 2 * g * n + h
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, d_in_proj)) * d ** -0.5).astype(dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch))
+                   * cfg.ssm_conv ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((din,), dt),
+        "out_proj": (jax.random.normal(k4, (din, d)) * din ** -0.5).astype(dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    din, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xbc, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * g * n], axis=-1)
+    return z, xbc, dt_raw  # xbc = [x, B, C] pre-conv channels
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv over time. xbc (B, S, Ch); w (K, Ch)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(a):
+    """a (..., L) -> (..., L, L): sum_{j<i..} with -inf above diagonal."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int = CHUNK, h0=None):
+    """Chunked SSD scan.
+
+    x (B, S, H, P); dt (B, S, H); a (H,) negative; b, c (B, S, G, N).
+    Returns (y (B, S, H, P), h_final (B, H, P, N)).
+    """
+    bs, s, nh, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = nh // g
+
+    xz = (x * dt[..., None]).reshape(bs, nc, chunk, nh, p)   # dt-scaled input
+    adt = (dt * a).reshape(bs, nc, chunk, nh)                # (B,C,L,H)
+    bz = jnp.broadcast_to(
+        b.reshape(bs, nc, chunk, g, 1, n),
+        (bs, nc, chunk, g, rep, n)).reshape(bs, nc, chunk, nh, n)
+    cz = jnp.broadcast_to(
+        c.reshape(bs, nc, chunk, g, 1, n),
+        (bs, nc, chunk, g, rep, n)).reshape(bs, nc, chunk, nh, n)
+
+    a_perm = jnp.moveaxis(adt, -1, -2)                       # (B,C,H,L)
+    a_cum = jnp.cumsum(a_perm, axis=-1)                      # (B,C,H,L)
+
+    # (1) intra-chunk
+    ll = jnp.exp(_segsum(a_perm))                            # (B,C,H,L,L)
+    y_diag = jnp.einsum("bclhn,bcshn,bchls,bcshp->bclhp", cz, bz, ll, xz)
+
+    # (2) chunk state summaries
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (B,C,H,L)
+    states = jnp.einsum("bclhn,bchl,bclhp->bchpn", bz, decay_states, xz)
+
+    # (3) inter-chunk recurrence (tiny scan over chunk count)
+    chunk_decay = jnp.exp(a_cum[..., -1])                    # (B,C,H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp                                        # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+
+    h_init = (jnp.zeros((bs, nh, p, n), x.dtype) if h0 is None else h0)
+    h_last, h_prevs = jax.lax.scan(
+        scan_fn, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(h_prevs, 0, 1)                # (B,C,H,P,N)
+
+    # (4) state -> output
+    state_decay = jnp.exp(a_cum)                             # (B,C,H,L)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", cz, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bs, s, nh, p)
+    return y, h_last
+
+
+def mamba2_forward(cfg, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba-2 mixer. x (B, S, d) -> (B, S, d)."""
+    bs, s, _ = x.shape
+    g, n, nh, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(cfg, x @ p["in_proj"])
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(bs, s, nh, pd).astype(jnp.float32)
+    y, _ = ssd_chunked(xh, dt, a,
+                       b.reshape(bs, s, g, n).astype(jnp.float32),
+                       c.reshape(bs, s, g, n).astype(jnp.float32),
+                       chunk=min(CHUNK, s))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(bs, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_prefill(cfg, p: dict, x: jax.Array):
+    """Full-sequence forward that also returns decode-ready state.
+
+    -> (y (B, S, d), {"ssm": (B, H, P, N), "conv": (B, K-1, Ch)})
+    """
+    bs, s, _ = x.shape
+    g, n, nh, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, dt_raw = _split_proj(cfg, x @ p["in_proj"])
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, b, c = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    xh = xs.reshape(bs, s, nh, pd).astype(jnp.float32)
+    y, h_last = ssd_chunked(xh, dt, a,
+                            b.reshape(bs, s, g, n).astype(jnp.float32),
+                            c.reshape(bs, s, g, n).astype(jnp.float32),
+                            chunk=min(CHUNK, s))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(bs, s, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    k = cfg.ssm_conv
+    conv_state = xbc_raw[:, -(k - 1):, :].astype(jnp.dtype(cfg.dtype))
+    return y @ p["out_proj"], {"ssm": h_last.astype(jnp.float32),
+                               "conv": conv_state}
+
+
+def mamba2_decode_state_shapes(cfg, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return dict(
+        ssm=((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+             jnp.float32),
+        conv=((batch, cfg.ssm_conv - 1, conv_ch), jnp.dtype(cfg.dtype)),
+    )
+
+
+def mamba2_decode(cfg, p: dict, x1: jax.Array, state: dict):
+    """O(1) decode step. x1 (B, 1, d); state {ssm, conv}."""
+    bs = x1.shape[0]
+    g, n, nh, pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt_raw = _split_proj(cfg, x1 @ p["in_proj"])
+    # rolling conv state
+    hist = jnp.concatenate([state["conv"], xbc.astype(state["conv"].dtype)],
+                           axis=1)                           # (B, K, Ch)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(x1.dtype)
+    new_conv = hist[:, 1:, :]
+
+    xs, b, c = jnp.split(xbc1, [cfg.d_inner, cfg.d_inner + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                                 # (H,)
+    xh = xs[:, 0].reshape(bs, nh, pd).astype(jnp.float32)    # (B,H,P)
+    rep = nh // g
+    bh = jnp.broadcast_to(b[:, 0].reshape(bs, g, 1, n),
+                          (bs, g, rep, n)).reshape(bs, nh, n)
+    ch = jnp.broadcast_to(c[:, 0].reshape(bs, g, 1, n),
+                          (bs, g, rep, n)).reshape(bs, nh, n)
+
+    decay = jnp.exp(dt * a)                                  # (B,H)
+    h_new = (state["ssm"] * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt, xh, bh))
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, ch) + xh * p["D"][None, :, None]
+    y = y.reshape(bs, 1, cfg.d_inner).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], dict(ssm=h_new, conv=new_conv)

@@ -1,0 +1,2 @@
+from repro.serving.kv_cache import (lsm_from_dense, seal_hot_block,  # noqa: F401
+                                    generate)

@@ -1,0 +1,124 @@
+"""sLSM-tiered KV cache management (the paper's write path, for tokens).
+
+Lifecycle per layer:
+  * decode appends K/V to the *hot window* (the memory buffer);
+  * when the hot window fills, `seal_hot_block` merges its oldest `mu`
+    tokens into an immutable cold block + summary vector (run seal +
+    index build: the summary is the Bloom-filter/fence-pointer analogue);
+  * attention reads hot + top-k summary-gated cold blocks only.
+
+The host decides *when* to seal (every mu steps), mirroring the engine's
+host-orchestrated merges; the seal itself is one jitted shift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def _seal_one(hot_k, hot_v, blk_k, blk_v, summ, hot_len, n_blocks, mu: int):
+    """Seal the oldest mu hot tokens into cold block slot n_blocks.
+
+    Shapes (single layer, single batch): hot (W, KV, hd);
+    blk (NB, mu, KV, hd); summ (NB, KV, hd).
+    """
+    w = hot_k.shape[0]
+    new_blk_k = hot_k[:mu]
+    new_blk_v = hot_v[:mu]
+    new_summ = new_blk_k.mean(axis=0)
+    blk_k = jax.lax.dynamic_update_index_in_dim(
+        blk_k, new_blk_k.astype(blk_k.dtype), n_blocks, 0)
+    blk_v = jax.lax.dynamic_update_index_in_dim(
+        blk_v, new_blk_v.astype(blk_v.dtype), n_blocks, 0)
+    summ = jax.lax.dynamic_update_index_in_dim(
+        summ, new_summ.astype(summ.dtype), n_blocks, 0)
+    hot_k = jnp.concatenate([hot_k[mu:], jnp.zeros_like(hot_k[:mu])])
+    hot_v = jnp.concatenate([hot_v[mu:], jnp.zeros_like(hot_v[:mu])])
+    return hot_k, hot_v, blk_k, blk_v, summ, hot_len - mu, n_blocks + 1
+
+
+def seal_hot_block(cfg, caches: dict) -> dict:
+    """Seal across all layers/batches (stacked (L, B, ...) leaves;
+    hot_len / n_blocks are (L, B))."""
+    mu = cfg.lsm_block
+    f = jax.vmap(jax.vmap(  # over L, then B
+        lambda hk, hv, bk, bv, sm, hl, nb: _seal_one(hk, hv, bk, bv, sm,
+                                                     hl, nb, mu)))
+    hk, hv, bk, bv, sm, hl, nb = f(
+        caches["hot_k"], caches["hot_v"], caches["blk_k"], caches["blk_v"],
+        caches["summ"], caches["hot_len"], caches["n_blocks"])
+    return dict(caches, hot_k=hk, hot_v=hv, blk_k=bk, blk_v=bv, summ=sm,
+                hot_len=hl, n_blocks=nb)
+
+
+seal_hot_block_jit = jax.jit(seal_hot_block, static_argnums=0)
+
+
+def lsm_from_dense(cfg, dense_caches: dict, max_len: int) -> dict:
+    """Convert prefill (dense) caches into the tiered layout: full mu-token
+    prefixes become cold blocks; the remainder lands in the hot window."""
+    mu, w = cfg.lsm_block, cfg.lsm_hot_window
+    k, v = dense_caches["k"], dense_caches["v"]     # (L, B, S, KV, hd)
+    l, b, s, kv, hd = k.shape
+    n_cold = max(0, (s - 1)) // mu                  # keep >=1 token hot
+    n_cold = min(n_cold, max(0, (s - 1) // mu))
+    hot_start = n_cold * mu
+    hot_used = s - hot_start
+    assert hot_used <= w, (hot_used, w)
+
+    out = lm.init_decode_caches(cfg, b, max_len, kind="lsm")
+    nb_cap = out["blk_k"].shape[2]
+    assert n_cold <= nb_cap, (n_cold, nb_cap)
+    if n_cold:
+        cold_k = k[:, :, :hot_start].reshape(l, b, n_cold, mu, kv, hd)
+        cold_v = v[:, :, :hot_start].reshape(l, b, n_cold, mu, kv, hd)
+        out["blk_k"] = out["blk_k"].at[:, :, :n_cold].set(
+            cold_k.astype(out["blk_k"].dtype))
+        out["blk_v"] = out["blk_v"].at[:, :, :n_cold].set(
+            cold_v.astype(out["blk_v"].dtype))
+        out["summ"] = out["summ"].at[:, :, :n_cold].set(
+            cold_k.mean(axis=3).astype(out["summ"].dtype))
+    out["hot_k"] = out["hot_k"].at[:, :, :hot_used].set(
+        k[:, :, hot_start:s].astype(out["hot_k"].dtype))
+    out["hot_v"] = out["hot_v"].at[:, :, :hot_used].set(
+        v[:, :, hot_start:s].astype(out["hot_v"].dtype))
+    out["hot_len"] = jnp.full((l, b), hot_used, jnp.int32)
+    out["n_blocks"] = jnp.full((l, b), n_cold, jnp.int32)
+    out["pos"] = dense_caches["pos"]
+    return out
+
+
+def generate(cfg, params, prompt_batch: dict, steps: int,
+             kind: str = "dense", max_len: int | None = None):
+    """Greedy generation driver (host loop; every step jitted)."""
+    b, s = prompt_batch["tokens"].shape
+    max_len = max_len or (s + steps + 8)
+    logits, caches = jax.jit(lm.prefill_step, static_argnums=0)(
+        cfg, params, prompt_batch)
+    if kind == "lsm":
+        caches = lsm_from_dense(cfg, caches, max_len)
+    else:
+        grown = lm.init_decode_caches(cfg, b, max_len, kind="dense")
+        for kk in ("k", "v"):
+            if kk in caches:
+                grown[kk] = grown[kk].at[:, :, :s].set(
+                    caches[kk].astype(grown[kk].dtype))
+        for kk in ("enc_k", "enc_v", "ssm", "conv", "shared"):
+            if kk in caches:
+                grown[kk] = caches[kk]
+        grown["pos"] = caches["pos"]
+        caches = grown
+
+    step_fn = jax.jit(lm.decode_step, static_argnums=(0, 4))
+    out_tokens = [jnp.argmax(logits, -1)]
+    for _ in range(steps - 1):
+        tok = out_tokens[-1].astype(jnp.int32)
+        logits, caches = step_fn(cfg, params, tok, caches, kind)
+        out_tokens.append(jnp.argmax(logits, -1))
+        if kind == "lsm":
+            # host-orchestrated seal, like the engine's merges
+            if int(caches["hot_len"].reshape(-1)[0]) >= cfg.lsm_hot_window:
+                caches = seal_hot_block_jit(cfg, caches)
+    return jnp.stack(out_tokens, axis=1), caches

@@ -1,0 +1,4 @@
+"""Training substrate: loss, optimizer, train-step factory."""
+from repro.train.loss import chunked_cross_entropy  # noqa: F401
+from repro.train.optimizer import adamw_init, adamw_update  # noqa: F401
+from repro.train.train_step import make_train_step  # noqa: F401

@@ -1,0 +1,54 @@
+"""Sequence-chunked cross-entropy.
+
+The (B, S, V) logits tensor is never materialized: a scan over sequence
+chunks computes logits for `chunk` positions at a time (B, chunk, V),
+reduces to scalar loss terms, and lets autodiff recompute the chunk in the
+backward pass. At 152k-vocab x 4k-seq x 256-batch this is the difference
+between ~590 MB and ~75 GB of logits per device on the production mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pick_chunk(s: int, chunk: int) -> int:
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+def chunked_cross_entropy(hidden: jax.Array, lm_head: jax.Array,
+                          labels: jax.Array, vocab: int,
+                          chunk: int = 512) -> jax.Array:
+    """hidden (B, S, d); lm_head (d, Vp); labels (B, S) int32 (-1 = pad).
+
+    Vocab padding columns (>= vocab) are excluded from the logsumexp.
+    """
+    b, s, d = hidden.shape
+    vp = lm_head.shape[1]
+    c = _pick_chunk(s, chunk)
+    n = s // c
+    h = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)    # (n, B, c, d)
+    y = labels.reshape(b, n, c).transpose(1, 0, 2)          # (n, B, c)
+    col_ok = (jnp.arange(vp) < vocab)[None, None, :]
+
+    def body(carry, inp):
+        loss_sum, cnt = carry
+        h_c, y_c = inp
+        logits = (h_c @ lm_head).astype(jnp.float32)
+        logits = jnp.where(col_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)             # (B, c)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        valid = (y_c >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - ll) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (loss_sum, cnt), None
+
+    body = jax.checkpoint(body)
+    (loss_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (h, y))
+    return loss_sum / jnp.maximum(cnt, 1.0)

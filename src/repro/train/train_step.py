@@ -1,0 +1,75 @@
+"""Train-step factory: fwd + chunked CE + AdamW, ready for jit/pjit."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.train.loss import chunked_cross_entropy
+from repro.train.optimizer import (adamw_update, clip_by_global_norm,
+                                   cosine_schedule)
+
+AUX_COEF = 0.01
+
+
+def make_train_step(cfg, base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, grad_clip: float = 1.0,
+                    accum_steps: int = 1):
+    """accum_steps > 1: gradient accumulation over sequence-contiguous
+    microbatches (scan) — divides peak activation memory by accum_steps
+    at the cost of serializing microbatches. The per-device activation
+    footprint of the train_4k cells (EXPERIMENTS.md §Dry-run) assumes
+    accum_steps sized so boundaries fit HBM (e.g. 4 for the 7B configs).
+    """
+    lr_fn = cosine_schedule(base_lr, warmup, total_steps)
+
+    def loss_fn(params, batch):
+        hidden, aux = lm.forward(cfg, params, batch)
+        ce = chunked_cross_entropy(hidden, params["lm_head"],
+                                   batch["labels"], cfg.vocab)
+        return ce + AUX_COEF * aux, (ce, aux)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (_, (ce, aux)), grads = grad_fn(params, batch)
+        else:
+            b = batch["tokens"].shape[0]
+            assert b % accum_steps == 0
+
+            def micro(carry, mb):
+                grads_acc, ce_acc, aux_acc = carry
+                (_, (ce, aux)), g = grad_fn(params, mb)
+                grads_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / accum_steps,
+                    grads_acc, g)
+                return (grads_acc, ce_acc + ce / accum_steps,
+                        aux_acc + aux / accum_steps), None
+
+            micro_batches = jax.tree.map(
+                lambda x: x.reshape(accum_steps, b // accum_steps,
+                                    *x.shape[1:])
+                if x.ndim >= 1 and x.shape[0] == b else x, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, ce, aux), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), micro_batches)
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        params, opt_state = adamw_update(grads, opt_state, params, lr_fn)
+        metrics = {"loss": ce, "aux_loss": aux, "grad_norm": gnorm,
+                   "lr": lr_fn(opt_state.step)}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        hidden, _ = lm.forward(cfg, params, batch)
+        return chunked_cross_entropy(hidden, params["lm_head"],
+                                     batch["labels"], cfg.vocab)
+    return eval_step

@@ -1,0 +1,10 @@
+# NOTE: do NOT set --xla_force_host_platform_device_count here.
+# Smoke tests and benches must see 1 device; only launch/dryrun.py (its own
+# process) and the subprocess tests force multi-device host platforms.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,115 @@
+"""Fault tolerance: atomic checkpoints, corruption detection, LSM
+incremental store, straggler policy, elastic mesh factoring."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, LSMCheckpointStore
+from repro.distributed.elastic import StragglerMonitor, factor_devices
+
+
+def _tree(rng, scale=1.0):
+    return {"w": jnp.asarray(rng.normal(size=(64, 32)) * scale, jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(32,)) * scale, jnp.float32),
+            "nested": {"m": jnp.asarray(rng.normal(size=(8, 8)),
+                                        jnp.bfloat16)}}
+
+
+def test_roundtrip(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = _tree(rng)
+    mgr.save(10, tree)
+    got, step = mgr.restore(tree)
+    assert step == 10
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_last_and_latest(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3):
+        mgr.save(s, _tree(rng, s))
+    assert mgr.latest_step() == 3
+    assert sorted(d for d in os.listdir(tmp_path)) == ["step_2", "step_3"]
+
+
+def test_corruption_detected(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    path = mgr.save(5, tree)
+    # flip bytes in one leaf
+    leaf = os.path.join(path, "leaf_0.npy")
+    with open(leaf, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xff\xff\xff\xff")
+    with pytest.raises(IOError, match="corruption"):
+        mgr.restore(tree)
+
+
+def test_partial_save_invisible(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    mgr.save(1, tree)
+    # simulate a crashed save: tmp dir left behind
+    os.makedirs(os.path.join(tmp_path, "step_9.tmp-999"), exist_ok=True)
+    assert mgr.latest_step() == 1
+    # a new manager garbage-collects the debris
+    CheckpointManager(str(tmp_path))
+    assert not any(".tmp" in d for d in os.listdir(tmp_path))
+
+
+def test_async_save(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree(rng)
+    mgr.save(7, tree, blocking=False)
+    mgr.wait()
+    got, step = mgr.restore(tree)
+    assert step == 7
+
+
+def test_lsm_incremental_store(tmp_path, rng):
+    store = LSMCheckpointStore(str(tmp_path))
+    # several 64 KiB chunks so deltas are visible; `b` sits in the tail chunk
+    tree = {"w": jnp.asarray(rng.normal(size=(90000,)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+    s1 = store.save_delta(tree)
+    assert s1["written_chunks"] == s1["total_chunks"]  # first save: all
+    # small update: one leaf changes -> few chunks rewritten
+    tree2 = dict(tree, b=tree["b"] + 1)
+    s2 = store.save_delta(tree2)
+    assert 0 < s2["written_chunks"] < s2["total_chunks"]
+    got = store.restore(tree)
+    np.testing.assert_array_equal(np.asarray(got["b"]),
+                                  np.asarray(tree2["b"]))
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree2["w"]))
+    # unchanged save writes nothing (pure dedup)
+    s3 = store.save_delta(tree2)
+    assert s3["written_chunks"] == 0
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(threshold=2.0, min_samples=4)
+    for _ in range(10):
+        assert mon.record(0, 1.0) == "ok"
+    assert mon.record(7, 5.0) == "skip"
+    assert mon.record(7, 5.0) == "skip"
+    assert mon.record(7, 5.0) == "quarantine"
+    assert mon.healthy_hosts([0, 7]) == [0]
+
+
+def test_elastic_mesh_factoring():
+    assert factor_devices(512, 16) == (32, 16)
+    assert factor_devices(256, 16) == (16, 16)
+    assert factor_devices(8, 4) == (2, 4)
+    assert factor_devices(6, 4) == (2, 3)      # TP degrades gracefully
+    assert factor_devices(7, 4) == (7, 1)      # prime counts still work
+    for n in (8, 48, 96, 384, 512):
+        d, m = factor_devices(n)
+        assert d * m == n

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bloom import bloom_build
+from repro.core.params import KEY_EMPTY
+from repro.core.runs import build_fences
+from repro.kernels.bloom_probe import bloom_probe_op, bloom_probe_ref
+from repro.kernels.fence_lookup import fence_lookup_op, fence_lookup_ref
+from repro.kernels.lsm_attention import (decode_attention_op,
+                                         decode_attention_ref)
+from repro.kernels.lsm_attention.ops import lsm_decode_attention_op
+
+
+@pytest.mark.parametrize("n,words,k,q", [
+    (100, 64, 5, 64), (4000, 2048, 10, 1024), (64, 8, 2, 2048),
+])
+def test_bloom_probe_sweep(rng, n, words, k, q):
+    keys = rng.choice(2**22, size=n, replace=False).astype(np.int32)
+    filt = bloom_build(jnp.asarray(keys), jnp.ones(n, bool), words, k)
+    n_present = min(n, q // 2)
+    qs = jnp.asarray(np.concatenate([
+        keys[:n_present], rng.integers(2**22, 2**23, q - n_present)
+    ]).astype(np.int32))
+    got = np.asarray(bloom_probe_op(filt, qs, k))
+    want = np.asarray(bloom_probe_ref(filt, qs, k)).astype(bool)
+    np.testing.assert_array_equal(got, want)
+    assert got[:n_present].all()  # no false negatives
+
+
+@pytest.mark.parametrize("cap,mu,nq", [(512, 64, 300), (2048, 256, 700),
+                                       (1024, 1024, 128)])
+def test_fence_lookup_sweep(rng, cap, mu, nq):
+    n_valid = int(rng.integers(cap // 2, cap + 1))
+    keys = np.full(cap, KEY_EMPTY, np.int32)
+    keys[:n_valid] = np.sort(
+        rng.choice(2**22, n_valid, replace=False)).astype(np.int32)
+    fences = build_fences(jnp.asarray(keys), mu, cap // mu)
+    qs = jnp.asarray(np.concatenate([
+        keys[: nq // 2], rng.integers(0, 2**22, nq - nq // 2)
+    ]).astype(np.int32))
+    got = fence_lookup_op(qs, fences, jnp.asarray(keys), n_valid, mu)
+    want = fence_lookup_ref(qs, fences, jnp.asarray(keys), n_valid, mu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,h,kv,dh,l,dtype", [
+    (1, 4, 4, 64, 512, jnp.float32),
+    (2, 8, 2, 64, 1024, jnp.float32),
+    (2, 4, 1, 128, 512, jnp.bfloat16),
+])
+def test_decode_attention_sweep(rng, b, h, kv, dh, l, dtype):
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, l, kv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, l, kv, dh)), dtype)
+    lens = jnp.asarray(rng.integers(1, l + 1, b), jnp.int32)
+    got = decode_attention_op(q, k, v, lens, dh ** -0.5)
+    want = decode_attention_ref(q, k, v, lens, dh ** -0.5)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_lsm_attention_exact_when_all_blocks_selected(rng):
+    b, h, kv, dh, l = 2, 8, 2, 64, 1024
+    w, nb, mu = 512, 4, 128
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, l, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, l, kv, dh)), jnp.float32)
+    blk_k = k[:, w:].reshape(b, nb, mu, kv, dh)
+    blk_v = v[:, w:].reshape(b, nb, mu, kv, dh)
+    got = lsm_decode_attention_op(
+        q, k[:, :w], v[:, :w], jnp.full((b,), w, jnp.int32),
+        blk_k, blk_v, blk_k.mean(axis=2), jnp.full((b,), nb, jnp.int32),
+        nb, dh ** -0.5)
+    want = decode_attention_ref(q, k, v, jnp.full((b,), l, jnp.int32),
+                                dh ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_lsm_attention_selects_relevant_block(rng):
+    """A block whose keys align with q must be chosen over noise blocks —
+    the Bloom-style skip keeps what matters."""
+    b, h, kv, dh = 1, 2, 1, 32
+    w, nb, mu, topk = 64, 8, 32, 2
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32) * 3
+    hot_k = jnp.asarray(rng.normal(size=(b, w, kv, dh)), jnp.float32) * 0.01
+    hot_v = jnp.zeros((b, w, kv, dh), jnp.float32)
+    blk_k = jnp.asarray(rng.normal(size=(b, nb, mu, kv, dh)), jnp.float32) * 0.01
+    blk_v = jnp.zeros((b, nb, mu, kv, dh), jnp.float32)
+    target = 5
+    qmean = q.mean(axis=1)  # (b, dh)
+    blk_k = blk_k.at[:, target].add(qmean[:, None, None, :])
+    blk_v = blk_v.at[:, target].set(1.0)
+    out = lsm_decode_attention_op(
+        q, hot_k, hot_v, jnp.full((b,), w, jnp.int32),
+        blk_k, blk_v, blk_k.mean(axis=2), jnp.full((b,), nb, jnp.int32),
+        topk, dh ** -0.5)
+    # most attention mass should land on the planted block (value 1.0)
+    assert float(out.mean()) > 0.5

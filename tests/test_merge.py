@@ -1,0 +1,75 @@
+"""HeapMerge equivalents: sort-based, rank-based, and the Pallas
+tournament all agree (paper Algorithm 1 semantics)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import runs as RU
+from repro.core.params import KEY_EMPTY, TOMBSTONE
+from repro.kernels.heap_merge import heap_merge_op
+
+
+def make_runs(rng, k, cap, dup_rate=0.3):
+    ks, vs, ss = [], [], []
+    seq = 0
+    for _ in range(k):
+        n = int(rng.integers(1, cap + 1))
+        pool = rng.integers(0, int(cap * k * (1 - dup_rate) + 2), n)
+        kk = np.unique(pool).astype(np.int32)
+        n = len(kk)
+        run_k = np.full(cap, KEY_EMPTY, np.int32)
+        run_k[:n] = np.sort(kk)
+        run_v = np.zeros(cap, np.int32)
+        run_v[:n] = rng.integers(-50, 50, n)
+        run_v[:n][rng.random(n) < 0.15] = TOMBSTONE
+        run_s = np.zeros(cap, np.int32)
+        order = rng.permutation(n)  # seqs not aligned with key order
+        run_s[:n] = seq + order
+        seq += n
+        ks.append(run_k); vs.append(run_v); ss.append(run_s)
+    return (jnp.asarray(np.stack(ks)), jnp.asarray(np.stack(vs)),
+            jnp.asarray(np.stack(ss)))
+
+
+def oracle_merge(K, V, S, drop):
+    items = {}
+    best_seq = {}
+    for r in range(K.shape[0]):
+        for i in range(K.shape[1]):
+            key = int(K[r, i])
+            if key == int(KEY_EMPTY):
+                continue
+            if key not in best_seq or int(S[r, i]) > best_seq[key]:
+                best_seq[key] = int(S[r, i])
+                items[key] = (int(V[r, i]), int(S[r, i]))
+    out = sorted((k, v, s) for k, (v, s) in items.items()
+                 if not (drop and v == int(TOMBSTONE)))
+    return out
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(k=st.integers(2, 5), cap=st.sampled_from([16, 64, 96]),
+       seed=st.integers(0, 10**6), drop=st.booleans())
+def test_merge_paths_agree(k, cap, seed, drop):
+    rng = np.random.default_rng(seed)
+    K, V, S = make_runs(rng, k, cap)
+    expect = oracle_merge(np.asarray(K), np.asarray(V), np.asarray(S), drop)
+
+    for fn in (RU.merge_runs, RU.merge_kway_ranked, heap_merge_op):
+        mk, mv, ms, cnt = fn(K, V, S, drop)
+        got = list(zip(np.asarray(mk)[:int(cnt)].tolist(),
+                       np.asarray(mv)[:int(cnt)].tolist(),
+                       np.asarray(ms)[:int(cnt)].tolist()))
+        assert got == expect, fn.__name__
+
+
+def test_merge_keeps_order_and_padding():
+    rng = np.random.default_rng(1)
+    K, V, S = make_runs(rng, 3, 32)
+    mk, mv, ms, cnt = RU.merge_runs(K, V, S, False)
+    n = int(cnt)
+    arr = np.asarray(mk)
+    assert (np.diff(arr[:n]) > 0).all()          # strictly sorted, unique
+    assert (arr[n:] == KEY_EMPTY).all()          # compacted padding

@@ -1,0 +1,92 @@
+"""Serving path: sLSM-tiered KV cache — sealing, selection, generation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import generate, lsm_from_dense, seal_hot_block
+
+
+def _cfg():
+    return get_config("deepseek-7b").smoke()
+
+
+def test_lsm_decode_runs_and_is_close_to_dense(rng):
+    """With topk >= n_blocks every block is attended: the tiered path must
+    match the dense path exactly (the filter admits everything)."""
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 48  # 48 = 2 cold blocks of 16 + 16 hot
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 2)), jnp.int32)
+    lg_ref, dense = lm.prefill_step(cfg, params, {"tokens": toks[:, :s]})
+
+    grown = lm.init_decode_caches(cfg, b, s + 8, kind="dense")
+    for kk in ("k", "v"):
+        grown[kk] = grown[kk].at[:, :, :s].set(dense[kk])
+    grown["pos"] = dense["pos"]
+    lsm = lsm_from_dense(cfg, dense, s + 8)
+    assert int(lsm["n_blocks"].reshape(-1)[0]) >= 2
+
+    lg_d, _ = lm.decode_step(cfg, params, toks[:, s], grown, kind="dense")
+    lg_l, _ = lm.decode_step(cfg, params, toks[:, s], lsm, kind="lsm")
+    # topk(=2) == n_blocks(=2) -> exact
+    np.testing.assert_allclose(np.asarray(lg_d), np.asarray(lg_l),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_seal_preserves_attention(rng):
+    """Sealing moves the oldest mu hot tokens into a cold block; with
+    topk >= n_blocks every block stays attended, so the next-token
+    attention output must be unchanged. Seal is only legitimate once the
+    hot window holds >= mu tokens (as the serving loop guarantees), so we
+    decode past mu first."""
+    from dataclasses import replace
+    cfg = replace(_cfg(), lsm_topk=8)   # admits all blocks post-seal
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 48
+    mu = cfg.lsm_block
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + mu + 6)),
+                       jnp.int32)
+    _, dense = lm.prefill_step(cfg, params, {"tokens": toks[:, :s]})
+    lsm = lsm_from_dense(cfg, dense, s + 2 * mu + 16)
+    # decode until the hot window holds > mu tokens
+    i = 0
+    while int(lsm["hot_len"].reshape(-1)[0]) <= mu + 2:
+        _, lsm = lm.decode_step(cfg, params, toks[:, s + i], lsm,
+                                kind="lsm")
+        i += 1
+    probe = toks[:, s + i]
+    lg_before, _ = lm.decode_step(cfg, params, probe, lsm, kind="lsm")
+    sealed = seal_hot_block(cfg, lsm)
+    assert (int(sealed["n_blocks"].reshape(-1)[0])
+            == int(lsm["n_blocks"].reshape(-1)[0]) + 1)
+    assert (int(sealed["hot_len"].reshape(-1)[0])
+            == int(lsm["hot_len"].reshape(-1)[0]) - mu)
+    lg_sealed, _ = lm.decode_step(cfg, params, probe, sealed, kind="lsm")
+    np.testing.assert_allclose(np.asarray(lg_before), np.asarray(lg_sealed),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_generate_dense_and_lsm(rng):
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 24)),
+                                    jnp.int32)}
+    toks_d, _ = generate(cfg, params, prompt, steps=6, kind="dense")
+    toks_l, _ = generate(cfg, params, prompt, steps=6, kind="lsm",
+                         max_len=128)
+    assert toks_d.shape == (2, 6) and toks_l.shape == (2, 6)
+    # same first token (prefill path identical)
+    np.testing.assert_array_equal(np.asarray(toks_d[:, 0]),
+                                  np.asarray(toks_l[:, 0]))
+
+
+def test_generate_ssm(rng):
+    cfg = get_config("mamba2-370m").smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)),
+                                    jnp.int32)}
+    toks, caches = generate(cfg, params, prompt, steps=5, kind="dense")
+    assert toks.shape == (2, 5)
+    assert np.isfinite(np.asarray(caches["ssm"], np.float32)).all()
