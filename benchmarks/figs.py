@@ -280,7 +280,29 @@ def kernels_bench():
     ]
 
 
+def backends_bench():
+    """Engine-level backend comparison: the same insert/lookup stream with
+    every hot primitive (Bloom probe, fence lookup, k-way merge) dispatched
+    to the jnp reference vs the Pallas kernels (SLSMParams.backend).
+
+    Off-TPU the kernels run in interpret mode, so this measures the
+    dispatch path's correctness-cost there — the TPU run of the same entry
+    is the real speed comparison."""
+    rows = []
+    n, n_lk = 6_000, 1_024
+    for backend in ("jnp", "pallas"):
+        t, w, ins_s = _fresh(bench_params(R=4, Rn=256, D=4, mu=64,
+                                          backend=backend),
+                             n=n, seed=42)
+        lk_s = time_lookups(t, w.lookups[:n_lk], batch=512, sparse=False)
+        rows.append(row(f"backends/{backend}/insert", ins_s / n * 1e6,
+                        f"ins_per_s={n/ins_s:.0f}"))
+        rows.append(row(f"backends/{backend}/lookup", lk_s / n_lk * 1e6,
+                        f"lk_per_s={n_lk/lk_s:.0f};levels={t.n_levels}"))
+    return rows
+
+
 ALL_FIGS = [fig02_r_sweep, fig03_buffer_grid, fig04_disk_grid, fig05_bloom,
             fig06_range, fig07_data_size, fig08_workload_mix,
             fig09_insert_skew, fig10_lookup_skew, fig11_concurrency,
-            fig12_merge_overlap, kernels_bench]
+            fig12_merge_overlap, kernels_bench, backends_bench]

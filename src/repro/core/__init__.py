@@ -1,5 +1,27 @@
-"""sLSM core: the paper's contribution as a composable JAX module."""
+"""sLSM core: the paper's contribution as a composable JAX module.
+
+Engine symbols (`SLSM`, `SLSMState`, ...) resolve lazily (PEP 562):
+`repro.core.slsm` is now a facade over the layered `repro.engine`
+package, whose modules import the leaf modules here (params, bloom,
+runs) — lazy resolution keeps that dependency acyclic regardless of
+which package is imported first.
+"""
 from repro.core.params import (KEY_EMPTY, SEQ_NONE, TOMBSTONE,  # noqa: F401
                                SLSMParams)
-from repro.core.slsm import (SLSM, LevelState, SLSMState,  # noqa: F401
-                             init_state, lookup_batch, range_query)
+
+_ENGINE_EXPORTS = ("SLSM", "ShardedSLSM", "LevelState", "SLSMState",
+                   "init_state", "lookup_batch", "range_query")
+
+
+def __getattr__(name: str):
+    if name == "slsm":  # attribute-style submodule access after bare import
+        import importlib
+        return importlib.import_module("repro.core.slsm")
+    if name in _ENGINE_EXPORTS:
+        from repro.core import slsm
+        return getattr(slsm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_ENGINE_EXPORTS) + ["slsm"])

@@ -15,6 +15,9 @@ TPU-adaptation-only knobs (static shapes require bounds):
   max_levels  — preallocated tier count (paper: levels grow unboundedly).
   max_range   — static bound on range-query result size.
   cand_factor — per-query candidate bound for the Bloom-compacted lookup.
+  backend     — ops-dispatch target for the hot primitives (Bloom probe,
+                fence lookup, run merge): "jnp" reference implementations
+                or "pallas" kernels (repro.kernels, interpret mode off-TPU).
 """
 from __future__ import annotations
 
@@ -42,10 +45,14 @@ class SLSMParams:
     max_levels: int = 3  # preallocated disk tiers (grown lazily host-side)
     max_range: int = 4096
     cand_factor: int = 8
+    backend: str = "jnp"  # hot-primitive dispatch: "jnp" | "pallas"
 
     def __post_init__(self):
         assert self.R > 0 and self.Rn > 0 and self.D > 0 and self.mu > 0
         assert 0.0 < self.eps < 1.0 and 0.0 < self.m <= 1.0
+        if self.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             "expected 'jnp' or 'pallas'")
 
     # ---- derived geometry -------------------------------------------------
     @property

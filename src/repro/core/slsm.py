@@ -1,4 +1,9 @@
-"""The Skiplist-Based LSM Tree — TPU-native JAX engine.
+"""The Skiplist-Based LSM Tree — back-compat facade over `repro.engine`.
+
+The engine now lives in the layered `repro.engine` package (memtable /
+levels / compaction / read_path / engine / sharded, with an ops-dispatch
+backend layer selecting jnp reference code or the Pallas kernels) — see
+DESIGN.md for the module map and the paper-to-TPU adaptation notes.
 
 Paper structure (Szanto 2018) preserved exactly:
   * memory buffer of R runs x Rn elements, one active run (here: a sorted
@@ -18,536 +23,15 @@ All state lives in a pytree of statically-shaped arrays; all hot paths are
 jit-compiled. The host orchestrates *when* merges happen (the paper's merge
 thread); devices execute *what* they do.
 """
-from __future__ import annotations
-
-import functools
-from typing import NamedTuple, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import bloom as BL
-from repro.core import runs as RU
-from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
-
-I32 = jnp.int32
-
-
-class LevelState(NamedTuple):
-    """One disk tier: D immutable sorted runs (paper 2.4)."""
-    keys: jax.Array    # (D, cap_l) sorted ascending, KEY_EMPTY padded
-    vals: jax.Array    # (D, cap_l)
-    seqs: jax.Array    # (D, cap_l)
-    counts: jax.Array  # (D,)
-    mins: jax.Array    # (D,)
-    maxs: jax.Array    # (D,)
-    blooms: jax.Array  # (D, words_l) uint32
-    fences: jax.Array  # (D, n_fences_l)
-    n_runs: jax.Array  # () number of occupied run slots (oldest = slot 0)
-
-
-class SLSMState(NamedTuple):
-    # staging buffer == the active run (kept key-sorted, newest-wins deduped)
-    stage_keys: jax.Array   # (2*Rn,)
-    stage_vals: jax.Array
-    stage_seqs: jax.Array
-    stage_count: jax.Array  # ()
-    # sealed memory runs
-    buf_keys: jax.Array     # (R, Rn)
-    buf_vals: jax.Array
-    buf_seqs: jax.Array
-    buf_counts: jax.Array   # (R,)
-    buf_mins: jax.Array     # (R,)
-    buf_maxs: jax.Array     # (R,)
-    buf_blooms: jax.Array   # (R, words_buf) uint32
-    run_count: jax.Array    # ()
-    next_seq: jax.Array     # () global write counter == recency order
-    levels: Tuple[LevelState, ...]
-
-
-# --------------------------------------------------------------------------
-# construction
-# --------------------------------------------------------------------------
-
-def init_state(p: SLSMParams) -> SLSMState:
-    _, wb, _ = p.bloom_geometry(p.Rn)
-    return SLSMState(
-        stage_keys=jnp.full((p.stage_cap,), KEY_EMPTY, I32),
-        stage_vals=jnp.zeros((p.stage_cap,), I32),
-        stage_seqs=jnp.zeros((p.stage_cap,), I32),
-        stage_count=jnp.zeros((), I32),
-        buf_keys=jnp.full((p.R, p.Rn), KEY_EMPTY, I32),
-        buf_vals=jnp.zeros((p.R, p.Rn), I32),
-        buf_seqs=jnp.zeros((p.R, p.Rn), I32),
-        buf_counts=jnp.zeros((p.R,), I32),
-        buf_mins=jnp.full((p.R,), KEY_EMPTY, I32),
-        buf_maxs=jnp.full((p.R,), TOMBSTONE, I32),
-        buf_blooms=jnp.zeros((p.R, wb), jnp.uint32),
-        run_count=jnp.zeros((), I32),
-        next_seq=jnp.zeros((), I32),
-        levels=(),
-    )
-
-
-def empty_level(p: SLSMParams, level: int) -> LevelState:
-    cap = p.level_cap(level)
-    _, w, _ = p.bloom_geometry(cap)
-    return LevelState(
-        keys=jnp.full((p.D, cap), KEY_EMPTY, I32),
-        vals=jnp.zeros((p.D, cap), I32),
-        seqs=jnp.zeros((p.D, cap), I32),
-        counts=jnp.zeros((p.D,), I32),
-        mins=jnp.full((p.D,), KEY_EMPTY, I32),
-        maxs=jnp.full((p.D,), TOMBSTONE, I32),
-        blooms=jnp.zeros((p.D, w), jnp.uint32),
-        fences=jnp.full((p.D, p.n_fences(level)), KEY_EMPTY, I32),
-        n_runs=jnp.zeros((), I32),
-    )
-
-
-# --------------------------------------------------------------------------
-# insertion path (paper Algorithm 2, batched)
-# --------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-def stage_append(p: SLSMParams, state: SLSMState, keys: jax.Array,
-                 vals: jax.Array, n_valid: jax.Array) -> SLSMState:
-    """Append an Rn-sized chunk into the active run, then re-sort + dedup.
-
-    The active skiplist's O(log Rn) ordered insert becomes a batched
-    sort of the 2*Rn staging region; the paper's in-place update of
-    duplicate keys (3.9.1) is the newest-wins dedup.
-    """
-    rn = p.Rn
-    pos = jnp.arange(rn, dtype=I32)
-    valid = pos < n_valid
-    ck = jnp.where(valid, keys.astype(I32), KEY_EMPTY)
-    cs = state.next_seq + pos
-    sk = jax.lax.dynamic_update_slice(state.stage_keys, ck, (state.stage_count,))
-    sv = jax.lax.dynamic_update_slice(state.stage_vals, vals.astype(I32),
-                                      (state.stage_count,))
-    ss = jax.lax.dynamic_update_slice(state.stage_seqs, cs, (state.stage_count,))
-    k, v, s = RU.sort_by_key_seq(sk, sv, ss)
-    ok = RU.newest_wins_mask(k, v, drop_tombstones=False)
-    k, v, s, cnt = RU.compact(k, v, s, ok)
-    return state._replace(stage_keys=k, stage_vals=v, stage_seqs=s,
-                          stage_count=cnt, next_seq=state.next_seq + n_valid)
-
-
-@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-def seal_run(p: SLSMParams, state: SLSMState) -> SLSMState:
-    """Seal Rn staged elements into memory run slot `run_count`.
-
-    Builds the run's Bloom filter and min/max index (paper 2.3) — the
-    moment the active skiplist becomes an immutable sorted run.
-    """
-    rn = p.Rn
-    _, wb, kk = p.bloom_geometry(rn)
-    rk, rv, rs = (state.stage_keys[:rn], state.stage_vals[:rn],
-                  state.stage_seqs[:rn])
-    slot = state.run_count
-    filt = BL.bloom_build(rk, jnp.ones((rn,), bool), wb, kk)
-    empty_tail = jnp.full((rn,), KEY_EMPTY, I32)
-    return state._replace(
-        stage_keys=jnp.concatenate([state.stage_keys[rn:], empty_tail]),
-        stage_vals=jnp.concatenate([state.stage_vals[rn:], jnp.zeros_like(empty_tail)]),
-        stage_seqs=jnp.concatenate([state.stage_seqs[rn:], jnp.zeros_like(empty_tail)]),
-        stage_count=state.stage_count - rn,
-        buf_keys=state.buf_keys.at[slot].set(rk),
-        buf_vals=state.buf_vals.at[slot].set(rv),
-        buf_seqs=state.buf_seqs.at[slot].set(rs),
-        buf_counts=state.buf_counts.at[slot].set(rn),
-        buf_mins=state.buf_mins.at[slot].set(rk[0]),
-        buf_maxs=state.buf_maxs.at[slot].set(rk[rn - 1]),
-        buf_blooms=state.buf_blooms.at[slot].set(filt),
-        run_count=state.run_count + 1,
-    )
-
-
-def _index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
-    """Pad a merged run to level capacity; build bloom/fences/minmax."""
-    cap = p.level_cap(level)
-    _, w, kk = p.bloom_geometry(cap)
-    pad = cap - k.shape[0]
-    if pad > 0:
-        k = jnp.concatenate([k, jnp.full((pad,), KEY_EMPTY, I32)])
-        v = jnp.concatenate([v, jnp.zeros((pad,), I32)])
-        s = jnp.concatenate([s, jnp.zeros((pad,), I32)])
-    elif pad < 0:  # deepest-level compaction scratch is larger than cap
-        k, v, s = k[:cap], v[:cap], s[:cap]
-    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk)
-    fences = RU.build_fences(k, p.mu, p.n_fences(level))
-    mn, mx = RU.run_minmax(k, cnt)
-    return k, v, s, filt, fences, mn, mx
-
-
-def _set_level_run(lv: LevelState, slot, k, v, s, cnt, filt, fences, mn, mx,
-                   bump: int = 1) -> LevelState:
-    return lv._replace(
-        keys=lv.keys.at[slot].set(k), vals=lv.vals.at[slot].set(v),
-        seqs=lv.seqs.at[slot].set(s), counts=lv.counts.at[slot].set(cnt),
-        mins=lv.mins.at[slot].set(mn), maxs=lv.maxs.at[slot].set(mx),
-        blooms=lv.blooms.at[slot].set(filt),
-        fences=lv.fences.at[slot].set(fences),
-        n_runs=lv.n_runs + bump,
-    )
-
-
-def _shift_level(p: SLSMParams, lv: LevelState, n: int) -> LevelState:
-    """Drop the n oldest runs (slots [0, n)), shifting the rest down."""
-    def roll(a, fill):
-        tail_shape = (n,) + a.shape[1:]
-        return jnp.concatenate([a[n:], jnp.full(tail_shape, fill, a.dtype)])
-    return LevelState(
-        keys=roll(lv.keys, KEY_EMPTY), vals=roll(lv.vals, 0),
-        seqs=roll(lv.seqs, 0), counts=roll(lv.counts, 0),
-        mins=roll(lv.mins, KEY_EMPTY), maxs=roll(lv.maxs, TOMBSTONE),
-        blooms=roll(lv.blooms, 0), fences=roll(lv.fences, KEY_EMPTY),
-        n_runs=lv.n_runs - n,
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=1)
-def merge_buffer_to_level0(p: SLSMParams, state: SLSMState,
-                           drop_tombstones: bool) -> SLSMState:
-    """Flush ceil(m*R) oldest memory runs into disk level 0 (paper 2.1/2.5)."""
-    mr = p.runs_merged
-    k, v, s, cnt = RU.merge_runs(state.buf_keys[:mr], state.buf_vals[:mr],
-                                 state.buf_seqs[:mr], drop_tombstones)
-    k, v, s, filt, fences, mn, mx = _index_new_run(p, 0, k, v, s, cnt)
-    lv0 = _set_level_run(state.levels[0], state.levels[0].n_runs,
-                         k, v, s, cnt, filt, fences, mn, mx)
-
-    def roll(a, fill):
-        tail_shape = (mr,) + a.shape[1:]
-        return jnp.concatenate([a[mr:], jnp.full(tail_shape, fill, a.dtype)])
-
-    return state._replace(
-        buf_keys=roll(state.buf_keys, KEY_EMPTY),
-        buf_vals=roll(state.buf_vals, 0),
-        buf_seqs=roll(state.buf_seqs, 0),
-        buf_counts=roll(state.buf_counts, 0),
-        buf_mins=roll(state.buf_mins, KEY_EMPTY),
-        buf_maxs=roll(state.buf_maxs, TOMBSTONE),
-        buf_blooms=roll(state.buf_blooms, 0),
-        run_count=state.run_count - mr,
-        levels=(lv0,) + state.levels[1:],
-    )
-
-
-@functools.partial(jax.jit, static_argnums=(0, 2, 3), donate_argnums=1)
-def merge_level_down(p: SLSMParams, state: SLSMState, level: int,
-                     drop_tombstones: bool) -> SLSMState:
-    """Merge ceil(m*D) oldest runs of `level` into one run of `level+1`."""
-    md = p.disk_runs_merged
-    src = state.levels[level]
-    k, v, s, cnt = RU.merge_runs(src.keys[:md], src.vals[:md], src.seqs[:md],
-                                 drop_tombstones)
-    k, v, s, filt, fences, mn, mx = _index_new_run(p, level + 1, k, v, s, cnt)
-    dst = state.levels[level + 1]
-    dst = _set_level_run(dst, dst.n_runs, k, v, s, cnt, filt, fences, mn, mx)
-    src = _shift_level(p, src, md)
-    levels = (state.levels[:level] + (src, dst)
-              + state.levels[level + 2:])
-    return state._replace(levels=levels)
-
-
-@functools.partial(jax.jit, static_argnums=0)
-def compact_last_level(p: SLSMParams, state: SLSMState):
-    """In-place compaction of the deepest level: merge all D runs into slot 0.
-
-    This is always the deepest data, so tombstones are committed here
-    (paper 2.5: 'keys flagged for delete are not written ... at all').
-    Returns (state, raw_count); the host raises if raw_count exceeds the
-    deepest run capacity (the TPU analogue of running out of disk)."""
-    last = p.max_levels - 1
-    lv = state.levels[last]
-    k, v, s, cnt = RU.merge_runs(lv.keys, lv.vals, lv.seqs,
-                                 drop_tombstones=True)
-    k, v, s, filt, fences, mn, mx = _index_new_run(p, last, k, v, s, cnt)
-    fresh = empty_level(p, last)
-    fresh = _set_level_run(fresh, 0, k, v, s,
-                           jnp.minimum(cnt, p.level_cap(last)),
-                           filt, fences, mn, mx)
-    return state._replace(levels=state.levels[:last] + (fresh,)), cnt
-
-
-# --------------------------------------------------------------------------
-# lookup path (paper 2.7): newest -> oldest, min/max + Bloom gated
-# --------------------------------------------------------------------------
-
-def _consider(best_seq, best_val, seq_c, val_c):
-    take = seq_c > best_seq
-    return (jnp.where(take, seq_c, best_seq),
-            jnp.where(take, val_c, best_val))
-
-
-def _search_stage(state: SLSMState, qs: jax.Array):
-    eq = state.stage_keys[None, :] == qs[:, None]            # (Q, 2Rn)
-    seqm = jnp.where(eq, state.stage_seqs[None, :], SEQ_NONE)
-    j = jnp.argmax(seqm, axis=1)
-    seq_c = jnp.take_along_axis(seqm, j[:, None], axis=1)[:, 0]
-    val_c = state.stage_vals[j]
-    return seq_c, jnp.where(seq_c >= 0, val_c, 0)
-
-
-def _search_sorted_run(keys, vals, seqs, count, qs):
-    """Binary search one sorted run for a batch of queries."""
-    i = jnp.searchsorted(keys, qs).astype(I32)
-    ic = jnp.minimum(i, keys.shape[0] - 1)
-    hit = (i < count) & (keys[ic] == qs)
-    return (jnp.where(hit, seqs[ic], SEQ_NONE), jnp.where(hit, vals[ic], 0))
-
-
-def _search_memory_runs(state: SLSMState, qs: jax.Array):
-    seqs_r, vals_r = jax.vmap(
-        lambda k, v, s, c: _search_sorted_run(k, v, s, c, qs)
-    )(state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
-    j = jnp.argmax(seqs_r, axis=0)                            # (Q,)
-    q_iota = jnp.arange(qs.shape[0])
-    return seqs_r[j, q_iota], vals_r[j, q_iota]
-
-
-def _fence_window_search(keys, vals, seqs, count, fences, mu, qs, active):
-    """Fence-pointer lookup on one disk run (paper 2.4): binary-search the
-    fences, then search the mu-wide page they bound."""
-    f = jnp.searchsorted(fences, qs, side="right").astype(I32) - 1
-    start = jnp.clip(f, 0, fences.shape[0] - 1) * mu
-
-    def one(st, q):
-        win = jax.lax.dynamic_slice(keys, (st,), (mu,))
-        off = jnp.searchsorted(win, q).astype(I32)
-        offc = jnp.minimum(off, mu - 1)
-        hit = (off < mu) & (win[offc] == q)
-        idx = st + offc
-        return jnp.where(hit & (idx < count), idx, -1)
-
-    idx = jax.vmap(one)(start, qs)
-    hit = (idx >= 0) & active
-    idxc = jnp.maximum(idx, 0)
-    return (jnp.where(hit, seqs[idxc], SEQ_NONE), jnp.where(hit, vals[idxc], 0))
-
-
-def _level_gate(lv: LevelState, qs: jax.Array, kk: int):
-    """(D, Q) candidate mask: min/max window AND Bloom positive (paper 2.3)."""
-    inwin = (qs[None, :] >= lv.mins[:, None]) & (qs[None, :] <= lv.maxs[:, None])
-    pos = jax.vmap(lambda w: BL.bloom_probe(w, qs, kk))(lv.blooms)  # (D, Q)
-    return inwin & pos
-
-
-def _search_level_dense(p: SLSMParams, lv: LevelState, level: int,
-                        qs: jax.Array):
-    _, _, kk = p.bloom_geometry(p.level_cap(level))
-    gate = _level_gate(lv, qs, kk)
-    seqs_d, vals_d = jax.vmap(
-        lambda k, v, s, c, fen, g: _fence_window_search(
-            k, v, s, c, fen, p.mu, qs, g)
-    )(lv.keys, lv.vals, lv.seqs, lv.counts, lv.fences, gate)
-    j = jnp.argmax(seqs_d, axis=0)
-    q_iota = jnp.arange(qs.shape[0])
-    return seqs_d[j, q_iota], vals_d[j, q_iota]
-
-
-def _search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
-                         qs: jax.Array):
-    """Bloom-compacted disk search: only gated (run, query) pairs do the
-    fence+page work — the TPU realization of 'skip the run on a Bloom miss'.
-
-    Static capacity: cand_factor candidates per query on average. An
-    overflowing gate (pathologically hot key ranges + tiny cand_factor)
-    drops candidates, which can miss a hit — size cand_factor >= eps*D*L
-    plus true-hit headroom, or use the dense path (lookup_batch sparse=False)
-    when exactness is mandatory. Property tests cross-check both paths."""
-    q_n = qs.shape[0]
-    _, _, kk = p.bloom_geometry(p.level_cap(level))
-    gate = _level_gate(lv, qs, kk)                            # (D, Q)
-    cap = q_n * p.cand_factor
-    d_idx, q_idx = jnp.nonzero(gate, size=cap, fill_value=-1)
-    ok = d_idx >= 0
-    d_c, q_c = jnp.maximum(d_idx, 0), jnp.maximum(q_idx, 0)
-    qk = qs[q_c]
-
-    def one(d, q):
-        f = jnp.searchsorted(lv.fences[d], q, side="right").astype(I32) - 1
-        st = jnp.clip(f, 0, lv.fences.shape[1] - 1) * p.mu
-        win = jax.lax.dynamic_slice(lv.keys, (d, st), (1, p.mu))[0]
-        off = jnp.searchsorted(win, q).astype(I32)
-        offc = jnp.minimum(off, p.mu - 1)
-        hit = (off < p.mu) & (win[offc] == q) & (st + offc < lv.counts[d])
-        idx = st + offc
-        return (jnp.where(hit, lv.seqs[d, idx], SEQ_NONE),
-                jnp.where(hit, lv.vals[d, idx], 0))
-
-    seq_c, val_c = jax.vmap(one)(d_c, qk)
-    seq_c = jnp.where(ok, seq_c, SEQ_NONE)
-    best_seq = jnp.full((q_n,), SEQ_NONE, I32).at[q_c].max(
-        jnp.where(ok, seq_c, SEQ_NONE), mode="drop")
-    win_mask = ok & (seq_c == best_seq[q_c]) & (seq_c >= 0)
-    best_val = jnp.full((q_n,), np.iinfo(np.int32).min, I32).at[q_c].max(
-        jnp.where(win_mask, val_c, np.iinfo(np.int32).min), mode="drop")
-    best_val = jnp.where(best_seq >= 0, best_val, 0)
-    return best_seq, best_val
-
-
-@functools.partial(jax.jit, static_argnums=(0, 3))
-def lookup_batch(p: SLSMParams, state: SLSMState, qs: jax.Array,
-                 sparse: bool = False):
-    """Point lookups, newest-to-oldest across every structure (paper 2.7).
-
-    Returns (vals, found). Tombstoned keys report found=False (paper 2.8).
-    """
-    qs = qs.astype(I32)
-    best_seq, best_val = _search_stage(state, qs)
-    s2, v2 = _search_memory_runs(state, qs)
-    best_seq, best_val = _consider(best_seq, best_val, s2, v2)
-    for level, lv in enumerate(state.levels):
-        fn = _search_level_sparse if sparse else _search_level_dense
-        s3, v3 = fn(p, lv, level, qs)
-        best_seq, best_val = _consider(best_seq, best_val, s3, v3)
-    found = (best_seq >= 0) & (best_val != TOMBSTONE)
-    return jnp.where(found, best_val, 0), found
-
-
-# --------------------------------------------------------------------------
-# range queries (paper 2.9)
-# --------------------------------------------------------------------------
-
-def _range_from_sorted(keys, vals, seqs, count, lo, hi, max_range):
-    s = jnp.searchsorted(keys, lo, side="left").astype(I32)
-    e = jnp.searchsorted(keys, hi, side="left").astype(I32)
-    idx = s + jnp.arange(max_range, dtype=I32)
-    ok = (idx < e) & (idx < count)
-    idxc = jnp.minimum(idx, keys.shape[0] - 1)
-    return (jnp.where(ok, keys[idxc], KEY_EMPTY),
-            jnp.where(ok, vals[idxc], 0),
-            jnp.where(ok, seqs[idxc], 0))
-
-
-@functools.partial(jax.jit, static_argnums=0)
-def range_query(p: SLSMParams, state: SLSMState, lo: jax.Array, hi: jax.Array):
-    """All live (key, value) with lo <= key < hi, newest-wins, tombstones
-    dropped. Sort-based dedup replaces the paper's hash table (DESIGN.md §2).
-
-    Returns (keys, vals, count) with up to max_range results, key-sorted.
-    """
-    mr = p.max_range
-    parts = [_range_from_sorted(state.stage_keys, state.stage_vals,
-                                state.stage_seqs, state.stage_count,
-                                lo, hi, mr)]
-    part = jax.vmap(lambda k, v, s, c: _range_from_sorted(k, v, s, c, lo, hi, mr))(
-        state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
-    parts.append(tuple(x.reshape(-1) for x in part))
-    for lv in state.levels:
-        part = jax.vmap(
-            lambda k, v, s, c: _range_from_sorted(k, v, s, c, lo, hi, mr)
-        )(lv.keys, lv.vals, lv.seqs, lv.counts)
-        parts.append(tuple(x.reshape(-1) for x in part))
-    k = jnp.concatenate([x[0] for x in parts])
-    v = jnp.concatenate([x[1] for x in parts])
-    s = jnp.concatenate([x[2] for x in parts])
-    k, v, s = RU.sort_by_key_seq(k, v, s)
-    ok = RU.newest_wins_mask(k, v, drop_tombstones=True)
-    k, v, s, cnt = RU.compact(k, v, s, ok)
-    return k[:mr], v[:mr], jnp.minimum(cnt, mr)
-
-
-# --------------------------------------------------------------------------
-# host orchestrator — the paper's insert/merge control flow (Algorithm 2)
-# --------------------------------------------------------------------------
-
-class SLSM:
-    """Host-side driver: owns the state pytree, schedules seals and merges.
-
-    `insert`/`delete`/`lookup`/`range` match the paper's API. The merge
-    cascade (Do-Merge) runs here: recursion depth and level occupancy are
-    host decisions; every data-touching op is a jitted device computation.
-    """
-
-    def __init__(self, params: SLSMParams | None = None):
-        self.p = params or SLSMParams()
-        self.state = init_state(self.p)
-
-    # -- write path -------------------------------------------------------
-    def insert(self, keys, vals) -> None:
-        keys = np.asarray(keys, np.int32).reshape(-1)
-        vals = np.asarray(vals, np.int32).reshape(-1)
-        assert keys.shape == vals.shape
-        rn = self.p.Rn
-        for off in range(0, len(keys), rn):
-            ck, cv = keys[off:off + rn], vals[off:off + rn]
-            n = len(ck)
-            if n < rn:
-                ck = np.pad(ck, (0, rn - n), constant_values=KEY_EMPTY)
-                cv = np.pad(cv, (0, rn - n))
-            self.state = stage_append(self.p, self.state, jnp.asarray(ck),
-                                      jnp.asarray(cv), jnp.int32(n))
-            while int(self.state.stage_count) >= rn:
-                if int(self.state.run_count) == self.p.R:
-                    self._flush_buffer()
-                self.state = seal_run(self.p, self.state)
-
-    def delete(self, keys) -> None:
-        keys = np.asarray(keys, np.int32).reshape(-1)
-        self.insert(keys, np.full_like(keys, TOMBSTONE))
-
-    # -- merge cascade (Do-Merge) ------------------------------------------
-    def _flush_buffer(self) -> None:
-        self._ensure_space(0)
-        self.state = merge_buffer_to_level0(self.p, self.state,
-                                            self._drop_tombstones_into(0))
-
-    def _ensure_space(self, level: int) -> None:
-        if level >= self.p.max_levels:
-            raise RuntimeError(
-                "sLSM capacity exceeded: increase max_levels "
-                f"(currently {self.p.max_levels})")
-        if level >= len(self.state.levels):
-            self.state = self.state._replace(
-                levels=self.state.levels + (empty_level(self.p, level),))
-            return
-        if int(self.state.levels[level].n_runs) == self.p.D:
-            if level == self.p.max_levels - 1:
-                new_state, raw = compact_last_level(self.p, self.state)
-                cap = self.p.level_cap(level)
-                if int(raw) > cap:
-                    raise RuntimeError(
-                        f"sLSM deepest level overflow ({int(raw)} > {cap} "
-                        f"live elements): increase max_levels beyond "
-                        f"{self.p.max_levels}")
-                self.state = new_state
-            else:
-                self._ensure_space(level + 1)
-                self.state = merge_level_down(
-                    self.p, self.state, level,
-                    self._drop_tombstones_into(level + 1))
-
-    def _drop_tombstones_into(self, target_level: int) -> bool:
-        """Deletes commit when the merge output becomes the deepest data."""
-        for lv in self.state.levels[target_level:]:
-            if int(lv.n_runs) > 0:
-                return False
-        return True
-
-    # -- read path ----------------------------------------------------------
-    def lookup(self, keys, sparse: bool = False):
-        qs = jnp.asarray(np.asarray(keys, np.int32).reshape(-1))
-        vals, found = lookup_batch(self.p, self.state, qs, sparse)
-        return np.asarray(vals), np.asarray(found)
-
-    def range(self, lo: int, hi: int):
-        k, v, c = range_query(self.p, self.state, jnp.int32(lo), jnp.int32(hi))
-        c = int(c)
-        return np.asarray(k)[:c], np.asarray(v)[:c]
-
-    # -- stats ----------------------------------------------------------------
-    @property
-    def n_live(self) -> int:
-        n = int(self.state.stage_count) + int(self.state.buf_counts.sum())
-        for lv in self.state.levels:
-            n += int(lv.counts.sum())
-        return n
-
-    @property
-    def n_levels(self) -> int:
-        return len(self.state.levels)
+from repro.engine.backend import OpsBackend, get_backend  # noqa: F401
+from repro.engine.compaction import (CompactionPolicy,  # noqa: F401
+                                     LevelingPolicy, TieringPolicy,
+                                     compact_last_level,
+                                     merge_buffer_to_level0,
+                                     merge_level_down)
+from repro.engine.engine import SLSM  # noqa: F401
+from repro.engine.levels import LevelState, empty_level  # noqa: F401
+from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
+                                   seal_run, stage_append)
+from repro.engine.read_path import lookup_batch, range_query  # noqa: F401
+from repro.engine.sharded import ShardedSLSM  # noqa: F401

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import runtime as RT
+
 
 def gpipe_forward(stage_fn, stage_params, x_micro, mesh, axis: str = "pipe"):
     """Run a GPipe forward pass.
@@ -36,9 +38,13 @@ def gpipe_forward(stage_fn, stage_params, x_micro, mesh, axis: str = "pipe"):
         pl = jax.tree.map(lambda p: p[0], params_local)
         stage = jax.lax.axis_index(axis)
         # carries become device-varying after the first ppermute; mark them
-        # varying from the start so the loop carry type is stable
-        buf = jax.lax.pcast(jnp.zeros_like(xs[0]), axis, to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(xs), axis, to="varying")
+        # varying from the start so the loop carry type is stable (pcast
+        # exists only on newer jax; older shard_map needs no marking)
+        pcast = getattr(jax.lax, "pcast", None)
+        varying = ((lambda v: pcast(v, axis, to="varying")) if pcast
+                   else (lambda v: v))
+        buf = varying(jnp.zeros_like(xs[0]))
+        outs = varying(jnp.zeros_like(xs))
 
         def tick(t, carry):
             buf, outs = carry
@@ -59,7 +65,7 @@ def gpipe_forward(stage_fn, stage_params, x_micro, mesh, axis: str = "pipe"):
         outs = jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(outs, axis)
 
-    return jax.shard_map(
+    return RT.shard_map(
         spmd, mesh=mesh,
         in_specs=(P(axis), P()), out_specs=P(),
     )(stage_params, x_micro)

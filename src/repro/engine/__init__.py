@@ -1,0 +1,27 @@
+"""The Skiplist-Based LSM Tree — layered TPU-native JAX engine.
+
+Layer map (DESIGN.md has the full tour):
+  backend.py    — ops dispatch: jnp reference vs Pallas kernels
+  memtable.py   — staging buffer (active run) + sealed memory runs
+  levels.py     — disk-tier state: runs, Bloom filters, fences, min/max
+  compaction.py — the Do-Merge cascade ops + tiering/leveling policies
+  read_path.py  — dense + Bloom-compacted lookups, range queries
+  engine.py     — the host-side `SLSM` driver
+  sharded.py    — S hash-partitioned trees in one vmapped pytree
+
+`repro.core.slsm` re-exports this package's public API for backward
+compatibility.
+"""
+from repro.engine.backend import (BACKENDS, OpsBackend,  # noqa: F401
+                                  get_backend)
+from repro.engine.compaction import (CompactionPolicy,  # noqa: F401
+                                     LevelingPolicy, TieringPolicy,
+                                     compact_last_level,
+                                     merge_buffer_to_level0,
+                                     merge_level_down)
+from repro.engine.engine import SLSM  # noqa: F401
+from repro.engine.levels import LevelState, empty_level  # noqa: F401
+from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
+                                   seal_run, stage_append)
+from repro.engine.read_path import lookup_batch, range_query  # noqa: F401
+from repro.engine.sharded import ShardedSLSM, shard_ids  # noqa: F401

@@ -1,0 +1,132 @@
+"""Ops-dispatch layer: every hot primitive resolves to one backend.
+
+The paper's pitch is that the sLSM's logically-separate layers invite
+"opportunistic and granular optimization". This module is the seam that
+makes that concrete: the three data-plane primitives the read/compaction
+paths are built from — Bloom probe, fence-pointer page search, k-way run
+merge — are resolved through one `OpsBackend` record, selected by
+`SLSMParams.backend`:
+
+  jnp    — the pure-jnp reference implementations (vmapped over runs;
+           XLA fuses them into the surrounding computation);
+  pallas — the purpose-built TPU kernels in `repro.kernels`
+           (`bloom_probe`, `fence_lookup`, `heap_merge`), which fall
+           back to interpret mode off-TPU so the same code path is
+           testable on CPU.
+
+Both backends implement identical semantics (the kernels are oracle-
+tested against the jnp forms in tests/test_kernels.py, and whole-engine
+equivalence is property-tested in tests/test_engine.py), so the switch
+is purely a performance knob. One carve-out: the sparse (Bloom-
+compacted) read path dispatches only its Bloom gate — its candidate-
+compacted fence search has a per-(run, query) shape the per-run fence
+kernel does not take (see read_path.search_level_sparse).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom as BL
+from repro.core import runs as RU
+
+I32 = jnp.int32
+
+
+def fence_window_idx(queries: jax.Array, fences: jax.Array, keys: jax.Array,
+                     count: jax.Array, mu: int) -> jax.Array:
+    """Fence-pointer lookup on one disk run (paper 2.4): binary-search the
+    fences, then the mu-wide page they bound. Returns the element index of
+    the hit, or -1."""
+    f = jnp.searchsorted(fences, queries, side="right").astype(I32) - 1
+    start = jnp.clip(f, 0, fences.shape[0] - 1) * mu
+
+    def one(st, q):
+        win = jax.lax.dynamic_slice(keys, (st,), (mu,))
+        off = jnp.searchsorted(win, q).astype(I32)
+        offc = jnp.minimum(off, mu - 1)
+        hit = (off < mu) & (win[offc] == q)
+        idx = st + offc
+        return jnp.where(hit & (idx < count), idx, -1)
+
+    return jax.vmap(one)(start, queries)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpsBackend:
+    """The three hot primitives the engine dispatches on.
+
+    bloom_probe_many:  (blooms (D, W) u32, qs (Q,) i32, k)        -> (D, Q) bool
+    fence_lookup_many: (qs (Q,), fences (D, F), keys (D, cap),
+                        counts (D,), mu)                          -> (D, Q) i32 idx | -1
+    merge_runs:        (keys (k, cap), vals, seqs, drop: bool)    -> (keys, vals,
+                                                                      seqs, count)
+    """
+    name: str
+    bloom_probe_many: Callable
+    fence_lookup_many: Callable
+    merge_runs: Callable
+
+
+# -- jnp reference backend ---------------------------------------------------
+
+def _jnp_bloom_many(blooms, qs, k: int):
+    return jax.vmap(lambda w: BL.bloom_probe(w, qs, k))(blooms)
+
+
+def _jnp_fence_many(qs, fences, keys, counts, mu: int):
+    return jax.vmap(
+        lambda f, kk, c: fence_window_idx(qs, f, kk, c, mu)
+    )(fences, keys, counts)
+
+
+JNP_BACKEND = OpsBackend(
+    name="jnp",
+    bloom_probe_many=_jnp_bloom_many,
+    fence_lookup_many=_jnp_fence_many,
+    merge_runs=RU.merge_runs,
+)
+
+
+# -- pallas kernel backend ---------------------------------------------------
+# Runs (D, the leading axis) are unrolled in a python loop: D is static and
+# each kernel keeps its run VMEM-resident across the query grid, so one
+# pallas_call per run is the natural launch shape.
+
+def _pallas_bloom_many(blooms, qs, k: int):
+    from repro.kernels.bloom_probe import bloom_probe_op
+    return jnp.stack([bloom_probe_op(blooms[d], qs, k)
+                      for d in range(blooms.shape[0])])
+
+
+def _pallas_fence_many(qs, fences, keys, counts, mu: int):
+    from repro.kernels.fence_lookup import fence_lookup_op
+    return jnp.stack([fence_lookup_op(qs, fences[d], keys[d], counts[d], mu)
+                      for d in range(keys.shape[0])])
+
+
+def _pallas_merge_runs(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+    from repro.kernels.heap_merge import heap_merge_op
+    return heap_merge_op(keys2d, vals2d, seqs2d, drop_tombstones)
+
+
+PALLAS_BACKEND = OpsBackend(
+    name="pallas",
+    bloom_probe_many=_pallas_bloom_many,
+    fence_lookup_many=_pallas_fence_many,
+    merge_runs=_pallas_merge_runs,
+)
+
+
+BACKENDS = {"jnp": JNP_BACKEND, "pallas": PALLAS_BACKEND}
+
+
+def get_backend(name: str) -> OpsBackend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; options: {sorted(BACKENDS)}") from None

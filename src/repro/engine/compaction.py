@@ -1,0 +1,183 @@
+"""The Do-Merge cascade (paper Algorithm 2 / 2.5) as explicit policy + ops.
+
+Device side: three jitted merge ops (buffer flush, level spill, deepest
+compaction), all built on the backend-dispatched k-way merge — so the
+paper's HeapMerge runs either as the XLA sort network or as the Pallas
+merge-path tournament (`SLSMParams.backend`).
+
+Host side: a `CompactionPolicy` decides *when* a level spills and *how
+many* runs move — the axis along which real LSM systems specialize
+(tiering vs leveling, cf. the Luo & Carey survey):
+
+  TieringPolicy  — the paper's rule: wait until a level holds D runs,
+                   then merge the ceil(m*D) oldest into the next level.
+                   Lowest write amplification.
+  LevelingPolicy — eager variant: merge a level's runs down as soon as
+                   two coexist, keeping read amplification at ~1 run per
+                   level at the cost of more merge work.
+
+Tombstone elision stays a host decision (`SLSM._drop_tombstones_into`):
+deletes are committed only when a merge's output becomes the deepest
+data (paper 2.5/2.8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.engine.backend import get_backend
+from repro.engine.levels import (empty_level, index_new_run, set_level_run,
+                                 shift_level)
+from repro.engine.memtable import SLSMState
+
+
+# --------------------------------------------------------------------------
+# host-driven merge policies
+# --------------------------------------------------------------------------
+
+class CompactionPolicy:
+    """Decides when a disk level spills and how many runs move down."""
+
+    name = "abstract"
+
+    def validate(self, p: SLSMParams) -> None:
+        """Raise if the parameter geometry cannot support this policy."""
+
+    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+        raise NotImplementedError
+
+    def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        raise NotImplementedError
+
+
+class TieringPolicy(CompactionPolicy):
+    """The paper's policy (2.5): spill ceil(m*D) runs once a level is full."""
+
+    name = "tiering"
+
+    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+        return n_runs >= p.D
+
+    def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        return p.disk_runs_merged
+
+
+class LevelingPolicy(CompactionPolicy):
+    """Leveling variant: merge a level down as soon as `max_resident` runs
+    coexist, so a level holds ~1 run at rest — fewer runs on the read
+    path (each lookup probes at most `max_resident` runs per level)
+    bought with more merge work, the classic tiering/leveling trade.
+    Requires ceil(m*D) >= max_resident so a spill's output always fits
+    one run of the next level."""
+
+    name = "leveling"
+
+    def __init__(self, max_resident: int = 2):
+        if max_resident < 2:
+            raise ValueError("max_resident must be >= 2")
+        self.max_resident = max_resident
+
+    def validate(self, p: SLSMParams) -> None:
+        if p.D < self.max_resident:
+            raise ValueError(
+                f"LevelingPolicy(max_resident={self.max_resident}) needs "
+                f"D >= {self.max_resident} run slots per level (D={p.D})")
+        if p.disk_runs_merged < self.max_resident:
+            raise ValueError(
+                "LevelingPolicy needs ceil(m*D) >= max_resident so a spill "
+                f"fits the next level's run capacity (ceil(m*D)="
+                f"{p.disk_runs_merged}, max_resident={self.max_resident})")
+
+    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+        return n_runs >= self.max_resident
+
+    def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        return n_runs
+
+
+# --------------------------------------------------------------------------
+# jitted merge ops (all k-way merges dispatch through the backend)
+# --------------------------------------------------------------------------
+
+def merge_buffer_to_level0_impl(p: SLSMParams, state: SLSMState,
+                                drop_tombstones: bool) -> SLSMState:
+    """Flush ceil(m*R) oldest memory runs into disk level 0 (paper 2.1/2.5)."""
+    be = get_backend(p.backend)
+    mr = p.runs_merged
+    k, v, s, cnt = be.merge_runs(state.buf_keys[:mr], state.buf_vals[:mr],
+                                 state.buf_seqs[:mr], drop_tombstones)
+    k, v, s, filt, fences, mn, mx = index_new_run(p, 0, k, v, s, cnt)
+    lv0 = set_level_run(state.levels[0], state.levels[0].n_runs,
+                        k, v, s, cnt, filt, fences, mn, mx)
+
+    def roll(a, fill):
+        tail_shape = (mr,) + a.shape[1:]
+        return jnp.concatenate([a[mr:], jnp.full(tail_shape, fill, a.dtype)])
+
+    return state._replace(
+        buf_keys=roll(state.buf_keys, KEY_EMPTY),
+        buf_vals=roll(state.buf_vals, 0),
+        buf_seqs=roll(state.buf_seqs, 0),
+        buf_counts=roll(state.buf_counts, 0),
+        buf_mins=roll(state.buf_mins, KEY_EMPTY),
+        buf_maxs=roll(state.buf_maxs, TOMBSTONE),
+        buf_blooms=roll(state.buf_blooms, 0),
+        run_count=state.run_count - mr,
+        levels=(lv0,) + state.levels[1:],
+    )
+
+
+merge_buffer_to_level0 = functools.partial(
+    jax.jit, static_argnums=(0, 2), donate_argnums=1)(
+        merge_buffer_to_level0_impl)
+
+
+def merge_level_down_impl(p: SLSMParams, state: SLSMState, level: int,
+                          n_merge: int, drop_tombstones: bool) -> SLSMState:
+    """Merge the `n_merge` oldest runs of `level` into one run of `level+1`.
+
+    `n_merge` is the policy's `runs_to_spill` (ceil(m*D) for tiering, the
+    level's occupancy for leveling)."""
+    be = get_backend(p.backend)
+    src = state.levels[level]
+    k, v, s, cnt = be.merge_runs(src.keys[:n_merge], src.vals[:n_merge],
+                                 src.seqs[:n_merge], drop_tombstones)
+    k, v, s, filt, fences, mn, mx = index_new_run(p, level + 1, k, v, s, cnt)
+    dst = state.levels[level + 1]
+    dst = set_level_run(dst, dst.n_runs, k, v, s, cnt, filt, fences, mn, mx)
+    src = shift_level(p, src, n_merge)
+    levels = (state.levels[:level] + (src, dst)
+              + state.levels[level + 2:])
+    return state._replace(levels=levels)
+
+
+merge_level_down = functools.partial(
+    jax.jit, static_argnums=(0, 2, 3, 4), donate_argnums=1)(
+        merge_level_down_impl)
+
+
+def compact_last_level_impl(p: SLSMParams, state: SLSMState):
+    """In-place compaction of the deepest level: merge all D runs into slot 0.
+
+    This is always the deepest data, so tombstones are committed here
+    (paper 2.5: 'keys flagged for delete are not written ... at all').
+    Returns (state, raw_count); the host raises if raw_count exceeds the
+    deepest run capacity (the TPU analogue of running out of disk)."""
+    be = get_backend(p.backend)
+    last = p.max_levels - 1
+    lv = state.levels[last]
+    k, v, s, cnt = be.merge_runs(lv.keys, lv.vals, lv.seqs,
+                                 drop_tombstones=True)
+    k, v, s, filt, fences, mn, mx = index_new_run(p, last, k, v, s, cnt)
+    fresh = empty_level(p, last)
+    fresh = set_level_run(fresh, 0, k, v, s,
+                          jnp.minimum(cnt, p.level_cap(last)),
+                          filt, fences, mn, mx)
+    return state._replace(levels=state.levels[:last] + (fresh,)), cnt
+
+
+compact_last_level = functools.partial(
+    jax.jit, static_argnums=0)(compact_last_level_impl)

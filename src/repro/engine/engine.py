@@ -1,0 +1,125 @@
+"""Host-side driver — the paper's insert/merge control flow (Algorithm 2).
+
+`SLSM` owns the state pytree and schedules seals and merges: recursion
+depth, level occupancy, and the compaction policy (tiering vs leveling)
+are host decisions; every data-touching op is a jitted device
+computation dispatched through the ops backend selected by
+`SLSMParams.backend`.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.engine.backend import get_backend
+from repro.engine.compaction import (CompactionPolicy, TieringPolicy,
+                                     compact_last_level,
+                                     merge_buffer_to_level0, merge_level_down)
+from repro.engine.levels import empty_level
+from repro.engine.memtable import init_state, seal_run, stage_append
+from repro.engine.read_path import lookup_batch, range_query
+
+
+class SLSM:
+    """Host-side driver: owns the state pytree, schedules seals and merges.
+
+    `insert`/`delete`/`lookup`/`range` match the paper's API. The merge
+    cascade (Do-Merge) runs here: recursion depth and level occupancy are
+    host decisions; every data-touching op is a jitted device computation.
+    """
+
+    def __init__(self, params: SLSMParams | None = None,
+                 policy: CompactionPolicy | None = None):
+        self.p = params or SLSMParams()
+        get_backend(self.p.backend)  # fail fast on unknown backends
+        self.policy = policy or TieringPolicy()
+        self.policy.validate(self.p)
+        self.state = init_state(self.p)
+
+    # -- write path -------------------------------------------------------
+    def insert(self, keys, vals) -> None:
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        vals = np.asarray(vals, np.int32).reshape(-1)
+        assert keys.shape == vals.shape
+        rn = self.p.Rn
+        for off in range(0, len(keys), rn):
+            ck, cv = keys[off:off + rn], vals[off:off + rn]
+            n = len(ck)
+            if n < rn:
+                ck = np.pad(ck, (0, rn - n), constant_values=KEY_EMPTY)
+                cv = np.pad(cv, (0, rn - n))
+            self.state = stage_append(self.p, self.state, jnp.asarray(ck),
+                                      jnp.asarray(cv), jnp.int32(n))
+            while int(self.state.stage_count) >= rn:
+                if int(self.state.run_count) == self.p.R:
+                    self._flush_buffer()
+                self.state = seal_run(self.p, self.state)
+
+    def delete(self, keys) -> None:
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        self.insert(keys, np.full_like(keys, TOMBSTONE))
+
+    # -- merge cascade (Do-Merge) ------------------------------------------
+    def _flush_buffer(self) -> None:
+        self._ensure_space(0)
+        self.state = merge_buffer_to_level0(self.p, self.state,
+                                            self._drop_tombstones_into(0))
+
+    def _ensure_space(self, level: int) -> None:
+        if level >= self.p.max_levels:
+            raise RuntimeError(
+                "sLSM capacity exceeded: increase max_levels "
+                f"(currently {self.p.max_levels})")
+        if level >= len(self.state.levels):
+            self.state = self.state._replace(
+                levels=self.state.levels + (empty_level(self.p, level),))
+            return
+        n_runs = int(self.state.levels[level].n_runs)
+        if not self.policy.needs_spill(self.p, n_runs):
+            return
+        if level == self.p.max_levels - 1:
+            new_state, raw = compact_last_level(self.p, self.state)
+            cap = self.p.level_cap(level)
+            if int(raw) > cap:
+                raise RuntimeError(
+                    f"sLSM deepest level overflow ({int(raw)} > {cap} "
+                    f"live elements): increase max_levels beyond "
+                    f"{self.p.max_levels}")
+            self.state = new_state
+        else:
+            self._ensure_space(level + 1)
+            self.state = merge_level_down(
+                self.p, self.state, level,
+                self.policy.runs_to_spill(self.p, n_runs),
+                self._drop_tombstones_into(level + 1))
+
+    def _drop_tombstones_into(self, target_level: int) -> bool:
+        """Deletes commit when the merge output becomes the deepest data."""
+        for lv in self.state.levels[target_level:]:
+            if int(lv.n_runs) > 0:
+                return False
+        return True
+
+    # -- read path ----------------------------------------------------------
+    def lookup(self, keys, sparse: bool = False):
+        qs = jnp.asarray(np.asarray(keys, np.int32).reshape(-1))
+        vals, found = lookup_batch(self.p, self.state, qs, sparse)
+        return np.asarray(vals), np.asarray(found)
+
+    def range(self, lo: int, hi: int):
+        k, v, c = range_query(self.p, self.state, jnp.int32(lo), jnp.int32(hi))
+        c = int(c)
+        return np.asarray(k)[:c], np.asarray(v)[:c]
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        n = int(self.state.stage_count) + int(self.state.buf_counts.sum())
+        for lv in self.state.levels:
+            n += int(lv.counts.sum())
+        return n
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.state.levels)

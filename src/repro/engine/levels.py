@@ -1,0 +1,91 @@
+"""Disk-tier state (paper 2.4): D immutable sorted runs per level.
+
+A level is a statically-shaped pytree: run payloads plus the per-run
+index structures the paper attaches to disk runs — min/max keys, a Bloom
+filter, and fence pointers every mu slots. Slot 0 is always the oldest
+resident run; `shift_level` preserves that invariant when runs spill.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom as BL
+from repro.core import runs as RU
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+
+I32 = jnp.int32
+
+
+class LevelState(NamedTuple):
+    """One disk tier: D immutable sorted runs (paper 2.4)."""
+    keys: jax.Array    # (D, cap_l) sorted ascending, KEY_EMPTY padded
+    vals: jax.Array    # (D, cap_l)
+    seqs: jax.Array    # (D, cap_l)
+    counts: jax.Array  # (D,)
+    mins: jax.Array    # (D,)
+    maxs: jax.Array    # (D,)
+    blooms: jax.Array  # (D, words_l) uint32
+    fences: jax.Array  # (D, n_fences_l)
+    n_runs: jax.Array  # () number of occupied run slots (oldest = slot 0)
+
+
+def empty_level(p: SLSMParams, level: int) -> LevelState:
+    cap = p.level_cap(level)
+    _, w, _ = p.bloom_geometry(cap)
+    return LevelState(
+        keys=jnp.full((p.D, cap), KEY_EMPTY, I32),
+        vals=jnp.zeros((p.D, cap), I32),
+        seqs=jnp.zeros((p.D, cap), I32),
+        counts=jnp.zeros((p.D,), I32),
+        mins=jnp.full((p.D,), KEY_EMPTY, I32),
+        maxs=jnp.full((p.D,), TOMBSTONE, I32),
+        blooms=jnp.zeros((p.D, w), jnp.uint32),
+        fences=jnp.full((p.D, p.n_fences(level)), KEY_EMPTY, I32),
+        n_runs=jnp.zeros((), I32),
+    )
+
+
+def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
+    """Pad a merged run to level capacity; build bloom/fences/minmax."""
+    cap = p.level_cap(level)
+    _, w, kk = p.bloom_geometry(cap)
+    pad = cap - k.shape[0]
+    if pad > 0:
+        k = jnp.concatenate([k, jnp.full((pad,), KEY_EMPTY, I32)])
+        v = jnp.concatenate([v, jnp.zeros((pad,), I32)])
+        s = jnp.concatenate([s, jnp.zeros((pad,), I32)])
+    elif pad < 0:  # deepest-level compaction scratch is larger than cap
+        k, v, s = k[:cap], v[:cap], s[:cap]
+    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk)
+    fences = RU.build_fences(k, p.mu, p.n_fences(level))
+    mn, mx = RU.run_minmax(k, cnt)
+    return k, v, s, filt, fences, mn, mx
+
+
+def set_level_run(lv: LevelState, slot, k, v, s, cnt, filt, fences, mn, mx,
+                  bump: int = 1) -> LevelState:
+    return lv._replace(
+        keys=lv.keys.at[slot].set(k), vals=lv.vals.at[slot].set(v),
+        seqs=lv.seqs.at[slot].set(s), counts=lv.counts.at[slot].set(cnt),
+        mins=lv.mins.at[slot].set(mn), maxs=lv.maxs.at[slot].set(mx),
+        blooms=lv.blooms.at[slot].set(filt),
+        fences=lv.fences.at[slot].set(fences),
+        n_runs=lv.n_runs + bump,
+    )
+
+
+def shift_level(p: SLSMParams, lv: LevelState, n: int) -> LevelState:
+    """Drop the n oldest runs (slots [0, n)), shifting the rest down."""
+    def roll(a, fill):
+        tail_shape = (n,) + a.shape[1:]
+        return jnp.concatenate([a[n:], jnp.full(tail_shape, fill, a.dtype)])
+    return LevelState(
+        keys=roll(lv.keys, KEY_EMPTY), vals=roll(lv.vals, 0),
+        seqs=roll(lv.seqs, 0), counts=roll(lv.counts, 0),
+        mins=roll(lv.mins, KEY_EMPTY), maxs=roll(lv.maxs, TOMBSTONE),
+        blooms=roll(lv.blooms, 0), fences=roll(lv.fences, KEY_EMPTY),
+        n_runs=lv.n_runs - n,
+    )

@@ -1,0 +1,135 @@
+"""Memory tier (paper 2.1-2.3): the staging buffer + sealed memory runs.
+
+The staging buffer is the dense-array form of the paper's active
+skiplist (DESIGN.md §2): the O(log Rn) ordered insert becomes a batched
+sort of the 2*Rn staging region, and the paper's in-place update of
+duplicate keys (3.9.1) is the newest-wins dedup. Sealing turns Rn staged
+elements into an immutable sorted run with a Bloom filter and min/max
+index — the moment the active skiplist becomes a memory run.
+
+Every op here exists in two forms: `<name>_impl` (pure, vmappable —
+the sharded engine maps them over the shard axis) and the jitted,
+donating single-tree wrapper the `SLSM` driver calls.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bloom as BL
+from repro.core import runs as RU
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.engine.levels import LevelState, empty_level
+
+I32 = jnp.int32
+
+
+class SLSMState(NamedTuple):
+    # staging buffer == the active run (kept key-sorted, newest-wins deduped)
+    stage_keys: jax.Array   # (2*Rn,)
+    stage_vals: jax.Array
+    stage_seqs: jax.Array
+    stage_count: jax.Array  # ()
+    # sealed memory runs
+    buf_keys: jax.Array     # (R, Rn)
+    buf_vals: jax.Array
+    buf_seqs: jax.Array
+    buf_counts: jax.Array   # (R,)
+    buf_mins: jax.Array     # (R,)
+    buf_maxs: jax.Array     # (R,)
+    buf_blooms: jax.Array   # (R, words_buf) uint32
+    run_count: jax.Array    # ()
+    next_seq: jax.Array     # () global write counter == recency order
+    levels: Tuple[LevelState, ...]
+
+
+def init_state(p: SLSMParams, n_levels: int = 0) -> SLSMState:
+    """Fresh engine state. `n_levels` preallocates disk tiers eagerly —
+    the single-tree driver grows them lazily (n_levels=0, the paper's
+    unbounded growth up to max_levels); the sharded engine preallocates
+    all of them so every shard shares one pytree structure."""
+    _, wb, _ = p.bloom_geometry(p.Rn)
+    return SLSMState(
+        stage_keys=jnp.full((p.stage_cap,), KEY_EMPTY, I32),
+        stage_vals=jnp.zeros((p.stage_cap,), I32),
+        stage_seqs=jnp.zeros((p.stage_cap,), I32),
+        stage_count=jnp.zeros((), I32),
+        buf_keys=jnp.full((p.R, p.Rn), KEY_EMPTY, I32),
+        buf_vals=jnp.zeros((p.R, p.Rn), I32),
+        buf_seqs=jnp.zeros((p.R, p.Rn), I32),
+        buf_counts=jnp.zeros((p.R,), I32),
+        buf_mins=jnp.full((p.R,), KEY_EMPTY, I32),
+        buf_maxs=jnp.full((p.R,), TOMBSTONE, I32),
+        buf_blooms=jnp.zeros((p.R, wb), jnp.uint32),
+        run_count=jnp.zeros((), I32),
+        next_seq=jnp.zeros((), I32),
+        levels=tuple(empty_level(p, lvl) for lvl in range(n_levels)),
+    )
+
+
+# --------------------------------------------------------------------------
+# insertion path (paper Algorithm 2, batched)
+# --------------------------------------------------------------------------
+
+def stage_append_impl(p: SLSMParams, state: SLSMState, keys: jax.Array,
+                      vals: jax.Array, n_valid: jax.Array) -> SLSMState:
+    """Append an Rn-sized chunk into the active run, then re-sort + dedup.
+
+    The active skiplist's O(log Rn) ordered insert becomes a batched
+    sort of the 2*Rn staging region; the paper's in-place update of
+    duplicate keys (3.9.1) is the newest-wins dedup.
+    """
+    rn = p.Rn
+    pos = jnp.arange(rn, dtype=I32)
+    valid = pos < n_valid
+    ck = jnp.where(valid, keys.astype(I32), KEY_EMPTY)
+    cs = state.next_seq + pos
+    sk = jax.lax.dynamic_update_slice(state.stage_keys, ck, (state.stage_count,))
+    sv = jax.lax.dynamic_update_slice(state.stage_vals, vals.astype(I32),
+                                      (state.stage_count,))
+    ss = jax.lax.dynamic_update_slice(state.stage_seqs, cs, (state.stage_count,))
+    k, v, s = RU.sort_by_key_seq(sk, sv, ss)
+    ok = RU.newest_wins_mask(k, v, drop_tombstones=False)
+    k, v, s, cnt = RU.compact(k, v, s, ok)
+    return state._replace(stage_keys=k, stage_vals=v, stage_seqs=s,
+                          stage_count=cnt, next_seq=state.next_seq + n_valid)
+
+
+stage_append = functools.partial(jax.jit, static_argnums=0,
+                                 donate_argnums=1)(stage_append_impl)
+
+
+def seal_run_impl(p: SLSMParams, state: SLSMState) -> SLSMState:
+    """Seal Rn staged elements into memory run slot `run_count`.
+
+    Builds the run's Bloom filter and min/max index (paper 2.3) — the
+    moment the active skiplist becomes an immutable sorted run.
+    """
+    rn = p.Rn
+    _, wb, kk = p.bloom_geometry(rn)
+    rk, rv, rs = (state.stage_keys[:rn], state.stage_vals[:rn],
+                  state.stage_seqs[:rn])
+    slot = state.run_count
+    filt = BL.bloom_build(rk, jnp.ones((rn,), bool), wb, kk)
+    empty_tail = jnp.full((rn,), KEY_EMPTY, I32)
+    return state._replace(
+        stage_keys=jnp.concatenate([state.stage_keys[rn:], empty_tail]),
+        stage_vals=jnp.concatenate([state.stage_vals[rn:], jnp.zeros_like(empty_tail)]),
+        stage_seqs=jnp.concatenate([state.stage_seqs[rn:], jnp.zeros_like(empty_tail)]),
+        stage_count=state.stage_count - rn,
+        buf_keys=state.buf_keys.at[slot].set(rk),
+        buf_vals=state.buf_vals.at[slot].set(rv),
+        buf_seqs=state.buf_seqs.at[slot].set(rs),
+        buf_counts=state.buf_counts.at[slot].set(rn),
+        buf_mins=state.buf_mins.at[slot].set(rk[0]),
+        buf_maxs=state.buf_maxs.at[slot].set(rk[rn - 1]),
+        buf_blooms=state.buf_blooms.at[slot].set(filt),
+        run_count=state.run_count + 1,
+    )
+
+
+seal_run = functools.partial(jax.jit, static_argnums=0,
+                             donate_argnums=1)(seal_run_impl)

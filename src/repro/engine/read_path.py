@@ -1,0 +1,206 @@
+"""Read path (paper 2.7/2.9): point lookups and range queries.
+
+Lookups walk newest -> oldest across every structure — staging buffer,
+sealed memory runs, then each disk level — keeping the match with the
+highest seqno. Disk levels are gated by min/max windows AND Bloom
+positives (paper 2.3) before any page is touched.
+
+Two disk-search strategies:
+  dense  — every (run, query) pair does the fence+page work, gated after
+           the fact. Exact; the default. Bloom probes AND the fence page
+           search (paper 2.4) dispatch through the ops backend
+           (`SLSMParams.backend`), so the same control flow drives the
+           jnp reference or the Pallas kernels.
+  sparse — Bloom-compacted: only gated pairs are expanded (statically
+           bounded by cand_factor per query). The TPU realization of
+           "skip the run on a Bloom miss"; can drop candidates if the
+           gate overflows its static bound (see `search_level_sparse`).
+           Only the Bloom gate dispatches through the backend here: the
+           candidate-compacted gather is per-(run, query) pair, a shape
+           the per-run fence kernel does not take.
+
+All ops exist as pure `_impl` forms (vmappable — the sharded engine maps
+the dense lookup over shards) plus jitted wrappers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import runs as RU
+from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
+from repro.engine.backend import get_backend
+from repro.engine.levels import LevelState
+from repro.engine.memtable import SLSMState
+
+I32 = jnp.int32
+
+
+def consider(best_seq, best_val, seq_c, val_c):
+    take = seq_c > best_seq
+    return (jnp.where(take, seq_c, best_seq),
+            jnp.where(take, val_c, best_val))
+
+
+def search_stage(state: SLSMState, qs: jax.Array):
+    eq = state.stage_keys[None, :] == qs[:, None]            # (Q, 2Rn)
+    seqm = jnp.where(eq, state.stage_seqs[None, :], SEQ_NONE)
+    j = jnp.argmax(seqm, axis=1)
+    seq_c = jnp.take_along_axis(seqm, j[:, None], axis=1)[:, 0]
+    val_c = state.stage_vals[j]
+    return seq_c, jnp.where(seq_c >= 0, val_c, 0)
+
+
+def search_sorted_run(keys, vals, seqs, count, qs):
+    """Binary search one sorted run for a batch of queries."""
+    i = jnp.searchsorted(keys, qs).astype(I32)
+    ic = jnp.minimum(i, keys.shape[0] - 1)
+    hit = (i < count) & (keys[ic] == qs)
+    return (jnp.where(hit, seqs[ic], SEQ_NONE), jnp.where(hit, vals[ic], 0))
+
+
+def search_memory_runs(state: SLSMState, qs: jax.Array):
+    seqs_r, vals_r = jax.vmap(
+        lambda k, v, s, c: search_sorted_run(k, v, s, c, qs)
+    )(state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
+    j = jnp.argmax(seqs_r, axis=0)                            # (Q,)
+    q_iota = jnp.arange(qs.shape[0])
+    return seqs_r[j, q_iota], vals_r[j, q_iota]
+
+
+def level_gate(p: SLSMParams, lv: LevelState, level: int, qs: jax.Array):
+    """(D, Q) candidate mask: min/max window AND Bloom positive (paper 2.3)."""
+    be = get_backend(p.backend)
+    _, _, kk = p.bloom_geometry(p.level_cap(level))
+    inwin = (qs[None, :] >= lv.mins[:, None]) & (qs[None, :] <= lv.maxs[:, None])
+    pos = be.bloom_probe_many(lv.blooms, qs, kk)              # (D, Q)
+    return inwin & pos.astype(bool)
+
+
+def search_level_dense(p: SLSMParams, lv: LevelState, level: int,
+                       qs: jax.Array):
+    gate = level_gate(p, lv, level, qs)
+    be = get_backend(p.backend)
+    idx = be.fence_lookup_many(qs, lv.fences, lv.keys, lv.counts, p.mu)
+    hit = (idx >= 0) & gate                                   # (D, Q)
+    idxc = jnp.maximum(idx, 0)
+    seqs_d = jnp.where(hit, jnp.take_along_axis(lv.seqs, idxc, axis=1),
+                       SEQ_NONE)
+    vals_d = jnp.where(hit, jnp.take_along_axis(lv.vals, idxc, axis=1), 0)
+    j = jnp.argmax(seqs_d, axis=0)
+    q_iota = jnp.arange(qs.shape[0])
+    return seqs_d[j, q_iota], vals_d[j, q_iota]
+
+
+def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
+                        qs: jax.Array):
+    """Bloom-compacted disk search: only gated (run, query) pairs do the
+    fence+page work — the TPU realization of 'skip the run on a Bloom miss'.
+
+    Static capacity: cand_factor candidates per query on average. An
+    overflowing gate (pathologically hot key ranges + tiny cand_factor)
+    drops candidates, which can miss a hit — size cand_factor >= eps*D*L
+    plus true-hit headroom, or use the dense path (lookup_batch sparse=False)
+    when exactness is mandatory. Property tests cross-check both paths.
+
+    The per-candidate fence search below mirrors backend.fence_window_idx
+    on a (run, query)-compacted index set; keep the two in sync."""
+    q_n = qs.shape[0]
+    gate = level_gate(p, lv, level, qs)                       # (D, Q)
+    cap = q_n * p.cand_factor
+    d_idx, q_idx = jnp.nonzero(gate, size=cap, fill_value=-1)
+    ok = d_idx >= 0
+    d_c, q_c = jnp.maximum(d_idx, 0), jnp.maximum(q_idx, 0)
+    qk = qs[q_c]
+
+    def one(d, q):
+        f = jnp.searchsorted(lv.fences[d], q, side="right").astype(I32) - 1
+        st = jnp.clip(f, 0, lv.fences.shape[1] - 1) * p.mu
+        win = jax.lax.dynamic_slice(lv.keys, (d, st), (1, p.mu))[0]
+        off = jnp.searchsorted(win, q).astype(I32)
+        offc = jnp.minimum(off, p.mu - 1)
+        hit = (off < p.mu) & (win[offc] == q) & (st + offc < lv.counts[d])
+        idx = st + offc
+        return (jnp.where(hit, lv.seqs[d, idx], SEQ_NONE),
+                jnp.where(hit, lv.vals[d, idx], 0))
+
+    seq_c, val_c = jax.vmap(one)(d_c, qk)
+    seq_c = jnp.where(ok, seq_c, SEQ_NONE)
+    best_seq = jnp.full((q_n,), SEQ_NONE, I32).at[q_c].max(
+        jnp.where(ok, seq_c, SEQ_NONE), mode="drop")
+    win_mask = ok & (seq_c == best_seq[q_c]) & (seq_c >= 0)
+    best_val = jnp.full((q_n,), np.iinfo(np.int32).min, I32).at[q_c].max(
+        jnp.where(win_mask, val_c, np.iinfo(np.int32).min), mode="drop")
+    best_val = jnp.where(best_seq >= 0, best_val, 0)
+    return best_seq, best_val
+
+
+def lookup_batch_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
+                      sparse: bool = False):
+    """Point lookups, newest-to-oldest across every structure (paper 2.7).
+
+    Returns (vals, found). Tombstoned keys report found=False (paper 2.8).
+    """
+    qs = qs.astype(I32)
+    best_seq, best_val = search_stage(state, qs)
+    s2, v2 = search_memory_runs(state, qs)
+    best_seq, best_val = consider(best_seq, best_val, s2, v2)
+    for level, lv in enumerate(state.levels):
+        fn = search_level_sparse if sparse else search_level_dense
+        s3, v3 = fn(p, lv, level, qs)
+        best_seq, best_val = consider(best_seq, best_val, s3, v3)
+    found = (best_seq >= 0) & (best_val != TOMBSTONE)
+    return jnp.where(found, best_val, 0), found
+
+
+lookup_batch = functools.partial(
+    jax.jit, static_argnums=(0, 3))(lookup_batch_impl)
+
+
+# --------------------------------------------------------------------------
+# range queries (paper 2.9)
+# --------------------------------------------------------------------------
+
+def range_from_sorted(keys, vals, seqs, count, lo, hi, max_range):
+    s = jnp.searchsorted(keys, lo, side="left").astype(I32)
+    e = jnp.searchsorted(keys, hi, side="left").astype(I32)
+    idx = s + jnp.arange(max_range, dtype=I32)
+    ok = (idx < e) & (idx < count)
+    idxc = jnp.minimum(idx, keys.shape[0] - 1)
+    return (jnp.where(ok, keys[idxc], KEY_EMPTY),
+            jnp.where(ok, vals[idxc], 0),
+            jnp.where(ok, seqs[idxc], 0))
+
+
+def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
+                     hi: jax.Array):
+    """All live (key, value) with lo <= key < hi, newest-wins, tombstones
+    dropped. Sort-based dedup replaces the paper's hash table (DESIGN.md §2).
+
+    Returns (keys, vals, count) with up to max_range results, key-sorted.
+    """
+    mr = p.max_range
+    parts = [range_from_sorted(state.stage_keys, state.stage_vals,
+                               state.stage_seqs, state.stage_count,
+                               lo, hi, mr)]
+    part = jax.vmap(lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi, mr))(
+        state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
+    parts.append(tuple(x.reshape(-1) for x in part))
+    for lv in state.levels:
+        part = jax.vmap(
+            lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi, mr)
+        )(lv.keys, lv.vals, lv.seqs, lv.counts)
+        parts.append(tuple(x.reshape(-1) for x in part))
+    k = jnp.concatenate([x[0] for x in parts])
+    v = jnp.concatenate([x[1] for x in parts])
+    s = jnp.concatenate([x[2] for x in parts])
+    k, v, s = RU.sort_by_key_seq(k, v, s)
+    ok = RU.newest_wins_mask(k, v, drop_tombstones=True)
+    k, v, s, cnt = RU.compact(k, v, s, ok)
+    return k[:mr], v[:mr], jnp.minimum(cnt, mr)
+
+
+range_query = functools.partial(jax.jit, static_argnums=0)(range_query_impl)

@@ -1,0 +1,261 @@
+"""Vmapped multi-shard sLSM: S independent trees in one fused pytree.
+
+The many-tenant serving shape: S complete sLSM trees live in one stacked
+state pytree (every leaf gains a leading shard axis), and every device
+op is the single-tree `_impl` op vmapped over that axis — one dispatch
+drives all shards. The key space is hash-partitioned (the same Murmur3
+finalizer the Bloom filters use), so shards never share keys and their
+results merge trivially.
+
+Control flow stays on the host, as in the single-tree driver: the host
+reads the (S,) occupancy vectors and applies each maintenance op under a
+per-shard select mask — shards whose mask is off get their state back
+unchanged (the vmapped op's output for them is computed and discarded;
+with S trees in one fused dispatch that is the price of lockstep, and it
+is exactly the work a busy fleet does anyway).
+
+Two deliberate simplifications vs the single-tree driver:
+  * all `max_levels` tiers are preallocated at init so every shard
+    shares one pytree structure (no per-shard lazy growth);
+  * tombstones are elided only at deepest-level compaction — always
+    legal (paper 2.5/2.8); the per-shard "is the target the deepest
+    occupied level" refinement would make `drop_tombstones` a traced
+    per-shard value inside ops that specialize on it statically.
+
+Compaction is the paper's tiering policy. Lookups use the dense read
+path (the sparse path's candidate compaction does not vmap); queries are
+routed host-side to their owner shard, looked up in one vmapped
+dispatch, and scattered back.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.engine import compaction as CP
+from repro.engine import memtable as MT
+from repro.engine import read_path as RP
+from repro.engine.backend import get_backend
+
+_GOLDEN = np.uint32(0x9E3779B9)   # bloom.SEED1 — same hash family
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+
+
+def _fmix32_np(x: np.ndarray) -> np.ndarray:
+    """numpy mirror of repro.core.bloom.fmix32 (host-side routing hash)."""
+    x = x.astype(np.uint32)
+    x ^= x >> 16
+    x = x * _C1
+    x ^= x >> 13
+    x = x * _C2
+    x ^= x >> 16
+    return x
+
+
+def shard_ids(keys, n_shards: int) -> np.ndarray:
+    """Owner shard of each key: fmix32(key ^ SEED1) mod S."""
+    u = np.asarray(keys, np.int32).reshape(-1).view(np.uint32)
+    return (_fmix32_np(u ^ _GOLDEN) % np.uint32(n_shards)).astype(np.int64)
+
+
+# --------------------------------------------------------------------------
+# vmapped device ops with per-shard select masks
+# --------------------------------------------------------------------------
+
+def _select(mask: jax.Array, new, old):
+    """Per-shard pytree select: leaf[s] = new[s] if mask[s] else old[s]."""
+    def sel(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def _stage_append_sharded(p: SLSMParams, state, keys, vals, n_valid):
+    return jax.vmap(
+        lambda st, k, v, n: MT.stage_append_impl(p, st, k, v, n)
+    )(state, keys, vals, n_valid)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _seal_where(p: SLSMParams, state, mask):
+    sealed = jax.vmap(lambda st: MT.seal_run_impl(p, st))(state)
+    return _select(mask, sealed, state)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _flush_where(p: SLSMParams, state, mask):
+    new = jax.vmap(
+        lambda st: CP.merge_buffer_to_level0_impl(p, st, False))(state)
+    return _select(mask, new, state)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def _merge_level_down_where(p: SLSMParams, state, level: int, n_merge: int,
+                            mask):
+    new = jax.vmap(
+        lambda st: CP.merge_level_down_impl(p, st, level, n_merge, False)
+    )(state)
+    return _select(mask, new, state)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _compact_last_where(p: SLSMParams, state, mask):
+    new, raw = jax.vmap(lambda st: CP.compact_last_level_impl(p, st))(state)
+    return _select(mask, new, state), raw
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _lookup_sharded(p: SLSMParams, state, qs):
+    """qs (S, Q): each shard looks up its own row (dense path)."""
+    return jax.vmap(
+        lambda st, q: RP.lookup_batch_impl(p, st, q, sparse=False)
+    )(state, qs)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _range_sharded(p: SLSMParams, state, lo, hi):
+    return jax.vmap(lambda st: RP.range_query_impl(p, st, lo, hi))(state)
+
+
+# --------------------------------------------------------------------------
+# host driver
+# --------------------------------------------------------------------------
+
+class ShardedSLSM:
+    """S hash-partitioned sLSM trees in one fused, vmapped state pytree."""
+
+    def __init__(self, params: SLSMParams | None = None, n_shards: int = 4):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.p = params or SLSMParams()
+        get_backend(self.p.backend)
+        self.S = n_shards
+        base = MT.init_state(self.p, n_levels=self.p.max_levels)
+        self.state = jax.tree.map(lambda x: jnp.stack([x] * n_shards), base)
+
+    # -- write path -------------------------------------------------------
+    def insert(self, keys, vals) -> None:
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        vals = np.asarray(vals, np.int32).reshape(-1)
+        assert keys.shape == vals.shape
+        if len(keys) == 0:
+            return
+        sid = shard_ids(keys, self.S)
+        buckets = [(keys[sid == s], vals[sid == s]) for s in range(self.S)]
+        rn = self.p.Rn
+        rounds = max((len(bk) + rn - 1) // rn for bk, _ in buckets)
+        for r in range(rounds):
+            ck = np.full((self.S, rn), KEY_EMPTY, np.int32)
+            cv = np.zeros((self.S, rn), np.int32)
+            n = np.zeros((self.S,), np.int32)
+            for s, (bk, bv) in enumerate(buckets):
+                seg = bk[r * rn:(r + 1) * rn]
+                n[s] = len(seg)
+                ck[s, :len(seg)] = seg
+                cv[s, :len(seg)] = bv[r * rn:(r + 1) * rn]
+            self.state = _stage_append_sharded(
+                self.p, self.state, jnp.asarray(ck), jnp.asarray(cv),
+                jnp.asarray(n))
+            self._maintain()
+
+    def delete(self, keys) -> None:
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        self.insert(keys, np.full_like(keys, TOMBSTONE))
+
+    def _maintain(self) -> None:
+        """Seal/flush/cascade every shard that needs it (lockstep Do-Merge)."""
+        p = self.p
+        while True:
+            need_seal = np.asarray(self.state.stage_count) >= p.Rn
+            if not need_seal.any():
+                return
+            need_flush = need_seal & (np.asarray(self.state.run_count) >= p.R)
+            if need_flush.any():
+                self._cascade(need_flush)
+                self.state = _flush_where(p, self.state,
+                                          jnp.asarray(need_flush))
+            self.state = _seal_where(p, self.state, jnp.asarray(need_seal))
+
+    def _cascade(self, flush_mask: np.ndarray) -> None:
+        """Deepest-first spill chain: shard s spills level l+1 only if its
+        level-l spill is about to push a run into a full level l+1."""
+        p = self.p
+        spill, mask = [], flush_mask
+        for lvl in range(p.max_levels):
+            mask = mask & (np.asarray(self.state.levels[lvl].n_runs) >= p.D)
+            spill.append(mask.copy())
+        last = p.max_levels - 1
+        if spill[last].any():
+            new_state, raw = _compact_last_where(
+                p, self.state, jnp.asarray(spill[last]))
+            raws = np.asarray(raw)[spill[last]]
+            cap = p.level_cap(last)
+            if (raws > cap).any():
+                # raise before committing: the compacted state silently
+                # truncates the overflowing run (same order as engine.py)
+                raise RuntimeError(
+                    f"sLSM deepest level overflow ({int(raws.max())} > {cap} "
+                    f"live elements in a shard): increase max_levels beyond "
+                    f"{p.max_levels}")
+            self.state = new_state
+        for lvl in range(last - 1, -1, -1):
+            if spill[lvl].any():
+                self.state = _merge_level_down_where(
+                    p, self.state, lvl, p.disk_runs_merged,
+                    jnp.asarray(spill[lvl]))
+
+    # -- read path ----------------------------------------------------------
+    def lookup(self, keys):
+        qs = np.asarray(keys, np.int32).reshape(-1)
+        nq = len(qs)
+        if nq == 0:
+            return np.zeros(0, np.int32), np.zeros(0, bool)
+        sid = shard_ids(qs, self.S)
+        counts = np.bincount(sid, minlength=self.S)
+        qmax = max(1, int(counts.max()))
+        routed = np.full((self.S, qmax), KEY_EMPTY, np.int32)
+        # vectorized routing: stable-sort by shard, then each query's slot
+        # is its rank within its shard (index minus the shard's start)
+        order = np.argsort(sid, kind="stable")
+        starts = np.zeros(self.S + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        pos = np.empty(nq, np.int64)
+        pos[order] = np.arange(nq, dtype=np.int64) - starts[sid[order]]
+        routed[sid, pos] = qs
+        vals, found = _lookup_sharded(self.p, self.state, jnp.asarray(routed))
+        vals, found = np.asarray(vals), np.asarray(found)
+        return vals[sid, pos], found[sid, pos]
+
+    def range(self, lo: int, hi: int):
+        """Global range = concat of per-shard ranges (disjoint key sets),
+        re-sorted by key. Each shard's contribution is bounded by
+        max_range; results are exact while no shard truncates."""
+        k, v, c = _range_sharded(self.p, self.state, jnp.int32(lo),
+                                 jnp.int32(hi))
+        k, v, c = np.asarray(k), np.asarray(v), np.asarray(c)
+        ks = np.concatenate([k[s, :c[s]] for s in range(self.S)])
+        vs = np.concatenate([v[s, :c[s]] for s in range(self.S)])
+        order = np.argsort(ks, kind="stable")
+        return ks[order], vs[order]
+
+    # -- stats ----------------------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        n = int(self.state.stage_count.sum()) + int(self.state.buf_counts.sum())
+        for lv in self.state.levels:
+            n += int(lv.counts.sum())
+        return n
+
+    def shard_occupancy(self) -> np.ndarray:
+        """(S,) live elements per shard — routing-balance introspection."""
+        per = np.asarray(self.state.stage_count).astype(np.int64)
+        per = per + np.asarray(self.state.buf_counts).sum(axis=1)
+        for lv in self.state.levels:
+            per = per + np.asarray(lv.counts).sum(axis=1)
+        return per

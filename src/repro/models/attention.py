@@ -275,7 +275,7 @@ def _lsm_cold_stats_shardmap(cfg, qg, blk_k, blk_v, ids, sel_ok,
         acc_g = jax.lax.psum(acc_p * corr[..., None], "data")
         return m_g, l_g, acc_g
 
-    return jax.shard_map(
+    return RT.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, "model", None, None),
                   P(None, "data", None, "model", None),

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed import runtime as RT
 from repro.models.layers import dtype_of
 
 
@@ -142,7 +143,7 @@ def _moe_shard_map(cfg, p, x):
         aux = jax.lax.pmean(aux, dp)
         return y.reshape(bl, sl, d).astype(x_blk.dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = RT.shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_s, None, None), P(), P(model, None, None),
                   P(model, None, None), P(model, None, None)),

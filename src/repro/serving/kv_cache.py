@@ -62,8 +62,7 @@ def lsm_from_dense(cfg, dense_caches: dict, max_len: int) -> dict:
     mu, w = cfg.lsm_block, cfg.lsm_hot_window
     k, v = dense_caches["k"], dense_caches["v"]     # (L, B, S, KV, hd)
     l, b, s, kv, hd = k.shape
-    n_cold = max(0, (s - 1)) // mu                  # keep >=1 token hot
-    n_cold = min(n_cold, max(0, (s - 1) // mu))
+    n_cold = max(0, s - 1) // mu                    # keep >=1 token hot
     hot_start = n_cold * mu
     hot_used = s - hot_start
     assert hot_used <= w, (hot_used, w)

@@ -1,0 +1,25 @@
+"""Bloom filter hypothesis properties (paper 2.3) — module degrades to a
+skip when hypothesis is not installed."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.bloom import bloom_build, bloom_probe
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(keys=st.lists(st.integers(-2**31, 2**31 - 1), min_size=1,
+                     max_size=200, unique=True),
+       seed=st.integers(0, 1000))
+def test_no_false_negatives(keys, seed):
+    del seed
+    ks = jnp.asarray(np.asarray(keys, np.int32))
+    words = max(8, len(keys))
+    filt = bloom_build(ks, jnp.ones(ks.shape, bool), words, k=7)
+    assert bool(bloom_probe(filt, ks, k=7).all())

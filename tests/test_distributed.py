@@ -69,7 +69,10 @@ def test_sharding_rules_cover_all_archs():
     from repro.distributed import sharding as SH
     from repro.models import lm
 
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:  # jax >= 0.5 signature: (axis_sizes, axis_names)
+        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # jax 0.4.x signature: ((name, size), ...)
+        mesh = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
     for arch in all_arch_ids():
         cfg = get_config(arch)
         params = jax.eval_shape(

@@ -1,11 +1,10 @@
-"""Fast geometric levels (paper 2.2.1) — distribution + oracle agreement."""
+"""Fast geometric levels (paper 2.2.1) — distribution + oracle agreement.
+The hypothesis ordered-map property lives in test_levels_rng_props.py."""
 import jax
 import numpy as np
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
 
 from repro.core.levels_rng import MAXLEVEL, fast_geometric_levels
-from repro.core.skiplist_ref import SkipListRef, ffs_level
+from repro.core.skiplist_ref import ffs_level
 
 
 def test_geometric_distribution():
@@ -21,20 +20,3 @@ def test_matches_paper_ffs_oracle():
     ref = np.array([ffs_level(r) for _ in range(100000)])
     assert abs(lv.mean() - ref.mean()) < 0.02
     assert abs(lv.std() - ref.std()) < 0.05
-
-
-@settings(max_examples=15, deadline=None,
-          suppress_health_check=list(HealthCheck))
-@given(seed=st.integers(0, 10**6),
-       items=st.lists(st.tuples(st.integers(0, 500), st.integers(0, 99)),
-                      min_size=1, max_size=120))
-def test_skiplist_ref_is_an_ordered_map(seed, items):
-    sl = SkipListRef(seed=seed)
-    d = {}
-    for k, v in items:
-        sl.insert(k, v)
-        d[k] = v
-    assert sl.items() == sorted(d.items())
-    for k, v in d.items():
-        assert sl.lookup(k) == v
-    assert sl.lookup(10**7) is None

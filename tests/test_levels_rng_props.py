@@ -1,0 +1,27 @@
+"""Skiplist-reference hypothesis property (paper 2.2) — module degrades
+to a skip when hypothesis is not installed."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.skiplist_ref import SkipListRef
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(seed=st.integers(0, 10**6),
+       items=st.lists(st.tuples(st.integers(0, 500), st.integers(0, 99)),
+                      min_size=1, max_size=120))
+def test_skiplist_ref_is_an_ordered_map(seed, items):
+    sl = SkipListRef(seed=seed)
+    d = {}
+    for k, v in items:
+        sl.insert(k, v)
+        d[k] = v
+    assert sl.items() == sorted(d.items())
+    for k, v in d.items():
+        assert sl.lookup(k) == v
+    assert sl.lookup(10**7) is None

@@ -35,6 +35,33 @@ def test_lsm_decode_runs_and_is_close_to_dense(rng):
                                rtol=2e-3, atol=2e-3)
 
 
+def test_lsm_from_dense_exact_block_boundary(rng):
+    """Prefill length an exact multiple of lsm_block is the edge case of
+    the prefill->tiered conversion: the last full block must stay hot
+    (>= 1 hot token, never an empty hot window) and the cold blocks +
+    hot window must reproduce the dense K/V exactly, in token order."""
+    cfg = _cfg()
+    mu = cfg.lsm_block
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    for n_blk in (1, 2, 3):
+        s = n_blk * mu
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+        _, dense = lm.prefill_step(cfg, params, {"tokens": toks})
+        lsm = lsm_from_dense(cfg, dense, s + 8)
+        n_cold = int(lsm["n_blocks"].reshape(-1)[0])
+        hot = int(lsm["hot_len"].reshape(-1)[0])
+        assert n_cold == n_blk - 1, (s, n_cold)
+        assert hot == mu, (s, hot)  # the boundary block lands hot, whole
+        l, _, _, kv, hd = dense["k"].shape
+        cold = np.asarray(lsm["blk_k"][:, :, :n_cold], np.float32).reshape(
+            l, b, n_cold * mu, kv, hd)
+        rebuilt = np.concatenate(
+            [cold, np.asarray(lsm["hot_k"][:, :, :hot], np.float32)], axis=2)
+        np.testing.assert_allclose(
+            rebuilt, np.asarray(dense["k"], np.float32), rtol=1e-6, atol=1e-6)
+
+
 def test_seal_preserves_attention(rng):
     """Sealing moves the oldest mu hot tokens into a cold block; with
     topk >= n_blocks every block stays attended, so the next-token

@@ -1,0 +1,55 @@
+"""Hypothesis property tests over arbitrary op interleavings (paper
+semantics: newest-wins, tombstones, range, cascaded merges) — module
+degrades to a skip when hypothesis is not installed. Deterministic
+randomized-schedule equivalents live in test_engine.py."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import SLSM
+from repro.core.oracle import DictOracle
+from test_slsm_core import TINY, _check_lookups
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["insert", "delete", "lookup", "range"]),
+              st.integers(0, 60)),
+    min_size=4, max_size=25)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=list(HealthCheck))
+@given(ops=ops, seed=st.integers(0, 2**31 - 1))
+def test_property_vs_oracle(ops, seed):
+    rng = np.random.default_rng(seed)
+    t, o = SLSM(TINY), DictOracle()
+    for op, span in ops:
+        if op == "insert":
+            ks = rng.integers(0, 80, size=max(1, span)).astype(np.int32)
+            vs = rng.integers(-99, 99, size=ks.shape).astype(np.int32)
+            try:
+                t.insert(ks, vs)
+            except RuntimeError:
+                return  # declared capacity exhaustion (tiny config) — legal
+            o.insert(ks, vs)
+        elif op == "delete":
+            ks = rng.integers(0, 80, size=max(1, span // 4 + 1)).astype(np.int32)
+            try:
+                t.delete(ks)
+            except RuntimeError:
+                return
+            o.delete(ks)
+        elif op == "lookup":
+            qs = rng.integers(-5, 90, size=16).astype(np.int32)
+            _check_lookups(t, o, qs)
+        else:
+            lo = int(rng.integers(-5, 60))
+            hi = lo + span
+            k1, v1 = t.range(lo, hi)
+            k2, v2 = o.range(lo, hi)
+            np.testing.assert_array_equal(k1, k2)
+            np.testing.assert_array_equal(v1, v2)
+    _check_lookups(t, o, np.arange(-5, 90, dtype=np.int32))
