@@ -4,6 +4,11 @@ CPU-hosted JAX measurements: the goal is reproducing the paper's *trends*
 (Figs 2-12) — absolute ops/s on one CPU core is not comparable to the
 paper's 32-core Xeon, and the TPU-absolute story lives in the roofline
 analysis. Sizes are scaled so the full suite runs in minutes.
+
+`bench_params` (the CPU-scaled paper baseline) is shared with the
+scenario runner — one source of truth in `repro.bench.scenarios`, so the
+figure benches and the BENCH_*.json trajectory measure the same engine
+configuration.
 """
 from __future__ import annotations
 
@@ -12,16 +17,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core import SLSM, SLSMParams
+from repro.bench.scenarios import bench_params  # noqa: F401  (shared defaults)
+from repro.core import SLSM
 from repro.core.slsm import lookup_batch
-
-
-def bench_params(**over) -> SLSMParams:
-    """Paper-shaped defaults scaled for CPU benches."""
-    base = dict(R=8, Rn=256, eps=1e-3, D=4, m=1.0, mu=64, max_levels=3,
-                max_range=4096, cand_factor=8)
-    base.update(over)
-    return SLSMParams(**base)
 
 
 def time_inserts(tree: SLSM, keys, vals) -> float:

@@ -11,10 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_params, row, time_inserts, time_lookups
+from repro.bench.workloads import make_kv_workload
 from repro.core import SLSM
 from repro.core.slsm import (compact_last_level, lookup_batch,
                              merge_buffer_to_level0, range_query)
-from repro.data import make_kv_workload
 
 N_DEFAULT = 60_000
 N_LOOKUP = 8_192

@@ -1,14 +1,19 @@
 """Quickstart: the Skiplist-Based LSM Tree as a JAX key-value engine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Every section asserts its output, so this file doubles as a smoke test
+(CI runs it on every push). The engine API lives in `repro.engine`;
+`repro.core.slsm` is only a back-compat facade.
 """
 import numpy as np
 
 from repro.configs.slsm_paper import paper_params
-from repro.core import SLSM
+from repro.engine import SLSM
 
 # The paper's tuned baseline (Section 3), scaled to laptop size:
 # mu=512 -> 64, R=50 -> 8, Rn=800 -> 256, D=20 -> 4, eps=1e-3 kept.
+# Add backend="pallas" to dispatch the hot primitives to the TPU kernels.
 params = paper_params(R=8, Rn=256, D=4, mu=64, max_levels=3)
 store = SLSM(params)
 
@@ -20,16 +25,20 @@ print(f"inserting {len(keys):,} keys "
       f"(R={params.R}, Rn={params.Rn}, eps={params.eps}, "
       f"D={params.D}, m={params.m}, mu={params.mu}) ...")
 store.insert(keys, vals)
-print(f"  -> {store.n_levels} disk levels, ~{store.n_live:,} stored entries")
+assert store.n_levels >= 1 and store.n_live >= len(keys) // 2
+print(f"  -> {store.n_levels} disk levels, ~{store.n_live:,} stored entries, "
+      f"merges: {dict(store.stats)}")
 
-# point lookups (batched, jit-compiled; Bloom + min/max gated)
-got, found = store.lookup(keys[:1000])
+# batched point lookups: all 1,000 queries in ONE fused device dispatch
+# (Bloom + min/max gated, fence-pointer page search — paper 2.3/2.4/2.7)
+got, found = store.lookup_many(keys[:1000])
 assert found.all() and (got == vals[:1000]).all()
-print("lookup of 1,000 present keys: all found, all correct")
+print("lookup_many of 1,000 present keys: all found, all correct")
 
 absent = (keys[:1000].astype(np.int64) + 2**25).astype(np.int32)
-_, found = store.lookup(absent)
-print(f"lookup of 1,000 absent keys: {found.sum()} false positives")
+_, found = store.lookup_many(absent)
+assert not found.any()  # Bloom FPs are filtered by the exact key match
+print("lookup_many of 1,000 absent keys: none found")
 
 # deletes are tombstones (paper 2.8)
 store.delete(keys[:10])
@@ -43,5 +52,7 @@ rk, rv = store.range(lo, hi)
 expect = np.sort(keys[(keys >= lo) & (keys < hi)])
 expect = expect[~np.isin(expect, keys[:10])]
 assert (rk == expect).all()
-print(f"range [{lo}, {hi}): {len(rk)} results, key-sorted, verified")
+kv = dict(zip(keys.tolist(), vals.tolist()))  # keys are drawn unique
+assert all(kv[k] == v for k, v in zip(rk.tolist(), rv.tolist()))
+print(f"range [{lo}, {hi}): {len(rk)} results, key-sorted, values verified")
 print("quickstart OK")

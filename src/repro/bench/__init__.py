@@ -1,0 +1,42 @@
+"""Paper-faithful workload + benchmark-trajectory subsystem.
+
+The paper's core claim (Section 3) is that the sLSM's "breadth of tuning
+parameters allows broad flexibility for excellent performance across a
+wide variety of workloads". This package makes that claim measurable and
+*comparable across PRs*:
+
+  workloads.py — seeded key-distribution generators (uniform, sequential,
+                 zipfian-skewed, delete-heavy, range-scan mixes) — the
+                 paper's Section 3 workload families as one registry.
+  scenarios.py — named benchmark scenarios + parameter-sweep drivers over
+                 the paper's knobs (R, Rn, D, m, eps, tiering vs leveling,
+                 jnp vs pallas backend, 1 vs S shards).
+  runner.py    — executes one scenario end-to-end and emits a
+                 schema-versioned ``BENCH_<name>.json`` (ops/sec, p50/p99
+                 latency, merge counts, measured Bloom FP rate).
+  schema.py    — the BENCH_*.json schema: version constant + pure-python
+                 validator (no external deps).
+
+Entry point: ``python -m benchmarks.run --scenario all --out .``
+(see README.md "Benchmarks" and DESIGN.md §7 for how to read results).
+"""
+from repro.bench.schema import SCHEMA_VERSION, validate  # noqa: F401
+from repro.bench.workloads import (WORKLOAD_FAMILIES, Workload,  # noqa: F401
+                                   make_kv_workload, make_workload)
+
+# scenarios/runner pull in the whole engine; loaded lazily so importing
+# the generators (e.g. via the repro.data back-compat re-export) does not
+# drag jax state in — and cannot recurse through repro.core's facade.
+_LAZY = {
+    "Scenario": "scenarios", "SCENARIOS": "scenarios",
+    "bench_params": "scenarios", "scenarios_for": "scenarios",
+    "run_scenario": "runner",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.bench.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

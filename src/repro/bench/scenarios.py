@@ -1,0 +1,146 @@
+"""Named benchmark scenarios + parameter sweeps over the paper's knobs.
+
+A `Scenario` = one workload family + one full engine configuration
+(SLSMParams overrides, compaction policy, shard count). The canonical
+five (`--scenario all`) cover the workload taxonomy — uniform,
+sequential, zipfian, delete-heavy, range-scan — at the CPU-scaled paper
+baseline; the sweep families (`--scenario sweeps`, or one of
+`sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-policy|sweep-backend|
+sweep-shards`) vary exactly one knob at a time, reproducing the paper's
+experimental axes (Table 1 + Section 3) plus the two axes this repro
+adds: the ops backend (jnp vs pallas) and the shard count (1 vs S).
+
+Scenario names are stable identifiers: `BENCH_<name>.json` files keyed
+on them form the cross-PR perf trajectory, so renaming one breaks the
+trajectory it anchors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+from repro.core.params import SLSMParams
+
+
+def bench_params(**over) -> SLSMParams:
+    """The paper's tuned baseline (Section 3: R=50, Rn=800, D=20, mu=512)
+    scaled so every scenario runs in seconds on one CPU core, keeping the
+    ratios (R/D, Rn/mu) and eps=1e-3 intact."""
+    base = dict(R=8, Rn=256, eps=1e-3, D=4, m=1.0, mu=64, max_levels=3,
+                max_range=4096, cand_factor=8)
+    base.update(over)
+    return SLSMParams(**base)
+
+
+# Sizing profiles: n inserts / n point lookups / per-query-path sample /
+# batched dispatch width.  smoke is the CI gate (seconds); default is the
+# trajectory point (`--scenario all`); full approaches the figure benches.
+PROFILES: Dict[str, Dict[str, int]] = {
+    # n must exceed (4/3)*(2*R*Rn + insert chunk) for the scenario's
+    # engine params: the insert warmup (runner._run_inserts) has to cover
+    # the first two buffer flushes — the first grows the levels pytree
+    # (recompiling stage/seal), the second compiles the
+    # drop_tombstones=False flush variant. smoke satisfies this only for
+    # the base params (canonical five); default/full also cover the
+    # largest sweep points (Rn=1024, R=32: 2*R*Rn + chunk = 20480).
+    "smoke": dict(n=7_500, n_lookups=1_024, n_per_query=24, batch=256,
+                  n_ranges=8),
+    "default": dict(n=30_000, n_lookups=4_096, n_per_query=64, batch=1_024,
+                    n_ranges=32),
+    "full": dict(n=60_000, n_lookups=8_192, n_per_query=128, batch=1_024,
+                 n_ranges=64),
+}
+
+
+@dataclass
+class Scenario:
+    """One BENCH point: workload family + engine configuration."""
+
+    name: str                                  # BENCH_<name>.json identity
+    workload: str                              # WORKLOAD_FAMILIES key
+    wargs: Dict[str, Any] = field(default_factory=dict)
+    params: Dict[str, Any] = field(default_factory=dict)  # SLSMParams overrides
+    policy: str = "tiering"                    # tiering | leveling
+    n_shards: int = 1                          # 1 = single tree, >1 = ShardedSLSM
+    seed: int = 0
+
+    def engine_params(self) -> SLSMParams:
+        return bench_params(**self.params)
+
+
+# -- the canonical five: one per workload family (--scenario all) ----------
+
+CANONICAL: List[Scenario] = [
+    Scenario("uniform", "uniform"),
+    Scenario("sequential", "sequential"),
+    Scenario("zipfian", "zipfian"),
+    Scenario("delete_heavy", "delete-heavy"),
+    Scenario("range_scan", "range-scan", params=dict(max_range=8192)),
+]
+
+
+def _sweep(prefix: str, axis: str, values, **extra) -> List[Scenario]:
+    out = []
+    for v in values:
+        tag = str(v).replace(".", "p")
+        out.append(Scenario(f"{prefix}_{tag}", "uniform",
+                            params={axis: v}, **extra))
+    return out
+
+
+SWEEPS: Dict[str, List[Scenario]] = {
+    # paper Table 1 knobs, one axis at a time, on the uniform load
+    "sweep-R": _sweep("sweep_R", "R", (2, 8, 32)),
+    "sweep-Rn": _sweep("sweep_Rn", "Rn", (64, 256, 1024)),
+    "sweep-D": _sweep("sweep_D", "D", (2, 4, 8)),
+    "sweep-m": _sweep("sweep_m", "m", (0.5, 1.0)),
+    "sweep-eps": _sweep("sweep_eps", "eps", (0.1, 1e-3, 1e-5)),
+    # this repro's own axes
+    "sweep-policy": [
+        Scenario("sweep_policy_tiering", "uniform", policy="tiering"),
+        Scenario("sweep_policy_leveling", "uniform", policy="leveling"),
+    ],
+    "sweep-backend": [
+        Scenario("sweep_backend_jnp", "uniform", params=dict(backend="jnp")),
+        Scenario("sweep_backend_pallas", "uniform",
+                 params=dict(backend="pallas")),
+    ],
+    "sweep-shards": [
+        Scenario("sweep_shards_1", "uniform", n_shards=1),
+        Scenario("sweep_shards_4", "uniform", n_shards=4),
+    ],
+}
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s for group in ([CANONICAL] + list(SWEEPS.values()))
+    for s in group
+}
+
+
+def scenarios_for(selector: str) -> List[Scenario]:
+    """Resolve a CLI selector: 'all' (canonical five), 'sweeps' (every
+    sweep), a sweep family ('sweep-R'), a scenario name, or a
+    comma-separated mix of the above."""
+    out: List[Scenario] = []
+    for part in selector.split(","):
+        part = part.strip()
+        if part == "all":
+            out.extend(CANONICAL)
+        elif part == "sweeps":
+            for group in SWEEPS.values():
+                out.extend(group)
+        elif part in SWEEPS:
+            out.extend(SWEEPS[part])
+        elif part in SCENARIOS:
+            out.append(SCENARIOS[part])
+        else:
+            raise ValueError(
+                f"unknown scenario selector {part!r}; options: all, sweeps, "
+                f"{', '.join(sorted(SWEEPS))}, or a name from "
+                f"{', '.join(sorted(SCENARIOS))}")
+    seen, uniq = set(), []
+    for s in out:
+        if s.name not in seen:
+            seen.add(s.name)
+            uniq.append(s)
+    return uniq

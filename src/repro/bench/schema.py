@@ -1,0 +1,163 @@
+"""The ``BENCH_<name>.json`` schema: one machine-readable perf point.
+
+Every scenario run emits one document; the set of documents across PRs
+is the repo's performance *trajectory* — comparable because the schema
+is versioned and each document pins the workload (family + seed + size)
+and the full engine configuration that produced it.
+
+Pure-python structural validator (no jsonschema dependency): `validate`
+returns a list of human-readable problems (empty == valid). The runner
+validates before writing; CI re-validates the emitted files
+(``python -m benchmarks.run --check --out DIR``).
+
+Document shape (SCHEMA_VERSION 1):
+
+  schema_version  int     == 1
+  name            str     scenario name (file is BENCH_<sanitized name>.json)
+  workload        {kind, n, seed, args{...}}
+  engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
+                   cand_factor, backend, policy, n_shards}
+  profile         {name, batch, n_lookups, n_per_query,
+                   insert_steady_state}  sizing profile that produced the
+                   numbers — p50/p99 and batched_speedup shift with
+                   dispatch width, so documents are only comparable at
+                   the same profile; insert_steady_state=false marks a
+                   point whose insert warmup could not cover the first
+                   two buffer flushes (jit compiles inside the timing)
+  metrics
+    insert            phase    chunked insert stream (includes merges)
+    lookup_batched    phase    one fused multi-key dispatch per batch
+    lookup_per_query  phase    one dispatch per key (the baseline the
+                               batched path is measured against)
+    delete            phase|None   tombstone stream (delete-heavy only)
+    range             phase|None   [lo,hi) scans (range-scan only)
+    batched_speedup   float    lookup_batched.ops_per_s / lookup_per_query.ops_per_s
+    maintenance       {seals, flushes, spills, compactions}  merge counts
+    bloom             {eps_configured, fp_rate_measured, n_probed}
+  env               {jax, numpy, python, platform, timestamp}
+
+  phase := {ops       int   ops executed
+            wall_s    float total wall-clock seconds
+            ops_per_s float
+            p50_us    float per-dispatch latency percentiles —
+            p99_us    float   batched phases amortize many ops/dispatch}
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+SCHEMA_VERSION = 1
+
+_PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
+               "p50_us": float, "p99_us": float}
+_ENGINE_KEYS = {"R": int, "Rn": int, "eps": float, "D": int, "m": float,
+                "mu": int, "max_levels": int, "max_range": int,
+                "cand_factor": int, "backend": str, "policy": str,
+                "n_shards": int}
+_MAINT_KEYS = ("seals", "flushes", "spills", "compactions")
+
+
+def _typed(doc: Dict[str, Any], key: str, typ, errs: List[str],
+           where: str) -> Any:
+    if key not in doc:
+        errs.append(f"{where}: missing key {key!r}")
+        return None
+    v = doc[key]
+    if typ is float:
+        ok = isinstance(v, (int, float)) and not isinstance(v, bool)
+    elif typ is bool:
+        ok = isinstance(v, bool)
+    else:
+        ok = isinstance(v, typ) and not (typ is int and isinstance(v, bool))
+    if not ok:
+        errs.append(f"{where}.{key}: expected {typ.__name__}, "
+                    f"got {type(v).__name__}")
+        return None
+    return v
+
+
+def _check_phase(phase: Any, where: str, errs: List[str]) -> None:
+    if not isinstance(phase, dict):
+        errs.append(f"{where}: expected object, got {type(phase).__name__}")
+        return
+    for key, typ in _PHASE_KEYS.items():
+        v = _typed(phase, key, typ, errs, where)
+        if isinstance(v, (int, float)) and v < 0:
+            errs.append(f"{where}.{key}: negative ({v})")
+    ops = phase.get("ops")
+    if isinstance(ops, int) and ops == 0:
+        errs.append(f"{where}.ops: phase present but empty")
+
+
+def validate(doc: Any) -> List[str]:
+    """Structural check of one BENCH document; [] means valid."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"document: expected object, got {type(doc).__name__}"]
+
+    ver = _typed(doc, "schema_version", int, errs, "document")
+    if ver is not None and ver != SCHEMA_VERSION:
+        errs.append(f"schema_version: {ver} != supported {SCHEMA_VERSION}")
+    _typed(doc, "name", str, errs, "document")
+
+    wl = _typed(doc, "workload", dict, errs, "document")
+    if wl is not None:
+        _typed(wl, "kind", str, errs, "workload")
+        n = _typed(wl, "n", int, errs, "workload")
+        if isinstance(n, int) and n <= 0:
+            errs.append(f"workload.n: must be positive ({n})")
+        _typed(wl, "seed", int, errs, "workload")
+        _typed(wl, "args", dict, errs, "workload")
+
+    eng = _typed(doc, "engine", dict, errs, "document")
+    if eng is not None:
+        for key, typ in _ENGINE_KEYS.items():
+            _typed(eng, key, typ, errs, "engine")
+
+    prof = _typed(doc, "profile", dict, errs, "document")
+    if prof is not None:
+        _typed(prof, "name", str, errs, "profile")
+        for key in ("batch", "n_lookups", "n_per_query"):
+            v = _typed(prof, key, int, errs, "profile")
+            if isinstance(v, int) and v <= 0:
+                errs.append(f"profile.{key}: must be positive ({v})")
+        _typed(prof, "insert_steady_state", bool, errs, "profile")
+
+    met = _typed(doc, "metrics", dict, errs, "document")
+    if met is not None:
+        for req in ("insert", "lookup_batched", "lookup_per_query"):
+            _check_phase(met.get(req), f"metrics.{req}", errs)
+        for opt in ("delete", "range"):
+            if met.get(opt) is not None:
+                _check_phase(met[opt], f"metrics.{opt}", errs)
+            elif opt not in met:
+                errs.append(f"metrics: missing key {opt!r} (use null when "
+                            "the workload has no such phase)")
+        sp = _typed(met, "batched_speedup", float, errs, "metrics")
+        if isinstance(sp, (int, float)) and sp <= 0:
+            errs.append(f"metrics.batched_speedup: must be positive ({sp})")
+        maint = _typed(met, "maintenance", dict, errs, "metrics")
+        if maint is not None:
+            for key in _MAINT_KEYS:
+                v = _typed(maint, key, int, errs, "metrics.maintenance")
+                if isinstance(v, int) and v < 0:
+                    errs.append(f"metrics.maintenance.{key}: negative ({v})")
+        bloom = _typed(met, "bloom", dict, errs, "metrics")
+        if bloom is not None:
+            eps = _typed(bloom, "eps_configured", float, errs, "metrics.bloom")
+            fp = _typed(bloom, "fp_rate_measured", float, errs, "metrics.bloom")
+            _typed(bloom, "n_probed", int, errs, "metrics.bloom")
+            if isinstance(eps, (int, float)) and not 0 < eps < 1:
+                errs.append(f"metrics.bloom.eps_configured: out of (0,1) ({eps})")
+            if isinstance(fp, (int, float)) and not 0 <= fp <= 1:
+                errs.append(f"metrics.bloom.fp_rate_measured: out of [0,1] ({fp})")
+
+    env = _typed(doc, "env", dict, errs, "document")
+    if env is not None:
+        for key in ("jax", "numpy", "python", "platform", "timestamp"):
+            _typed(env, key, str, errs, "env")
+    return errs
+
+
+def is_valid(doc: Any) -> bool:
+    return not validate(doc)

@@ -1,0 +1,292 @@
+"""Seeded workload generators — the paper's Section 3 families as data.
+
+Every generator is a pure function of ``(n, seed, **knobs)`` returning a
+`Workload`: fixed arrays for each op phase (insert, delete, point lookup,
+range scan). Determinism under a fixed seed is part of the contract —
+``BENCH_*.json`` trajectories are only comparable across PRs if the same
+scenario name always replays the same byte-identical op stream
+(tests/test_bench.py pins this).
+
+Key-space convention: **inserted keys are always even**; ``key | 1`` is
+therefore guaranteed-absent. That gives every family an exact absent-key
+stream for Bloom false-positive measurement and miss-path lookups without
+any membership bookkeeping.
+
+Families (registry `WORKLOAD_FAMILIES`):
+  uniform      — uniform random keys + mixed hit/miss point lookups
+                 (paper 3.2-3.8: the default load for every sweep)
+  sequential   — monotonically increasing keys, the LSM best case
+                 (runs never overlap; cf. paper 3.9.1 low-variance limit)
+  zipfian      — bounded Zipf(theta) over a shuffled key universe; the
+                 YCSB-style skew the paper's update-in-place dedup (3.9.1)
+                 and clustered-lookup experiments (3.9.2) are about
+  delete-heavy — insert then tombstone a configured fraction (paper 2.8);
+                 lookups split between deleted (must miss) and live keys
+  range-scan   — uniform load + a stream of [lo, hi) scan windows
+                 (paper 2.9 / 3.7: latency linear in span)
+
+`make_kv_workload` (the original `repro.data` generator used by the
+per-figure benches) also lives here now; `repro.data` re-exports it.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+_I32_MAX = 2**31 - 2
+
+
+def _rng(family: str, seed: int) -> np.random.Generator:
+    """Family-salted generator: distinct families never share a stream
+    even at the same seed (crc32 is stable across platforms/runs)."""
+    return np.random.default_rng((zlib.crc32(family.encode()), seed))
+
+
+@dataclass
+class Workload:
+    """One deterministic op stream: phases are fixed arrays, not callbacks."""
+
+    name: str
+    kind: str
+    seed: int
+    keys: np.ndarray                 # insert keys (int32, even)
+    vals: np.ndarray                 # insert values (int32)
+    lookups: np.ndarray              # point-lookup keys (hits and misses)
+    deletes: np.ndarray              # keys to tombstone (may be empty)
+    ranges: np.ndarray               # (n_ranges, 2) [lo, hi) windows
+    absent: np.ndarray               # guaranteed-absent keys (odd)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+
+def _finish(rng, kind, seed, keys, lookups_present, *, n_lookups,
+            miss_frac, deletes=None, ranges=None, meta=None,
+            lookups_override=None) -> Workload:
+    """Shared assembly: values, hit/miss lookup mix, absent stream.
+    A family with its own lookup semantics (delete-heavy's dead/live
+    split) passes the stream via ``lookups_override`` instead."""
+    keys = keys.astype(np.int32)
+    vals = rng.integers(-2**30, 2**30, len(keys), dtype=np.int32)
+    if lookups_override is not None:
+        lookups = lookups_override.astype(np.int32)
+    else:
+        n_miss = int(n_lookups * miss_frac)
+        n_hit = n_lookups - n_miss
+        hits = rng.choice(lookups_present, size=n_hit, replace=True)
+        misses = (rng.choice(keys, size=n_miss, replace=True) | np.int32(1))
+        lookups = np.concatenate([hits, misses]).astype(np.int32)
+        rng.shuffle(lookups)
+    absent = (rng.choice(keys, size=min(4096, 4 * len(keys)),
+                         replace=True) | np.int32(1)).astype(np.int32)
+    return Workload(
+        name=f"{kind}-n{len(keys)}-s{seed}", kind=kind, seed=seed,
+        keys=keys, vals=vals, lookups=lookups,
+        deletes=(np.zeros(0, np.int32) if deletes is None
+                 else deletes.astype(np.int32)),
+        ranges=(np.zeros((0, 2), np.int32) if ranges is None
+                else ranges.astype(np.int32)),
+        absent=absent, meta=meta or {})
+
+
+def _even_uniform(rng, n, key_space) -> np.ndarray:
+    return (rng.integers(0, key_space // 2, n, dtype=np.int64) * 2).astype(
+        np.int32)
+
+
+def make_uniform(n: int, seed: int = 0, *, key_space: int = _I32_MAX,
+                 lookup_frac: float = 0.5,
+                 miss_frac: float = 0.25) -> Workload:
+    """Uniform random keys — the paper's default load (Section 3.2)."""
+    rng = _rng("bench-uniform", seed)
+    keys = _even_uniform(rng, n, key_space)
+    return _finish(rng, "uniform", seed, keys, keys,
+                   n_lookups=int(n * lookup_frac), miss_frac=miss_frac,
+                   meta={"key_space": key_space})
+
+
+def make_sequential(n: int, seed: int = 0, *, lookup_frac: float = 0.5,
+                    miss_frac: float = 0.25) -> Workload:
+    """Monotonically increasing keys — runs never overlap (LSM best case).
+
+    The seeded start offset keeps distinct seeds on distinct key ranges;
+    keys stay even so the `| 1` absent-stream convention holds.
+    """
+    rng = _rng("bench-sequential", seed)
+    start = int(rng.integers(0, 2**20))
+    keys = ((start + np.arange(n, dtype=np.int64)) * 2).astype(np.int32)
+    return _finish(rng, "sequential", seed, keys, keys,
+                   n_lookups=int(n * lookup_frac), miss_frac=miss_frac,
+                   meta={"start": start})
+
+
+def zipf_probs(universe: int, theta: float) -> np.ndarray:
+    """Exact rank probabilities p_i ∝ 1/i^theta for a bounded Zipf."""
+    w = 1.0 / np.power(np.arange(1, universe + 1, dtype=np.float64), theta)
+    return w / w.sum()
+
+
+def zipf_expected_top_mass(universe: int, theta: float,
+                           frac: float = 0.01) -> float:
+    """Probability mass the top ``frac`` of ranks receives — the analytic
+    skew target tests/test_bench.py checks the sampler against."""
+    top = max(1, int(universe * frac))
+    return float(zipf_probs(universe, theta)[:top].sum())
+
+
+def make_zipfian(n: int, seed: int = 0, *, universe: int = 20_000,
+                 theta: float = 1.1, lookup_frac: float = 0.5,
+                 miss_frac: float = 0.25) -> Workload:
+    """Bounded Zipf(theta) via inverse-CDF over a shuffled key universe.
+
+    Unlike ``numpy.random.zipf`` (unbounded, theta > 1 only) this draws
+    ranks from the exact truncated distribution, then maps rank -> key
+    through a seeded permutation so the hot keys are scattered across the
+    key space (the paper's skew experiments, 3.9.1/3.9.2, are about
+    *frequency* skew, not key-space clustering). Heavy duplication
+    exercises the staging buffer's update-in-place dedup.
+    """
+    rng = _rng("bench-zipfian", seed)
+    probs = zipf_probs(universe, theta)
+    cdf = np.cumsum(probs)
+    ranks = np.searchsorted(cdf, rng.random(n), side="right")
+    ranks = np.minimum(ranks, universe - 1)
+    perm = rng.permutation(universe).astype(np.int64)
+    keys = (perm[ranks] * 2).astype(np.int32)
+    # hit-lookup pool: zipf-weighted over the ranks actually inserted, so
+    # the configured miss_frac holds exactly (an unconditional zipf draw
+    # would hit never-inserted tail ranks and drift the miss rate with n)
+    ins_ranks = np.unique(ranks)
+    cdf_ins = np.cumsum(probs[ins_ranks])
+    cdf_ins /= cdf_ins[-1]
+    lookup_ranks = ins_ranks[np.minimum(
+        np.searchsorted(cdf_ins, rng.random(n), side="right"),
+        len(ins_ranks) - 1)]
+    lookup_pool = (perm[lookup_ranks] * 2).astype(np.int32)
+    return _finish(
+        rng, "zipfian", seed, keys, lookup_pool,
+        n_lookups=int(n * lookup_frac), miss_frac=miss_frac,
+        meta={"universe": universe, "theta": theta,
+              "expected_top1pct_mass": zipf_expected_top_mass(universe, theta)})
+
+
+def make_delete_heavy(n: int, seed: int = 0, *, delete_frac: float = 0.4,
+                      key_space: int = 2**26, lookup_frac: float = 0.5,
+                      miss_frac: float = 0.0) -> Workload:
+    """Insert then tombstone ``delete_frac`` of the distinct keys (paper
+    2.8). Lookups: ``miss_frac`` absent probes; the rest split ~50/50
+    between deleted keys (must miss once the tombstone is newest) and
+    surviving keys."""
+    rng = _rng("bench-delete-heavy", seed)
+    keys = _even_uniform(rng, n, key_space)
+    distinct = np.unique(keys)
+    n_del = max(1, int(len(distinct) * delete_frac))
+    deleted = rng.choice(distinct, size=n_del, replace=False)
+    live_mask = ~np.isin(distinct, deleted)
+    live = distinct[live_mask] if live_mask.any() else deleted
+    n_lookups = int(n * lookup_frac)
+    n_absent = int(n_lookups * miss_frac)
+    n_present = n_lookups - n_absent
+    lk_absent = rng.choice(keys, size=n_absent, replace=True) | np.int32(1)
+    lk_dead = rng.choice(deleted, size=n_present // 2, replace=True)
+    lk_live = rng.choice(live, size=n_present - n_present // 2, replace=True)
+    lookups = np.concatenate([lk_absent, lk_dead, lk_live]).astype(np.int32)
+    rng.shuffle(lookups)
+    return _finish(rng, "delete-heavy", seed, keys, keys,
+                   n_lookups=n_lookups, miss_frac=miss_frac,
+                   deletes=deleted, lookups_override=lookups,
+                   meta={"delete_frac": delete_frac,
+                         "n_deleted": int(n_del)})
+
+
+def make_range_scan(n: int, seed: int = 0, *, key_space: int = 2**24,
+                    n_ranges: int = 64, span: int = 2**16,
+                    lookup_frac: float = 0.1,
+                    miss_frac: float = 0.25) -> Workload:
+    """Uniform load over a compact key space + [lo, hi) scan windows
+    centred on inserted keys, so every scan touches data (paper 2.9/3.7:
+    scan latency is linear in span)."""
+    rng = _rng("bench-range-scan", seed)
+    keys = _even_uniform(rng, n, key_space)
+    centres = rng.choice(keys, size=n_ranges, replace=True).astype(np.int64)
+    lo = np.maximum(0, centres - span // 2)
+    hi = np.minimum(_I32_MAX, lo + span)
+    ranges = np.stack([lo, hi], axis=1)
+    return _finish(rng, "range-scan", seed, keys, keys,
+                   n_lookups=max(1, int(n * lookup_frac)),
+                   miss_frac=miss_frac, ranges=ranges,
+                   meta={"n_ranges": n_ranges, "span": span,
+                         "key_space": key_space})
+
+
+WORKLOAD_FAMILIES: Dict[str, Callable[..., Workload]] = {
+    "uniform": make_uniform,
+    "sequential": make_sequential,
+    "zipfian": make_zipfian,
+    "delete-heavy": make_delete_heavy,
+    "range-scan": make_range_scan,
+}
+
+
+def make_workload(kind: str, n: int, seed: int = 0, **kw) -> Workload:
+    """Build one workload from the family registry (see module docstring)."""
+    try:
+        fn = WORKLOAD_FAMILIES[kind]
+    except KeyError:
+        raise ValueError(f"unknown workload family {kind!r}; options: "
+                         f"{sorted(WORKLOAD_FAMILIES)}") from None
+    return fn(n, seed, **kw)
+
+
+# --------------------------------------------------------------------------
+# legacy generator (the per-figure benches + examples; paper Section 3
+# parameterization by raw variance rather than named families)
+# --------------------------------------------------------------------------
+
+@dataclass
+class KVWorkload:
+    keys: np.ndarray      # insert keys, int32
+    vals: np.ndarray      # insert values, int32
+    lookups: np.ndarray   # lookup keys, int32
+    name: str
+
+
+def make_kv_workload(kind: str, n: int, seed: int = 0, *,
+                     variance: float = 1e6, lookup_variance: float = 1e6,
+                     lookup_frac: float = 0.5, zipf_a: float = 1.2,
+                     key_space: int = 2**31 - 2) -> KVWorkload:
+    """Paper Section 3 workload generators (figure benches).
+
+    kind: uniform | normal | zipf | cluster-lookup
+    """
+    rng = np.random.default_rng(seed)
+    n_lookup = int(n * lookup_frac)
+    if kind == "uniform":
+        keys = rng.integers(0, key_space, n, dtype=np.int64)
+        lookups = rng.integers(0, key_space, n_lookup, dtype=np.int64)
+    elif kind == "normal":
+        keys = np.rint(rng.normal(0.0, np.sqrt(variance), n)).astype(np.int64)
+        lookups = np.rint(
+            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)).astype(np.int64)
+    elif kind == "zipf":
+        keys = rng.zipf(zipf_a, n).astype(np.int64) % key_space
+        lookups = rng.zipf(zipf_a, n_lookup).astype(np.int64) % key_space
+    elif kind == "cluster-lookup":
+        keys = rng.integers(0, key_space, n, dtype=np.int64)
+        centre = rng.integers(0, key_space, dtype=np.int64)
+        lookups = (centre + np.rint(
+            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)
+        ).astype(np.int64))
+    else:
+        raise ValueError(kind)
+    clip = 2**31 - 2
+    keys = np.clip(keys, -clip, clip).astype(np.int32)
+    lookups = np.clip(lookups, -clip, clip).astype(np.int32)
+    vals = rng.integers(-2**30, 2**30, n, dtype=np.int32)
+    return KVWorkload(keys=keys, vals=vals, lookups=lookups,
+                      name=f"{kind}-n{n}")

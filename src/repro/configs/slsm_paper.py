@@ -1,5 +1,11 @@
 """The paper's own tuned baseline (Section 3): mu=512, eps=0.001, R=50,
-Rn=800, D=20, m=1.0 — used by benchmarks and examples."""
+Rn=800, D=20, m=1.0 — used by benchmarks and examples.
+
+`repro.bench.scenarios.bench_params` is the CPU-scaled sibling (same
+ratios, sizes that run in seconds); the BENCH_*.json trajectory and the
+figure benches both measure that configuration, while `paper_params` is
+the faithful full-size geometry for TPU runs.
+"""
 from repro.core.params import SLSMParams
 
 PAPER_BASELINE = SLSMParams(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512,
@@ -7,6 +13,8 @@ PAPER_BASELINE = SLSMParams(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512,
 
 
 def paper_params(**overrides) -> SLSMParams:
+    """Section 3 baseline with keyword overrides (e.g. laptop scaling:
+    ``paper_params(R=8, Rn=256, D=4, mu=64)``)."""
     base = dict(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512, max_levels=3)
     base.update(overrides)
     return SLSMParams(**base)

@@ -33,5 +33,6 @@ from repro.engine.engine import SLSM  # noqa: F401
 from repro.engine.levels import LevelState, empty_level  # noqa: F401
 from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
                                    seal_run, stage_append)
-from repro.engine.read_path import lookup_batch, range_query  # noqa: F401
+from repro.engine.read_path import (lookup_batch, lookup_many,  # noqa: F401
+                                    range_query)
 from repro.engine.sharded import ShardedSLSM  # noqa: F401

@@ -6,15 +6,12 @@ Two workload kinds:
    by (host_id, n_hosts): each host draws only its slice — no cross-host
    data motion, the standard MaxText-style input pipeline contract).
 
-2. `KVWorkload` — the paper's benchmark workloads (Section 3): uniform
-   random 32-bit integer keys, normal insert skew with variable variance
-   (3.9.1), clustered lookup skew (3.9.2), update:lookup ratio mixes
-   (3.8), zipf for good measure. All host-side numpy: the benches measure
-   engine throughput, not generator throughput.
+2. `KVWorkload` — the paper's benchmark workloads (Section 3), now owned
+   by `repro.bench.workloads` (alongside the named workload families the
+   BENCH_*.json scenarios use) and re-exported here for back-compat.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Iterator
 
 import numpy as np
@@ -45,45 +42,7 @@ class TokenStream:
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
-@dataclass
-class KVWorkload:
-    keys: np.ndarray      # insert keys, int32
-    vals: np.ndarray      # insert values, int32
-    lookups: np.ndarray   # lookup keys, int32
-    name: str
-
-
-def make_kv_workload(kind: str, n: int, seed: int = 0, *,
-                     variance: float = 1e6, lookup_variance: float = 1e6,
-                     lookup_frac: float = 0.5, zipf_a: float = 1.2,
-                     key_space: int = 2**31 - 2) -> KVWorkload:
-    """Paper Section 3 workload generators.
-
-    kind: uniform | normal | zipf | cluster-lookup
-    """
-    rng = np.random.default_rng(seed)
-    n_lookup = int(n * lookup_frac)
-    if kind == "uniform":
-        keys = rng.integers(0, key_space, n, dtype=np.int64)
-        lookups = rng.integers(0, key_space, n_lookup, dtype=np.int64)
-    elif kind == "normal":
-        keys = np.rint(rng.normal(0.0, np.sqrt(variance), n)).astype(np.int64)
-        lookups = np.rint(
-            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)).astype(np.int64)
-    elif kind == "zipf":
-        keys = rng.zipf(zipf_a, n).astype(np.int64) % key_space
-        lookups = rng.zipf(zipf_a, n_lookup).astype(np.int64) % key_space
-    elif kind == "cluster-lookup":
-        keys = rng.integers(0, key_space, n, dtype=np.int64)
-        centre = rng.integers(0, key_space, dtype=np.int64)
-        lookups = (centre + np.rint(
-            rng.normal(0.0, np.sqrt(lookup_variance), n_lookup)
-        ).astype(np.int64))
-    else:
-        raise ValueError(kind)
-    clip = 2**31 - 2
-    keys = np.clip(keys, -clip, clip).astype(np.int32)
-    lookups = np.clip(lookups, -clip, clip).astype(np.int32)
-    vals = rng.integers(-2**30, 2**30, n, dtype=np.int32)
-    return KVWorkload(keys=keys, vals=vals, lookups=lookups,
-                      name=f"{kind}-n{n}")
+# The KV workload generators moved to `repro.bench.workloads` (the
+# benchmark subsystem owns workload definitions now); re-exported here
+# for back-compat with existing imports.
+from repro.bench.workloads import KVWorkload, make_kv_workload  # noqa: E402,F401

@@ -13,7 +13,7 @@ Layer map (DESIGN.md has the full tour):
 compatibility.
 """
 from repro.engine.backend import (BACKENDS, OpsBackend,  # noqa: F401
-                                  get_backend)
+                                  get_backend, lookup_level_many)
 from repro.engine.compaction import (CompactionPolicy,  # noqa: F401
                                      LevelingPolicy, TieringPolicy,
                                      compact_last_level,
@@ -23,5 +23,6 @@ from repro.engine.engine import SLSM  # noqa: F401
 from repro.engine.levels import LevelState, empty_level  # noqa: F401
 from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
                                    seal_run, stage_append)
-from repro.engine.read_path import lookup_batch, range_query  # noqa: F401
+from repro.engine.read_path import (lookup_batch, lookup_many,  # noqa: F401
+                                    range_query)
 from repro.engine.sharded import ShardedSLSM, shard_ids  # noqa: F401

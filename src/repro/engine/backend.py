@@ -124,6 +124,37 @@ PALLAS_BACKEND = OpsBackend(
 BACKENDS = {"jnp": JNP_BACKEND, "pallas": PALLAS_BACKEND}
 
 
+def candidate_gate(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
+                   mins: jax.Array, maxs: jax.Array, k: int) -> jax.Array:
+    """(D, Q) candidate mask over one level's runs: min/max window AND
+    Bloom positive (paper 2.3). The single source of the gating invariant
+    — both the dense path (via `lookup_level_many`) and the sparse path
+    (via `read_path.level_gate`) use it."""
+    inwin = (qs[None, :] >= mins[:, None]) & (qs[None, :] <= maxs[:, None])
+    return inwin & be.bloom_probe_many(blooms, qs, k).astype(bool)
+
+
+def lookup_level_many(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
+                      mins: jax.Array, maxs: jax.Array, fences: jax.Array,
+                      keys: jax.Array, counts: jax.Array, k: int, mu: int):
+    """One fused candidate pass over all D runs of a level for Q queries.
+
+    This is the batched read fast path's per-level body: a single
+    backend-dispatched Bloom-probe pass (paper 2.3) and a single
+    fence-search pass (paper 2.4) cover every (run, query) pair at once —
+    no per-query dispatch. Both the single-tree dense lookup and the
+    vmapped sharded lookup route through it, on either backend.
+
+    Returns ``(hit (D, Q) bool, idx (D, Q) i32)``: ``hit`` requires the
+    min/max window, a Bloom positive, AND an exact fence-page key match;
+    ``idx`` is clamped to a gatherable element index (only meaningful
+    where ``hit``).
+    """
+    gate = candidate_gate(be, qs, blooms, mins, maxs, k)
+    idx = be.fence_lookup_many(qs, fences, keys, counts, mu)
+    return gate & (idx >= 0), jnp.maximum(idx, 0)
+
+
 def get_backend(name: str) -> OpsBackend:
     try:
         return BACKENDS[name]

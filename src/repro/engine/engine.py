@@ -8,6 +8,8 @@ computation dispatched through the ops backend selected by
 """
 from __future__ import annotations
 
+import collections
+
 import jax.numpy as jnp
 import numpy as np
 
@@ -18,7 +20,16 @@ from repro.engine.compaction import (CompactionPolicy, TieringPolicy,
                                      merge_buffer_to_level0, merge_level_down)
 from repro.engine.levels import empty_level
 from repro.engine.memtable import init_state, seal_run, stage_append
-from repro.engine.read_path import lookup_batch, range_query
+from repro.engine.read_path import (bucket_pow2, lookup_batch, lookup_many,
+                                    range_query)
+
+
+def _pad_pow2(qs: np.ndarray) -> np.ndarray:
+    """Pad a query vector with KEY_EMPTY to its `bucket_pow2` width, so
+    repeated mixed-size batches hit O(log Q) compiled programs."""
+    out = np.full(bucket_pow2(len(qs)), KEY_EMPTY, np.int32)
+    out[:len(qs)] = qs
+    return out
 
 
 class SLSM:
@@ -36,9 +47,14 @@ class SLSM:
         self.policy = policy or TieringPolicy()
         self.policy.validate(self.p)
         self.state = init_state(self.p)
+        # maintenance counters (the bench runner's merge-count trajectory)
+        self.stats = collections.Counter(seals=0, flushes=0, spills=0,
+                                         compactions=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
+        """Batched insert (paper Algorithm 1/2): stage in Rn-sized chunks,
+        sealing the active run and cascading merges whenever it fills."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
@@ -55,8 +71,12 @@ class SLSM:
                 if int(self.state.run_count) == self.p.R:
                     self._flush_buffer()
                 self.state = seal_run(self.p, self.state)
+                self.stats["seals"] += 1
 
     def delete(self, keys) -> None:
+        """Deletes are tombstone inserts (paper 2.8); they commit — i.e.
+        the key-value pairs vanish — when a merge creates the deepest data
+        (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         self.insert(keys, np.full_like(keys, TOMBSTONE))
 
@@ -65,6 +85,7 @@ class SLSM:
         self._ensure_space(0)
         self.state = merge_buffer_to_level0(self.p, self.state,
                                             self._drop_tombstones_into(0))
+        self.stats["flushes"] += 1
 
     def _ensure_space(self, level: int) -> None:
         if level >= self.p.max_levels:
@@ -87,12 +108,14 @@ class SLSM:
                     f"live elements): increase max_levels beyond "
                     f"{self.p.max_levels}")
             self.state = new_state
+            self.stats["compactions"] += 1
         else:
             self._ensure_space(level + 1)
             self.state = merge_level_down(
                 self.p, self.state, level,
                 self.policy.runs_to_spill(self.p, n_runs),
                 self._drop_tombstones_into(level + 1))
+            self.stats["spills"] += 1
 
     def _drop_tombstones_into(self, target_level: int) -> bool:
         """Deletes commit when the merge output becomes the deepest data."""
@@ -103,11 +126,30 @@ class SLSM:
 
     # -- read path ----------------------------------------------------------
     def lookup(self, keys, sparse: bool = False):
+        """Point lookups (paper 2.7): newest-to-oldest across stage, memory
+        runs, then Bloom/fence-gated disk levels. Compiles one program per
+        distinct query-array shape — prefer `lookup_many` for mixed sizes."""
         qs = jnp.asarray(np.asarray(keys, np.int32).reshape(-1))
         vals, found = lookup_batch(self.p, self.state, qs, sparse)
         return np.asarray(vals), np.asarray(found)
 
+    def lookup_many(self, keys, sparse: bool = False):
+        """Batched multi-key fast path: all Q lookups in ONE device
+        dispatch — a single fused Bloom-probe + fence-search pass per
+        structure (paper 2.3/2.4) instead of one dispatch per query.
+        Queries are padded to a power-of-two bucket so arbitrary Q reuses
+        O(log Q) compiled programs. Same results as `lookup`."""
+        qs = np.asarray(keys, np.int32).reshape(-1)
+        if qs.size == 0:
+            return np.zeros(0, np.int32), np.zeros(0, bool)
+        vals, found = lookup_many(self.p, self.state,
+                                  jnp.asarray(_pad_pow2(qs)),
+                                  jnp.int32(qs.size), sparse)
+        return np.asarray(vals)[:qs.size], np.asarray(found)[:qs.size]
+
     def range(self, lo: int, hi: int):
+        """Range query [lo, hi) (paper 2.9): newest-wins, tombstones
+        dropped, key-sorted; truncated at `max_range` results."""
         k, v, c = range_query(self.p, self.state, jnp.int32(lo), jnp.int32(hi))
         c = int(c)
         return np.asarray(k)[:c], np.asarray(v)[:c]
@@ -115,6 +157,8 @@ class SLSM:
     # -- stats ----------------------------------------------------------------
     @property
     def n_live(self) -> int:
+        """Resident elements across stage + memory runs + disk levels
+        (duplicates/tombstones count until a merge elides them)."""
         n = int(self.state.stage_count) + int(self.state.buf_counts.sum())
         for lv in self.state.levels:
             n += int(lv.counts.sum())
@@ -122,4 +166,6 @@ class SLSM:
 
     @property
     def n_levels(self) -> int:
+        """Disk levels materialized so far (paper 2.4; grown lazily up to
+        `max_levels`)."""
         return len(self.state.levels)

@@ -33,6 +33,8 @@ class LevelState(NamedTuple):
 
 
 def empty_level(p: SLSMParams, level: int) -> LevelState:
+    """Fresh all-empty tier with `level_cap(level)` geometry (paper 2.4:
+    level capacities grow geometrically, O((mD)^k) elements at level k)."""
     cap = p.level_cap(level)
     _, w, _ = p.bloom_geometry(cap)
     return LevelState(
@@ -49,7 +51,8 @@ def empty_level(p: SLSMParams, level: int) -> LevelState:
 
 
 def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
-    """Pad a merged run to level capacity; build bloom/fences/minmax."""
+    """Pad a merged run to level capacity; build its Bloom filter and
+    min/max index (paper 2.3) and fence pointers every mu slots (2.4)."""
     cap = p.level_cap(level)
     _, w, kk = p.bloom_geometry(cap)
     pad = cap - k.shape[0]
@@ -67,6 +70,8 @@ def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
 
 def set_level_run(lv: LevelState, slot, k, v, s, cnt, filt, fences, mn, mx,
                   bump: int = 1) -> LevelState:
+    """Install an indexed run into `slot` (runs land append-order, newest
+    last — the recency order Do-Merge relies on, paper 2.5)."""
     return lv._replace(
         keys=lv.keys.at[slot].set(k), vals=lv.vals.at[slot].set(v),
         seqs=lv.seqs.at[slot].set(s), counts=lv.counts.at[slot].set(cnt),
@@ -78,7 +83,9 @@ def set_level_run(lv: LevelState, slot, k, v, s, cnt, filt, fences, mn, mx,
 
 
 def shift_level(p: SLSMParams, lv: LevelState, n: int) -> LevelState:
-    """Drop the n oldest runs (slots [0, n)), shifting the rest down."""
+    """Drop the n oldest runs (slots [0, n)), shifting the rest down —
+    the source-level half of a Do-Merge spill (paper 2.5: the ceil(m*D)
+    oldest runs of a full level move to the next)."""
     def roll(a, fill):
         tail_shape = (n,) + a.shape[1:]
         return jnp.concatenate([a[n:], jnp.full(tail_shape, fill, a.dtype)])

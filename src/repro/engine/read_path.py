@@ -20,7 +20,10 @@ Two disk-search strategies:
            the per-run fence kernel does not take.
 
 All ops exist as pure `_impl` forms (vmappable — the sharded engine maps
-the dense lookup over shards) plus jitted wrappers.
+the dense lookup over shards) plus jitted wrappers. `lookup_many` is the
+batched multi-key fast path: a padded lane array + traced valid count,
+so arbitrary query counts share O(log Q) compiled programs while all Q
+queries ride one fused Bloom-probe/fence-search pass per structure.
 """
 from __future__ import annotations
 
@@ -32,20 +35,32 @@ import numpy as np
 
 from repro.core import runs as RU
 from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
-from repro.engine.backend import get_backend
+from repro.engine.backend import (candidate_gate, get_backend,
+                                  lookup_level_many)
 from repro.engine.levels import LevelState
 from repro.engine.memtable import SLSMState
 
 I32 = jnp.int32
 
 
+def bucket_pow2(n: int, floor: int = 16) -> int:
+    """Round a query count up to the next power-of-two bucket (>= floor).
+    The one bucketing policy for every batched-lookup entry point: padded
+    lane counts hit O(log Q) compiled programs instead of one per Q."""
+    return max(floor, 1 << (n - 1).bit_length())
+
+
 def consider(best_seq, best_val, seq_c, val_c):
+    """Newest-wins fold (paper 2.7): keep the candidate iff its seqno is
+    higher — the batched form of 'the highest-ranked run wins'."""
     take = seq_c > best_seq
     return (jnp.where(take, seq_c, best_seq),
             jnp.where(take, val_c, best_val))
 
 
 def search_stage(state: SLSMState, qs: jax.Array):
+    """Probe the staging buffer (the active run, paper 2.1) for Q queries;
+    returns per-query (seq, val) with seq=SEQ_NONE on miss."""
     eq = state.stage_keys[None, :] == qs[:, None]            # (Q, 2Rn)
     seqm = jnp.where(eq, state.stage_seqs[None, :], SEQ_NONE)
     j = jnp.argmax(seqm, axis=1)
@@ -55,7 +70,8 @@ def search_stage(state: SLSMState, qs: jax.Array):
 
 
 def search_sorted_run(keys, vals, seqs, count, qs):
-    """Binary search one sorted run for a batch of queries."""
+    """Binary search one sorted run for a batch of queries (paper 2.7:
+    memory runs are searched directly — no fence pointers)."""
     i = jnp.searchsorted(keys, qs).astype(I32)
     ic = jnp.minimum(i, keys.shape[0] - 1)
     hit = (i < count) & (keys[ic] == qs)
@@ -63,6 +79,8 @@ def search_sorted_run(keys, vals, seqs, count, qs):
 
 
 def search_memory_runs(state: SLSMState, qs: jax.Array):
+    """All R sealed memory runs in one vmapped pass (paper 2.2/2.7);
+    newest-wins across runs via the per-query argmax over seqnos."""
     seqs_r, vals_r = jax.vmap(
         lambda k, v, s, c: search_sorted_run(k, v, s, c, qs)
     )(state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
@@ -72,21 +90,23 @@ def search_memory_runs(state: SLSMState, qs: jax.Array):
 
 
 def level_gate(p: SLSMParams, lv: LevelState, level: int, qs: jax.Array):
-    """(D, Q) candidate mask: min/max window AND Bloom positive (paper 2.3)."""
+    """(D, Q) candidate mask: min/max window AND Bloom positive (paper
+    2.3). Delegates to `backend.candidate_gate` — the same invariant the
+    dense path's fused `lookup_level_many` applies."""
     be = get_backend(p.backend)
     _, _, kk = p.bloom_geometry(p.level_cap(level))
-    inwin = (qs[None, :] >= lv.mins[:, None]) & (qs[None, :] <= lv.maxs[:, None])
-    pos = be.bloom_probe_many(lv.blooms, qs, kk)              # (D, Q)
-    return inwin & pos.astype(bool)
+    return candidate_gate(be, qs, lv.blooms, lv.mins, lv.maxs, kk)
 
 
 def search_level_dense(p: SLSMParams, lv: LevelState, level: int,
                        qs: jax.Array):
-    gate = level_gate(p, lv, level, qs)
+    """Exact disk-level search: one fused Bloom-probe + fence-search pass
+    over all (run, query) pairs (`backend.lookup_level_many`), then a
+    per-query newest-wins argmax across the level's D runs (paper 2.7)."""
     be = get_backend(p.backend)
-    idx = be.fence_lookup_many(qs, lv.fences, lv.keys, lv.counts, p.mu)
-    hit = (idx >= 0) & gate                                   # (D, Q)
-    idxc = jnp.maximum(idx, 0)
+    _, _, kk = p.bloom_geometry(p.level_cap(level))
+    hit, idxc = lookup_level_many(be, qs, lv.blooms, lv.mins, lv.maxs,
+                                  lv.fences, lv.keys, lv.counts, kk, p.mu)
     seqs_d = jnp.where(hit, jnp.take_along_axis(lv.seqs, idxc, axis=1),
                        SEQ_NONE)
     vals_d = jnp.where(hit, jnp.take_along_axis(lv.vals, idxc, axis=1), 0)
@@ -158,6 +178,30 @@ def lookup_batch_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
 
 lookup_batch = functools.partial(
     jax.jit, static_argnums=(0, 3))(lookup_batch_impl)
+
+
+def lookup_many_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
+                     n_valid: jax.Array, sparse: bool = False):
+    """Padded-batch point lookup: the batched multi-key fast path.
+
+    Semantically `lookup_batch_impl` over ``qs[:n_valid]``, but ``qs`` is
+    a fixed-size (padded) lane array and ``n_valid`` is *traced* — so one
+    compiled program serves any query count up to the pad width. The host
+    drivers (`SLSM.lookup_many`, `ShardedSLSM.lookup`) pad to power-of-two
+    buckets, giving O(log Q) distinct programs instead of one per Q.
+
+    All Q lanes share each structure's single fused Bloom-probe +
+    fence-search dispatch (paper 2.3/2.4 via `backend.lookup_level_many`);
+    padded lanes report ``found=False, val=0``.
+    """
+    vals, found = lookup_batch_impl(p, state, qs, sparse)
+    live = jnp.arange(qs.shape[0], dtype=I32) < n_valid
+    found = found & live
+    return jnp.where(found, vals, 0), found
+
+
+lookup_many = functools.partial(
+    jax.jit, static_argnums=(0, 4))(lookup_many_impl)
 
 
 # --------------------------------------------------------------------------

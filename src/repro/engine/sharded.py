@@ -29,6 +29,7 @@ dispatch, and scattered back.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -138,9 +139,14 @@ class ShardedSLSM:
         self.S = n_shards
         base = MT.init_state(self.p, n_levels=self.p.max_levels)
         self.state = jax.tree.map(lambda x: jnp.stack([x] * n_shards), base)
+        # maintenance counters, summed over shards (bench trajectory)
+        self.stats = collections.Counter(seals=0, flushes=0, spills=0,
+                                         compactions=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
+        """Batched insert (paper Algorithm 1/2, vmapped): bucket by owner
+        shard, then feed all shards in lockstep Rn-chunks."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
@@ -165,6 +171,8 @@ class ShardedSLSM:
             self._maintain()
 
     def delete(self, keys) -> None:
+        """Tombstone inserts (paper 2.8); elided at deepest-level
+        compaction (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         self.insert(keys, np.full_like(keys, TOMBSTONE))
 
@@ -180,7 +188,9 @@ class ShardedSLSM:
                 self._cascade(need_flush)
                 self.state = _flush_where(p, self.state,
                                           jnp.asarray(need_flush))
+                self.stats["flushes"] += int(need_flush.sum())
             self.state = _seal_where(p, self.state, jnp.asarray(need_seal))
+            self.stats["seals"] += int(need_seal.sum())
 
     def _cascade(self, flush_mask: np.ndarray) -> None:
         """Deepest-first spill chain: shard s spills level l+1 only if its
@@ -204,21 +214,32 @@ class ShardedSLSM:
                     f"live elements in a shard): increase max_levels beyond "
                     f"{p.max_levels}")
             self.state = new_state
+            self.stats["compactions"] += int(spill[last].sum())
         for lvl in range(last - 1, -1, -1):
             if spill[lvl].any():
                 self.state = _merge_level_down_where(
                     p, self.state, lvl, p.disk_runs_merged,
                     jnp.asarray(spill[lvl]))
+                self.stats["spills"] += int(spill[lvl].sum())
 
     # -- read path ----------------------------------------------------------
     def lookup(self, keys):
+        """Batched multi-key lookup (paper 2.7, vmapped): route each query
+        to its owner shard host-side, answer every shard's row in ONE
+        fused device dispatch (`read_path.lookup_batch_impl` vmapped over
+        shards — one Bloom-probe/fence-search pass per run for all
+        queries), scatter results back.
+
+        The per-shard row width is padded to a power-of-two bucket, so
+        mixed batch sizes reuse O(log Q) compiled programs instead of
+        recompiling on every distinct max-queries-per-shard value."""
         qs = np.asarray(keys, np.int32).reshape(-1)
         nq = len(qs)
         if nq == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
         sid = shard_ids(qs, self.S)
         counts = np.bincount(sid, minlength=self.S)
-        qmax = max(1, int(counts.max()))
+        qmax = RP.bucket_pow2(int(counts.max()))
         routed = np.full((self.S, qmax), KEY_EMPTY, np.int32)
         # vectorized routing: stable-sort by shard, then each query's slot
         # is its rank within its shard (index minus the shard's start)
@@ -231,6 +252,15 @@ class ShardedSLSM:
         vals, found = _lookup_sharded(self.p, self.state, jnp.asarray(routed))
         vals, found = np.asarray(vals), np.asarray(found)
         return vals[sid, pos], found[sid, pos]
+
+    def lookup_many(self, keys, sparse: bool = False):
+        """Alias for `lookup` — the sharded read path is already the
+        batched fast path (one fused dispatch for all Q queries); the name
+        and signature match `SLSM.lookup_many` so drivers can switch
+        engines. `sparse` is accepted for that interchangeability but
+        always served by the dense path (exact; the sparse candidate
+        compaction does not vmap — see module docstring)."""
+        return self.lookup(keys)
 
     def range(self, lo: int, hi: int):
         """Global range = concat of per-shard ranges (disjoint key sets),

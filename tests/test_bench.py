@@ -1,0 +1,206 @@
+"""The workload/benchmark subsystem (repro.bench).
+
+Covers the ISSUE-2 contract: generator determinism under a fixed seed,
+zipfian skew sanity (top-1% of the key universe receives the analytically
+expected mass), batched-vs-scalar lookup equivalence on both backends,
+scenario selector resolution, and the BENCH_*.json schema round trip
+through the runner.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.bench import schema as SCH
+from repro.bench.scenarios import SCENARIOS, Scenario, scenarios_for
+from repro.bench.workloads import (WORKLOAD_FAMILIES, make_workload,
+                                   zipf_expected_top_mass)
+from repro.core.params import SLSMParams
+from repro.engine import SLSM, ShardedSLSM
+
+FAMILIES = sorted(WORKLOAD_FAMILIES)
+
+TINY = dict(R=2, Rn=16, D=2, mu=8, max_levels=3, eps=1e-3)
+
+
+# --------------------------------------------------------------------------
+# generators
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_generator_deterministic_under_fixed_seed(kind):
+    a = make_workload(kind, 2_000, seed=7)
+    b = make_workload(kind, 2_000, seed=7)
+    for f in ("keys", "vals", "lookups", "deletes", "ranges", "absent"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+    c = make_workload(kind, 2_000, seed=8)
+    assert not np.array_equal(a.keys, c.keys)
+
+
+@pytest.mark.parametrize("kind", FAMILIES)
+def test_inserted_keys_even_absent_odd(kind):
+    w = make_workload(kind, 1_000, seed=3)
+    assert (w.keys % 2 == 0).all()
+    assert (w.absent % 2 == 1).all()
+    assert not np.isin(w.absent, w.keys).any()
+    assert w.vals.shape == w.keys.shape
+    assert len(w.lookups) > 0
+
+
+def test_zipf_top1pct_mass_matches_analytic():
+    universe, theta = 10_000, 1.1
+    w = make_workload("zipfian", 50_000, seed=1, universe=universe,
+                      theta=theta)
+    counts = np.sort(np.unique(w.keys, return_counts=True)[1])[::-1]
+    top = max(1, universe // 100)
+    measured = counts[:top].sum() / len(w.keys)
+    expected = zipf_expected_top_mass(universe, theta)
+    assert abs(measured - expected) < 0.05, (measured, expected)
+    assert measured > 5 * 0.01          # way above the uniform 1% share
+
+
+def test_sequential_keys_monotone():
+    w = make_workload("sequential", 500, seed=2)
+    assert (np.diff(w.keys.astype(np.int64)) > 0).all()
+
+
+def test_delete_heavy_deletes_are_inserted_keys():
+    w = make_workload("delete-heavy", 1_000, seed=4)
+    assert len(w.deletes) > 0
+    assert np.isin(w.deletes, w.keys).all()
+    assert len(np.unique(w.deletes)) == len(w.deletes)
+
+
+def test_range_scan_windows_well_formed():
+    w = make_workload("range-scan", 1_000, seed=5)
+    assert w.ranges.shape[1] == 2 and len(w.ranges) > 0
+    assert (w.ranges[:, 0] < w.ranges[:, 1]).all()
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="unknown workload family"):
+        make_workload("nope", 10)
+
+
+# --------------------------------------------------------------------------
+# batched lookup fast path == scalar path, on both backends
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_batched_vs_scalar_lookup_equivalence(backend):
+    t = SLSM(SLSMParams(backend=backend, **TINY))
+    w = make_workload("uniform", 300, seed=5, key_space=2**20)
+    t.insert(w.keys, w.vals)
+    t.delete(w.keys[:7])
+    qs = np.concatenate([w.keys[:20], w.absent[:8]])
+    vm, fm = t.lookup_many(qs)
+    for i, k in enumerate(qs):
+        v1, f1 = t.lookup(np.asarray([k]))
+        assert f1[0] == fm[i], k
+        if fm[i]:
+            assert v1[0] == vm[i], k
+
+
+def test_lookup_many_odd_sizes_and_empty():
+    t = SLSM(SLSMParams(**TINY))
+    w = make_workload("uniform", 200, seed=9, key_space=2**20)
+    t.insert(w.keys, w.vals)
+    ref_v, ref_f = t.lookup(w.keys)          # exact-shape baseline
+    for q in (1, 3, 17, 64, 129):
+        v, f = t.lookup_many(w.keys[:q])
+        assert np.array_equal(v, ref_v[:q]) and np.array_equal(f, ref_f[:q])
+    v, f = t.lookup_many(np.zeros(0, np.int32))
+    assert v.shape == (0,) and f.shape == (0,)
+
+
+def test_sharded_lookup_many_matches_oracle():
+    s = ShardedSLSM(SLSMParams(**TINY), n_shards=3)
+    w = make_workload("uniform", 400, seed=6, key_space=2**20)
+    s.insert(w.keys, w.vals)
+    oracle = dict(zip(w.keys.tolist(), w.vals.tolist()))  # last write wins
+    qs = np.concatenate([w.keys[:30], w.absent[:10]])
+    vm, fm = s.lookup_many(qs)
+    for i, k in enumerate(qs.tolist()):
+        assert bool(fm[i]) == (k in oracle), k
+        if fm[i]:
+            assert vm[i] == oracle[k], k
+
+
+def test_maintenance_counters_track_merges():
+    t = SLSM(SLSMParams(**TINY))
+    w = make_workload("uniform", 400, seed=11, key_space=2**20)
+    t.insert(w.keys, w.vals)
+    assert t.stats["seals"] > 0 and t.stats["flushes"] > 0
+    s = ShardedSLSM(SLSMParams(**TINY), n_shards=2)
+    s.insert(w.keys, w.vals)
+    assert s.stats["seals"] > 0
+
+
+# --------------------------------------------------------------------------
+# scenarios + runner + schema
+# --------------------------------------------------------------------------
+
+def test_scenarios_for_selectors():
+    assert [s.name for s in scenarios_for("all")] == [
+        "uniform", "sequential", "zipfian", "delete_heavy", "range_scan"]
+    sweep = scenarios_for("sweep-R")
+    assert all(s.name.startswith("sweep_R") for s in sweep)
+    mixed = scenarios_for("uniform,sweep-policy,uniform")
+    assert [s.name for s in mixed] == [
+        "uniform", "sweep_policy_tiering", "sweep_policy_leveling"]
+    with pytest.raises(ValueError, match="unknown scenario selector"):
+        scenarios_for("nope")
+    assert all(sc.name in SCENARIOS for sc in scenarios_for("sweeps"))
+
+
+@pytest.fixture(scope="module")
+def bench_doc(tmp_path_factory):
+    from repro.bench.runner import run_scenario
+
+    out = tmp_path_factory.mktemp("bench")
+    path, doc = run_scenario(Scenario("uniform", "uniform"), out,
+                             profile="smoke")
+    return path, doc
+
+
+def test_runner_emits_schema_valid_bench(bench_doc):
+    path, doc = bench_doc
+    assert path.name == "BENCH_uniform.json"
+    on_disk = json.loads(path.read_text())
+    assert SCH.validate(on_disk) == []
+    assert on_disk["schema_version"] == SCH.SCHEMA_VERSION
+    m = on_disk["metrics"]
+    assert m["insert"]["ops"] > 0
+    assert m["lookup_batched"]["ops"] > 0
+    assert m["batched_speedup"] > 0
+    assert m["maintenance"]["seals"] > 0
+    assert 0 <= m["bloom"]["fp_rate_measured"] <= 1
+
+
+def test_schema_rejects_malformed_documents(bench_doc):
+    _, doc = bench_doc
+    assert SCH.validate(doc) == []
+
+    bad = json.loads(json.dumps(doc))
+    bad["schema_version"] = 99
+    assert any("schema_version" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["lookup_batched"]
+    assert any("lookup_batched" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    bad["metrics"]["insert"]["ops"] = 0
+    assert any("insert.ops" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    bad["metrics"]["bloom"]["fp_rate_measured"] = 2.0
+    assert any("fp_rate_measured" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    bad["profile"]["insert_steady_state"] = "yes"
+    assert any("insert_steady_state" in e for e in SCH.validate(bad))
+
+    assert SCH.validate([]) and SCH.validate(None)
