@@ -47,6 +47,10 @@ def _phase(ops: int, wall_s: float, dispatch_times: List[float]) -> Dict:
         "ops_per_s": float(ops / wall_s) if wall_s > 0 else 0.0,
         "p50_us": float(np.percentile(ts, 50) * 1e6),
         "p99_us": float(np.percentile(ts, 99) * 1e6),
+        # stall telemetry (DESIGN.md §8): the tail the merge scheduler
+        # flattens — p999 needs >=1000 dispatches to separate from max
+        "p999_us": float(np.percentile(ts, 99.9) * 1e6),
+        "max_stall_us": float(ts.max() * 1e6),
     }
 
 
@@ -71,15 +75,14 @@ def build_engine(sc: Scenario):
 
 
 def _run_inserts(tree, w: Workload, chunk: int) -> Dict:
-    """Chunked insert stream (merges included). A prefix covering the
-    first TWO buffer flushes (2*R*Rn elements) is inserted untimed: the
-    first flush grows the levels pytree (recompiling stage/seal) and the
-    second compiles the drop_tombstones=False flush variant, so warming
-    past both leaves the timed region steady-state and comparable across
-    scenarios regardless of execution order within one process.
-    Deeper-level spill/compaction programs can still compile inside the
-    timed region the first time a level fills — a known caveat recorded
-    in DESIGN.md §7.
+    """Chunked insert stream (merges included). `tree.warm()` has already
+    precompiled the full maintenance program set (run_scenario calls it
+    untimed — since the scheduler PR no merge program compiles inside the
+    timed region; the old caveat about deep-level spill compiles landing
+    mid-phase is gone). A prefix covering the first TWO buffer flushes
+    (2*R*Rn elements) is additionally inserted untimed so the timed
+    region starts with a populated tree — steady-state and comparable
+    across scenarios regardless of execution order within one process.
 
     Returns (phase, steady_state): steady_state is False when the
     workload is too small to warm past both flushes for this geometry
@@ -204,9 +207,17 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
     w = make_workload(sc.workload, prof["n"], seed=sc.seed, **wargs)
     p = sc.engine_params()
     tree = build_engine(sc)
+    tree.warm()   # precompile all maintenance programs (untimed)
 
     insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
     delete = _run_deletes(tree, w, chunk=4 * p.Rn)
+    if p.merge_budget > 0:
+        # merge barrier (untimed): retire the deferred maintenance backlog
+        # so the read phases run against a fully-merged tree, comparable
+        # with synchronous-mode documents (reads are exact either way —
+        # this only removes run-count variance from the lookup timings)
+        tree.drain()
+        jax.block_until_ready(tree.state)
     lookups = w.lookups[:prof["n_lookups"]]
     batched = _run_lookups_batched(tree, lookups, prof["batch"])
     per_query = _run_lookups_per_query(tree, lookups, prof["n_per_query"])
@@ -223,7 +234,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
                    "mu": p.mu, "max_levels": p.max_levels,
                    "max_range": p.max_range, "cand_factor": p.cand_factor,
                    "backend": p.backend, "policy": sc.policy,
-                   "n_shards": sc.n_shards},
+                   "n_shards": sc.n_shards, "merge_budget": p.merge_budget},
         "profile": {"name": profile, "batch": prof["batch"],
                     "n_lookups": len(lookups),
                     "n_per_query": prof["n_per_query"],
@@ -237,7 +248,8 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
             "batched_speedup": (batched["ops_per_s"]
                                 / max(per_query["ops_per_s"], 1e-12)),
             "maintenance": {k: int(tree.stats[k]) for k in
-                            ("seals", "flushes", "spills", "compactions")},
+                            ("seals", "flushes", "spills", "compactions",
+                             "backlog_peak")},
             "bloom": {"eps_configured": p.eps,
                       "fp_rate_measured": fp_rate,
                       "n_probed": n_probed},

@@ -5,10 +5,12 @@ A `Scenario` = one workload family + one full engine configuration
 five (`--scenario all`) cover the workload taxonomy — uniform,
 sequential, zipfian, delete-heavy, range-scan — at the CPU-scaled paper
 baseline; the sweep families (`--scenario sweeps`, or one of
-`sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-policy|sweep-backend|
-sweep-shards`) vary exactly one knob at a time, reproducing the paper's
-experimental axes (Table 1 + Section 3) plus the two axes this repro
-adds: the ops backend (jnp vs pallas) and the shard count (1 vs S).
+`sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-merge-budget|
+sweep-policy|sweep-backend|sweep-shards`) vary exactly one knob at a
+time, reproducing the paper's experimental axes (Table 1 + Section 3)
+plus the axes this repro adds: the ops backend (jnp vs pallas), the
+shard count (1 vs S), and the merge scheduler's pacing budget
+(synchronous vs incremental, DESIGN.md §8).
 
 Scenario names are stable identifiers: `BENCH_<name>.json` files keyed
 on them form the cross-PR perf trajectory, so renaming one breaks the
@@ -25,9 +27,17 @@ from repro.core.params import SLSMParams
 def bench_params(**over) -> SLSMParams:
     """The paper's tuned baseline (Section 3: R=50, Rn=800, D=20, mu=512)
     scaled so every scenario runs in seconds on one CPU core, keeping the
-    ratios (R/D, Rn/mu) and eps=1e-3 intact."""
+    ratios (R/D, Rn/mu) and eps=1e-3 intact.
+
+    merge_budget=1 paces the Do-Merge cascade one bounded step per insert
+    chunk (DESIGN.md §8) — the trajectory's default since the scheduler
+    PR, because a synchronous cascade buries the insert tail under the
+    full flush->spill->compact chain (the seed BENCH_uniform.json
+    recorded p99 = 724ms against a ~5ms p50). The sweep-merge-budget
+    family keeps the synchronous point (merge_budget=0) measured.
+    """
     base = dict(R=8, Rn=256, eps=1e-3, D=4, m=1.0, mu=64, max_levels=3,
-                max_range=4096, cand_factor=8)
+                max_range=4096, cand_factor=8, merge_budget=1)
     base.update(over)
     return SLSMParams(**base)
 
@@ -96,6 +106,11 @@ SWEEPS: Dict[str, List[Scenario]] = {
     "sweep-m": _sweep("sweep_m", "m", (0.5, 1.0)),
     "sweep-eps": _sweep("sweep_eps", "eps", (0.1, 1e-3, 1e-5)),
     # this repro's own axes
+    # merge pacing: 0 = the paper's synchronous cascade (the write-stall
+    # baseline), >0 = steps per insert chunk (insert.p999_us /
+    # max_stall_us and maintenance.backlog_peak are the axes to read)
+    "sweep-merge-budget": _sweep("sweep_merge_budget", "merge_budget",
+                                 (0, 1, 2, 4)),
     "sweep-policy": [
         Scenario("sweep_policy_tiering", "uniform", policy="tiering"),
         Scenario("sweep_policy_leveling", "uniform", policy="leveling"),

@@ -10,13 +10,13 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 1):
+Document shape (SCHEMA_VERSION 2):
 
-  schema_version  int     == 1
+  schema_version  int     == 2
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
-                   cand_factor, backend, policy, n_shards}
+                   cand_factor, backend, policy, n_shards, merge_budget}
   profile         {name, batch, n_lookups, n_per_query,
                    insert_steady_state}  sizing profile that produced the
                    numbers — p50/p99 and batched_speedup shift with
@@ -32,29 +32,44 @@ Document shape (SCHEMA_VERSION 1):
     delete            phase|None   tombstone stream (delete-heavy only)
     range             phase|None   [lo,hi) scans (range-scan only)
     batched_speedup   float    lookup_batched.ops_per_s / lookup_per_query.ops_per_s
-    maintenance       {seals, flushes, spills, compactions}  merge counts
+    maintenance       {seals, flushes, spills, compactions, backlog_peak}
+                      merge counts + the deepest pending-merge-step
+                      backlog ever observed at a chunk boundary (the
+                      scheduler's pacing telemetry, DESIGN.md §8)
     bloom             {eps_configured, fp_rate_measured, n_probed}
   env               {jax, numpy, python, platform, timestamp}
 
-  phase := {ops       int   ops executed
-            wall_s    float total wall-clock seconds
-            ops_per_s float
-            p50_us    float per-dispatch latency percentiles —
-            p99_us    float   batched phases amortize many ops/dispatch}
+  phase := {ops          int   ops executed
+            wall_s       float total wall-clock seconds
+            ops_per_s    float
+            p50_us       float per-dispatch latency percentiles —
+            p99_us       float   batched phases amortize many ops/dispatch
+            p999_us      float 99.9th percentile (the stall tail the
+                               merge scheduler exists to flatten)
+            max_stall_us float slowest single dispatch — for insert, the
+                               worst write stall of the whole phase}
+
+SCHEMA_VERSION history:
+  1 — PR 2 seed: phases carried p50/p99 only; no merge_budget,
+      backlog_peak, p999_us, or max_stall_us.
+  2 — merge-scheduler PR: stall telemetry (insert p999/max_stall,
+      maintenance backlog) + engine.merge_budget became part of the
+      trajectory's engine fingerprint.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
-               "p50_us": float, "p99_us": float}
+               "p50_us": float, "p99_us": float, "p999_us": float,
+               "max_stall_us": float}
 _ENGINE_KEYS = {"R": int, "Rn": int, "eps": float, "D": int, "m": float,
                 "mu": int, "max_levels": int, "max_range": int,
                 "cand_factor": int, "backend": str, "policy": str,
-                "n_shards": int}
-_MAINT_KEYS = ("seals", "flushes", "spills", "compactions")
+                "n_shards": int, "merge_budget": int}
+_MAINT_KEYS = ("seals", "flushes", "spills", "compactions", "backlog_peak")
 
 
 def _typed(doc: Dict[str, Any], key: str, typ, errs: List[str],

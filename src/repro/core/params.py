@@ -18,6 +18,15 @@ TPU-adaptation-only knobs (static shapes require bounds):
   backend     — ops-dispatch target for the hot primitives (Bloom probe,
                 fence lookup, run merge): "jnp" reference implementations
                 or "pallas" kernels (repro.kernels, interpret mode off-TPU).
+
+Scheduling knob (this repro's merge-pacing subsystem, DESIGN.md §8):
+  merge_budget — voluntary maintenance steps (seal/flush/spill/compact,
+                 see repro.engine.scheduler) executed per staged insert
+                 chunk. 0 (default) = legacy synchronous mode: the whole
+                 Do-Merge cascade runs inline the moment an insert needs
+                 space, reproducing the paper's write-stall pathology;
+                 >0 paces the cascade one bounded step at a time across
+                 subsequent chunks, flattening insert tail latency.
 """
 from __future__ import annotations
 
@@ -46,10 +55,15 @@ class SLSMParams:
     max_range: int = 4096
     cand_factor: int = 8
     backend: str = "jnp"  # hot-primitive dispatch: "jnp" | "pallas"
+    merge_budget: int = 0  # paced merge steps per insert chunk (0 = sync)
 
     def __post_init__(self):
         assert self.R > 0 and self.Rn > 0 and self.D > 0 and self.mu > 0
         assert 0.0 < self.eps < 1.0 and 0.0 < self.m <= 1.0
+        if self.merge_budget < 0:
+            raise ValueError(
+                f"merge_budget must be >= 0 (got {self.merge_budget}); "
+                "0 = synchronous merges, >0 = steps per insert chunk")
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}; "
                              "expected 'jnp' or 'pallas'")

@@ -5,6 +5,7 @@ Layer map (DESIGN.md has the full tour):
   memtable.py   — staging buffer (active run) + sealed memory runs
   levels.py     — disk-tier state: runs, Bloom filters, fences, min/max
   compaction.py — the Do-Merge cascade ops + tiering/leveling policies
+  scheduler.py  — the cascade as paced, bounded MergeSteps (merge_budget)
   read_path.py  — dense + Bloom-compacted lookups, range queries
   engine.py     — the host-side `SLSM` driver
   sharded.py    — S hash-partitioned trees in one vmapped pytree
@@ -25,4 +26,7 @@ from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
                                    seal_run, stage_append)
 from repro.engine.read_path import (lookup_batch, lookup_many,  # noqa: F401
                                     range_query)
+from repro.engine.scheduler import (MergeScheduler, MergeStep,  # noqa: F401
+                                    Occupancy, backlog_cost, pending_steps,
+                                    step_cost)
 from repro.engine.sharded import ShardedSLSM, shard_ids  # noqa: F401

@@ -16,9 +16,12 @@ many* runs move — the axis along which real LSM systems specialize
                    two coexist, keeping read amplification at ~1 run per
                    level at the cost of more merge work.
 
-Tombstone elision stays a host decision (`SLSM._drop_tombstones_into`):
+Tombstone elision stays a host decision (`scheduler.drop_tombstones_into`):
 deletes are committed only when a merge's output becomes the deepest
-data (paper 2.5/2.8).
+data (paper 2.5/2.8). *When* these ops run is the merge scheduler's
+call (`repro.engine.scheduler`): each op here is exactly one bounded
+`MergeStep`, dispatched either synchronously (merge_budget=0) or paced
+across insert chunks.
 """
 from __future__ import annotations
 
@@ -52,6 +55,16 @@ class CompactionPolicy:
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
         raise NotImplementedError
 
+    def spill_sizes(self, p: SLSMParams) -> tuple:
+        """Every distinct `runs_to_spill` value this policy can produce.
+
+        The merge scheduler's warm() precompiles one spill program per
+        (level, size, tombstone-flag) — `n_merge` is a jit-static
+        argument, so each size is its own compiled program and an
+        unwarmed size would stall the first insert chunk that needs it.
+        """
+        raise NotImplementedError
+
 
 class TieringPolicy(CompactionPolicy):
     """The paper's policy (2.5): spill ceil(m*D) runs once a level is full."""
@@ -63,6 +76,9 @@ class TieringPolicy(CompactionPolicy):
 
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
         return p.disk_runs_merged
+
+    def spill_sizes(self, p: SLSMParams) -> tuple:
+        return (p.disk_runs_merged,)
 
 
 class LevelingPolicy(CompactionPolicy):
@@ -96,6 +112,11 @@ class LevelingPolicy(CompactionPolicy):
 
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
         return n_runs
+
+    def spill_sizes(self, p: SLSMParams) -> tuple:
+        # a level spills at max_resident occupancy but can reach D runs
+        # before the scheduler gets to it (forced chains, deferred steps)
+        return tuple(range(self.max_resident, p.D + 1))
 
 
 # --------------------------------------------------------------------------

@@ -1,9 +1,13 @@
 """Host-side driver — the paper's insert/merge control flow (Algorithm 2).
 
-`SLSM` owns the state pytree and schedules seals and merges: recursion
-depth, level occupancy, and the compaction policy (tiering vs leveling)
-are host decisions; every data-touching op is a jitted device
-computation dispatched through the ops backend selected by
+`SLSM` owns the state pytree; *when* maintenance work happens is the
+`repro.engine.scheduler.MergeScheduler`'s decision: with
+`SLSMParams.merge_budget == 0` (default) the whole Do-Merge cascade runs
+synchronously inside the insert chunk that triggers it (the paper's
+behaviour, and the write-stall pathology that comes with it); with a
+positive budget the cascade is paced one bounded step per chunk and
+`drain()` is the completion barrier. Every data-touching op is a jitted
+device computation dispatched through the ops backend selected by
 `SLSMParams.backend`.
 """
 from __future__ import annotations
@@ -15,13 +19,11 @@ import numpy as np
 
 from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
 from repro.engine.backend import get_backend
-from repro.engine.compaction import (CompactionPolicy, TieringPolicy,
-                                     compact_last_level,
-                                     merge_buffer_to_level0, merge_level_down)
-from repro.engine.levels import empty_level
-from repro.engine.memtable import init_state, seal_run, stage_append
+from repro.engine.compaction import CompactionPolicy, TieringPolicy
+from repro.engine.memtable import init_state, stage_append
 from repro.engine.read_path import (bucket_pow2, lookup_batch, lookup_many,
                                     range_query)
+from repro.engine.scheduler import MergeScheduler
 
 
 def _pad_pow2(qs: np.ndarray) -> np.ndarray:
@@ -32,12 +34,37 @@ def _pad_pow2(qs: np.ndarray) -> np.ndarray:
     return out
 
 
+def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
+                    op: str = "insert") -> None:
+    """Reserved-sentinel guard at the public API boundary.
+
+    KEY_EMPTY (INT32_MAX) is the engine's padding/empty-slot key and
+    TOMBSTONE (INT32_MIN) its delete marker value; letting either in from
+    user data would alias padding (silently dropped keys) or deletes
+    (vanishing values), and a lookup of KEY_EMPTY can false-positive
+    against empty stage slots. Both drivers call this before touching
+    device state.
+    """
+    if keys.size and (keys == KEY_EMPTY).any():
+        raise ValueError(
+            f"{op}: key {int(KEY_EMPTY)} (KEY_EMPTY/INT32_MAX) is reserved "
+            "as the engine's empty-slot sentinel and cannot be stored or "
+            "queried")
+    if vals is not None and vals.size and (vals == TOMBSTONE).any():
+        raise ValueError(
+            f"{op}: value {int(TOMBSTONE)} (TOMBSTONE/INT32_MIN) is "
+            "reserved as the delete marker; storing it would make the key "
+            "unreadable — use delete() instead")
+
+
 class SLSM:
-    """Host-side driver: owns the state pytree, schedules seals and merges.
+    """Host-side driver: owns the state pytree; the merge scheduler owns
+    the maintenance schedule.
 
     `insert`/`delete`/`lookup`/`range` match the paper's API. The merge
-    cascade (Do-Merge) runs here: recursion depth and level occupancy are
-    host decisions; every data-touching op is a jitted device computation.
+    cascade (Do-Merge) is decomposed into bounded steps (scheduler.py):
+    recursion depth and level occupancy are host decisions; every
+    data-touching op is a jitted device computation.
     """
 
     def __init__(self, params: SLSMParams | None = None,
@@ -47,17 +74,29 @@ class SLSM:
         self.policy = policy or TieringPolicy()
         self.policy.validate(self.p)
         self.state = init_state(self.p)
-        # maintenance counters (the bench runner's merge-count trajectory)
+        self.scheduler = MergeScheduler(self)
+        # maintenance counters (the bench runner's merge-count trajectory);
+        # backlog_peak = most pending merge steps ever observed at a chunk
+        # boundary (0 in synchronous mode only if no step was ever deferred)
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
-                                         compactions=0)
+                                         compactions=0, backlog_peak=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
-        """Batched insert (paper Algorithm 1/2): stage in Rn-sized chunks,
-        sealing the active run and cascading merges whenever it fills."""
+        """Batched insert (paper Algorithm 1/2): stage in Rn-sized chunks;
+        after each chunk the scheduler runs up to `merge_budget` voluntary
+        merge steps plus whatever the next chunk structurally forces
+        (everything, when merge_budget == 0 — the legacy synchronous
+        cascade)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
+        reject_reserved(keys, vals, op="insert")
+        self._insert(keys, vals)
+
+    def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Post-validation write path (delete() enters here: its tombstone
+        values are the engine's own, not user data)."""
         rn = self.p.Rn
         for off in range(0, len(keys), rn):
             ck, cv = keys[off:off + rn], vals[off:off + rn]
@@ -67,69 +106,40 @@ class SLSM:
                 cv = np.pad(cv, (0, rn - n))
             self.state = stage_append(self.p, self.state, jnp.asarray(ck),
                                       jnp.asarray(cv), jnp.int32(n))
-            while int(self.state.stage_count) >= rn:
-                if int(self.state.run_count) == self.p.R:
-                    self._flush_buffer()
-                self.state = seal_run(self.p, self.state)
-                self.stats["seals"] += 1
+            self.scheduler.on_chunk()
 
     def delete(self, keys) -> None:
         """Deletes are tombstone inserts (paper 2.8); they commit — i.e.
         the key-value pairs vanish — when a merge creates the deepest data
         (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
-        self.insert(keys, np.full_like(keys, TOMBSTONE))
+        reject_reserved(keys, op="delete")
+        self._insert(keys, np.full_like(keys, TOMBSTONE))
 
-    # -- merge cascade (Do-Merge) ------------------------------------------
-    def _flush_buffer(self) -> None:
-        self._ensure_space(0)
-        self.state = merge_buffer_to_level0(self.p, self.state,
-                                            self._drop_tombstones_into(0))
-        self.stats["flushes"] += 1
+    def drain(self) -> None:
+        """Merge barrier: retire every pending maintenance step. After
+        drain, a budgeted engine answers lookups/ranges identically to a
+        synchronous one fed the same ops (reads are exact *without*
+        draining too — pending-merge runs stay visible until their step
+        retires them; drain only completes the deferred work)."""
+        self.scheduler.drain()
 
-    def _ensure_space(self, level: int) -> None:
-        if level >= self.p.max_levels:
-            raise RuntimeError(
-                "sLSM capacity exceeded: increase max_levels "
-                f"(currently {self.p.max_levels})")
-        if level >= len(self.state.levels):
-            self.state = self.state._replace(
-                levels=self.state.levels + (empty_level(self.p, level),))
-            return
-        n_runs = int(self.state.levels[level].n_runs)
-        if not self.policy.needs_spill(self.p, n_runs):
-            return
-        if level == self.p.max_levels - 1:
-            new_state, raw = compact_last_level(self.p, self.state)
-            cap = self.p.level_cap(level)
-            if int(raw) > cap:
-                raise RuntimeError(
-                    f"sLSM deepest level overflow ({int(raw)} > {cap} "
-                    f"live elements): increase max_levels beyond "
-                    f"{self.p.max_levels}")
-            self.state = new_state
-            self.stats["compactions"] += 1
-        else:
-            self._ensure_space(level + 1)
-            self.state = merge_level_down(
-                self.p, self.state, level,
-                self.policy.runs_to_spill(self.p, n_runs),
-                self._drop_tombstones_into(level + 1))
-            self.stats["spills"] += 1
-
-    def _drop_tombstones_into(self, target_level: int) -> bool:
-        """Deletes commit when the merge output becomes the deepest data."""
-        for lv in self.state.levels[target_level:]:
-            if int(lv.n_runs) > 0:
-                return False
-        return True
+    def warm(self) -> None:
+        """Precompile the engine's full maintenance program set, so no
+        insert chunk ever pays a first-use jit compile (the other — and
+        at bench scale dominant — write-stall source besides cascade
+        work; see MergeScheduler.warm). Optional; call before
+        latency-sensitive serving."""
+        self.scheduler.warm()
 
     # -- read path ----------------------------------------------------------
     def lookup(self, keys, sparse: bool = False):
         """Point lookups (paper 2.7): newest-to-oldest across stage, memory
         runs, then Bloom/fence-gated disk levels. Compiles one program per
         distinct query-array shape — prefer `lookup_many` for mixed sizes."""
-        qs = jnp.asarray(np.asarray(keys, np.int32).reshape(-1))
+        qs_np = np.asarray(keys, np.int32).reshape(-1)
+        reject_reserved(qs_np, op="lookup")
+        qs = jnp.asarray(qs_np)
         vals, found = lookup_batch(self.p, self.state, qs, sparse)
         return np.asarray(vals), np.asarray(found)
 
@@ -140,6 +150,7 @@ class SLSM:
         Queries are padded to a power-of-two bucket so arbitrary Q reuses
         O(log Q) compiled programs. Same results as `lookup`."""
         qs = np.asarray(keys, np.int32).reshape(-1)
+        reject_reserved(qs, op="lookup_many")
         if qs.size == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
         vals, found = lookup_many(self.p, self.state,
@@ -147,12 +158,16 @@ class SLSM:
                                   jnp.int32(qs.size), sparse)
         return np.asarray(vals)[:qs.size], np.asarray(found)[:qs.size]
 
-    def range(self, lo: int, hi: int):
+    def range(self, lo: int, hi: int, return_truncated: bool = False):
         """Range query [lo, hi) (paper 2.9): newest-wins, tombstones
-        dropped, key-sorted; truncated at `max_range` results."""
-        k, v, c = range_query(self.p, self.state, jnp.int32(lo), jnp.int32(hi))
+        dropped, key-sorted; truncated at `max_range` results. With
+        `return_truncated`, also returns whether the [lo, hi) window held
+        more than max_range live keys (the result is exact iff False)."""
+        k, v, c, trunc = range_query(self.p, self.state, jnp.int32(lo),
+                                     jnp.int32(hi))
         c = int(c)
-        return np.asarray(k)[:c], np.asarray(v)[:c]
+        out = np.asarray(k)[:c], np.asarray(v)[:c]
+        return out + (bool(trunc),) if return_truncated else out
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -86,7 +86,10 @@ def stage_append_impl(p: SLSMParams, state: SLSMState, keys: jax.Array,
     pos = jnp.arange(rn, dtype=I32)
     valid = pos < n_valid
     ck = jnp.where(valid, keys.astype(I32), KEY_EMPTY)
-    cs = state.next_seq + pos
+    # seqnos only on valid lanes: next_seq advances by n_valid, so stamping
+    # padded lanes (pos >= n_valid) would collide with the NEXT chunk's
+    # live seqnos — masked to 0, the same dead value compact() uses
+    cs = jnp.where(valid, state.next_seq + pos, 0)
     sk = jax.lax.dynamic_update_slice(state.stage_keys, ck, (state.stage_count,))
     sv = jax.lax.dynamic_update_slice(state.stage_vals, vals.astype(I32),
                                       (state.stage_count,))

@@ -208,15 +208,21 @@ lookup_many = functools.partial(
 # range queries (paper 2.9)
 # --------------------------------------------------------------------------
 
-def range_from_sorted(keys, vals, seqs, count, lo, hi, max_range):
-    s = jnp.searchsorted(keys, lo, side="left").astype(I32)
-    e = jnp.searchsorted(keys, hi, side="left").astype(I32)
-    idx = s + jnp.arange(max_range, dtype=I32)
-    ok = (idx < e) & (idx < count)
-    idxc = jnp.minimum(idx, keys.shape[0] - 1)
-    return (jnp.where(ok, keys[idxc], KEY_EMPTY),
-            jnp.where(ok, vals[idxc], 0),
-            jnp.where(ok, seqs[idxc], 0))
+def range_from_sorted(keys, vals, seqs, count, lo, hi):
+    """Every in-window element of one structure, full width.
+
+    Deliberately NOT truncated to max_range per structure: each part may
+    contribute stale versions and tombstones that the global newest-wins
+    dedup removes, so cutting a part's window early would silently evict
+    live keys from the result even when the final count is far below
+    max_range (update-/delete-heavy data). The one truncation happens
+    after dedup, in range_query_impl.
+    """
+    idx = jnp.arange(keys.shape[0], dtype=I32)
+    ok = (keys >= lo) & (keys < hi) & (idx < count)
+    return (jnp.where(ok, keys, KEY_EMPTY),
+            jnp.where(ok, vals, 0),
+            jnp.where(ok, seqs, 0))
 
 
 def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
@@ -224,18 +230,21 @@ def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
     """All live (key, value) with lo <= key < hi, newest-wins, tombstones
     dropped. Sort-based dedup replaces the paper's hash table (DESIGN.md §2).
 
-    Returns (keys, vals, count) with up to max_range results, key-sorted.
+    Returns (keys, vals, count, truncated): up to max_range results,
+    key-sorted; `truncated` flags that the window held more than max_range
+    live keys (the result is the first max_range of them — exact iff the
+    flag is False).
     """
     mr = p.max_range
     parts = [range_from_sorted(state.stage_keys, state.stage_vals,
                                state.stage_seqs, state.stage_count,
-                               lo, hi, mr)]
-    part = jax.vmap(lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi, mr))(
+                               lo, hi)]
+    part = jax.vmap(lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi))(
         state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
     parts.append(tuple(x.reshape(-1) for x in part))
     for lv in state.levels:
         part = jax.vmap(
-            lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi, mr)
+            lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi)
         )(lv.keys, lv.vals, lv.seqs, lv.counts)
         parts.append(tuple(x.reshape(-1) for x in part))
     k = jnp.concatenate([x[0] for x in parts])
@@ -244,7 +253,7 @@ def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
     k, v, s = RU.sort_by_key_seq(k, v, s)
     ok = RU.newest_wins_mask(k, v, drop_tombstones=True)
     k, v, s, cnt = RU.compact(k, v, s, ok)
-    return k[:mr], v[:mr], jnp.minimum(cnt, mr)
+    return k[:mr], v[:mr], jnp.minimum(cnt, mr), cnt > mr
 
 
 range_query = functools.partial(jax.jit, static_argnums=0)(range_query_impl)

@@ -1,0 +1,347 @@
+"""Incremental merge scheduler: the Do-Merge cascade as paced, bounded steps.
+
+The paper's Do-Merge (Algorithm 2 / 2.5) is recursive: the insert that
+fills the staging buffer pays for the seal, the flush, every level spill
+the flush triggers, and — worst case — the deepest-level compaction, all
+synchronously inside one insert chunk. That is the classic LSM write
+stall (Luo & Carey, "On Performance Stability in LSM-based Storage
+Systems"): p50 insert latency is one staged sort, p99 is the whole
+cascade, two-plus orders of magnitude apart.
+
+This module decomposes the cascade into four bounded-work step kinds —
+each already a single jitted device op in `memtable`/`compaction`:
+
+  seal     — stage -> one sealed memory run            (memtable.seal_run)
+  flush    — ceil(m*R) memory runs -> one L0 run       (compaction.merge_buffer_to_level0)
+  spill l  — ceil(m*D) runs of level l -> one l+1 run  (compaction.merge_level_down)
+  compact  — all runs of the deepest level -> one run  (compaction.compact_last_level)
+
+and paces them: after every staged insert chunk the scheduler executes up
+to `SLSMParams.merge_budget` *voluntary* steps, deepest level first, then
+runs whatever is structurally *forced* (the next chunk must fit the
+staging buffer). With budget 0 the voluntary pass is empty and the forced
+chain reproduces the legacy synchronous cascade exactly. With budget >= 1
+a level that fills is retired during the many chunks of slack before the
+next run arrives for it, so the forced chain almost never recurses and
+the insert tail collapses to the cost of the single largest step.
+
+Pacing invariants (DESIGN.md §8):
+  * every step is one atomic state transition: a merge's source runs stay
+    visible to the read path until the very dispatch that installs the
+    merged output retires them, so reads are exact at every point between
+    steps — no drain needed for correctness;
+  * a step runs only when its destination has a free run slot under the
+    compaction policy (`step_ready`), so pacing never violates the
+    policy's occupancy bounds;
+  * `drain()` is the barrier: it retires every pending step, after which
+    budgeted and synchronous engines answer lookups/ranges identically
+    (they may hold different — equally valid — resting structures);
+  * voluntary work runs earlier than the synchronous schedule would, so
+    a tree at its declared capacity can raise the deepest-level overflow
+    RuntimeError a few chunks sooner than merge_budget=0 — the remedy is
+    the same either way (increase max_levels).
+
+Tombstone elision stays the host decision it was in the synchronous
+cascade: a step drops tombstones iff its output becomes the deepest data
+*at the moment the step runs* (paper 2.5/2.8).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import SLSMParams
+from repro.engine.compaction import (CompactionPolicy, compact_last_level,
+                                     merge_buffer_to_level0, merge_level_down)
+from repro.engine.levels import empty_level
+from repro.engine.memtable import init_state, seal_run, stage_append
+
+SEAL, FLUSH, SPILL, COMPACT = "seal", "flush", "spill", "compact"
+
+
+class Occupancy(NamedTuple):
+    """Host-side occupancy snapshot — all the scheduler ever reads."""
+    stage_count: int
+    run_count: int
+    level_runs: Tuple[int, ...]   # n_runs per *materialized* level
+
+
+def occupancy_of(state) -> Occupancy:
+    """Snapshot a (single-tree) state pytree's occupancy counters."""
+    return Occupancy(int(state.stage_count), int(state.run_count),
+                     tuple(int(lv.n_runs) for lv in state.levels))
+
+
+def step_order(p: SLSMParams) -> List[Tuple[str, int]]:
+    """Canonical deepest-first step order: executing pending steps in this
+    order propagates free space upward (a spill's destination is freed
+    before the spill itself is attempted)."""
+    order: List[Tuple[str, int]] = [(COMPACT, p.max_levels - 1)]
+    order += [(SPILL, lvl) for lvl in range(p.max_levels - 2, -1, -1)]
+    order += [(FLUSH, -1), (SEAL, -1)]
+    return order
+
+
+def step_pending(kind: str, level: int, occ: Occupancy, p: SLSMParams,
+                 policy: CompactionPolicy) -> bool:
+    """Does this step have work queued under the current occupancy?"""
+    if kind == SEAL:
+        return occ.stage_count >= p.Rn
+    if kind == FLUSH:
+        return occ.run_count >= p.R
+    # spill/compact: the level must exist and the policy must want it moved
+    if level >= len(occ.level_runs):
+        return False
+    return policy.needs_spill(p, occ.level_runs[level])
+
+
+def step_ready(kind: str, level: int, occ: Occupancy, p: SLSMParams,
+               policy: CompactionPolicy) -> bool:
+    """Can this step run *now* without violating a policy bound — i.e. is
+    its destination able to accept the output run? (The deepest-level
+    compaction rewrites in place and is always ready.)"""
+    if kind == SEAL:
+        return occ.stage_count >= p.Rn and occ.run_count < p.R
+    if kind == FLUSH:
+        if occ.run_count < p.runs_merged:
+            return False
+        return (len(occ.level_runs) == 0
+                or not policy.needs_spill(p, occ.level_runs[0]))
+    if kind == COMPACT:
+        return True
+    dst = level + 1
+    return (dst >= len(occ.level_runs)      # destination grown on demand
+            or not policy.needs_spill(p, occ.level_runs[dst]))
+
+
+def step_cost(kind: str, level: int, p: SLSMParams) -> int:
+    """Device-op cost of one step, in elements touched by its merge — the
+    uniform cost axis the pacing trades against (a seal is ~Rn, the
+    deepest compaction is D * level_cap(last): orders of magnitude)."""
+    if kind == SEAL:
+        return p.Rn
+    if kind == FLUSH:
+        return p.runs_merged * p.Rn
+    if kind == COMPACT:
+        return p.D * p.level_cap(p.max_levels - 1)
+    return p.disk_runs_merged * p.level_cap(level)
+
+
+class MergeStep(NamedTuple):
+    """One bounded unit of Do-Merge work (uniform interface over the
+    single-step ops in memtable.py / compaction.py)."""
+    kind: str
+    level: int     # source level for spill/compact; -1 for seal/flush
+    cost: int      # elements touched (step_cost)
+
+    def pending(self, occ: Occupancy, p, policy) -> bool:
+        return step_pending(self.kind, self.level, occ, p, policy)
+
+    def ready(self, occ: Occupancy, p, policy) -> bool:
+        return step_ready(self.kind, self.level, occ, p, policy)
+
+
+def pending_steps(p: SLSMParams, policy: CompactionPolicy,
+                  occ: Occupancy) -> List[MergeStep]:
+    """The step backlog under `occ`, deepest-first (execution order)."""
+    return [MergeStep(kind, level, step_cost(kind, level, p))
+            for kind, level in step_order(p)
+            if step_pending(kind, level, occ, p, policy)]
+
+
+def backlog_cost(steps: Sequence[MergeStep]) -> int:
+    """Total device-op cost of a backlog (telemetry)."""
+    return sum(s.cost for s in steps)
+
+
+def drop_tombstones_into(state, target_level: int) -> bool:
+    """Deletes commit when the merge output becomes the deepest data
+    (paper 2.5/2.8) — evaluated at step-run time, exactly as the
+    synchronous cascade evaluated it at recursion time."""
+    for lv in state.levels[target_level:]:
+        if int(lv.n_runs) > 0:
+            return False
+    return True
+
+
+class MergeScheduler:
+    """Single-tree scheduler: owns no array state — it reads the driver's
+    occupancy and executes steps against the driver's state pytree.
+
+    `on_chunk()` is the one entry point the insert path calls (after each
+    staged Rn-chunk): voluntary budgeted steps first, forced chain after.
+    `drain()` retires the whole backlog (the read-equivalence barrier).
+    """
+
+    def __init__(self, drv):
+        self.drv = drv   # the SLSM driver: .p, .policy, .state, .stats
+
+    # -- step execution (each is one jitted device dispatch) ---------------
+
+    def _materialize(self, level: int) -> None:
+        """Grow the levels pytree through `level` (host decision, lazy —
+        the paper's unbounded level growth, bounded by max_levels)."""
+        drv = self.drv
+        while len(drv.state.levels) <= level:
+            drv.state = drv.state._replace(
+                levels=drv.state.levels
+                + (empty_level(drv.p, len(drv.state.levels)),))
+
+    def run_step(self, step: MergeStep) -> None:
+        drv, p = self.drv, self.drv.p
+        if step.kind == SEAL:
+            drv.state = seal_run(p, drv.state)
+            drv.stats["seals"] += 1
+        elif step.kind == FLUSH:
+            self._materialize(0)
+            drv.state = merge_buffer_to_level0(
+                p, drv.state, drop_tombstones_into(drv.state, 0))
+            drv.stats["flushes"] += 1
+        elif step.kind == SPILL:
+            self._materialize(step.level + 1)
+            drv.state = merge_level_down(
+                p, drv.state, step.level,
+                drv.policy.runs_to_spill(
+                    p, int(drv.state.levels[step.level].n_runs)),
+                drop_tombstones_into(drv.state, step.level + 1))
+            drv.stats["spills"] += 1
+        else:   # COMPACT
+            last = p.max_levels - 1
+            new_state, raw = compact_last_level(p, drv.state)
+            cap = p.level_cap(last)
+            if int(raw) > cap:
+                raise RuntimeError(
+                    f"sLSM deepest level overflow ({int(raw)} > {cap} "
+                    f"live elements): increase max_levels beyond "
+                    f"{p.max_levels}")
+            drv.state = new_state
+            drv.stats["compactions"] += 1
+
+    # -- forced chain (== the legacy synchronous cascade) ------------------
+
+    def force_space(self, level: int) -> None:
+        """Guarantee `level` can accept one run, recursing deeper first —
+        the legacy `_ensure_space`, expressed in steps. Only runs when
+        pacing slack ran out (always, when merge_budget == 0)."""
+        drv, p = self.drv, self.drv.p
+        if level >= p.max_levels:
+            raise RuntimeError(
+                "sLSM capacity exceeded: increase max_levels "
+                f"(currently {p.max_levels})")
+        if level >= len(drv.state.levels):
+            self._materialize(level)
+            return
+        if not drv.policy.needs_spill(p, int(drv.state.levels[level].n_runs)):
+            return
+        if level == p.max_levels - 1:
+            self.run_step(MergeStep(COMPACT, level,
+                                    step_cost(COMPACT, level, p)))
+        else:
+            self.force_space(level + 1)
+            self.run_step(MergeStep(SPILL, level, step_cost(SPILL, level, p)))
+
+    # -- pacing entry points ----------------------------------------------
+
+    def _next_ready(self):
+        """Deepest pending step that is ready under the live occupancy
+        (None if the backlog is empty or wholly blocked)."""
+        p, policy = self.drv.p, self.drv.policy
+        occ = occupancy_of(self.drv.state)
+        for step in pending_steps(p, policy, occ):
+            if step.ready(occ, p, policy):
+                return step
+        return None
+
+    def on_chunk(self) -> None:
+        """Voluntary budgeted steps, then whatever the next chunk forces.
+
+        The backlog is re-derived after every applied step, so a step's
+        consequences (a seal filling the buffer, a flush filling level 0)
+        can be paid for inside the same chunk while budget remains — the
+        same fixpoint semantics the sharded driver's masked pass uses, so
+        equal budgets mean equal pacing on both drivers."""
+        drv, p = self.drv, self.drv.p
+        backlog = pending_steps(p, drv.policy, occupancy_of(drv.state))
+        drv.stats["backlog_peak"] = max(drv.stats["backlog_peak"],
+                                        len(backlog))
+        budget = p.merge_budget
+        while budget > 0:
+            step = self._next_ready()
+            if step is None:
+                break
+            self.run_step(step)
+            budget -= 1
+        # forced: the staging buffer must fit the next Rn-chunk
+        while int(drv.state.stage_count) >= p.Rn:
+            if int(drv.state.run_count) >= p.R:
+                self.force_space(0)
+                self.run_step(MergeStep(FLUSH, -1, step_cost(FLUSH, -1, p)))
+            self.run_step(MergeStep(SEAL, -1, step_cost(SEAL, -1, p)))
+
+    def drain(self) -> None:
+        """Retire every pending step (the read-equivalence barrier).
+
+        Deepest-ready-first until the backlog is empty; progress is
+        guaranteed because a deeper step's execution is exactly what
+        readies its shallower dependent."""
+        drv = self.drv
+        while True:
+            backlog = pending_steps(drv.p, drv.policy,
+                                    occupancy_of(drv.state))
+            if not backlog:
+                return
+            step = self._next_ready()
+            if step is None:   # pragma: no cover — invariant violation
+                raise RuntimeError(
+                    f"merge scheduler drain stalled with backlog {backlog}")
+            self.run_step(step)
+
+    @property
+    def backlog(self) -> List[MergeStep]:
+        """Current pending steps (introspection/telemetry)."""
+        return pending_steps(self.drv.p, self.drv.policy,
+                             occupancy_of(self.drv.state))
+
+    # -- program warm-up ---------------------------------------------------
+
+    def warm(self) -> None:
+        """Precompile every maintenance program this engine can dispatch.
+
+        Static shapes make the set enumerable up front: each step op is
+        jit-specialized on (params, levels-pytree structure, and for
+        spills the static n_merge / tombstone flag), so the programs a
+        run will ever need are exactly the combinations below. Programs
+        are shape-specialized, not value-specialized — executing each
+        once on a throwaway zero state compiles the real path. Without
+        this, every first-use compile (hundreds of ms) lands inside
+        whichever insert chunk happens to trigger it: a stall the pacing
+        budget cannot flatten, because it rides the very step dispatch
+        that was paced. One-off; results are discarded; the jit cache is
+        process-global, so same-param engines share the warmth.
+        """
+        p, policy = self.drv.p, self.drv.policy
+        rn = p.Rn
+        dk = jnp.full((rn,), 0, jnp.int32)
+        dv = jnp.zeros((rn,), jnp.int32)
+        last = p.max_levels - 1
+        outs = []
+        for n_levels in range(p.max_levels + 1):
+            # fresh dummies per call: these ops donate their state operand
+            outs.append(stage_append(p, init_state(p, n_levels), dk, dv,
+                                     jnp.int32(0)))
+            outs.append(seal_run(p, init_state(p, n_levels)))
+            if n_levels == 0:
+                continue
+            for drop in (True, False):
+                outs.append(merge_buffer_to_level0(
+                    p, init_state(p, n_levels), drop))
+            # spill of level l runs after its target l+1 is materialized
+            for lvl in range(min(n_levels - 1, last)):
+                for n_merge in policy.spill_sizes(p):
+                    for drop in (True, False):
+                        outs.append(merge_level_down(
+                            p, init_state(p, n_levels), lvl, n_merge, drop))
+        outs.append(compact_last_level(p, init_state(p, p.max_levels)))
+        jax.block_until_ready(outs)

@@ -14,6 +14,14 @@ unchanged (the vmapped op's output for them is computed and discarded;
 with S trees in one fused dispatch that is the price of lockstep, and it
 is exactly the work a busy fleet does anyway).
 
+Maintenance is scheduled per shard through the same step model the
+single-tree driver uses (repro.engine.scheduler): after every lockstep
+insert round, each shard runs up to `merge_budget` voluntary steps —
+per-shard step masks, deepest level first — then the forced chain covers
+whatever the next round structurally requires. With merge_budget == 0
+only the forced chain runs: the legacy lockstep deepest-first cascade,
+unchanged.
+
 Two deliberate simplifications vs the single-tree driver:
   * all `max_levels` tiers are preallocated at init so every shard
     shares one pytree structure (no per-shard lazy growth);
@@ -40,7 +48,9 @@ from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
 from repro.engine import compaction as CP
 from repro.engine import memtable as MT
 from repro.engine import read_path as RP
+from repro.engine import scheduler as SCH
 from repro.engine.backend import get_backend
+from repro.engine.engine import reject_reserved
 
 _GOLDEN = np.uint32(0x9E3779B9)   # bloom.SEED1 — same hash family
 _C1 = np.uint32(0x85EBCA6B)
@@ -137,19 +147,29 @@ class ShardedSLSM:
         self.p = params or SLSMParams()
         get_backend(self.p.backend)
         self.S = n_shards
+        self.policy = CP.TieringPolicy()   # the only policy that vmaps
         base = MT.init_state(self.p, n_levels=self.p.max_levels)
         self.state = jax.tree.map(lambda x: jnp.stack([x] * n_shards), base)
-        # maintenance counters, summed over shards (bench trajectory)
+        # maintenance counters, summed over shards (bench trajectory);
+        # backlog_peak = most pending steps observed on any ONE shard
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
-                                         compactions=0)
+                                         compactions=0, backlog_peak=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
         """Batched insert (paper Algorithm 1/2, vmapped): bucket by owner
-        shard, then feed all shards in lockstep Rn-chunks."""
+        shard, then feed all shards in lockstep Rn-chunks; each round ends
+        with the per-shard scheduler pass (budgeted voluntary steps, then
+        the forced chain)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
+        reject_reserved(keys, vals, op="insert")
+        self._insert(keys, vals)
+
+    def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Post-validation write path (delete() enters here: its tombstone
+        values are the engine's own, not user data)."""
         if len(keys) == 0:
             return
         sid = shard_ids(keys, self.S)
@@ -174,38 +194,37 @@ class ShardedSLSM:
         """Tombstone inserts (paper 2.8); elided at deepest-level
         compaction (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
-        self.insert(keys, np.full_like(keys, TOMBSTONE))
+        reject_reserved(keys, op="delete")
+        self._insert(keys, np.full_like(keys, TOMBSTONE))
 
-    def _maintain(self) -> None:
-        """Seal/flush/cascade every shard that needs it (lockstep Do-Merge)."""
-        p = self.p
-        while True:
-            need_seal = np.asarray(self.state.stage_count) >= p.Rn
-            if not need_seal.any():
-                return
-            need_flush = need_seal & (np.asarray(self.state.run_count) >= p.R)
-            if need_flush.any():
-                self._cascade(need_flush)
-                self.state = _flush_where(p, self.state,
-                                          jnp.asarray(need_flush))
-                self.stats["flushes"] += int(need_flush.sum())
-            self.state = _seal_where(p, self.state, jnp.asarray(need_seal))
-            self.stats["seals"] += int(need_seal.sum())
+    # -- merge scheduling (per-shard step masks over the vmapped ops) ------
+    def _occupancies(self) -> list:
+        """Per-shard occupancy snapshots for the scheduler's step logic."""
+        stage = np.asarray(self.state.stage_count)
+        runs = np.asarray(self.state.run_count)
+        per_level = [np.asarray(lv.n_runs) for lv in self.state.levels]
+        return [SCH.Occupancy(int(stage[s]), int(runs[s]),
+                              tuple(int(lr[s]) for lr in per_level))
+                for s in range(self.S)]
 
-    def _cascade(self, flush_mask: np.ndarray) -> None:
-        """Deepest-first spill chain: shard s spills level l+1 only if its
-        level-l spill is about to push a run into a full level l+1."""
-        p = self.p
-        spill, mask = [], flush_mask
-        for lvl in range(p.max_levels):
-            mask = mask & (np.asarray(self.state.levels[lvl].n_runs) >= p.D)
-            spill.append(mask.copy())
-        last = p.max_levels - 1
-        if spill[last].any():
-            new_state, raw = _compact_last_where(
-                p, self.state, jnp.asarray(spill[last]))
-            raws = np.asarray(raw)[spill[last]]
-            cap = p.level_cap(last)
+    def _apply_step(self, kind: str, level: int, mask: np.ndarray) -> None:
+        """Run one step kind for every masked shard in a single vmapped
+        dispatch; unmasked shards pass through unchanged."""
+        p, jm = self.p, jnp.asarray(mask)
+        if kind == SCH.SEAL:
+            self.state = _seal_where(p, self.state, jm)
+            self.stats["seals"] += int(mask.sum())
+        elif kind == SCH.FLUSH:
+            self.state = _flush_where(p, self.state, jm)
+            self.stats["flushes"] += int(mask.sum())
+        elif kind == SCH.SPILL:
+            self.state = _merge_level_down_where(
+                p, self.state, level, p.disk_runs_merged, jm)
+            self.stats["spills"] += int(mask.sum())
+        else:   # COMPACT
+            new_state, raw = _compact_last_where(p, self.state, jm)
+            raws = np.asarray(raw)[mask]
+            cap = p.level_cap(p.max_levels - 1)
             if (raws > cap).any():
                 # raise before committing: the compacted state silently
                 # truncates the overflowing run (same order as engine.py)
@@ -214,13 +233,126 @@ class ShardedSLSM:
                     f"live elements in a shard): increase max_levels beyond "
                     f"{p.max_levels}")
             self.state = new_state
-            self.stats["compactions"] += int(spill[last].sum())
+            self.stats["compactions"] += int(mask.sum())
+
+    def _step_masks(self, kind: str, level: int, occs) -> np.ndarray:
+        """(pending, ready) per-shard masks for one step kind."""
+        p, policy = self.p, self.policy
+        pend = np.array([SCH.step_pending(kind, level, o, p, policy)
+                         for o in occs], dtype=bool)
+        ready = np.array([SCH.step_ready(kind, level, o, p, policy)
+                          for o in occs], dtype=bool)
+        return pend, pend & ready
+
+    def _maintain(self) -> None:
+        """Per-round scheduler pass: backlog telemetry, budgeted voluntary
+        steps (merge_budget > 0), then the forced chain."""
+        occs = self._occupancies()
+        p, policy = self.p, self.policy
+        peak = max(len(SCH.pending_steps(p, policy, o)) for o in occs)
+        self.stats["backlog_peak"] = max(self.stats["backlog_peak"], peak)
+        if p.merge_budget > 0:
+            self._voluntary_pass()
+        self._forced_pass()
+
+    def _voluntary_pass(self) -> None:
+        """Up to merge_budget steps per shard, deepest-first: each masked
+        vmapped op advances every shard with that step pending, ready, and
+        budget left. One occupancy snapshot per applied op (the snapshot
+        is a device->host sync on the insert hot path); the backlog is
+        re-derived after each op, the same fixpoint semantics as the
+        single-tree pass. Termination: every iteration that runs an op
+        spends at least one unit of a finite budget."""
+        budget = np.full(self.S, self.p.merge_budget, np.int64)
+        while (budget > 0).any():
+            occs = self._occupancies()
+            ran = False
+            for kind, level in SCH.step_order(self.p):
+                _, ready = self._step_masks(kind, level, occs)
+                mask = ready & (budget > 0)
+                if mask.any():
+                    self._apply_step(kind, level, mask)
+                    budget[mask] -= 1
+                    ran = True
+                    break   # state changed: re-snapshot before the next op
+            if not ran:
+                return
+
+    def _forced_pass(self) -> None:
+        """Seal/flush/cascade every shard the next round structurally
+        requires (the legacy lockstep Do-Merge — the whole of maintenance
+        when merge_budget == 0)."""
+        p = self.p
+        while True:
+            need_seal = np.asarray(self.state.stage_count) >= p.Rn
+            if not need_seal.any():
+                return
+            need_flush = need_seal & (np.asarray(self.state.run_count) >= p.R)
+            if need_flush.any():
+                self._cascade(need_flush)
+                self._apply_step(SCH.FLUSH, -1, need_flush)
+            self._apply_step(SCH.SEAL, -1, need_seal)
+
+    def _cascade(self, flush_mask: np.ndarray) -> None:
+        """Forced deepest-first spill chain: shard s spills level l+1 only
+        if its level-l spill is about to push a run into a full level l+1."""
+        p = self.p
+        spill, mask = [], flush_mask
+        for lvl in range(p.max_levels):
+            mask = mask & (np.asarray(self.state.levels[lvl].n_runs) >= p.D)
+            spill.append(mask.copy())
+        last = p.max_levels - 1
+        if spill[last].any():
+            self._apply_step(SCH.COMPACT, last, spill[last])
         for lvl in range(last - 1, -1, -1):
             if spill[lvl].any():
-                self.state = _merge_level_down_where(
-                    p, self.state, lvl, p.disk_runs_merged,
-                    jnp.asarray(spill[lvl]))
-                self.stats["spills"] += int(spill[lvl].sum())
+                self._apply_step(SCH.SPILL, lvl, spill[lvl])
+
+    def warm(self) -> None:
+        """Precompile the sharded maintenance program set (one program
+        per step kind — the stacked pytree has a single structure, unlike
+        the single tree's lazily grown levels), so no insert round pays a
+        first-use jit compile. Masks are all-False: the vmapped ops still
+        compile fully, the dummy state passes through unchanged."""
+        p = self.p
+        base = MT.init_state(p, n_levels=p.max_levels)
+
+        def stacked():
+            return jax.tree.map(lambda x: jnp.stack([x] * self.S), base)
+
+        no = jnp.zeros((self.S,), bool)
+        outs = [_stage_append_sharded(   # donates: give it its own dummy
+            p, stacked(), jnp.zeros((self.S, p.Rn), jnp.int32),
+            jnp.zeros((self.S, p.Rn), jnp.int32),
+            jnp.zeros((self.S,), jnp.int32))]
+        dummy = stacked()
+        outs.append(_seal_where(p, dummy, no))
+        outs.append(_flush_where(p, dummy, no))
+        for lvl in range(p.max_levels - 1):
+            outs.append(_merge_level_down_where(p, dummy, lvl,
+                                                p.disk_runs_merged, no))
+        outs.append(_compact_last_where(p, dummy, no))
+        jax.block_until_ready(outs)
+
+    def drain(self) -> None:
+        """Merge barrier: retire every shard's pending steps (see
+        SLSM.drain — reads are exact without draining; drain completes the
+        deferred maintenance so budgeted and synchronous engines can be
+        compared at rest)."""
+        while True:
+            occs = self._occupancies()
+            pending_any = progressed = False
+            for kind, level in SCH.step_order(self.p):
+                pend, ready = self._step_masks(kind, level, occs)
+                pending_any |= bool(pend.any())
+                if ready.any():
+                    self._apply_step(kind, level, ready)
+                    progressed = True
+                    break   # state changed: re-snapshot before the next op
+            if not pending_any:
+                return
+            if not progressed:   # pragma: no cover — invariant violation
+                raise RuntimeError("sharded merge drain stalled")
 
     # -- read path ----------------------------------------------------------
     def lookup(self, keys):
@@ -234,6 +366,7 @@ class ShardedSLSM:
         mixed batch sizes reuse O(log Q) compiled programs instead of
         recompiling on every distinct max-queries-per-shard value."""
         qs = np.asarray(keys, np.int32).reshape(-1)
+        reject_reserved(qs, op="lookup")
         nq = len(qs)
         if nq == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
@@ -262,17 +395,22 @@ class ShardedSLSM:
         compaction does not vmap — see module docstring)."""
         return self.lookup(keys)
 
-    def range(self, lo: int, hi: int):
+    def range(self, lo: int, hi: int, return_truncated: bool = False):
         """Global range = concat of per-shard ranges (disjoint key sets),
         re-sorted by key. Each shard's contribution is bounded by
-        max_range; results are exact while no shard truncates."""
-        k, v, c = _range_sharded(self.p, self.state, jnp.int32(lo),
-                                 jnp.int32(hi))
+        max_range: results are exact while no shard truncates, and with
+        `return_truncated` the (S,) per-shard truncation flags are
+        returned so callers can tell (shard s's flag set means shard s
+        held more than max_range live keys in [lo, hi) and contributed
+        only its first max_range)."""
+        k, v, c, trunc = _range_sharded(self.p, self.state, jnp.int32(lo),
+                                        jnp.int32(hi))
         k, v, c = np.asarray(k), np.asarray(v), np.asarray(c)
         ks = np.concatenate([k[s, :c[s]] for s in range(self.S)])
         vs = np.concatenate([v[s, :c[s]] for s in range(self.S)])
         order = np.argsort(ks, kind="stable")
-        return ks[order], vs[order]
+        out = ks[order], vs[order]
+        return out + (np.asarray(trunc),) if return_truncated else out
 
     # -- stats ----------------------------------------------------------------
     @property

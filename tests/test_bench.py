@@ -179,6 +179,43 @@ def test_runner_emits_schema_valid_bench(bench_doc):
     assert 0 <= m["bloom"]["fp_rate_measured"] <= 1
 
 
+def test_sweep_merge_budget_family_and_canonical_default():
+    """ISSUE-3: the canonical trajectory runs the incremental scheduler
+    (merge_budget=1); the sweep family keeps the synchronous baseline
+    (budget 0) and the pacing axis measured."""
+    sweep = scenarios_for("sweep-merge-budget")
+    budgets = [s.engine_params().merge_budget for s in sweep]
+    assert budgets == [0, 1, 2, 4]
+    assert all(s.name.startswith("sweep_merge_budget") for s in sweep)
+    for s in scenarios_for("all"):
+        assert s.engine_params().merge_budget == 1, s.name
+
+
+def test_schema_requires_stall_metrics(bench_doc):
+    """SCHEMA_VERSION 2: insert p999/max_stall and maintenance backlog
+    are mandatory — a document without them is not a valid trajectory
+    point anymore."""
+    _, doc = bench_doc
+    m = doc["metrics"]
+    assert m["insert"]["p999_us"] >= m["insert"]["p99_us"] >= 0
+    assert m["insert"]["max_stall_us"] >= m["insert"]["p999_us"]
+    assert m["maintenance"]["backlog_peak"] >= 0
+    assert doc["engine"]["merge_budget"] == 1   # canonical default
+
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["insert"]["p999_us"]
+    assert any("p999_us" in e for e in SCH.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["insert"]["max_stall_us"]
+    assert any("max_stall_us" in e for e in SCH.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["maintenance"]["backlog_peak"]
+    assert any("backlog_peak" in e for e in SCH.validate(bad))
+    bad = json.loads(json.dumps(doc))
+    del bad["engine"]["merge_budget"]
+    assert any("merge_budget" in e for e in SCH.validate(bad))
+
+
 def test_schema_rejects_malformed_documents(bench_doc):
     _, doc = bench_doc
     assert SCH.validate(doc) == []

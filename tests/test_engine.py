@@ -194,6 +194,149 @@ def test_sharded_cascade_reaches_disk_levels():
     np.testing.assert_array_equal(v1[f1], v2[f2])
 
 
+# -- range-query correctness under updates/deletes ---------------------------
+
+def test_range_survives_overwrites_and_deletes():
+    """Regression (ISSUE 3): per-structure range windows used to be cut to
+    max_range BEFORE newest-wins dedup, so stale versions and tombstones
+    occupying window slots silently evicted live keys even when the final
+    count was far below max_range. Overwrite/delete a key range, then
+    scan it: the survivors must all be visible."""
+    p = SLSMParams(R=2, Rn=8, eps=0.02, D=2, m=1.0, mu=4, max_levels=3,
+                   max_range=16)
+    t, o = SLSM(p), DictOracle()
+    keys = np.arange(0, 40, dtype=np.int32)
+    t.insert(keys, keys)
+    o.insert(keys, keys)
+    # push the originals toward disk, then tombstone most of the range:
+    # the deep run's first max_range slots are now all-stale
+    t.delete(keys[:32])
+    o.delete(keys[:32])
+    k1, v1 = t.range(0, 80)
+    k2, v2 = o.range(0, 80)
+    assert len(k2) == 8 < p.max_range   # survivors fit well under the cap
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(v1, v2)
+    # same data, new values: overwrites must win without evicting anyone
+    t.insert(keys[32:], keys[32:] * 10)
+    o.insert(keys[32:], keys[32:] * 10)
+    k1, v1, trunc = t.range(0, 80, return_truncated=True)
+    k2, v2 = o.range(0, 80)
+    assert not trunc
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_range_truncation_flag_single_tree():
+    p = SLSMParams(R=2, Rn=8, eps=0.02, D=2, m=1.0, mu=4, max_levels=3,
+                   max_range=16)
+    t = SLSM(p)
+    keys = np.arange(0, 64, dtype=np.int32)
+    t.insert(keys, keys)
+    k, v, trunc = t.range(0, 64, return_truncated=True)
+    assert trunc and len(k) == p.max_range
+    np.testing.assert_array_equal(k, keys[:p.max_range])
+    k, v, trunc = t.range(0, 10, return_truncated=True)
+    assert not trunc and len(k) == 10
+
+
+def test_sharded_range_parity_and_truncated_flags():
+    """ShardedSLSM.range vs the single tree over hash-skewed keys: exact
+    (and flag-free) while no shard truncates; per-shard flags light up
+    exactly for the shards that hold more than max_range live keys."""
+    p = SLSMParams(R=2, Rn=8, eps=0.02, D=2, m=1.0, mu=4, max_levels=3,
+                   max_range=64)
+    n_shards = 4
+    # hash-skew: only keys routed to shards 0 and 1 (40 each, under the
+    # per-shard max_range), so the other shards stay empty — the
+    # imbalance the parity claim must survive without truncating
+    pool = np.arange(0, 4000, dtype=np.int32)
+    sid = shard_ids(pool, n_shards)
+    skewed = np.concatenate([pool[sid == 0][:40], pool[sid == 1][:40]])
+    s = ShardedSLSM(p, n_shards=n_shards)
+    t = SLSM(SLSMParams(R=2, Rn=8, eps=0.02, D=2, m=1.0, mu=4, max_levels=3,
+                        max_range=4096))   # wide enough to never truncate
+    vals = (skewed * 3).astype(np.int32)
+    s.insert(skewed, vals)
+    t.insert(skewed, vals)
+    lo, hi = int(pool[0]), int(pool[-1]) + 1
+    ks, vs, trunc = s.range(lo, hi, return_truncated=True)
+    kt, vt = t.range(lo, hi)
+    assert trunc.shape == (n_shards,)
+    assert not trunc.any()
+    np.testing.assert_array_equal(ks, kt)
+    np.testing.assert_array_equal(vs, vt)
+    # force a truncating shard: more than max_range live keys on shard 0
+    hot = pool[shard_ids(pool, n_shards) == 0][:p.max_range + 8]
+    s2 = ShardedSLSM(p, n_shards=n_shards)
+    s2.insert(hot, hot)
+    _, _, trunc2 = s2.range(lo, hi, return_truncated=True)
+    assert bool(trunc2[0])
+    assert not trunc2[1:].any()
+
+
+# -- reserved-sentinel rejection at the API boundary -------------------------
+
+@pytest.mark.parametrize("engine", ["single", "sharded"])
+def test_reserved_sentinels_rejected(engine):
+    from repro.core.params import KEY_EMPTY, TOMBSTONE
+    t = (SLSM(SMALL) if engine == "single"
+         else ShardedSLSM(SMALL, n_shards=2))
+    ok_keys = np.asarray([1, 2], np.int32)
+    with pytest.raises(ValueError, match="KEY_EMPTY"):
+        t.insert(np.asarray([1, KEY_EMPTY], np.int32), ok_keys)
+    with pytest.raises(ValueError, match="TOMBSTONE"):
+        t.insert(ok_keys, np.asarray([0, TOMBSTONE], np.int32))
+    with pytest.raises(ValueError, match="KEY_EMPTY"):
+        t.delete(np.asarray([KEY_EMPTY], np.int32))
+    with pytest.raises(ValueError, match="KEY_EMPTY"):
+        t.lookup(np.asarray([KEY_EMPTY], np.int32))
+    with pytest.raises(ValueError, match="KEY_EMPTY"):
+        t.lookup_many(np.asarray([3, KEY_EMPTY], np.int32))
+    # the regression the guard closes: a KEY_EMPTY lookup used to
+    # false-positive against empty stage slots (seq 0 >= 0); and the
+    # extreme-but-legal neighbours must still work
+    t.insert(np.asarray([KEY_EMPTY - 1], np.int32),
+             np.asarray([int(TOMBSTONE) + 1], np.int32))
+    vals, found = t.lookup(np.asarray([KEY_EMPTY - 1], np.int32))
+    assert found.all() and vals[0] == TOMBSTONE + 1
+
+
+# -- seqno uniqueness across chunked inserts ---------------------------------
+
+def _live_seqnos(state):
+    out = [np.asarray(state.stage_seqs)[:int(state.stage_count)]]
+    counts = np.asarray(state.buf_counts)
+    for r in range(int(state.run_count)):
+        out.append(np.asarray(state.buf_seqs)[r, :counts[r]])
+    for lv in state.levels:
+        lc = np.asarray(lv.counts)
+        for d in range(int(lv.n_runs)):
+            out.append(np.asarray(lv.seqs)[d, :lc[d]])
+    return np.concatenate(out) if out else np.zeros(0, np.int64)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_global_seqno_uniqueness_across_chunked_inserts(seed):
+    """Regression (ISSUE 3): stage_append used to stamp seqnos on padded
+    lanes while advancing next_seq only by n_valid, so pad-lane seqnos
+    overlapped the next chunk's live range. Drive odd-sized (sub-Rn)
+    chunks — every surviving seqno must be unique and < next_seq."""
+    t = SLSM(SMALL)
+    rng = np.random.default_rng(seed)
+    total = 0
+    for _ in range(12):
+        n = int(rng.integers(1, SMALL.Rn))       # always a padded chunk
+        ks = rng.integers(0, 500, n).astype(np.int32)
+        vs = rng.integers(-50, 50, n).astype(np.int32)
+        t.insert(ks, vs)
+        total += n
+        seqs = _live_seqnos(t.state)
+        assert len(np.unique(seqs)) == len(seqs)
+        assert int(t.state.next_seq) == total
+        assert seqs.size == 0 or seqs.max() < total
+
+
 # -- back-compat facade ------------------------------------------------------
 
 def test_core_slsm_facade_exports():
