@@ -1,0 +1,109 @@
+"""BENCH trajectory report: the committed BENCH_*.json files as a table.
+
+The repo root's ``BENCH_<scenario>.json`` documents are the cross-PR
+performance trajectory (DESIGN.md §7). This tool renders them as the
+markdown table the README embeds, so "what are the current numbers"
+never requires opening JSON by hand:
+
+    PYTHONPATH=src python -m benchmarks.report                # print table
+    PYTHONPATH=src python -m benchmarks.report --dir bench_out
+    PYTHONPATH=src python -m benchmarks.report --update-readme
+
+``--update-readme`` rewrites the block between the BENCH_TABLE markers
+in README.md in place (the table is committed alongside regenerated
+BENCH files, so the README and the JSON always tell the same story).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+MARK_START = "<!-- BENCH_TABLE_START -->"
+MARK_END = "<!-- BENCH_TABLE_END -->"
+
+# canonical scenarios first (trajectory headliners), then sweeps sorted
+_CANONICAL_ORDER = ("uniform", "sequential", "zipfian", "delete_heavy",
+                    "range_scan", "shifting")
+
+
+def _fmt_ops(x: float) -> str:
+    return f"{x / 1e3:.0f}k" if x >= 10_000 else f"{x:.0f}"
+
+
+def _fmt_us(x: float) -> str:
+    return f"{x / 1e3:.1f}ms" if x >= 10_000 else f"{x:.0f}µs"
+
+
+def load_docs(bench_dir: Path) -> list:
+    docs = []
+    for path in sorted(bench_dir.glob("BENCH_*.json")):
+        try:
+            docs.append(json.loads(path.read_text()))
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"# skipping {path.name}: {exc}", file=sys.stderr)
+
+    def key(doc):
+        name = doc.get("name", "")
+        if name in _CANONICAL_ORDER:
+            return (0, _CANONICAL_ORDER.index(name), name)
+        return (1, 0, name)
+
+    return sorted(docs, key=key)
+
+
+def render_table(docs: list) -> str:
+    """One row per BENCH document; '-' where a scenario has no phase."""
+    head = ("| scenario | insert ops/s | insert p99 | lookup ops/s "
+            "| lookup p99 | speedup | bloom FP | tuner |\n"
+            "|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    for doc in docs:
+        m = doc["metrics"]
+        tun = m.get("tuner")
+        tuner_cell = (f"{tun['active']} ({m['maintenance']['retunes']} "
+                      "retunes)" if tun else "static")
+        rows.append(
+            f"| {doc['name']} "
+            f"| {_fmt_ops(m['insert']['ops_per_s'])} "
+            f"| {_fmt_us(m['insert']['p99_us'])} "
+            f"| {_fmt_ops(m['lookup_batched']['ops_per_s'])} "
+            f"| {_fmt_us(m['lookup_batched']['p99_us'])} "
+            f"| {m['batched_speedup']:.0f}x "
+            f"| {m['bloom']['fp_rate_measured']:.1e} "
+            f"| {tuner_cell} |")
+    return "\n".join(rows)
+
+
+def update_readme(readme: Path, table: str) -> None:
+    text = readme.read_text()
+    if MARK_START not in text or MARK_END not in text:
+        raise SystemExit(f"{readme}: BENCH_TABLE markers not found")
+    head, rest = text.split(MARK_START, 1)
+    _, tail = rest.split(MARK_END, 1)
+    readme.write_text(f"{head}{MARK_START}\n{table}\n{MARK_END}{tail}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=".",
+                    help="directory holding BENCH_*.json (default: .)")
+    ap.add_argument("--update-readme", action="store_true",
+                    help="rewrite README.md's BENCH_TABLE block in place")
+    args = ap.parse_args(argv)
+    docs = load_docs(Path(args.dir))
+    if not docs:
+        raise SystemExit(f"no BENCH_*.json under {args.dir!r}")
+    table = render_table(docs)
+    if args.update_readme:
+        readme = Path(args.dir) / "README.md"
+        update_readme(readme, table)
+        print(f"# README table updated ({len(docs)} scenarios)",
+              file=sys.stderr)
+    else:
+        print(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,10 @@ def _summary(doc: dict) -> str:
         f"{m['maintenance']['spills']}/{m['maintenance']['compactions']},",
         f"bloom fp {m['bloom']['fp_rate_measured']:.2e}",
     ]
+    if m.get("tuner"):
+        parts[-1] += ","
+        parts.append(f"tuner {m['tuner']['active']} "
+                     f"({m['maintenance']['retunes']} retunes)")
     if m["range"]:
         parts[-1] += ","
         parts.append(f"range p50 {m['range']['p50_us']:.0f}us")

@@ -3,7 +3,11 @@
 Phases run in workload order — insert (merges included), delete, batched
 lookups, per-query lookups, range scans — each timed with
 ``block_until_ready`` per dispatch so the latency percentiles are honest
-device-complete times, not async-dispatch times. The batched vs
+device-complete times, not async-dispatch times. The `shifting`
+workload runs a two-phase mixed-op path instead (`_run_shifting`):
+write-heavy inserts with a read trickle, then — with no drain in
+between — read-heavy lookups with a write trickle, so adaptive engines
+meet the flip mid-flight (DESIGN.md §9). The batched vs
 per-query pair is the headline comparison: the same query stream served
 by one fused multi-key dispatch per batch (`lookup_many`) vs one
 dispatch per key — the speedup the batched read path exists for.
@@ -143,6 +147,67 @@ def _run_lookups_per_query(tree, lookups: np.ndarray, sample: int) -> Dict:
     return _phase(len(qs), time.perf_counter() - t0, times)
 
 
+def _run_shifting(tree, w: Workload, prof: Dict) -> Tuple[Dict, Dict, bool]:
+    """The two-phase shifting workload (DESIGN.md §9), no drain between.
+
+    Phase 1 (write-heavy): the bulk insert stream in 4*Rn chunks with a
+    lookup batch interleaved every few chunks — timed as the `insert`
+    phase (dispatch times are the insert chunks; the read trickle rides
+    inside the same wall clock, as it would in production). Phase 2
+    (read-heavy): the zipf-hot lookup stream in `batch`-wide fused
+    dispatches with a small insert chunk interleaved every few batches —
+    timed as the `lookup_batched` phase. The engine is never drained
+    between phases: an adaptive engine must detect the flip and retune
+    mid-flight; a static one meets it with whatever structure it has.
+
+    Returns (insert_phase, lookup_phase, steady) — per-query metrics are
+    measured afterwards by the caller, like every other scenario.
+    """
+    p = tree.p
+    n1 = int(w.meta["n_phase1"])
+    nl1 = int(w.meta["n_lookups_phase1"])
+    chunk = 4 * p.Rn
+    # untimed warm prefix, as in _run_inserts (two flushes covered)
+    warm_target = 2 * p.R * p.Rn + chunk
+    warm = min(warm_target, 3 * n1 // 4)
+    steady = warm >= warm_target
+    tree.insert(w.keys[:warm], w.vals[:warm])
+    jax.block_until_ready(tree.state)
+
+    # phase 1: bulk inserts + a read trickle (every 4th chunk, one
+    # `batch`-wide lookup — the same fused width phase 2 uses, so both
+    # phases exercise only shapes tree.warm() precompiled)
+    batch = prof["batch"]
+    l1 = w.lookups[:nl1]
+    li, times = 0, []
+    t0 = time.perf_counter()
+    for i, off in enumerate(range(warm, n1, chunk)):
+        times.append(_timed(lambda off=off: (
+            tree.insert(w.keys[off:off + chunk], w.vals[off:off + chunk]),
+            tree.state)[1]))
+        if i % 4 == 3 and li + batch <= nl1:
+            tree.lookup_many(l1[li:li + batch])
+            li += batch
+    insert = _phase(n1 - warm, time.perf_counter() - t0, times)
+
+    # phase 2: zipf-hot lookups + write trickle (every 8th batch, Rn keys)
+    l2 = w.lookups[nl1:]
+    ki, times = n1, []
+    tree.lookup_many(l2[:batch])                 # warm the padded shapes
+    tail = len(l2) % batch
+    if tail:
+        tree.lookup_many(l2[:tail])
+    t0 = time.perf_counter()
+    for i, off in enumerate(range(0, len(l2), batch)):
+        times.append(_timed(
+            lambda off=off: tree.lookup_many(l2[off:off + batch])))
+        if i % 8 == 7 and ki < len(w.keys):
+            tree.insert(w.keys[ki:ki + p.Rn], w.vals[ki:ki + p.Rn])
+            ki += p.Rn
+    lookup = _phase(len(l2), time.perf_counter() - t0, times)
+    return insert, lookup, steady
+
+
 def _run_ranges(tree, ranges: np.ndarray) -> Optional[Dict]:
     if len(ranges) == 0:
         return None
@@ -159,11 +224,11 @@ def measured_fp_rate(tree, absent: np.ndarray,
     """Mean Bloom admit rate of the disk runs' filters on guaranteed-absent
     keys (the paper's eps, measured). Returns (rate, n_runs_probed,
     n_keys_probed); (0.0, 0, 0) when no disk runs exist yet."""
-    p = tree.p
+    p = getattr(tree, "p_active", tree.p)   # the live tuner allocation
     qs = jnp.asarray(absent[:2048].astype(np.int32))
     admit, runs = 0.0, 0
     for lvl, lv in enumerate(tree.state.levels):
-        _, _, kk = p.bloom_geometry(p.level_cap(lvl))
+        bits, _, kk = p.bloom_geometry(p.level_cap(lvl), p.level_eps(lvl))
         blooms, n_runs = np.asarray(lv.blooms), np.asarray(lv.n_runs)
         if blooms.ndim == 2:          # single tree: (D, words)
             blooms, n_runs = blooms[None], n_runs[None]
@@ -171,7 +236,7 @@ def measured_fp_rate(tree, absent: np.ndarray,
             for d in range(int(n_runs[s])):
                 if runs >= max_runs:
                     break
-                pos = BL.bloom_probe(jnp.asarray(blooms[s, d]), qs, kk)
+                pos = BL.bloom_probe(jnp.asarray(blooms[s, d]), qs, kk, bits)
                 admit += float(np.asarray(pos).mean())
                 runs += 1
     if runs == 0:
@@ -190,6 +255,8 @@ def _env() -> Dict[str, str]:
 
 
 def bench_filename(name: str) -> str:
+    """``BENCH_<name>.json`` with the scenario name sanitized to a safe
+    filename (the stable identity the trajectory is keyed on)."""
     return f"BENCH_{re.sub(r'[^A-Za-z0-9_.-]', '_', name)}.json"
 
 
@@ -209,19 +276,32 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
     tree = build_engine(sc)
     tree.warm()   # precompile all maintenance programs (untimed)
 
-    insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
-    delete = _run_deletes(tree, w, chunk=4 * p.Rn)
-    if p.merge_budget > 0:
-        # merge barrier (untimed): retire the deferred maintenance backlog
-        # so the read phases run against a fully-merged tree, comparable
-        # with synchronous-mode documents (reads are exact either way —
-        # this only removes run-count variance from the lookup timings)
-        tree.drain()
-        jax.block_until_ready(tree.state)
-    lookups = w.lookups[:prof["n_lookups"]]
-    batched = _run_lookups_batched(tree, lookups, prof["batch"])
-    per_query = _run_lookups_per_query(tree, lookups, prof["n_per_query"])
-    ranges = _run_ranges(tree, w.ranges)
+    if w.kind == "shifting":
+        # phased mixed-op stream, never drained mid-run: the adaptive
+        # tuner must catch the write->read flip in flight (DESIGN.md §9)
+        insert, batched, insert_steady = _run_shifting(tree, w, prof)
+        nl1 = int(w.meta["n_lookups_phase1"])
+        per_query = _run_lookups_per_query(
+            tree, w.lookups[nl1:], prof["n_per_query"])
+        delete = ranges = None
+        n_batched_lookups = len(w.lookups) - nl1
+    else:
+        insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
+        delete = _run_deletes(tree, w, chunk=4 * p.Rn)
+        if p.merge_budget > 0:
+            # merge barrier (untimed): retire the deferred maintenance
+            # backlog so the read phases run against a fully-merged tree,
+            # comparable with synchronous-mode documents (reads are exact
+            # either way — this only removes run-count variance from the
+            # lookup timings)
+            tree.drain()
+            jax.block_until_ready(tree.state)
+        lookups = w.lookups[:prof["n_lookups"]]
+        batched = _run_lookups_batched(tree, lookups, prof["batch"])
+        per_query = _run_lookups_per_query(tree, lookups,
+                                           prof["n_per_query"])
+        ranges = _run_ranges(tree, w.ranges)
+        n_batched_lookups = len(lookups)
     fp_rate, _, n_probed = measured_fp_rate(tree, w.absent)
 
     doc: Dict[str, Any] = {
@@ -234,9 +314,10 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
                    "mu": p.mu, "max_levels": p.max_levels,
                    "max_range": p.max_range, "cand_factor": p.cand_factor,
                    "backend": p.backend, "policy": sc.policy,
-                   "n_shards": sc.n_shards, "merge_budget": p.merge_budget},
+                   "n_shards": sc.n_shards, "merge_budget": p.merge_budget,
+                   "tuning_mode": p.tuning.mode},
         "profile": {"name": profile, "batch": prof["batch"],
-                    "n_lookups": len(lookups),
+                    "n_lookups": n_batched_lookups,
                     "n_per_query": prof["n_per_query"],
                     "insert_steady_state": insert_steady},
         "metrics": {
@@ -249,7 +330,13 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
                                 / max(per_query["ops_per_s"], 1e-12)),
             "maintenance": {k: int(tree.stats[k]) for k in
                             ("seals", "flushes", "spills", "compactions",
-                             "backlog_peak")},
+                             "backlog_peak", "retunes")},
+            "tuner": ({"active": tree.tuner.active,
+                       "read_frac": float(tree.tuner.read_frac),
+                       "budget_bytes": int(tree.tuner.budget_bytes),
+                       "level_fp_observed": [
+                           float(x) for x in tree.tuner.level_fp_observed]}
+                      if tree.tuner.enabled else None),
             "bloom": {"eps_configured": p.eps,
                       "fp_rate_measured": fp_rate,
                       "n_probed": n_probed},

@@ -2,15 +2,17 @@
 
 A `Scenario` = one workload family + one full engine configuration
 (SLSMParams overrides, compaction policy, shard count). The canonical
-five (`--scenario all`) cover the workload taxonomy — uniform,
-sequential, zipfian, delete-heavy, range-scan — at the CPU-scaled paper
-baseline; the sweep families (`--scenario sweeps`, or one of
+six (`--scenario all`) cover the workload taxonomy — uniform,
+sequential, zipfian, delete-heavy, range-scan, and the mid-run
+`shifting` scenario that proves the adaptive tuner — at the CPU-scaled
+paper baseline; the sweep families (`--scenario sweeps`, or one of
 `sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-merge-budget|
-sweep-policy|sweep-backend|sweep-shards`) vary exactly one knob at a
-time, reproducing the paper's experimental axes (Table 1 + Section 3)
-plus the axes this repro adds: the ops backend (jnp vs pallas), the
-shard count (1 vs S), and the merge scheduler's pacing budget
-(synchronous vs incremental, DESIGN.md §8).
+sweep-policy|sweep-backend|sweep-shards|sweep-tuner`) vary exactly one
+knob at a time, reproducing the paper's experimental axes (Table 1 +
+Section 3) plus the axes this repro adds: the ops backend (jnp vs
+pallas), the shard count (1 vs S), the merge scheduler's pacing budget
+(synchronous vs incremental, DESIGN.md §8), and the adaptive tuner vs
+every static eps on the shifting workload (DESIGN.md §9).
 
 Scenario names are stable identifiers: `BENCH_<name>.json` files keyed
 on them form the cross-PR perf trajectory, so renaming one breaks the
@@ -21,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List
 
-from repro.core.params import SLSMParams
+from repro.core.params import SLSMParams, TuningPolicy
 
 
 def bench_params(**over) -> SLSMParams:
@@ -75,10 +77,22 @@ class Scenario:
     seed: int = 0
 
     def engine_params(self) -> SLSMParams:
+        """The scenario's full `SLSMParams`: the CPU-scaled paper
+        baseline with this scenario's overrides applied."""
         return bench_params(**self.params)
 
 
-# -- the canonical five: one per workload family (--scenario all) ----------
+# -- the canonical six: one per workload family (--scenario all) -----------
+
+# the adaptive tuner's policy for the canonical shifting point: decide
+# every 512 ops so both phases see decisions even at the smoke profile
+ADAPTIVE = TuningPolicy(mode="adaptive", interval=512, eps_floor=1e-4)
+
+# every shifting scenario (tuned + static baselines) shares this
+# geometry: Rn=128 halves the buffer capacity so the phase-1 bulk load
+# builds real multi-level structure by the flip — the structure a static
+# engine then drags through the read phase and the tuner folds away
+SHIFT_PARAMS = dict(Rn=128)
 
 CANONICAL: List[Scenario] = [
     Scenario("uniform", "uniform"),
@@ -86,6 +100,10 @@ CANONICAL: List[Scenario] = [
     Scenario("zipfian", "zipfian"),
     Scenario("delete_heavy", "delete-heavy"),
     Scenario("range_scan", "range-scan", params=dict(max_range=8192)),
+    # the tuner's proving ground: write-heavy -> read-heavy mid-run, the
+    # adaptive controller on; sweep-tuner holds the static comparisons
+    Scenario("shifting", "shifting",
+             params=dict(tuning=ADAPTIVE, **SHIFT_PARAMS)),
 ]
 
 
@@ -123,6 +141,17 @@ SWEEPS: Dict[str, List[Scenario]] = {
     "sweep-shards": [
         Scenario("sweep_shards_1", "uniform", n_shards=1),
         Scenario("sweep_shards_4", "uniform", n_shards=4),
+    ],
+    # the adaptive tuner vs every static eps on the shifting workload
+    # (DESIGN.md §9): the canonical `shifting` scenario is the tuned run;
+    # these are the best-static-configuration baselines it must beat
+    "sweep-tuner": [
+        Scenario("sweep_tuner_eps_0p1", "shifting",
+                 params=dict(eps=0.1, **SHIFT_PARAMS)),
+        Scenario("sweep_tuner_eps_0p001", "shifting",
+                 params=dict(eps=1e-3, **SHIFT_PARAMS)),
+        Scenario("sweep_tuner_eps_1em05", "shifting",
+                 params=dict(eps=1e-5, **SHIFT_PARAMS)),
     ],
 }
 

@@ -10,13 +10,14 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 2):
+Document shape (SCHEMA_VERSION 3):
 
-  schema_version  int     == 2
+  schema_version  int     == 3
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
-                   cand_factor, backend, policy, n_shards, merge_budget}
+                   cand_factor, backend, policy, n_shards, merge_budget,
+                   tuning_mode}
   profile         {name, batch, n_lookups, n_per_query,
                    insert_steady_state}  sizing profile that produced the
                    numbers — p50/p99 and batched_speedup shift with
@@ -32,10 +33,18 @@ Document shape (SCHEMA_VERSION 2):
     delete            phase|None   tombstone stream (delete-heavy only)
     range             phase|None   [lo,hi) scans (range-scan only)
     batched_speedup   float    lookup_batched.ops_per_s / lookup_per_query.ops_per_s
-    maintenance       {seals, flushes, spills, compactions, backlog_peak}
+    maintenance       {seals, flushes, spills, compactions, backlog_peak,
+                      retunes}
                       merge counts + the deepest pending-merge-step
                       backlog ever observed at a chunk boundary (the
-                      scheduler's pacing telemetry, DESIGN.md §8)
+                      scheduler's pacing telemetry, DESIGN.md §8) + the
+                      number of tuner allocation switches applied (§9)
+    tuner             {active, read_frac, budget_bytes,
+                      level_fp_observed}|None   final tuner state (None
+                      unless the engine ran tuning_mode "adaptive"): the
+                      allocation the run ended on, the EWMA read
+                      fraction, the byte budget it managed, and the
+                      sampled per-level observed-FP fractions
     bloom             {eps_configured, fp_rate_measured, n_probed}
   env               {jax, numpy, python, platform, timestamp}
 
@@ -55,12 +64,15 @@ SCHEMA_VERSION history:
   2 — merge-scheduler PR: stall telemetry (insert p999/max_stall,
       maintenance backlog) + engine.merge_budget became part of the
       trajectory's engine fingerprint.
+  3 — adaptive-tuner PR: engine.tuning_mode and maintenance.retunes
+      joined the fingerprint; optional metrics.tuner block records the
+      final allocation of adaptive runs (DESIGN.md §9).
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -68,8 +80,9 @@ _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
 _ENGINE_KEYS = {"R": int, "Rn": int, "eps": float, "D": int, "m": float,
                 "mu": int, "max_levels": int, "max_range": int,
                 "cand_factor": int, "backend": str, "policy": str,
-                "n_shards": int, "merge_budget": int}
-_MAINT_KEYS = ("seals", "flushes", "spills", "compactions", "backlog_peak")
+                "n_shards": int, "merge_budget": int, "tuning_mode": str}
+_MAINT_KEYS = ("seals", "flushes", "spills", "compactions", "backlog_peak",
+               "retunes")
 
 
 def _typed(doc: Dict[str, Any], key: str, typ, errs: List[str],
@@ -157,6 +170,21 @@ def validate(doc: Any) -> List[str]:
                 v = _typed(maint, key, int, errs, "metrics.maintenance")
                 if isinstance(v, int) and v < 0:
                     errs.append(f"metrics.maintenance.{key}: negative ({v})")
+        if "tuner" not in met:
+            errs.append("metrics: missing key 'tuner' (use null for "
+                        "static-tuning engines)")
+        elif met["tuner"] is not None:
+            tun = _typed(met, "tuner", dict, errs, "metrics")
+            if tun is not None:
+                _typed(tun, "active", str, errs, "metrics.tuner")
+                rf = _typed(tun, "read_frac", float, errs, "metrics.tuner")
+                if isinstance(rf, (int, float)) and not 0 <= rf <= 1:
+                    errs.append(
+                        f"metrics.tuner.read_frac: out of [0,1] ({rf})")
+                bb = _typed(tun, "budget_bytes", int, errs, "metrics.tuner")
+                if isinstance(bb, int) and bb <= 0:
+                    errs.append(
+                        f"metrics.tuner.budget_bytes: must be positive ({bb})")
         bloom = _typed(met, "bloom", dict, errs, "metrics")
         if bloom is not None:
             eps = _typed(bloom, "eps_configured", float, errs, "metrics.bloom")
@@ -175,4 +203,5 @@ def validate(doc: Any) -> List[str]:
 
 
 def is_valid(doc: Any) -> bool:
+    """True iff `validate(doc)` reports no problems."""
     return not validate(doc)

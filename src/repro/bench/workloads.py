@@ -62,6 +62,7 @@ class Workload:
 
     @property
     def n(self) -> int:
+        """Insert-stream length (the workload's size parameter)."""
         return len(self.keys)
 
 
@@ -224,12 +225,73 @@ def make_range_scan(n: int, seed: int = 0, *, key_space: int = 2**24,
                          "key_space": key_space})
 
 
+def make_shifting(n: int, seed: int = 0, *, write_frac: float = 0.85,
+                  key_space: int = 2**24, theta: float = 1.1,
+                  lookup_frac: float = 4.0,
+                  miss_frac: float = 0.25) -> Workload:
+    """Mid-run workload shift: uniform write-heavy, then zipfian read-heavy.
+
+    The adaptive tuner's proving ground (DESIGN.md §9): phase 1 is a bulk
+    uniform insert stream with a trickle of lookups (the write-heavy
+    regime the write-optimized allocation serves); phase 2 flips to
+    Zipf(theta)-skewed lookups over the inserted data with a trickle of
+    fresh inserts (the read-heavy regime; ``lookup_frac`` defaults well
+    above 1 — a serving phase reads its data many times over, which is
+    what makes paying an adaptation worthwhile). No drain separates the
+    phases — the engine meets the shift mid-flight, exactly as a static
+    configuration would.
+
+    Phase geometry rides in ``meta``: ``n_phase1`` splits ``keys``,
+    ``n_lookups_phase1`` splits ``lookups``. Keys stay even (absent
+    probes are ``key | 1``, the module-wide convention).
+    """
+    rng = _rng("bench-shifting", seed)
+    n1 = max(1, int(n * write_frac))
+    n2 = max(1, n - n1)
+    keys1 = _even_uniform(rng, n1, key_space)
+    keys2 = _even_uniform(rng, n2, key_space)
+    keys = np.concatenate([keys1, keys2])
+    vals = rng.integers(-2**30, 2**30, len(keys), dtype=np.int32)
+    n_lookups = max(2, int(n * lookup_frac))
+    nl1 = max(1, n_lookups // 20)            # phase-1 read trickle
+    nl2 = n_lookups - nl1
+
+    def mixed(pool: np.ndarray, count: int) -> np.ndarray:
+        n_miss = int(count * miss_frac)
+        hits = rng.choice(pool, size=count - n_miss, replace=True)
+        miss = rng.choice(keys1, size=n_miss, replace=True) | np.int32(1)
+        out = np.concatenate([hits, miss]).astype(np.int32)
+        rng.shuffle(out)
+        return out
+
+    l1 = mixed(keys1, nl1)
+    # phase 2: zipf-skewed over the distinct phase-1 keys (hot working set)
+    distinct = np.unique(keys1)
+    probs = zipf_probs(len(distinct), theta)
+    ranks = np.minimum(
+        np.searchsorted(np.cumsum(probs), rng.random(nl2), side="right"),
+        len(distinct) - 1)
+    hot_perm = rng.permutation(len(distinct))
+    l2 = mixed(distinct[hot_perm[ranks]], nl2)
+    return Workload(
+        name=f"shifting-n{n}-s{seed}", kind="shifting", seed=seed,
+        keys=keys.astype(np.int32), vals=vals,
+        lookups=np.concatenate([l1, l2]),
+        deletes=np.zeros(0, np.int32), ranges=np.zeros((0, 2), np.int32),
+        absent=(rng.choice(keys1, size=min(4096, 4 * n1), replace=True)
+                | np.int32(1)).astype(np.int32),
+        meta={"n_phase1": int(n1), "n_lookups_phase1": int(nl1),
+              "theta": theta, "key_space": key_space,
+              "write_frac": write_frac})
+
+
 WORKLOAD_FAMILIES: Dict[str, Callable[..., Workload]] = {
     "uniform": make_uniform,
     "sequential": make_sequential,
     "zipfian": make_zipfian,
     "delete-heavy": make_delete_heavy,
     "range-scan": make_range_scan,
+    "shifting": make_shifting,
 }
 
 

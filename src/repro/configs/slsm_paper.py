@@ -5,8 +5,17 @@ Rn=800, D=20, m=1.0 — used by benchmarks and examples.
 ratios, sizes that run in seconds); the BENCH_*.json trajectory and the
 figure benches both measure that configuration, while `paper_params` is
 the faithful full-size geometry for TPU runs.
+
+These knobs are a *static* pick — one point in the paper's Table 1
+space, chosen by hand. Since the tuner PR the engine can also pick for
+itself: ``paper_params(tuning=TuningPolicy(mode="adaptive"))`` lets
+`repro.engine.tuner` re-partition the memory budget (write buffer vs
+per-level Bloom bits vs fence granularity) at merge boundaries as the
+observed workload shifts — the README's Tuning guide and DESIGN.md §9
+describe when to prefer which.
 """
-from repro.core.params import SLSMParams
+from repro.core.params import SLSMParams, TuningPolicy  # noqa: F401  (re-
+# exported so `paper_params(tuning=TuningPolicy(...))` needs one import)
 
 PAPER_BASELINE = SLSMParams(R=50, Rn=800, eps=1e-3, D=20, m=1.0, mu=512,
                             max_levels=3)

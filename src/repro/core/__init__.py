@@ -7,7 +7,7 @@ runs) — lazy resolution keeps that dependency acyclic regardless of
 which package is imported first.
 """
 from repro.core.params import (KEY_EMPTY, SEQ_NONE, TOMBSTONE,  # noqa: F401
-                               SLSMParams)
+                               SLSMParams, TuningPolicy)
 
 _ENGINE_EXPORTS = ("SLSM", "ShardedSLSM", "LevelState", "SLSMState",
                    "init_state", "lookup_batch", "range_query")

@@ -42,13 +42,25 @@ def probe_positions(keys: jax.Array, k: int, bits: int) -> jax.Array:
     return pos % np.uint32(bits)
 
 
-def bloom_build(keys: jax.Array, valid: jax.Array, words: int, k: int) -> jax.Array:
-    """Build a (words,) uint32 filter over `keys` where `valid`."""
-    bits = words * 32
+def bloom_build(keys: jax.Array, valid: jax.Array, words: int, k: int,
+                bits: int | None = None) -> jax.Array:
+    """Build a (words,) uint32 filter over `keys` where `valid`.
+
+    `bits` is the *effective* filter size; default words*32 (the whole
+    array). The adaptive tuner (DESIGN.md §9) sizes arrays physically for
+    its densest allocation and passes the current allocation's smaller
+    `bits` here — probe positions then stay inside [0, bits) and the
+    tail words are never touched, so probe (with the same `bits`) and
+    build agree."""
+    if bits is None:
+        bits = words * 32
+    assert bits <= words * 32, f"effective bits {bits} > {words} words"
+    bits_phys = words * 32
     pos = probe_positions(keys, k, bits).astype(jnp.int32)
     # invalid keys -> out-of-range position, dropped by the scatter
-    pos = jnp.where(valid[..., None], pos, bits)
-    hot = jnp.zeros((bits,), jnp.bool_).at[pos.reshape(-1)].set(True, mode="drop")
+    pos = jnp.where(valid[..., None], pos, bits_phys)
+    hot = jnp.zeros((bits_phys,), jnp.bool_).at[pos.reshape(-1)].set(
+        True, mode="drop")
     weights = jnp.left_shift(np.uint32(1), jnp.arange(32, dtype=jnp.uint32))
     return (hot.reshape(words, 32).astype(jnp.uint32) * weights).sum(
         axis=1, dtype=jnp.uint32
@@ -56,18 +68,22 @@ def bloom_build(keys: jax.Array, valid: jax.Array, words: int, k: int) -> jax.Ar
 
 
 def bloom_insert(filter_words: jax.Array, keys: jax.Array, valid: jax.Array,
-                 k: int) -> jax.Array:
+                 k: int, bits: int | None = None) -> jax.Array:
     """OR new keys into an existing filter."""
-    add = bloom_build(keys, valid, filter_words.shape[-1], k)
+    add = bloom_build(keys, valid, filter_words.shape[-1], k, bits)
     return filter_words | add
 
 
-def bloom_probe(filter_words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
+def bloom_probe(filter_words: jax.Array, keys: jax.Array, k: int,
+                bits: int | None = None) -> jax.Array:
     """Membership test. No false negatives; false positives at rate ~eps.
 
     filter_words: (words,) uint32;  keys: (...,) int32  ->  (...,) bool
+    `bits` = effective filter size (default: the whole array) — must
+    match what `bloom_build` was given or probes read the wrong bits.
     """
-    bits = filter_words.shape[-1] * 32
+    if bits is None:
+        bits = filter_words.shape[-1] * 32
     pos = probe_positions(keys, k, bits).astype(jnp.int32)
     w = filter_words[pos // 32]
     bit = (w >> (pos % 32).astype(jnp.uint32)) & np.uint32(1)

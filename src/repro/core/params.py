@@ -27,6 +27,28 @@ Scheduling knob (this repro's merge-pacing subsystem, DESIGN.md §8):
                  space, reproducing the paper's write-stall pathology;
                  >0 paces the cascade one bounded step at a time across
                  subsequent chunks, flattening insert tail latency.
+
+Tuning knobs (this repro's adaptive memory/filter tuner, DESIGN.md §9):
+  eps_per_level — per-disk-level Bloom FP rates replacing the single
+                  global eps (Monkey-style allocation: deeper, larger
+                  levels get fewer bits per element). None = eps at
+                  every level, the paper's uniform sizing.
+  eps_mem       — FP rate of the sealed-memory-run filters (None = eps).
+  r_eff         — memory runs actually used before a flush becomes
+                  pending (None = R). Shrinking it frees write-buffer
+                  bytes the tuner can spend on filters; the physical R
+                  run slots stay allocated (static shapes).
+  fence_stride  — fence-pointer subsampling factor (power of two):
+                  lookups consult every stride-th fence with an
+                  (mu*stride)-wide page window. Fences are always BUILT
+                  at the finest granularity; the stride is a read-side
+                  view, so retuning it costs nothing.
+  tuning        — the TuningPolicy. mode="static" (default): the knobs
+                  above are fixed for the run and behaviour is
+                  bit-identical to an engine without the tuner.
+                  mode="adaptive": `repro.engine.tuner` re-partitions
+                  one byte budget across these knobs at merge
+                  boundaries as the observed workload shifts.
 """
 from __future__ import annotations
 
@@ -39,6 +61,46 @@ import numpy as np
 KEY_EMPTY = np.int32(np.iinfo(np.int32).max)   # reserved: empty slot / padding
 TOMBSTONE = np.int32(np.iinfo(np.int32).min)   # reserved value: deleted key
 SEQ_NONE = np.int32(-1)                        # "no match" sequence number
+
+
+@dataclass(frozen=True)
+class TuningPolicy:
+    """Controller policy for the adaptive memory/filter tuner (DESIGN.md §9).
+
+    Hashable (it rides inside `SLSMParams`, a jit static argument). With
+    ``mode="static"`` (the default) the tuner never acts and the engine
+    behaves bit-identically to one without a tuner. With
+    ``mode="adaptive"`` the `repro.engine.tuner.Tuner` observes the
+    read/write mix and re-partitions one byte budget — write-buffer
+    capacity vs per-level Bloom bits vs fence granularity — at merge
+    boundaries, applying each decision as a scheduler `RETUNE` step.
+    """
+
+    mode: str = "static"          # "static" | "adaptive"
+    budget_bytes: int | None = None  # byte budget; None = the engine's own
+    #                                  static allocation (nothing to gain or
+    #                                  lose until the tuner moves bytes)
+    eps_floor: float = 1e-4       # densest per-level FP rate any allocation
+    #                               may emit — sizes the physical filter
+    #                               arrays (static shapes need a bound)
+    eps_write: float = 2e-2       # filter FP rate of the write-optimized
+    #                               allocation (cheap builds, fast merges)
+    interval: int = 2048          # ops between tuner decisions (cooldown)
+    read_heavy: float = 0.7       # EWMA read fraction that triggers the
+    write_heavy: float = 0.7      # read-/write-optimized allocation
+    ewma: float = 0.4             # smoothing of the read/write mix signal
+
+    def __post_init__(self):
+        if self.mode not in ("static", "adaptive"):
+            raise ValueError(f"unknown tuning mode {self.mode!r}; "
+                             "expected 'static' or 'adaptive'")
+        if not 0.0 < self.eps_floor < 1.0 or not 0.0 < self.eps_write < 1.0:
+            raise ValueError("eps_floor and eps_write must lie in (0, 1)")
+        if self.interval < 1:
+            raise ValueError("interval must be >= 1")
+        if not (0.0 < self.read_heavy <= 1.0 and 0.0 < self.write_heavy <= 1.0
+                and 0.0 < self.ewma <= 1.0):
+            raise ValueError("read_heavy/write_heavy/ewma must lie in (0, 1]")
 
 
 @dataclass(frozen=True)
@@ -56,6 +118,12 @@ class SLSMParams:
     cand_factor: int = 8
     backend: str = "jnp"  # hot-primitive dispatch: "jnp" | "pallas"
     merge_budget: int = 0  # paced merge steps per insert chunk (0 = sync)
+    # -- tuning knobs (DESIGN.md §9; all default to the paper's behaviour) --
+    eps_per_level: tuple | None = None  # per-level FP rates (None = eps)
+    eps_mem: float | None = None        # memory-run filter FP (None = eps)
+    r_eff: int | None = None            # memory runs in active use (None = R)
+    fence_stride: int = 1               # fence subsampling (read-side view)
+    tuning: TuningPolicy = TuningPolicy()
 
     def __post_init__(self):
         assert self.R > 0 and self.Rn > 0 and self.D > 0 and self.mu > 0
@@ -67,11 +135,33 @@ class SLSMParams:
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}; "
                              "expected 'jnp' or 'pallas'")
+        if self.eps_per_level is not None:
+            if len(self.eps_per_level) != self.max_levels:
+                raise ValueError(
+                    f"eps_per_level needs one rate per level "
+                    f"(got {len(self.eps_per_level)}, max_levels="
+                    f"{self.max_levels})")
+            if not all(0.0 < e < 1.0 for e in self.eps_per_level):
+                raise ValueError("eps_per_level rates must lie in (0, 1)")
+        if self.eps_mem is not None and not 0.0 < self.eps_mem < 1.0:
+            raise ValueError("eps_mem must lie in (0, 1)")
+        if self.r_eff is not None and not 1 <= self.r_eff <= self.R:
+            raise ValueError(
+                f"r_eff must lie in [1, R={self.R}] (got {self.r_eff})")
+        if self.fence_stride < 1 or (self.fence_stride
+                                     & (self.fence_stride - 1)):
+            raise ValueError(
+                f"fence_stride must be a power of two >= 1 "
+                f"(got {self.fence_stride})")
 
     # ---- derived geometry -------------------------------------------------
     @property
     def runs_merged(self) -> int:
-        """ceil(m*R) memory runs flushed per buffer merge (paper 2.1)."""
+        """ceil(m*R) memory runs flushed per buffer merge (paper 2.1).
+
+        Physical geometry: sizes level 0 (`level_cap`), so it uses the
+        full R regardless of the tuner's `r_eff` — see `runs_merged_eff`
+        for the count a flush actually merges."""
         return max(1, math.ceil(self.m * self.R))
 
     @property
@@ -108,13 +198,65 @@ class SLSMParams:
         """Static bound used by the Bloom-compacted (sparse) disk lookup."""
         return self.cand_factor
 
-    def bloom_geometry(self, n: int) -> tuple[int, int, int]:
-        """(bits, words, k) for an n-element run at FP rate eps.
+    # ---- effective tuning views (what the current allocation uses) --------
+    @property
+    def R_eff(self) -> int:
+        """Memory runs in active use: a flush becomes *pending* at this
+        occupancy (the tuner's write-buffer arm); physical slots stay R."""
+        return self.R if self.r_eff is None else self.r_eff
+
+    @property
+    def runs_merged_eff(self) -> int:
+        """ceil(m*R_eff) memory runs a flush actually merges."""
+        return max(1, math.ceil(self.m * self.R_eff))
+
+    @property
+    def mem_eps(self) -> float:
+        """Effective FP rate of the sealed-memory-run filters."""
+        return self.eps if self.eps_mem is None else self.eps_mem
+
+    def level_eps(self, level: int) -> float:
+        """Effective FP rate of `level`'s run filters (paper 2.3; Monkey-
+        style per-level allocation when `eps_per_level` is set)."""
+        if self.eps_per_level is None:
+            return self.eps
+        return self.eps_per_level[min(level, len(self.eps_per_level) - 1)]
+
+    def bloom_geometry(self, n: int, eps: float | None = None
+                       ) -> tuple[int, int, int]:
+        """(bits, words, k) for an n-element run at FP rate `eps` (default:
+        the global eps).
 
         bits = ceil(-n ln eps / ln(2)^2), k = round(-log2 eps) — standard
         Bloom sizing; the paper's double-hashing needs only two base hashes.
         """
-        bits = int(math.ceil(-n * math.log(self.eps) / (math.log(2.0) ** 2)))
+        e = self.eps if eps is None else eps
+        bits = int(math.ceil(-n * math.log(e) / (math.log(2.0) ** 2)))
         bits = max(64, ((bits + 31) // 32) * 32)
-        k = max(1, int(round(-math.log(self.eps) / math.log(2.0))))
+        k = max(1, int(round(-math.log(e) / math.log(2.0))))
         return bits, bits // 32, k
+
+    def bloom_words_physical(self, n: int, eff_eps: float) -> int:
+        """Allocated filter width (uint32 words) for an n-element run.
+
+        Static shapes force a bound: in adaptive mode the arrays are sized
+        for the densest allocation the tuner may ever emit
+        (`tuning.eps_floor`, or the configured eps if even denser), so an
+        allocation switch never restructures the state pytree — only the
+        *effective* bits/k used inside the fixed-width array change. In
+        static mode physical == effective, byte-for-byte today's layout.
+        """
+        if self.tuning.mode == "adaptive":
+            return self.bloom_geometry(n, min(self.eps,
+                                              self.tuning.eps_floor))[1]
+        return self.bloom_geometry(n, eff_eps)[1]
+
+    def fence_view(self, level: int) -> tuple[int, int]:
+        """(stride, mu_eff) — the read-side fence view of `level`.
+
+        Fences are built at the finest granularity (every mu slots); a
+        stride > 1 consults every stride-th fence with an (mu*stride)-wide
+        page window. Clamped so the window never exceeds the level
+        capacity."""
+        stride = min(self.fence_stride, max(1, self.n_fences(level)))
+        return stride, self.mu * stride

@@ -6,6 +6,8 @@ Layer map (DESIGN.md has the full tour):
   levels.py     — disk-tier state: runs, Bloom filters, fences, min/max
   compaction.py — the Do-Merge cascade ops + tiering/leveling policies
   scheduler.py  — the cascade as paced, bounded MergeSteps (merge_budget)
+  tuner.py      — adaptive memory/filter tuner: one byte budget moved
+                  between write buffer, per-level Bloom bits, and fences
   read_path.py  — dense + Bloom-compacted lookups, range queries
   engine.py     — the host-side `SLSM` driver
   sharded.py    — S hash-partitioned trees in one vmapped pytree
@@ -30,3 +32,6 @@ from repro.engine.scheduler import (MergeScheduler, MergeStep,  # noqa: F401
                                     Occupancy, backlog_cost, pending_steps,
                                     step_cost)
 from repro.engine.sharded import ShardedSLSM, shard_ids  # noqa: F401
+from repro.engine.tuner import (Allocation, ReadModePolicy,  # noqa: F401
+                                Tuner, allocation_bytes, build_presets,
+                                monkey_eps_per_level, retune_filters)

@@ -43,6 +43,10 @@ def fence_window_idx(queries: jax.Array, fences: jax.Array, keys: jax.Array,
     the hit, or -1."""
     f = jnp.searchsorted(fences, queries, side="right").astype(I32) - 1
     start = jnp.clip(f, 0, fences.shape[0] - 1) * mu
+    # strided fence views (mu = base_mu * stride, DESIGN.md §9) can leave
+    # a partial last page: pin the window inside the run so dynamic_slice
+    # cannot silently shift it out from under the returned index
+    start = jnp.minimum(start, keys.shape[0] - mu)
 
     def one(st, q):
         win = jax.lax.dynamic_slice(keys, (st,), (mu,))
@@ -59,7 +63,10 @@ def fence_window_idx(queries: jax.Array, fences: jax.Array, keys: jax.Array,
 class OpsBackend:
     """The three hot primitives the engine dispatches on.
 
-    bloom_probe_many:  (blooms (D, W) u32, qs (Q,) i32, k)        -> (D, Q) bool
+    bloom_probe_many:  (blooms (D, W) u32, qs (Q,) i32, k, bits) -> (D, Q) bool
+                       `bits` = effective filter width (static, <= W*32):
+                       the per-level bit allocation (DESIGN.md §9); None
+                       probes the whole physical bitset.
     fence_lookup_many: (qs (Q,), fences (D, F), keys (D, cap),
                         counts (D,), mu)                          -> (D, Q) i32 idx | -1
     merge_runs:        (keys (k, cap), vals, seqs, drop: bool)    -> (keys, vals,
@@ -73,8 +80,8 @@ class OpsBackend:
 
 # -- jnp reference backend ---------------------------------------------------
 
-def _jnp_bloom_many(blooms, qs, k: int):
-    return jax.vmap(lambda w: BL.bloom_probe(w, qs, k))(blooms)
+def _jnp_bloom_many(blooms, qs, k: int, bits: int | None = None):
+    return jax.vmap(lambda w: BL.bloom_probe(w, qs, k, bits))(blooms)
 
 
 def _jnp_fence_many(qs, fences, keys, counts, mu: int):
@@ -96,9 +103,9 @@ JNP_BACKEND = OpsBackend(
 # each kernel keeps its run VMEM-resident across the query grid, so one
 # pallas_call per run is the natural launch shape.
 
-def _pallas_bloom_many(blooms, qs, k: int):
+def _pallas_bloom_many(blooms, qs, k: int, bits: int | None = None):
     from repro.kernels.bloom_probe import bloom_probe_op
-    return jnp.stack([bloom_probe_op(blooms[d], qs, k)
+    return jnp.stack([bloom_probe_op(blooms[d], qs, k, bits)
                       for d in range(blooms.shape[0])])
 
 
@@ -125,18 +132,21 @@ BACKENDS = {"jnp": JNP_BACKEND, "pallas": PALLAS_BACKEND}
 
 
 def candidate_gate(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
-                   mins: jax.Array, maxs: jax.Array, k: int) -> jax.Array:
+                   mins: jax.Array, maxs: jax.Array, k: int,
+                   bits: int | None = None) -> jax.Array:
     """(D, Q) candidate mask over one level's runs: min/max window AND
     Bloom positive (paper 2.3). The single source of the gating invariant
     — both the dense path (via `lookup_level_many`) and the sparse path
-    (via `read_path.level_gate`) use it."""
+    (via `read_path.level_gate`) use it. `bits` is the level's effective
+    filter width (None = the physical array, the static-mode default)."""
     inwin = (qs[None, :] >= mins[:, None]) & (qs[None, :] <= maxs[:, None])
-    return inwin & be.bloom_probe_many(blooms, qs, k).astype(bool)
+    return inwin & be.bloom_probe_many(blooms, qs, k, bits).astype(bool)
 
 
 def lookup_level_many(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
                       mins: jax.Array, maxs: jax.Array, fences: jax.Array,
-                      keys: jax.Array, counts: jax.Array, k: int, mu: int):
+                      keys: jax.Array, counts: jax.Array, k: int, mu: int,
+                      bits: int | None = None):
     """One fused candidate pass over all D runs of a level for Q queries.
 
     This is the batched read fast path's per-level body: a single
@@ -150,12 +160,14 @@ def lookup_level_many(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
     ``idx`` is clamped to a gatherable element index (only meaningful
     where ``hit``).
     """
-    gate = candidate_gate(be, qs, blooms, mins, maxs, k)
+    gate = candidate_gate(be, qs, blooms, mins, maxs, k, bits)
     idx = be.fence_lookup_many(qs, fences, keys, counts, mu)
     return gate & (idx >= 0), jnp.maximum(idx, 0)
 
 
 def get_backend(name: str) -> OpsBackend:
+    """Resolve `SLSMParams.backend` to its `OpsBackend` record ("jnp" |
+    "pallas"); raises ValueError for unknown names."""
     try:
         return BACKENDS[name]
     except KeyError:

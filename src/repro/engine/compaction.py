@@ -49,10 +49,17 @@ class CompactionPolicy:
     def validate(self, p: SLSMParams) -> None:
         """Raise if the parameter geometry cannot support this policy."""
 
-    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+    def needs_spill(self, p: SLSMParams, n_runs: int,
+                    level: int = 0) -> bool:
+        """Should a level holding `n_runs` runs be merged down? `level`
+        lets depth-aware policies (the tuner's read-mode overlay) treat
+        shallow and deep tiers differently; the paper's policies ignore
+        it."""
         raise NotImplementedError
 
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        """How many of the level's oldest runs one spill moves down
+        (jit-static: each distinct value is its own merge program)."""
         raise NotImplementedError
 
     def spill_sizes(self, p: SLSMParams) -> tuple:
@@ -71,10 +78,12 @@ class TieringPolicy(CompactionPolicy):
 
     name = "tiering"
 
-    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+    def needs_spill(self, p: SLSMParams, n_runs: int,
+                    level: int = 0) -> bool:
         return n_runs >= p.D
 
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        """The paper's ceil(m*D) oldest runs (2.5), regardless of depth."""
         return p.disk_runs_merged
 
     def spill_sizes(self, p: SLSMParams) -> tuple:
@@ -107,10 +116,12 @@ class LevelingPolicy(CompactionPolicy):
                 f"fits the next level's run capacity (ceil(m*D)="
                 f"{p.disk_runs_merged}, max_resident={self.max_resident})")
 
-    def needs_spill(self, p: SLSMParams, n_runs: int) -> bool:
+    def needs_spill(self, p: SLSMParams, n_runs: int,
+                    level: int = 0) -> bool:
         return n_runs >= self.max_resident
 
     def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        """All resident runs: a leveling spill leaves its level empty."""
         return n_runs
 
     def spill_sizes(self, p: SLSMParams) -> tuple:
@@ -125,9 +136,12 @@ class LevelingPolicy(CompactionPolicy):
 
 def merge_buffer_to_level0_impl(p: SLSMParams, state: SLSMState,
                                 drop_tombstones: bool) -> SLSMState:
-    """Flush ceil(m*R) oldest memory runs into disk level 0 (paper 2.1/2.5)."""
+    """Flush ceil(m*R_eff) oldest memory runs into disk level 0 (paper
+    2.1/2.5). R_eff == R unless the tuner's write-buffer arm shrank the
+    active buffer (DESIGN.md §9); level-0 capacity is sized from the
+    physical R, so a smaller flush always fits."""
     be = get_backend(p.backend)
-    mr = p.runs_merged
+    mr = p.runs_merged_eff
     k, v, s, cnt = be.merge_runs(state.buf_keys[:mr], state.buf_vals[:mr],
                                  state.buf_seqs[:mr], drop_tombstones)
     k, v, s, filt, fences, mn, mx = index_new_run(p, 0, k, v, s, cnt)

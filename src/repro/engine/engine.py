@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import collections
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -21,17 +22,44 @@ from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
 from repro.engine.backend import get_backend
 from repro.engine.compaction import CompactionPolicy, TieringPolicy
 from repro.engine.memtable import init_state, stage_append
-from repro.engine.read_path import (bucket_pow2, lookup_batch, lookup_many,
-                                    range_query)
+from repro.engine.read_path import (bucket_pow2, level_probe_stats,
+                                    lookup_batch, lookup_many, range_query)
 from repro.engine.scheduler import MergeScheduler
+from repro.engine.tuner import READ, ReadModePolicy, Tuner, retune_filters
+
+
+def _pad_to(qs: np.ndarray, width: int) -> np.ndarray:
+    """Pad a query vector with KEY_EMPTY to `width` lanes."""
+    out = np.full(width, KEY_EMPTY, np.int32)
+    out[:len(qs)] = qs
+    return out
 
 
 def _pad_pow2(qs: np.ndarray) -> np.ndarray:
     """Pad a query vector with KEY_EMPTY to its `bucket_pow2` width, so
     repeated mixed-size batches hit O(log Q) compiled programs."""
-    out = np.full(bucket_pow2(len(qs)), KEY_EMPTY, np.int32)
-    out[:len(qs)] = qs
-    return out
+    return _pad_to(qs, bucket_pow2(len(qs)))
+
+
+# fixed width of the tuner's sampled probe-telemetry dispatch: one shape
+# -> one compiled level_probe_stats program per (allocation, structure)
+PROBE_SAMPLE = 256
+
+# adaptive engines quantize batched-lookup lanes to this coarse bucket
+# set: every preset allocation is its own static-param read program, so
+# the bucket set must stay small enough for warm() to precompile the
+# whole (preset x structure x bucket) grid — a retune must never leave
+# an unwarmed shape for a timed read to trip over
+ADAPTIVE_BUCKETS = (256, 1024, 4096)
+
+
+def _adaptive_bucket(n: int) -> int:
+    """Smallest warmed adaptive bucket holding n lanes (pow2 past the
+    largest, for callers exceeding the warmed grid)."""
+    for b in ADAPTIVE_BUCKETS:
+        if n <= b:
+            return b
+    return bucket_pow2(n)
 
 
 def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
@@ -74,12 +102,20 @@ class SLSM:
         self.policy = policy or TieringPolicy()
         self.policy.validate(self.p)
         self.state = init_state(self.p)
+        # p_active = the tuner's current allocation applied to p (same
+        # physical geometry, possibly different effective filter/buffer/
+        # fence view); == p forever under static tuning (DESIGN.md §9)
+        self.p_active = self.p
+        self.tuner = Tuner(self)
+        self._read_policy = ReadModePolicy()
         self.scheduler = MergeScheduler(self)
         # maintenance counters (the bench runner's merge-count trajectory);
         # backlog_peak = most pending merge steps ever observed at a chunk
-        # boundary (0 in synchronous mode only if no step was ever deferred)
+        # boundary (0 in synchronous mode only if no step was ever
+        # deferred); reads/writes feed the tuner's workload-mix signal
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
-                                         compactions=0, backlog_peak=0)
+                                         compactions=0, backlog_peak=0,
+                                         retunes=0, reads=0, writes=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -97,6 +133,8 @@ class SLSM:
     def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
         """Post-validation write path (delete() enters here: its tombstone
         values are the engine's own, not user data)."""
+        self.stats["writes"] += len(keys)
+        self.tuner.note_writes(len(keys))
         rn = self.p.Rn
         for off in range(0, len(keys), rn):
             ck, cv = keys[off:off + rn], vals[off:off + rn]
@@ -104,8 +142,9 @@ class SLSM:
             if n < rn:
                 ck = np.pad(ck, (0, rn - n), constant_values=KEY_EMPTY)
                 cv = np.pad(cv, (0, rn - n))
-            self.state = stage_append(self.p, self.state, jnp.asarray(ck),
-                                      jnp.asarray(cv), jnp.int32(n))
+            self.state = stage_append(self.p_active, self.state,
+                                      jnp.asarray(ck), jnp.asarray(cv),
+                                      jnp.int32(n))
             self.scheduler.on_chunk()
 
     def delete(self, keys) -> None:
@@ -124,23 +163,68 @@ class SLSM:
         retires them; drain only completes the deferred work)."""
         self.scheduler.drain()
 
-    def warm(self) -> None:
+    def warm(self, buckets: tuple = ADAPTIVE_BUCKETS) -> None:
         """Precompile the engine's full maintenance program set, so no
         insert chunk ever pays a first-use jit compile (the other — and
         at bench scale dominant — write-stall source besides cascade
         work; see MergeScheduler.warm). Optional; call before
-        latency-sensitive serving."""
+        latency-sensitive serving.
+
+        Also precompile the *read* programs (batched lookup per `bucket`,
+        the single-key shape) for every levels-structure the engine can
+        grow into, so mid-stream level materialization never drops a
+        compile into a live lookup. With adaptive tuning the grid spans
+        every preset allocation — a retune swaps jit-static params, and
+        without this the first read after a switch would pay the compile
+        the pacing budget cannot flatten — plus the probe-telemetry
+        pass."""
         self.scheduler.warm()
+        if self.tuner.enabled:
+            param_sets = [alloc.apply(self.p)
+                          for alloc in self.tuner.presets.values()]
+        else:
+            param_sets = [self.p]
+        skip = self.tuner.enabled
+        outs = []
+        for pa in param_sets:
+            for n_levels in range(self.p.max_levels + 1):
+                st = init_state(pa, n_levels)
+                for b in buckets:
+                    qs = jnp.zeros((b,), jnp.int32)
+                    outs.append(lookup_many(pa, st, qs, jnp.int32(0),
+                                            False, skip))
+                outs.append(lookup_batch(pa, st, jnp.zeros((1,), jnp.int32),
+                                         False, skip))
+                if skip:
+                    outs.append(level_probe_stats(
+                        pa, st, jnp.zeros((PROBE_SAMPLE,), jnp.int32)))
+        jax.block_until_ready(outs)
 
     # -- read path ----------------------------------------------------------
+    def _on_reads(self, qs: np.ndarray) -> None:
+        """Feed the tuner's workload signal: count the reads, stash the
+        batch for write-boundary probe telemetry, and roll the
+        controller (scheduler.on_read — decision-only; retunes and
+        merges bind at the next write chunk or at drain(), so a lookup
+        never absorbs maintenance work). Inert under static tuning."""
+        self.stats["reads"] += qs.size
+        t = self.tuner
+        if not t.enabled:
+            return
+        t.note_reads(qs.size)
+        t.last_queries = qs[:PROBE_SAMPLE].copy()
+        self.scheduler.on_read()
+
     def lookup(self, keys, sparse: bool = False):
         """Point lookups (paper 2.7): newest-to-oldest across stage, memory
         runs, then Bloom/fence-gated disk levels. Compiles one program per
         distinct query-array shape — prefer `lookup_many` for mixed sizes."""
         qs_np = np.asarray(keys, np.int32).reshape(-1)
         reject_reserved(qs_np, op="lookup")
+        self._on_reads(qs_np)
         qs = jnp.asarray(qs_np)
-        vals, found = lookup_batch(self.p, self.state, qs, sparse)
+        vals, found = lookup_batch(self.p_active, self.state, qs, sparse,
+                                   self.tuner.enabled)
         return np.asarray(vals), np.asarray(found)
 
     def lookup_many(self, keys, sparse: bool = False):
@@ -153,9 +237,13 @@ class SLSM:
         reject_reserved(qs, op="lookup_many")
         if qs.size == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
-        vals, found = lookup_many(self.p, self.state,
-                                  jnp.asarray(_pad_pow2(qs)),
-                                  jnp.int32(qs.size), sparse)
+        self._on_reads(qs)
+        width = (_adaptive_bucket(qs.size) if self.tuner.enabled
+                 else bucket_pow2(qs.size))
+        vals, found = lookup_many(self.p_active, self.state,
+                                  jnp.asarray(_pad_to(qs, width)),
+                                  jnp.int32(qs.size), sparse,
+                                  self.tuner.enabled)
         return np.asarray(vals)[:qs.size], np.asarray(found)[:qs.size]
 
     def range(self, lo: int, hi: int, return_truncated: bool = False):
@@ -163,11 +251,48 @@ class SLSM:
         dropped, key-sorted; truncated at `max_range` results. With
         `return_truncated`, also returns whether the [lo, hi) window held
         more than max_range live keys (the result is exact iff False)."""
-        k, v, c, trunc = range_query(self.p, self.state, jnp.int32(lo),
+        k, v, c, trunc = range_query(self.p_active, self.state, jnp.int32(lo),
                                      jnp.int32(hi))
         c = int(c)
         out = np.asarray(k)[:c], np.asarray(v)[:c]
         return out + (bool(trunc),) if return_truncated else out
+
+    # -- tuner plumbing ----------------------------------------------------
+    def sample_probe_stats(self) -> None:
+        """Dispatch one per-level probe-telemetry pass over the most
+        recent read batch (read_path.level_probe_stats). Called by the
+        scheduler at write-chunk boundaries — alongside the maintenance
+        work — so the instrumented dispatch never inflates a lookup's
+        latency."""
+        qs = self.tuner.last_queries
+        if qs is None:
+            return
+        sample = np.full(PROBE_SAMPLE, KEY_EMPTY, np.int32)
+        sample[:min(PROBE_SAMPLE, qs.size)] = qs[:PROBE_SAMPLE]
+        c, h = level_probe_stats(self.p_active, self.state,
+                                 jnp.asarray(sample))
+        self.tuner.note_probe_stats(c, h)
+
+    @property
+    def policy_active(self):
+        """Compaction policy under the current allocation: the configured
+        policy, or the eager `ReadModePolicy` while the read-optimized
+        allocation is active (fold structure down so the occupancy-masked
+        read path probes less — DESIGN.md §9)."""
+        if self.tuner.enabled and self.tuner.active == READ:
+            return self._read_policy
+        return self.policy
+
+    def apply_retune(self) -> None:
+        """The device half of a scheduler RETUNE step: swap the active
+        parameter set to the tuner's target allocation and rebuild every
+        resident Bloom filter under it in one jitted dispatch
+        (tuner.retune_filters). Runs written afterwards pick up the new
+        geometry at their own construction (levels.index_new_run)."""
+        alloc = self.tuner.allocation(self.tuner.target)
+        self.p_active = alloc.apply(self.p)
+        self.state = retune_filters(self.p_active, self.state)
+        self.tuner.applied()
 
     # -- stats ----------------------------------------------------------------
     @property

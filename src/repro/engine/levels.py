@@ -36,7 +36,7 @@ def empty_level(p: SLSMParams, level: int) -> LevelState:
     """Fresh all-empty tier with `level_cap(level)` geometry (paper 2.4:
     level capacities grow geometrically, O((mD)^k) elements at level k)."""
     cap = p.level_cap(level)
-    _, w, _ = p.bloom_geometry(cap)
+    w = p.bloom_words_physical(cap, p.level_eps(level))
     return LevelState(
         keys=jnp.full((p.D, cap), KEY_EMPTY, I32),
         vals=jnp.zeros((p.D, cap), I32),
@@ -52,9 +52,17 @@ def empty_level(p: SLSMParams, level: int) -> LevelState:
 
 def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
     """Pad a merged run to level capacity; build its Bloom filter and
-    min/max index (paper 2.3) and fence pointers every mu slots (2.4)."""
+    min/max index (paper 2.3) and fence pointers every mu slots (2.4).
+
+    The filter is built at `level`'s *effective* geometry (the current
+    allocation's per-level bits/k, DESIGN.md §9) inside the physically
+    allocated word array — this is the rebuild-on-spill path: every run a
+    merge writes automatically carries the latest allocation's filter.
+    Fences are always built at the finest granularity (every mu slots);
+    `fence_stride` is a read-side view and costs nothing to retune."""
     cap = p.level_cap(level)
-    _, w, kk = p.bloom_geometry(cap)
+    bits, _, kk = p.bloom_geometry(cap, p.level_eps(level))
+    w = p.bloom_words_physical(cap, p.level_eps(level))
     pad = cap - k.shape[0]
     if pad > 0:
         k = jnp.concatenate([k, jnp.full((pad,), KEY_EMPTY, I32)])
@@ -62,7 +70,7 @@ def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
         s = jnp.concatenate([s, jnp.zeros((pad,), I32)])
     elif pad < 0:  # deepest-level compaction scratch is larger than cap
         k, v, s = k[:cap], v[:cap], s[:cap]
-    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk)
+    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk, bits)
     fences = RU.build_fences(k, p.mu, p.n_fences(level))
     mn, mx = RU.run_minmax(k, cnt)
     return k, v, s, filt, fences, mn, mx

@@ -51,7 +51,7 @@ def init_state(p: SLSMParams, n_levels: int = 0) -> SLSMState:
     the single-tree driver grows them lazily (n_levels=0, the paper's
     unbounded growth up to max_levels); the sharded engine preallocates
     all of them so every shard shares one pytree structure."""
-    _, wb, _ = p.bloom_geometry(p.Rn)
+    wb = p.bloom_words_physical(p.Rn, p.mem_eps)
     return SLSMState(
         stage_keys=jnp.full((p.stage_cap,), KEY_EMPTY, I32),
         stage_vals=jnp.zeros((p.stage_cap,), I32),
@@ -112,11 +112,12 @@ def seal_run_impl(p: SLSMParams, state: SLSMState) -> SLSMState:
     moment the active skiplist becomes an immutable sorted run.
     """
     rn = p.Rn
-    _, wb, kk = p.bloom_geometry(rn)
+    bits, _, kk = p.bloom_geometry(rn, p.mem_eps)
+    wb = p.bloom_words_physical(rn, p.mem_eps)
     rk, rv, rs = (state.stage_keys[:rn], state.stage_vals[:rn],
                   state.stage_seqs[:rn])
     slot = state.run_count
-    filt = BL.bloom_build(rk, jnp.ones((rn,), bool), wb, kk)
+    filt = BL.bloom_build(rk, jnp.ones((rn,), bool), wb, kk, bits)
     empty_tail = jnp.full((rn,), KEY_EMPTY, I32)
     return state._replace(
         stage_keys=jnp.concatenate([state.stage_keys[rn:], empty_tail]),

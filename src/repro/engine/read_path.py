@@ -92,21 +92,30 @@ def search_memory_runs(state: SLSMState, qs: jax.Array):
 def level_gate(p: SLSMParams, lv: LevelState, level: int, qs: jax.Array):
     """(D, Q) candidate mask: min/max window AND Bloom positive (paper
     2.3). Delegates to `backend.candidate_gate` — the same invariant the
-    dense path's fused `lookup_level_many` applies."""
+    dense path's fused `lookup_level_many` applies. Probes at `level`'s
+    *effective* bit width/k (the current allocation, DESIGN.md §9)."""
     be = get_backend(p.backend)
-    _, _, kk = p.bloom_geometry(p.level_cap(level))
-    return candidate_gate(be, qs, lv.blooms, lv.mins, lv.maxs, kk)
+    bits, _, kk = p.bloom_geometry(p.level_cap(level), p.level_eps(level))
+    return candidate_gate(be, qs, lv.blooms, lv.mins, lv.maxs, kk, bits)
 
 
 def search_level_dense(p: SLSMParams, lv: LevelState, level: int,
                        qs: jax.Array):
     """Exact disk-level search: one fused Bloom-probe + fence-search pass
     over all (run, query) pairs (`backend.lookup_level_many`), then a
-    per-query newest-wins argmax across the level's D runs (paper 2.7)."""
+    per-query newest-wins argmax across the level's D runs (paper 2.7).
+
+    The Bloom probe uses the level's effective bit allocation and the
+    fence search the effective stride view (every stride-th fence, an
+    (mu*stride)-wide page window) — both static per allocation, so a
+    retune swaps compiled programs, never array shapes."""
     be = get_backend(p.backend)
-    _, _, kk = p.bloom_geometry(p.level_cap(level))
+    bits, _, kk = p.bloom_geometry(p.level_cap(level), p.level_eps(level))
+    stride, mu_eff = p.fence_view(level)
+    fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
     hit, idxc = lookup_level_many(be, qs, lv.blooms, lv.mins, lv.maxs,
-                                  lv.fences, lv.keys, lv.counts, kk, p.mu)
+                                  fences, lv.keys, lv.counts, kk, mu_eff,
+                                  bits)
     seqs_d = jnp.where(hit, jnp.take_along_axis(lv.seqs, idxc, axis=1),
                        SEQ_NONE)
     vals_d = jnp.where(hit, jnp.take_along_axis(lv.vals, idxc, axis=1), 0)
@@ -135,14 +144,20 @@ def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
     ok = d_idx >= 0
     d_c, q_c = jnp.maximum(d_idx, 0), jnp.maximum(q_idx, 0)
     qk = qs[q_c]
+    stride, mu_eff = p.fence_view(level)
+    fences_v = lv.fences[:, ::stride] if stride > 1 else lv.fences
 
     def one(d, q):
-        f = jnp.searchsorted(lv.fences[d], q, side="right").astype(I32) - 1
-        st = jnp.clip(f, 0, lv.fences.shape[1] - 1) * p.mu
-        win = jax.lax.dynamic_slice(lv.keys, (d, st), (1, p.mu))[0]
+        f = jnp.searchsorted(fences_v[d], q, side="right").astype(I32) - 1
+        st = jnp.clip(f, 0, fences_v.shape[1] - 1) * mu_eff
+        # last effective fence of a non-divisible stride: pin the window
+        # inside the run so dynamic_slice cannot silently shift it (the
+        # widened window still covers the whole partial fence group)
+        st = jnp.minimum(st, lv.keys.shape[1] - mu_eff)
+        win = jax.lax.dynamic_slice(lv.keys, (d, st), (1, mu_eff))[0]
         off = jnp.searchsorted(win, q).astype(I32)
-        offc = jnp.minimum(off, p.mu - 1)
-        hit = (off < p.mu) & (win[offc] == q) & (st + offc < lv.counts[d])
+        offc = jnp.minimum(off, mu_eff - 1)
+        hit = (off < mu_eff) & (win[offc] == q) & (st + offc < lv.counts[d])
         idx = st + offc
         return (jnp.where(hit, lv.seqs[d, idx], SEQ_NONE),
                 jnp.where(hit, lv.vals[d, idx], 0))
@@ -158,30 +173,63 @@ def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
     return best_seq, best_val
 
 
+def _skip_if_empty(occupied, search_fn, q_n: int):
+    """Runtime gate around one structure's search: `lax.cond` skips the
+    whole fused pass when the structure holds nothing *right now*.
+
+    Exact — an empty structure can only contribute misses (every hit
+    requires ``idx < count``) — and traced, so occupancy changes never
+    recompile: one program serves every occupancy. The adaptive tuner's
+    read-optimized maintenance folds structures empty precisely so this
+    gate can skip them (DESIGN.md §9). Under vmap (the sharded path) the
+    cond lowers to a select that computes both branches — no win, no
+    loss vs the ungated pass."""
+    return jax.lax.cond(
+        occupied, search_fn,
+        lambda: (jnp.full((q_n,), SEQ_NONE, I32), jnp.zeros((q_n,), I32)))
+
+
 def lookup_batch_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
-                      sparse: bool = False):
+                      sparse: bool = False, skip_empty: bool = False):
     """Point lookups, newest-to-oldest across every structure (paper 2.7).
 
     Returns (vals, found). Tombstoned keys report found=False (paper 2.8).
+
+    ``skip_empty`` (static; the adaptive tuner's read path sets it) wraps
+    the memory-run search and each disk level's pass in a traced
+    occupancy gate (`_skip_if_empty`) so a collapsed structure costs
+    nothing at run time. False — the static-mode default — emits exactly
+    the pre-tuner program.
     """
     qs = qs.astype(I32)
+    q_n = qs.shape[0]
     best_seq, best_val = search_stage(state, qs)
-    s2, v2 = search_memory_runs(state, qs)
+    if skip_empty:
+        s2, v2 = _skip_if_empty(state.run_count > 0,
+                                lambda: search_memory_runs(state, qs), q_n)
+    else:
+        s2, v2 = search_memory_runs(state, qs)
     best_seq, best_val = consider(best_seq, best_val, s2, v2)
     for level, lv in enumerate(state.levels):
         fn = search_level_sparse if sparse else search_level_dense
-        s3, v3 = fn(p, lv, level, qs)
+        if skip_empty:
+            s3, v3 = _skip_if_empty(
+                lv.n_runs > 0,
+                functools.partial(fn, p, lv, level, qs), q_n)
+        else:
+            s3, v3 = fn(p, lv, level, qs)
         best_seq, best_val = consider(best_seq, best_val, s3, v3)
     found = (best_seq >= 0) & (best_val != TOMBSTONE)
     return jnp.where(found, best_val, 0), found
 
 
 lookup_batch = functools.partial(
-    jax.jit, static_argnums=(0, 3))(lookup_batch_impl)
+    jax.jit, static_argnums=(0, 3, 4))(lookup_batch_impl)
 
 
 def lookup_many_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
-                     n_valid: jax.Array, sparse: bool = False):
+                     n_valid: jax.Array, sparse: bool = False,
+                     skip_empty: bool = False):
     """Padded-batch point lookup: the batched multi-key fast path.
 
     Semantically `lookup_batch_impl` over ``qs[:n_valid]``, but ``qs`` is
@@ -194,14 +242,46 @@ def lookup_many_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
     fence-search dispatch (paper 2.3/2.4 via `backend.lookup_level_many`);
     padded lanes report ``found=False, val=0``.
     """
-    vals, found = lookup_batch_impl(p, state, qs, sparse)
-    live = jnp.arange(qs.shape[0], dtype=I32) < n_valid
-    found = found & live
+    vals, found = lookup_batch_impl(p, state, qs, sparse, skip_empty)
+    lane = jnp.arange(qs.shape[0], dtype=I32) < n_valid
+    found = found & lane
     return jnp.where(found, vals, 0), found
 
 
 lookup_many = functools.partial(
-    jax.jit, static_argnums=(0, 4))(lookup_many_impl)
+    jax.jit, static_argnums=(0, 4, 5))(lookup_many_impl)
+
+
+def level_probe_stats_impl(p: SLSMParams, state: SLSMState, qs: jax.Array):
+    """Per-level read telemetry for the tuner (DESIGN.md §9).
+
+    Returns ``(candidates, hits)``, each ``(max_levels,)`` int32: per disk
+    level, how many (run, query) pairs passed the min/max + Bloom gate
+    (paper 2.3) and how many of those were true key matches. The gap is
+    the level's observed false-positive traffic. The tuner uses the
+    totals to gate its read-optimized switch (folding structure only
+    pays when reads actually reach the disk levels) and exports the
+    per-level FP fractions in the BENCH tuner telemetry. Levels not yet
+    materialized report zeros. Dispatched on a *sample* of the query
+    stream at write boundaries (the hot lookup path stays untouched).
+    """
+    qs = qs.astype(I32)
+    be = get_backend(p.backend)
+    cands = [jnp.zeros((), I32)] * p.max_levels
+    hits = [jnp.zeros((), I32)] * p.max_levels
+    for level, lv in enumerate(state.levels):
+        bits, _, kk = p.bloom_geometry(p.level_cap(level), p.level_eps(level))
+        stride, mu_eff = p.fence_view(level)
+        fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
+        gate = candidate_gate(be, qs, lv.blooms, lv.mins, lv.maxs, kk, bits)
+        idx = be.fence_lookup_many(qs, fences, lv.keys, lv.counts, mu_eff)
+        cands[level] = gate.sum(dtype=I32)
+        hits[level] = (gate & (idx >= 0)).sum(dtype=I32)
+    return jnp.stack(cands), jnp.stack(hits)
+
+
+level_probe_stats = functools.partial(
+    jax.jit, static_argnums=0)(level_probe_stats_impl)
 
 
 # --------------------------------------------------------------------------

@@ -44,6 +44,16 @@ Pacing invariants (DESIGN.md §8):
 Tombstone elision stays the host decision it was in the synchronous
 cascade: a step drops tombstones iff its output becomes the deepest data
 *at the moment the step runs* (paper 2.5/2.8).
+
+The adaptive tuner (repro.engine.tuner, DESIGN.md §9) rides this same
+machinery: a decided allocation switch surfaces as a fifth step kind,
+
+  retune   — rebuild every resident filter under the new allocation
+             (tuner.retune_filters) and swap the driver's active params
+
+which is paced, drained, and telemetered exactly like a merge. With the
+default static tuning policy no RETUNE step ever becomes pending and
+the scheduler is bit-identical to its pre-tuner behaviour.
 """
 from __future__ import annotations
 
@@ -59,6 +69,7 @@ from repro.engine.levels import empty_level
 from repro.engine.memtable import init_state, seal_run, stage_append
 
 SEAL, FLUSH, SPILL, COMPACT = "seal", "flush", "spill", "compact"
+RETUNE = "retune"
 
 
 class Occupancy(NamedTuple):
@@ -86,15 +97,20 @@ def step_order(p: SLSMParams) -> List[Tuple[str, int]]:
 
 def step_pending(kind: str, level: int, occ: Occupancy, p: SLSMParams,
                  policy: CompactionPolicy) -> bool:
-    """Does this step have work queued under the current occupancy?"""
+    """Does this step have work queued under the current occupancy?
+
+    (RETUNE pendingness lives on the tuner, not the occupancy — it is
+    injected by `pending_steps(..., retune=True)`.)"""
     if kind == SEAL:
         return occ.stage_count >= p.Rn
     if kind == FLUSH:
-        return occ.run_count >= p.R
+        # flush becomes *pending* at the tuner's effective buffer size;
+        # only run_count >= R (physical slots exhausted) ever *forces* it
+        return occ.run_count >= p.R_eff
     # spill/compact: the level must exist and the policy must want it moved
     if level >= len(occ.level_runs):
         return False
-    return policy.needs_spill(p, occ.level_runs[level])
+    return policy.needs_spill(p, occ.level_runs[level], level)
 
 
 def step_ready(kind: str, level: int, occ: Occupancy, p: SLSMParams,
@@ -105,15 +121,15 @@ def step_ready(kind: str, level: int, occ: Occupancy, p: SLSMParams,
     if kind == SEAL:
         return occ.stage_count >= p.Rn and occ.run_count < p.R
     if kind == FLUSH:
-        if occ.run_count < p.runs_merged:
+        if occ.run_count < p.runs_merged_eff:
             return False
         return (len(occ.level_runs) == 0
-                or not policy.needs_spill(p, occ.level_runs[0]))
-    if kind == COMPACT:
+                or not policy.needs_spill(p, occ.level_runs[0], 0))
+    if kind in (COMPACT, RETUNE):
         return True
     dst = level + 1
     return (dst >= len(occ.level_runs)      # destination grown on demand
-            or not policy.needs_spill(p, occ.level_runs[dst]))
+            or not policy.needs_spill(p, occ.level_runs[dst], dst))
 
 
 def step_cost(kind: str, level: int, p: SLSMParams) -> int:
@@ -123,9 +139,12 @@ def step_cost(kind: str, level: int, p: SLSMParams) -> int:
     if kind == SEAL:
         return p.Rn
     if kind == FLUSH:
-        return p.runs_merged * p.Rn
+        return p.runs_merged_eff * p.Rn
     if kind == COMPACT:
         return p.D * p.level_cap(p.max_levels - 1)
+    if kind == RETUNE:   # every resident filter is rebuilt from its keys
+        return p.R * p.Rn + sum(p.D * p.level_cap(lvl)
+                                for lvl in range(p.max_levels))
     return p.disk_runs_merged * p.level_cap(level)
 
 
@@ -137,18 +156,29 @@ class MergeStep(NamedTuple):
     cost: int      # elements touched (step_cost)
 
     def pending(self, occ: Occupancy, p, policy) -> bool:
+        """Does this step have work queued under `occ`? (step_pending)"""
         return step_pending(self.kind, self.level, occ, p, policy)
 
     def ready(self, occ: Occupancy, p, policy) -> bool:
+        """Can this step run now without violating a policy bound?
+        (step_ready)"""
         return step_ready(self.kind, self.level, occ, p, policy)
 
 
 def pending_steps(p: SLSMParams, policy: CompactionPolicy,
-                  occ: Occupancy) -> List[MergeStep]:
-    """The step backlog under `occ`, deepest-first (execution order)."""
-    return [MergeStep(kind, level, step_cost(kind, level, p))
-            for kind, level in step_order(p)
-            if step_pending(kind, level, occ, p, policy)]
+                  occ: Occupancy, retune: bool = False) -> List[MergeStep]:
+    """The step backlog under `occ`, deepest-first (execution order).
+
+    `retune` injects the tuner's pending allocation switch at the head
+    of the backlog (its pendingness lives on the tuner, not in the
+    occupancy): retiring it first means every subsequent merge in the
+    same pass already builds filters at the new allocation."""
+    steps = [MergeStep(kind, level, step_cost(kind, level, p))
+             for kind, level in step_order(p)
+             if step_pending(kind, level, occ, p, policy)]
+    if retune:
+        steps.insert(0, MergeStep(RETUNE, -1, step_cost(RETUNE, -1, p)))
+    return steps
 
 
 def backlog_cost(steps: Sequence[MergeStep]) -> int:
@@ -178,6 +208,23 @@ class MergeScheduler:
     def __init__(self, drv):
         self.drv = drv   # the SLSM driver: .p, .policy, .state, .stats
 
+    @property
+    def p(self) -> SLSMParams:
+        """The driver's *active* parameter set — the current tuner
+        allocation's effective view (== drv.p under static tuning)."""
+        return getattr(self.drv, "p_active", self.drv.p)
+
+    @property
+    def policy(self):
+        """The driver's *active* compaction policy (the eager read-mode
+        overlay while the tuner's read allocation is active; otherwise
+        the configured policy)."""
+        return getattr(self.drv, "policy_active", self.drv.policy)
+
+    def _retune_pending(self) -> bool:
+        tuner = getattr(self.drv, "tuner", None)
+        return bool(tuner is not None and tuner.pending)
+
     # -- step execution (each is one jitted device dispatch) ---------------
 
     def _materialize(self, level: int) -> None:
@@ -187,11 +234,19 @@ class MergeScheduler:
         while len(drv.state.levels) <= level:
             drv.state = drv.state._replace(
                 levels=drv.state.levels
-                + (empty_level(drv.p, len(drv.state.levels)),))
+                + (empty_level(self.p, len(drv.state.levels)),))
 
     def run_step(self, step: MergeStep) -> None:
-        drv, p = self.drv, self.drv.p
-        if step.kind == SEAL:
+        """Execute one step as a single jitted device dispatch (or, for
+        RETUNE, the driver's filter-rebuild + active-params swap) and
+        bump the matching stats counter. The one place steps become
+        state transitions — pacing, forcing, and draining all funnel
+        through here."""
+        drv, p = self.drv, self.p
+        if step.kind == RETUNE:
+            drv.apply_retune()
+            drv.stats["retunes"] += 1
+        elif step.kind == SEAL:
             drv.state = seal_run(p, drv.state)
             drv.stats["seals"] += 1
         elif step.kind == FLUSH:
@@ -203,7 +258,7 @@ class MergeScheduler:
             self._materialize(step.level + 1)
             drv.state = merge_level_down(
                 p, drv.state, step.level,
-                drv.policy.runs_to_spill(
+                self.policy.runs_to_spill(
                     p, int(drv.state.levels[step.level].n_runs)),
                 drop_tombstones_into(drv.state, step.level + 1))
             drv.stats["spills"] += 1
@@ -225,7 +280,7 @@ class MergeScheduler:
         """Guarantee `level` can accept one run, recursing deeper first —
         the legacy `_ensure_space`, expressed in steps. Only runs when
         pacing slack ran out (always, when merge_budget == 0)."""
-        drv, p = self.drv, self.drv.p
+        drv, p = self.drv, self.p
         if level >= p.max_levels:
             raise RuntimeError(
                 "sLSM capacity exceeded: increase max_levels "
@@ -233,7 +288,8 @@ class MergeScheduler:
         if level >= len(drv.state.levels):
             self._materialize(level)
             return
-        if not drv.policy.needs_spill(p, int(drv.state.levels[level].n_runs)):
+        if not self.policy.needs_spill(
+                p, int(drv.state.levels[level].n_runs), level):
             return
         if level == p.max_levels - 1:
             self.run_step(MergeStep(COMPACT, level,
@@ -247,9 +303,9 @@ class MergeScheduler:
     def _next_ready(self):
         """Deepest pending step that is ready under the live occupancy
         (None if the backlog is empty or wholly blocked)."""
-        p, policy = self.drv.p, self.drv.policy
+        p, policy = self.p, self.policy
         occ = occupancy_of(self.drv.state)
-        for step in pending_steps(p, policy, occ):
+        for step in pending_steps(p, policy, occ, self._retune_pending()):
             if step.ready(occ, p, policy):
                 return step
         return None
@@ -261,35 +317,84 @@ class MergeScheduler:
         consequences (a seal filling the buffer, a flush filling level 0)
         can be paid for inside the same chunk while budget remains — the
         same fixpoint semantics the sharded driver's masked pass uses, so
-        equal budgets mean equal pacing on both drivers."""
-        drv, p = self.drv, self.drv.p
-        backlog = pending_steps(p, drv.policy, occupancy_of(drv.state))
+        equal budgets mean equal pacing on both drivers.
+
+        The tuner (if adaptive) decides here, at the chunk boundary; a
+        decided switch joins the backlog as a RETUNE step and is paid
+        for out of the same voluntary budget as any merge. In
+        synchronous mode (merge_budget == 0) the voluntary pass is
+        empty, so a pending retune — like every other piece of
+        maintenance in that mode — runs inline, immediately."""
+        drv, p = self.drv, self.p
+        tuner = getattr(drv, "tuner", None)
+        if tuner is not None:
+            tuner.decide()
+            if tuner.take_probe_sample():
+                sampler = getattr(drv, "sample_probe_stats", None)
+                if sampler is not None:
+                    sampler()
+        backlog = pending_steps(p, self.policy, occupancy_of(drv.state),
+                                self._retune_pending())
         drv.stats["backlog_peak"] = max(drv.stats["backlog_peak"],
                                         len(backlog))
         budget = p.merge_budget
-        while budget > 0:
+        # read-mode catch-up: while the read-optimized allocation is (or
+        # is about to be) active, writes are a trickle and every one of
+        # them is a chance to fold structure the read path then skips —
+        # so the voluntary pass runs to quiescence instead of rationing.
+        # Write-phase pacing (the whole point of merge_budget) is
+        # untouched: catch-up applies only in/INTO read mode — a pending
+        # switch to any other allocation stays budget-paced.
+        catch_up = (budget > 0 and tuner is not None and tuner.enabled
+                    and (tuner.active == "read"
+                         or (tuner.pending and tuner.target == "read")))
+        while budget > 0 or catch_up:
             step = self._next_ready()
             if step is None:
                 break
             self.run_step(step)
             budget -= 1
+        if p.merge_budget == 0 and self._retune_pending():
+            self.run_step(MergeStep(RETUNE, -1, step_cost(RETUNE, -1, p)))
         # forced: the staging buffer must fit the next Rn-chunk
+        p = self.p   # a retune may have swapped the active params
         while int(drv.state.stage_count) >= p.Rn:
             if int(drv.state.run_count) >= p.R:
                 self.force_space(0)
                 self.run_step(MergeStep(FLUSH, -1, step_cost(FLUSH, -1, p)))
             self.run_step(MergeStep(SEAL, -1, step_cost(SEAL, -1, p)))
 
+    def on_read(self) -> None:
+        """Decision boundary on the read path (adaptive tuning only —
+        static engines never reach this, so their read path stays
+        dispatch-for-dispatch identical to the pre-tuner engine).
+
+        Reads only feed and roll the controller; they never *execute*
+        maintenance — decisions bind at merge (write-chunk) boundaries,
+        where `on_chunk` applies the RETUNE step and, in read mode,
+        folds structure at catch-up pace. Keeping execution off the read
+        path means a lookup's latency never absorbs a rebuild or merge:
+        the read phase's trickle of writes is where that work lands.
+        (`drain()` remains the barrier that applies everything,
+        writes or not.)"""
+        tuner = getattr(self.drv, "tuner", None)
+        if tuner is None or not tuner.enabled:
+            return
+        tuner.decide()
+
     def drain(self) -> None:
         """Retire every pending step (the read-equivalence barrier).
 
         Deepest-ready-first until the backlog is empty; progress is
         guaranteed because a deeper step's execution is exactly what
-        readies its shallower dependent."""
+        readies its shallower dependent. A pending allocation switch
+        drains too: after drain() the engine is at rest *under its
+        decided allocation*."""
         drv = self.drv
         while True:
-            backlog = pending_steps(drv.p, drv.policy,
-                                    occupancy_of(drv.state))
+            backlog = pending_steps(self.p, self.policy,
+                                    occupancy_of(drv.state),
+                                    self._retune_pending())
             if not backlog:
                 return
             step = self._next_ready()
@@ -301,8 +406,9 @@ class MergeScheduler:
     @property
     def backlog(self) -> List[MergeStep]:
         """Current pending steps (introspection/telemetry)."""
-        return pending_steps(self.drv.p, self.drv.policy,
-                             occupancy_of(self.drv.state))
+        return pending_steps(self.p, self.policy,
+                             occupancy_of(self.drv.state),
+                             self._retune_pending())
 
     # -- program warm-up ---------------------------------------------------
 
@@ -321,27 +427,46 @@ class MergeScheduler:
         that was paced. One-off; results are discarded; the jit cache is
         process-global, so same-param engines share the warmth.
         """
-        p, policy = self.drv.p, self.drv.policy
-        rn = p.Rn
-        dk = jnp.full((rn,), 0, jnp.int32)
-        dv = jnp.zeros((rn,), jnp.int32)
-        last = p.max_levels - 1
+        from repro.engine.tuner import ReadModePolicy, retune_filters
+        base, policy = self.drv.p, self.drv.policy
+        tuner = getattr(self.drv, "tuner", None)
+        # adaptive tuning: every preset is its own static-param program
+        # set (the allocation is a jit-static argument), so warm each —
+        # an allocation switch must not stall the chunk that pays for it;
+        # the read-mode policy overlay adds its spill sizes to the set
+        adaptive = tuner is not None and tuner.enabled
+        if adaptive:
+            param_sets = [alloc.apply(base)
+                          for alloc in tuner.presets.values()]
+            spill_sizes = sorted(set(policy.spill_sizes(base))
+                                 | set(ReadModePolicy().spill_sizes(base)))
+        else:
+            param_sets = [base]
+            spill_sizes = policy.spill_sizes(base)
+        last = base.max_levels - 1
         outs = []
-        for n_levels in range(p.max_levels + 1):
-            # fresh dummies per call: these ops donate their state operand
-            outs.append(stage_append(p, init_state(p, n_levels), dk, dv,
-                                     jnp.int32(0)))
-            outs.append(seal_run(p, init_state(p, n_levels)))
-            if n_levels == 0:
-                continue
-            for drop in (True, False):
-                outs.append(merge_buffer_to_level0(
-                    p, init_state(p, n_levels), drop))
-            # spill of level l runs after its target l+1 is materialized
-            for lvl in range(min(n_levels - 1, last)):
-                for n_merge in policy.spill_sizes(p):
-                    for drop in (True, False):
-                        outs.append(merge_level_down(
-                            p, init_state(p, n_levels), lvl, n_merge, drop))
-        outs.append(compact_last_level(p, init_state(p, p.max_levels)))
+        for p in param_sets:
+            rn = p.Rn
+            dk = jnp.full((rn,), 0, jnp.int32)
+            dv = jnp.zeros((rn,), jnp.int32)
+            for n_levels in range(p.max_levels + 1):
+                # fresh dummies per call: these ops donate their state
+                outs.append(stage_append(p, init_state(p, n_levels), dk, dv,
+                                         jnp.int32(0)))
+                outs.append(seal_run(p, init_state(p, n_levels)))
+                if len(param_sets) > 1:
+                    outs.append(retune_filters(p, init_state(p, n_levels)))
+                if n_levels == 0:
+                    continue
+                for drop in (True, False):
+                    outs.append(merge_buffer_to_level0(
+                        p, init_state(p, n_levels), drop))
+                # spill of level l runs after its target l+1 materializes
+                for lvl in range(min(n_levels - 1, last)):
+                    for n_merge in spill_sizes:
+                        for drop in (True, False):
+                            outs.append(merge_level_down(
+                                p, init_state(p, n_levels), lvl, n_merge,
+                                drop))
+            outs.append(compact_last_level(p, init_state(p, p.max_levels)))
         jax.block_until_ready(outs)

@@ -49,6 +49,7 @@ from repro.engine import compaction as CP
 from repro.engine import memtable as MT
 from repro.engine import read_path as RP
 from repro.engine import scheduler as SCH
+from repro.engine import tuner as TU
 from repro.engine.backend import get_backend
 from repro.engine.engine import reject_reserved
 
@@ -121,12 +122,23 @@ def _compact_last_where(p: SLSMParams, state, mask):
     return _select(mask, new, state), raw
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _lookup_sharded(p: SLSMParams, state, qs):
-    """qs (S, Q): each shard looks up its own row (dense path)."""
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _lookup_sharded(p: SLSMParams, state, qs, skip_empty: bool = False):
+    """qs (S, Q): each shard looks up its own row (dense path).
+    `skip_empty` passes the adaptive read path's occupancy gate through;
+    under vmap it lowers to a select (see read_path._skip_if_empty), so
+    it is semantics- and cost-neutral here — accepted for driver parity."""
     return jax.vmap(
-        lambda st, q: RP.lookup_batch_impl(p, st, q, sparse=False)
+        lambda st, q: RP.lookup_batch_impl(p, st, q, sparse=False,
+                                           skip_empty=skip_empty)
     )(state, qs)
+
+
+@functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
+def _retune_filters_sharded(p: SLSMParams, state):
+    """Rebuild every shard's resident filters under `p`'s (new) effective
+    allocation — the vmapped device half of a RETUNE (tuner.retune_filters)."""
+    return jax.vmap(lambda st: TU.retune_filters_impl(p, st))(state)
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -150,10 +162,17 @@ class ShardedSLSM:
         self.policy = CP.TieringPolicy()   # the only policy that vmaps
         base = MT.init_state(self.p, n_levels=self.p.max_levels)
         self.state = jax.tree.map(lambda x: jnp.stack([x] * n_shards), base)
+        # the tuner's active allocation applied to p (== p under static
+        # tuning); one allocation governs the whole fleet — the stacked
+        # pytree runs every shard through the same static program, so a
+        # retune is a lockstep swap + one vmapped filter rebuild
+        self.p_active = self.p
+        self.tuner = TU.Tuner(self)
         # maintenance counters, summed over shards (bench trajectory);
         # backlog_peak = most pending steps observed on any ONE shard
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
-                                         compactions=0, backlog_peak=0)
+                                         compactions=0, backlog_peak=0,
+                                         retunes=0, reads=0, writes=0)
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -172,6 +191,8 @@ class ShardedSLSM:
         values are the engine's own, not user data)."""
         if len(keys) == 0:
             return
+        self.stats["writes"] += len(keys)
+        self.tuner.note_writes(len(keys))
         sid = shard_ids(keys, self.S)
         buckets = [(keys[sid == s], vals[sid == s]) for s in range(self.S)]
         rn = self.p.Rn
@@ -186,7 +207,7 @@ class ShardedSLSM:
                 ck[s, :len(seg)] = seg
                 cv[s, :len(seg)] = bv[r * rn:(r + 1) * rn]
             self.state = _stage_append_sharded(
-                self.p, self.state, jnp.asarray(ck), jnp.asarray(cv),
+                self.p_active, self.state, jnp.asarray(ck), jnp.asarray(cv),
                 jnp.asarray(n))
             self._maintain()
 
@@ -210,7 +231,7 @@ class ShardedSLSM:
     def _apply_step(self, kind: str, level: int, mask: np.ndarray) -> None:
         """Run one step kind for every masked shard in a single vmapped
         dispatch; unmasked shards pass through unchanged."""
-        p, jm = self.p, jnp.asarray(mask)
+        p, jm = self.p_active, jnp.asarray(mask)
         if kind == SCH.SEAL:
             self.state = _seal_where(p, self.state, jm)
             self.stats["seals"] += int(mask.sum())
@@ -237,18 +258,34 @@ class ShardedSLSM:
 
     def _step_masks(self, kind: str, level: int, occs) -> np.ndarray:
         """(pending, ready) per-shard masks for one step kind."""
-        p, policy = self.p, self.policy
+        p, policy = self.p_active, self.policy
         pend = np.array([SCH.step_pending(kind, level, o, p, policy)
                          for o in occs], dtype=bool)
         ready = np.array([SCH.step_ready(kind, level, o, p, policy)
                           for o in occs], dtype=bool)
         return pend, pend & ready
 
+    def _apply_retune(self) -> None:
+        """Lockstep allocation switch: swap the fleet's active params and
+        rebuild every shard's filters in one vmapped dispatch. A retune
+        is a *global static swap* (the stacked pytree runs one program),
+        so unlike merges it cannot be per-shard masked — it applies at
+        the round boundary that decided it, whatever the pacing budget."""
+        t = self.tuner
+        self.p_active = t.allocation(t.target).apply(self.p)
+        self.state = _retune_filters_sharded(self.p_active, self.state)
+        t.applied()
+        self.stats["retunes"] += 1
+
     def _maintain(self) -> None:
-        """Per-round scheduler pass: backlog telemetry, budgeted voluntary
-        steps (merge_budget > 0), then the forced chain."""
+        """Per-round scheduler pass: tuner decision (adaptive mode),
+        backlog telemetry, budgeted voluntary steps (merge_budget > 0),
+        then the forced chain."""
+        self.tuner.decide()
+        if self.tuner.pending:
+            self._apply_retune()
         occs = self._occupancies()
-        p, policy = self.p, self.policy
+        p, policy = self.p_active, self.policy
         peak = max(len(SCH.pending_steps(p, policy, o)) for o in occs)
         self.stats["backlog_peak"] = max(self.stats["backlog_peak"], peak)
         if p.merge_budget > 0:
@@ -263,11 +300,11 @@ class ShardedSLSM:
         re-derived after each op, the same fixpoint semantics as the
         single-tree pass. Termination: every iteration that runs an op
         spends at least one unit of a finite budget."""
-        budget = np.full(self.S, self.p.merge_budget, np.int64)
+        budget = np.full(self.S, self.p_active.merge_budget, np.int64)
         while (budget > 0).any():
             occs = self._occupancies()
             ran = False
-            for kind, level in SCH.step_order(self.p):
+            for kind, level in SCH.step_order(self.p_active):
                 _, ready = self._step_masks(kind, level, occs)
                 mask = ready & (budget > 0)
                 if mask.any():
@@ -282,7 +319,7 @@ class ShardedSLSM:
         """Seal/flush/cascade every shard the next round structurally
         requires (the legacy lockstep Do-Merge — the whole of maintenance
         when merge_budget == 0)."""
-        p = self.p
+        p = self.p_active
         while True:
             need_seal = np.asarray(self.state.stage_count) >= p.Rn
             if not need_seal.any():
@@ -296,7 +333,7 @@ class ShardedSLSM:
     def _cascade(self, flush_mask: np.ndarray) -> None:
         """Forced deepest-first spill chain: shard s spills level l+1 only
         if its level-l spill is about to push a run into a full level l+1."""
-        p = self.p
+        p = self.p_active
         spill, mask = [], flush_mask
         for lvl in range(p.max_levels):
             mask = mask & (np.asarray(self.state.levels[lvl].n_runs) >= p.D)
@@ -313,25 +350,35 @@ class ShardedSLSM:
         per step kind — the stacked pytree has a single structure, unlike
         the single tree's lazily grown levels), so no insert round pays a
         first-use jit compile. Masks are all-False: the vmapped ops still
-        compile fully, the dummy state passes through unchanged."""
-        p = self.p
-        base = MT.init_state(p, n_levels=p.max_levels)
+        compile fully, the dummy state passes through unchanged. With
+        adaptive tuning each preset allocation is its own static-param
+        program set, so every preset (plus its retune rebuild) warms."""
+        base = MT.init_state(self.p, n_levels=self.p.max_levels)
+        if self.tuner.enabled:
+            param_sets = [alloc.apply(self.p)
+                          for alloc in self.tuner.presets.values()]
+        else:
+            param_sets = [self.p]
 
         def stacked():
             return jax.tree.map(lambda x: jnp.stack([x] * self.S), base)
 
         no = jnp.zeros((self.S,), bool)
-        outs = [_stage_append_sharded(   # donates: give it its own dummy
-            p, stacked(), jnp.zeros((self.S, p.Rn), jnp.int32),
-            jnp.zeros((self.S, p.Rn), jnp.int32),
-            jnp.zeros((self.S,), jnp.int32))]
-        dummy = stacked()
-        outs.append(_seal_where(p, dummy, no))
-        outs.append(_flush_where(p, dummy, no))
-        for lvl in range(p.max_levels - 1):
-            outs.append(_merge_level_down_where(p, dummy, lvl,
-                                                p.disk_runs_merged, no))
-        outs.append(_compact_last_where(p, dummy, no))
+        outs = []
+        for p in param_sets:
+            outs.append(_stage_append_sharded(  # donates: own dummy
+                p, stacked(), jnp.zeros((self.S, p.Rn), jnp.int32),
+                jnp.zeros((self.S, p.Rn), jnp.int32),
+                jnp.zeros((self.S,), jnp.int32)))
+            if len(param_sets) > 1:             # donates: own dummy
+                outs.append(_retune_filters_sharded(p, stacked()))
+            dummy = stacked()
+            outs.append(_seal_where(p, dummy, no))
+            outs.append(_flush_where(p, dummy, no))
+            for lvl in range(p.max_levels - 1):
+                outs.append(_merge_level_down_where(p, dummy, lvl,
+                                                    p.disk_runs_merged, no))
+            outs.append(_compact_last_where(p, dummy, no))
         jax.block_until_ready(outs)
 
     def drain(self) -> None:
@@ -339,10 +386,12 @@ class ShardedSLSM:
         SLSM.drain — reads are exact without draining; drain completes the
         deferred maintenance so budgeted and synchronous engines can be
         compared at rest)."""
+        if self.tuner.pending:   # a decided switch drains like any step
+            self._apply_retune()
         while True:
             occs = self._occupancies()
             pending_any = progressed = False
-            for kind, level in SCH.step_order(self.p):
+            for kind, level in SCH.step_order(self.p_active):
                 pend, ready = self._step_masks(kind, level, occs)
                 pending_any |= bool(pend.any())
                 if ready.any():
@@ -355,6 +404,20 @@ class ShardedSLSM:
                 raise RuntimeError("sharded merge drain stalled")
 
     # -- read path ----------------------------------------------------------
+    def _on_reads(self, n: int) -> None:
+        """Tuner signal on the read path (adaptive mode): reads feed and
+        roll the controller but never execute maintenance — decisions
+        bind at the next insert round's `_maintain` (or at `drain()`),
+        mirroring the single-tree rule (MergeScheduler.on_read). The
+        sharded tuner observes fleet-global counts — one allocation
+        governs all shards, so per-shard mixes fold into one signal."""
+        self.stats["reads"] += n
+        t = self.tuner
+        if not t.enabled:
+            return
+        t.note_reads(n)
+        t.decide()
+
     def lookup(self, keys):
         """Batched multi-key lookup (paper 2.7, vmapped): route each query
         to its owner shard host-side, answer every shard's row in ONE
@@ -370,6 +433,7 @@ class ShardedSLSM:
         nq = len(qs)
         if nq == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
+        self._on_reads(nq)
         sid = shard_ids(qs, self.S)
         counts = np.bincount(sid, minlength=self.S)
         qmax = RP.bucket_pow2(int(counts.max()))
@@ -382,7 +446,9 @@ class ShardedSLSM:
         pos = np.empty(nq, np.int64)
         pos[order] = np.arange(nq, dtype=np.int64) - starts[sid[order]]
         routed[sid, pos] = qs
-        vals, found = _lookup_sharded(self.p, self.state, jnp.asarray(routed))
+        vals, found = _lookup_sharded(self.p_active, self.state,
+                                      jnp.asarray(routed),
+                                      self.tuner.enabled)
         vals, found = np.asarray(vals), np.asarray(found)
         return vals[sid, pos], found[sid, pos]
 
@@ -403,8 +469,8 @@ class ShardedSLSM:
         returned so callers can tell (shard s's flag set means shard s
         held more than max_range live keys in [lo, hi) and contributed
         only its first max_range)."""
-        k, v, c, trunc = _range_sharded(self.p, self.state, jnp.int32(lo),
-                                        jnp.int32(hi))
+        k, v, c, trunc = _range_sharded(self.p_active, self.state,
+                                        jnp.int32(lo), jnp.int32(hi))
         k, v, c = np.asarray(k), np.asarray(v), np.asarray(c)
         ks = np.concatenate([k[s, :c[s]] for s in range(self.S)])
         vs = np.concatenate([v[s, :c[s]] for s in range(self.S)])
@@ -415,6 +481,9 @@ class ShardedSLSM:
     # -- stats ----------------------------------------------------------------
     @property
     def n_live(self) -> int:
+        """Resident elements across all shards' stages, memory runs, and
+        disk levels (duplicates/tombstones count until merges elide
+        them) — the fleet-wide sibling of `SLSM.n_live`."""
         n = int(self.state.stage_count.sum()) + int(self.state.buf_counts.sum())
         for lv in self.state.levels:
             n += int(lv.counts.sum())

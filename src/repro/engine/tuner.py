@@ -1,0 +1,419 @@
+"""Adaptive memory/filter tuner: one byte budget, re-partitioned at runtime.
+
+The paper's closing claim is that "the breadth of tuning parameters
+inherent to the sLSM allows it broad flexibility for excellent
+performance across a wide variety of workloads" — but a *static* choice
+of those parameters serves exactly one workload. Two lines of follow-up
+work say what to do instead: *Breaking Down Memory Walls* (Luo, 2020)
+re-partitions the memory budget between the write buffer and the filter
+memory as the workload shifts, and the Monkey line of work (via the
+Luo & Carey LSM survey) allocates Bloom bits *per level* — shallow,
+small, hot levels get dense filters, the deep bulk level gets few bits
+per element — instead of one global eps.
+
+This module is that controller, TPU-adapted (DESIGN.md §9):
+
+  Allocation — one point in the tuning space the controller moves
+      through: active memory runs (`r_eff`), memory-run filter FP
+      (`eps_mem`), per-level filter FPs (`eps_per_level`, Monkey-style),
+      and the fence-pointer stride. An allocation is *applied* by
+      swapping the driver's active `SLSMParams` (a jit static argument)
+      — array shapes never change, because the state is physically
+      sized for the densest allocation the policy admits
+      (`SLSMParams.bloom_words_physical`).
+
+  byte model — `allocation_bytes` prices an allocation: 12 bytes per
+      buffered element (key/value/seqno) plus 4 bytes per filter word
+      plus 4 bytes per *consulted* fence. Presets must fit the policy's
+      `budget_bytes` (default: what the static configuration already
+      uses), so the tuner can only *move* memory, never grow it.
+
+  Tuner — the host-side controller. It folds the read/write mix into an
+      EWMA (counters the drivers already keep in `stats`), samples
+      per-level probe/hit telemetry off the read path
+      (`read_path.level_probe_stats`), and at each decision point picks
+      the write-/balanced-/read-optimized preset. A decision is not
+      applied inline: it becomes a pending `RETUNE` merge step
+      (`repro.engine.scheduler`), so allocation switches ride the same
+      pacing/drain machinery as every other piece of maintenance work.
+
+A `RETUNE` step rebuilds every resident filter under the new allocation
+(`retune_filters`) in one jitted dispatch; runs written afterwards get
+the new geometry for free (`levels.index_new_run` builds at the active
+allocation — the rebuild-on-spill path). Reads stay exact at every
+point: filters are only ever *rebuilt from the keys they cover*, so no
+probe can see a filter built under a different geometry than the probe
+uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bloom as BL
+from repro.core.params import KEY_EMPTY, SLSMParams
+from repro.engine.compaction import CompactionPolicy
+
+I32 = jnp.int32
+
+ELEM_BYTES = 12          # key + value + seqno, int32 each
+WORD_BYTES = 4           # Bloom filters are uint32 word arrays
+FENCE_BYTES = 4          # one int32 key per consulted fence
+EPS_CEIL = 0.5           # never allocate a filter worse than a coin flip
+
+BALANCED, WRITE, READ = "balanced", "write", "read"
+
+
+@dataclass(frozen=True)
+class Allocation:
+    """One point in the tuner's search space (hashable: it becomes part
+    of a jit-static `SLSMParams` via `apply`)."""
+
+    name: str
+    r_eff: int                     # active memory runs (<= physical R)
+    eps_mem: float                 # memory-run filter FP rate
+    eps_per_level: tuple           # per-disk-level FP rates (Monkey-style)
+    fence_stride: int = 1          # read-side fence subsampling
+
+    def apply(self, p: SLSMParams) -> SLSMParams:
+        """The active parameter set realizing this allocation. Only
+        effective fields change — physical geometry (R, Rn, level caps,
+        filter word widths, fence arrays) is identical to `p`'s, so the
+        state pytree built under `p` serves every allocation."""
+        return dataclasses.replace(
+            p, r_eff=self.r_eff, eps_mem=self.eps_mem,
+            eps_per_level=self.eps_per_level,
+            fence_stride=self.fence_stride)
+
+
+def _words(p: SLSMParams, n: int, eps: float) -> int:
+    return p.bloom_geometry(n, eps)[1]
+
+
+def allocation_bytes(p: SLSMParams, alloc: Allocation) -> int:
+    """Modeled resident bytes of an allocation: write buffer (staging +
+    active runs' payload), filter words (memory + disk), and consulted
+    fences. This is the paper's memory story made explicit: R*Rn buys
+    insert slack, filter bits buy read gating (paper 2.3), fences buy
+    page granularity (2.4) — one budget, three arms."""
+    mem = p.stage_cap * ELEM_BYTES + alloc.r_eff * p.Rn * ELEM_BYTES
+    filt = alloc.r_eff * _words(p, p.Rn, alloc.eps_mem) * WORD_BYTES
+    fences = 0
+    for lvl in range(p.max_levels):
+        cap = p.level_cap(lvl)
+        filt += p.D * _words(p, cap, alloc.eps_per_level[lvl]) * WORD_BYTES
+        n_f = p.n_fences(lvl)
+        fences += p.D * -(-n_f // alloc.fence_stride) * FENCE_BYTES
+    return mem + filt + fences
+
+
+def monkey_eps_per_level(p: SLSMParams, filter_budget_bytes: int,
+                         floor: float) -> tuple:
+    """Monkey-style per-level FP allocation under a filter byte budget.
+
+    The optimal allocation gives deeper (geometrically larger) levels
+    proportionally *higher* FP rates — a bit spent on a small shallow
+    level gates more lookups per byte than one spent on the bulk level.
+    We realize the shape as eps_l = base * T^l (T = the level growth
+    factor ceil(m*D)) and binary-search `base` so the densest profile
+    that fits the budget is chosen, clamped to [floor, EPS_CEIL].
+    """
+    growth = max(2, p.disk_runs_merged)
+
+    def profile(base: float) -> tuple:
+        return tuple(min(EPS_CEIL, max(floor, base * growth ** lvl))
+                     for lvl in range(p.max_levels))
+
+    def cost(eps_levels: tuple) -> int:
+        return sum(p.D * _words(p, p.level_cap(lvl), e) * WORD_BYTES
+                   for lvl, e in enumerate(eps_levels))
+
+    lo, hi = math.log(floor), math.log(EPS_CEIL)   # log-space bisection
+    if cost(profile(floor)) <= filter_budget_bytes:
+        return profile(floor)                       # budget covers densest
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if cost(profile(math.exp(mid))) <= filter_budget_bytes:
+            hi = mid
+        else:
+            lo = mid
+    return profile(math.exp(hi))
+
+
+def build_presets(p: SLSMParams) -> dict:
+    """The three allocations the controller moves between, all priced
+    within the policy budget (default: the static configuration's own
+    bytes — the tuner may only move memory, never grow it).
+
+      balanced — exactly the configured static parameters (the identity
+                 allocation; applying it is a no-op by construction).
+      write    — full write buffer, sparse `eps_write` filters (cheap to
+                 build: every seal/flush/spill builds filters, so filter
+                 density is *write-path* cost), coarser fence view.
+      read     — half the write buffer given back to the budget and
+                 spent on dense Monkey-allocated per-level filters;
+                 finest fence view. Flushes come twice as often but the
+                 read path gets maximum gating accuracy.
+    """
+    floor = min(p.eps, p.tuning.eps_floor)
+    eps_levels_now = tuple(p.level_eps(lvl) for lvl in range(p.max_levels))
+    balanced = Allocation(BALANCED, p.R_eff, p.mem_eps, eps_levels_now,
+                          p.fence_stride)
+    budget = (p.tuning.budget_bytes if p.tuning.budget_bytes is not None
+              else allocation_bytes(p, balanced))
+
+    # write preset: filters never DENSER than the configured statics —
+    # filter density is write-path cost, so each site takes the sparser
+    # of eps_write and its balanced rate (a user already running eps=0.1
+    # gets eps=0.1, not a denser 2e-2 that would bust the byte budget)
+    write = Allocation(
+        WRITE, p.R,
+        min(EPS_CEIL, max(p.tuning.eps_write, floor, p.mem_eps)),
+        tuple(min(EPS_CEIL, max(p.tuning.eps_write, floor, p.level_eps(lvl)))
+              for lvl in range(p.max_levels)),
+        fence_stride=max(2, p.fence_stride))
+
+    # read-optimized: collapse the write buffer to ONE active run (every
+    # sealed run flushes straight to disk, so the R-run memory search
+    # empties out and the read path's occupancy gate skips it) and
+    # reshape the per-level filter bits Monkey-style at the *balanced*
+    # filter budget. Monkey's shape — deeper, larger levels get fewer
+    # bits per element — is kept; maximal density is not: in this TPU
+    # adaptation a probe's cost scales with k and filter footprint while
+    # a hit saves no I/O, so spending the freed write-buffer bytes on
+    # denser filters would buy FP-rate at the price of wall-clock. The
+    # freed bytes stay headroom under the budget cap; an I/O-backed
+    # deployment would spend them (Monkey proper, Luo 2020).
+    r_read = 1
+    balanced_filter_bytes = sum(
+        p.D * _words(p, p.level_cap(lvl), p.level_eps(lvl)) * WORD_BYTES
+        for lvl in range(p.max_levels))
+    read = Allocation(
+        READ, r_read, p.mem_eps,
+        monkey_eps_per_level(p, balanced_filter_bytes, floor),
+        fence_stride=1)
+
+    presets = {BALANCED: balanced, WRITE: write, READ: read}
+    for alloc in presets.values():
+        used = allocation_bytes(p, alloc)
+        if used > budget:
+            raise ValueError(
+                f"tuner preset {alloc.name!r} needs {used} bytes, over the "
+                f"{budget}-byte budget — raise TuningPolicy.budget_bytes "
+                "or eps_floor")
+    return presets
+
+
+class ReadModePolicy(CompactionPolicy):
+    """Depth-aware eager compaction overlay for the read allocation.
+
+    While the READ allocation is active, the single-tree scheduler swaps
+    its compaction policy for this one (`SLSM.policy_active`): level 0
+    spills as soon as two runs coexist (and spills all of them), so the
+    read-side voluntary maintenance (`MergeScheduler.on_read`) steadily
+    *empties* the shallow structure the write phase left behind — and an
+    emptied structure drops out of the lookup at run time
+    (read_path._skip_if_empty), which is where the read win comes from.
+
+    Depth-aware on purpose: a lookup pays per *level pass* (one fused
+    vmapped dispatch over a level's D run slots), not per run, so
+    folding level l into level l+1 only helps when it leaves l empty and
+    l+1 was already live — and deep-level merges touch geometrically
+    more elements (paper 2.4). Eager folding is therefore confined to
+    level 0; deeper tiers keep the paper's tiering rule. This trades
+    bounded write amplification for read latency — the classic
+    tiering->leveling move (Luo & Carey's survey axis) executed at
+    runtime, on the one level where it pays.
+    """
+
+    name = "read-mode"
+
+    def needs_spill(self, p: SLSMParams, n_runs: int,
+                    level: int = 0) -> bool:
+        if level == 0:
+            # even a single resident run folds down: level 0 then stays
+            # empty between write trickles and its pass is skipped at
+            # run time by every lookup in the read phase
+            return n_runs >= 1
+        return n_runs >= p.D
+
+    def runs_to_spill(self, p: SLSMParams, n_runs: int) -> int:
+        """All resident runs — a read-mode fold leaves its level empty,
+        which is the whole point (the emptied pass is skipped)."""
+        return n_runs
+
+    def spill_sizes(self, p: SLSMParams) -> tuple:
+        return tuple(range(1, p.D + 1))
+
+
+# --------------------------------------------------------------------------
+# filter rebuild (the device half of a RETUNE step)
+# --------------------------------------------------------------------------
+
+def retune_filters_impl(p: SLSMParams, state):
+    """Rebuild every resident Bloom filter under `p`'s (new) effective
+    allocation, in place of the old ones — one jitted dispatch.
+
+    Identical build rules to the original construction sites
+    (`memtable.seal_run` for memory runs, `levels.index_new_run` for
+    disk runs), so retuning to the active allocation is a bitwise no-op
+    and probes always see filters built at the geometry they probe with.
+    Fences and run payloads are untouched: fences are built at finest
+    granularity once and strided at read time.
+    """
+    rn = p.Rn
+    bits_m, _, k_m = p.bloom_geometry(rn, p.mem_eps)
+    wb = p.bloom_words_physical(rn, p.mem_eps)
+
+    def rebuild_mem(keys, count):
+        valid = jnp.arange(rn, dtype=I32) < count
+        return BL.bloom_build(keys, valid, wb, k_m, bits_m)
+
+    buf_blooms = jax.vmap(rebuild_mem)(state.buf_keys, state.buf_counts)
+    levels = []
+    for lvl, lv in enumerate(state.levels):
+        cap = p.level_cap(lvl)
+        bits, _, kk = p.bloom_geometry(cap, p.level_eps(lvl))
+        w = p.bloom_words_physical(cap, p.level_eps(lvl))
+        blooms = jax.vmap(
+            lambda kx: BL.bloom_build(kx, kx != KEY_EMPTY, w, kk, bits)
+        )(lv.keys)
+        levels.append(lv._replace(blooms=blooms))
+    return state._replace(buf_blooms=buf_blooms, levels=tuple(levels))
+
+
+retune_filters = functools.partial(jax.jit, static_argnums=0,
+                                   donate_argnums=1)(retune_filters_impl)
+
+
+# --------------------------------------------------------------------------
+# the controller
+# --------------------------------------------------------------------------
+
+class Tuner:
+    """Host-side workload observer + allocation chooser.
+
+    Owns no device state: it reads the op counters the drivers feed it,
+    keeps EWMAs, and exposes `pending`/`target` to the merge scheduler,
+    which applies decisions as `RETUNE` steps (so pacing budgets and the
+    `drain()` barrier govern allocation switches exactly like merges).
+    With a static policy (the default) every method is an inert no-op
+    and the driver's behaviour is bit-identical to a tuner-less engine.
+    """
+
+    def __init__(self, drv):
+        self.drv = drv                      # driver: .p, .p_active, .stats
+        p = drv.p
+        self.policy = p.tuning
+        self.enabled = self.policy.mode == "adaptive"
+        self.presets = build_presets(p) if self.enabled else {}
+        self.active = BALANCED
+        self.target = BALANCED
+        self.budget_bytes = (allocation_bytes(p, self.presets[BALANCED])
+                             if self.enabled else None)
+        self.read_frac = 0.5                # EWMA of the read share
+        self._win_reads = 0
+        self._win_writes = 0
+        self._since_decision = 0
+        self._windows = 0
+        self._probe_sampled = False
+        # per-level probe telemetry (sampled at write boundaries from the
+        # most recent read batch, so the instrumented dispatch never
+        # rides a latency-sensitive lookup): gate passes vs true hits —
+        # the gap is observed FP traffic per level
+        self.last_queries: np.ndarray | None = None
+        self.level_candidates = np.zeros(p.max_levels, np.int64)
+        self.level_hits = np.zeros(p.max_levels, np.int64)
+        self._n_samples = 0
+
+    # -- observation hooks (called by the drivers) -------------------------
+    def note_writes(self, n: int) -> None:
+        """Fold `n` write ops into the current observation window."""
+        if self.enabled and n:
+            self._win_writes += int(n)
+            self._since_decision += int(n)
+
+    def note_reads(self, n: int) -> None:
+        """Fold `n` read ops into the current observation window."""
+        if self.enabled and n:
+            self._win_reads += int(n)
+            self._since_decision += int(n)
+
+    def take_probe_sample(self) -> bool:
+        """At most one per-level probe-telemetry sample every fourth
+        decision window — the instrumented lookup costs a device
+        dispatch on the read path, so the driver asks before paying for
+        it and the controller keeps the duty cycle low."""
+        if not self.enabled or self._probe_sampled or self._windows % 4:
+            return False
+        self._probe_sampled = True
+        return True
+
+    def note_probe_stats(self, candidates, hits) -> None:
+        """Fold one sampled `read_path.level_probe_stats` result in."""
+        if self.enabled:
+            self.level_candidates += np.asarray(candidates, np.int64)
+            self.level_hits += np.asarray(hits, np.int64)
+            self._n_samples += 1
+
+    def _disk_traffic_observed(self) -> bool:
+        """Do sampled reads actually reach the disk levels? The
+        read-optimized fold only pays off when lookups probe disk
+        structure — a memtable-answered read mix gains nothing from
+        collapsing it. No samples yet = assume yes (don't block the
+        first shift on sampling luck)."""
+        return self._n_samples == 0 or int(self.level_candidates.sum()) > 0
+
+    @property
+    def level_fp_observed(self) -> np.ndarray:
+        """Per-level observed false-positive fraction of gate passes
+        (candidates that were not hits; NaN-free: 0 where unprobed)."""
+        c = np.maximum(self.level_candidates, 1)
+        return (self.level_candidates - self.level_hits) / c
+
+    # -- decisions ---------------------------------------------------------
+    @property
+    def pending(self) -> bool:
+        """True when a decided allocation switch awaits its RETUNE step."""
+        return self.enabled and self.target != self.active
+
+    def allocation(self, name: str) -> Allocation:
+        """The preset `Allocation` registered under `name`
+        (balanced | write | read)."""
+        return self.presets[name]
+
+    def decide(self) -> None:
+        """Fold the observation window into the EWMA and (re)pick the
+        target preset. Called at chunk boundaries and on the read path;
+        acts at most once per `policy.interval` observed ops."""
+        if not self.enabled or self._since_decision < self.policy.interval:
+            return
+        total = self._win_reads + self._win_writes
+        if total == 0:
+            return
+        frac = self._win_reads / total
+        a = self.policy.ewma
+        self.read_frac = (1 - a) * self.read_frac + a * frac
+        self._win_reads = self._win_writes = 0
+        self._since_decision = 0
+        self._windows += 1
+        self._probe_sampled = False
+        if (self.read_frac >= self.policy.read_heavy
+                and self._disk_traffic_observed()):
+            self.target = READ
+        elif (1.0 - self.read_frac) >= self.policy.write_heavy:
+            self.target = WRITE
+        # middle zone: hysteresis — keep the current target rather than
+        # bouncing through `balanced` while the EWMA crosses between the
+        # extremes (each switch costs a full filter rebuild; a dead zone
+        # means a shift pays for exactly one)
+
+    def applied(self) -> None:
+        """The scheduler ran the RETUNE step: the target is now active."""
+        self.active = self.target

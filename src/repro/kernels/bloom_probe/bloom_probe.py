@@ -43,11 +43,20 @@ def _probe_kernel(keys_ref, words_ref, out_ref, *, k: int, bits: int):
 
 
 def bloom_probe_pallas(words: jax.Array, keys: jax.Array, k: int,
+                       bits: int | None = None,
                        interpret: bool = True) -> jax.Array:
-    """(W,) uint32 filter, (Q,) int32 keys -> (Q,) int32 {0,1} membership."""
+    """(W,) uint32 filter, (Q,) int32 keys -> (Q,) int32 {0,1} membership.
+
+    `bits` is the effective filter size (static; default = the whole
+    bitset). The adaptive tuner sizes the physical bitset for its
+    densest per-level allocation and probes at the current allocation's
+    smaller width — positions stay in [0, bits), the VMEM-resident tail
+    words are simply never gathered."""
     q = keys.shape[0]
     assert q % Q_TILE == 0, f"pad queries to a multiple of {Q_TILE}"
-    bits = words.shape[0] * 32
+    if bits is None:
+        bits = words.shape[0] * 32
+    assert bits <= words.shape[0] * 32
     grid = (q // Q_TILE,)
     return pl.pallas_call(
         functools.partial(_probe_kernel, k=k, bits=bits),

@@ -13,11 +13,16 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnums=2)
-def bloom_probe_op(words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
-    """(W,) uint32, (Q,) int32 -> (Q,) bool. Tile-padded Pallas probe."""
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def bloom_probe_op(words: jax.Array, keys: jax.Array, k: int,
+                   bits: int | None = None) -> jax.Array:
+    """(W,) uint32, (Q,) int32 -> (Q,) bool. Tile-padded Pallas probe.
+
+    `bits` = effective filter width (static, default the whole bitset) —
+    the per-level bit allocation the adaptive tuner emits (DESIGN.md §9).
+    """
     q = keys.shape[0]
     qp = ((q + Q_TILE - 1) // Q_TILE) * Q_TILE
     padded = jnp.zeros((qp,), jnp.int32).at[:q].set(keys.astype(jnp.int32))
-    hit = bloom_probe_pallas(words, padded, k, interpret=not _on_tpu())
+    hit = bloom_probe_pallas(words, padded, k, bits, interpret=not _on_tpu())
     return hit[:q].astype(bool)

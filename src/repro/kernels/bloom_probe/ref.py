@@ -7,5 +7,6 @@ import jax.numpy as jnp
 from repro.core.bloom import bloom_probe
 
 
-def bloom_probe_ref(words: jax.Array, keys: jax.Array, k: int) -> jax.Array:
-    return bloom_probe(words, keys, k).astype(jnp.int32)
+def bloom_probe_ref(words: jax.Array, keys: jax.Array, k: int,
+                    bits: int | None = None) -> jax.Array:
+    return bloom_probe(words, keys, k, bits).astype(jnp.int32)

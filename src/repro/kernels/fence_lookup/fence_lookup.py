@@ -36,6 +36,11 @@ def _fence_kernel(q_ref, fences_ref, keys_ref, count_ref, out_ref, *, mu: int):
 
     f = upper_bound(fences, qs) - 1       # page index per query
     start = jnp.clip(f, 0, fences.shape[0] - 1) * mu
+    # strided fence views (mu = base_mu * stride, DESIGN.md §9) can leave
+    # a partial last page: pin the window inside the run (it still covers
+    # the whole partial fence group; keys are globally sorted, so a
+    # window that reaches back before the group stays correct)
+    start = jnp.minimum(start, keys.shape[0] - mu)
 
     # dense page scan: gather each query's mu-window and compare
     win_idx = start[:, None] + jnp.arange(mu, dtype=jnp.int32)[None, :]
@@ -53,7 +58,9 @@ def fence_lookup_pallas(queries: jax.Array, fences: jax.Array,
     q = queries.shape[0]
     assert q % Q_TILE == 0, f"pad queries to a multiple of {Q_TILE}"
     cap, f_n = keys.shape[0], fences.shape[0]
-    assert cap == f_n * mu, "fences must tile the run exactly"
+    # exact tiling at stride 1; a strided view (mu = base_mu * stride)
+    # may leave one partial last page, but the fences must cover the run
+    assert f_n * mu >= cap >= mu, "fences must cover the run"
     grid = (q // Q_TILE,)
     return pl.pallas_call(
         functools.partial(_fence_kernel, mu=mu),

@@ -144,7 +144,8 @@ def test_maintenance_counters_track_merges():
 
 def test_scenarios_for_selectors():
     assert [s.name for s in scenarios_for("all")] == [
-        "uniform", "sequential", "zipfian", "delete_heavy", "range_scan"]
+        "uniform", "sequential", "zipfian", "delete_heavy", "range_scan",
+        "shifting"]
     sweep = scenarios_for("sweep-R")
     assert all(s.name.startswith("sweep_R") for s in sweep)
     mixed = scenarios_for("uniform,sweep-policy,uniform")

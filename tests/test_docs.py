@@ -1,0 +1,52 @@
+"""Docs-stack integrity (ISSUE 4 satellites).
+
+Mirrors the CI docs job (tools/docs_lint.py): the public API of
+`repro.engine` and `repro.bench` must be fully docstringed, the repo's
+markdown docs must have no broken relative links or anchors, and the
+README must actually carry the tuning guide + trajectory-table blocks
+this PR introduced.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import docs_lint  # noqa: E402
+
+
+def test_public_api_docstrings_complete():
+    assert docs_lint.lint_docstrings() == []
+
+
+def test_markdown_links_resolve():
+    assert docs_lint.lint_links(ROOT) == []
+
+
+def test_architecture_doc_exists_and_readme_links_it():
+    arch = ROOT / "docs" / "ARCHITECTURE.md"
+    assert arch.exists(), "docs/ARCHITECTURE.md is part of the docs stack"
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/ARCHITECTURE.md" in readme
+
+
+def test_readme_has_tuning_guide_and_bench_table():
+    readme = (ROOT / "README.md").read_text()
+    assert "## Tuning guide" in readme
+    assert docs_lint and "<!-- BENCH_TABLE_START -->" in readme
+    assert "<!-- BENCH_TABLE_END -->" in readme
+
+
+def test_design_has_tuner_section():
+    design = (ROOT / "DESIGN.md").read_text()
+    assert "§9" in design and "tuner" in design.lower()
+
+
+def test_report_renders_committed_trajectory():
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.report import load_docs, render_table
+    docs = load_docs(ROOT)
+    assert docs, "committed BENCH_*.json files form the trajectory"
+    table = render_table(docs)
+    assert table.count("\n") >= len(docs)
+    assert "shifting" in table

@@ -1,0 +1,333 @@
+"""Adaptive memory/filter tuner tests (ISSUE 4, DESIGN.md §9).
+
+Load-bearing properties:
+  * every allocation the tuner can emit prices within its byte budget,
+    and its per-level Bloom geometry keeps the *measured* FP rate within
+    2x of the analytic bound (the acceptance bar for the Monkey-style
+    per-level allocation);
+  * with the tuner disabled (static policy) the engine is the pre-tuner
+    engine: p_active IS p and no RETUNE ever becomes pending;
+  * with tuning enabled, answers stay oracle-exact through every retune
+    — mid-stream and after the drain() barrier — on both drivers and
+    both backends (the drain-equivalence acceptance bar);
+  * the effective-knob plumbing (r_eff, fence_stride, eps_per_level,
+    skip_empty) changes performance shape only, never answers.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import SLSMParams, TuningPolicy
+from repro.core import bloom as BL
+from repro.core.oracle import DictOracle
+from repro.engine import SLSM, ShardedSLSM
+from repro.engine.read_path import lookup_batch
+from repro.engine.tuner import (BALANCED, READ, WRITE, ReadModePolicy,
+                                allocation_bytes, build_presets,
+                                monkey_eps_per_level)
+
+SMALL = dict(R=4, Rn=32, eps=1e-2, D=3, m=1.0, mu=8, max_levels=3,
+             max_range=2048, cand_factor=16)
+
+
+def adaptive_params(**over):
+    pol = over.pop("tuning", TuningPolicy(mode="adaptive", interval=64,
+                                          eps_floor=1e-3))
+    return SLSMParams(**{**SMALL, **over, "tuning": pol})
+
+
+def _drive_mixed(t, o, seed, rounds=8, key_space=400):
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        n = int(rng.integers(8, 60))
+        ks = rng.integers(0, key_space // 2, n).astype(np.int32) * 2
+        vs = rng.integers(-50, 50, n).astype(np.int32)
+        t.insert(ks, vs)
+        o.insert(ks, vs)
+        dels = rng.integers(0, key_space // 2,
+                            int(rng.integers(1, 6))).astype(np.int32) * 2
+        t.delete(dels)
+        o.delete(dels)
+    return np.arange(0, key_space, dtype=np.int32)
+
+
+# -- allocations and the byte model -----------------------------------------
+
+def test_presets_fit_budget_and_balanced_is_identity():
+    p = adaptive_params()
+    presets = build_presets(p)
+    budget = allocation_bytes(p, presets[BALANCED])
+    for alloc in presets.values():
+        assert allocation_bytes(p, alloc) <= budget, alloc.name
+    bal = presets[BALANCED]
+    assert bal.r_eff == p.R and bal.eps_mem == p.eps
+    assert bal.eps_per_level == (p.eps,) * p.max_levels
+    assert bal.apply(p).level_eps(0) == p.eps
+    # read frees write-buffer bytes; write frees filter bytes
+    assert presets[READ].r_eff < presets[BALANCED].r_eff
+    assert presets[WRITE].eps_per_level[0] > bal.eps_per_level[0]
+
+
+def test_monkey_allocation_shape_and_floor():
+    """Monkey-style: deeper (geometrically larger) levels get higher FP
+    rates (fewer bits per element), bounded by the floor and 0.5."""
+    p = adaptive_params()
+    floor = min(p.eps, p.tuning.eps_floor)
+    eps = monkey_eps_per_level(p, 10**9, floor)   # unconstrained budget
+    assert eps[0] == floor                        # densest profile: base
+    growth = max(2, p.disk_runs_merged)           # at the floor, shape
+    assert eps[1] == pytest.approx(floor * growth)  # eps_l = base * T^l
+    bal_bytes = sum(
+        p.D * p.bloom_geometry(p.level_cap(l), p.eps)[1] * 4
+        for l in range(p.max_levels))
+    eps = monkey_eps_per_level(p, bal_bytes, floor)
+    assert all(e1 <= e2 for e1, e2 in zip(eps, eps[1:]))   # deeper >= eps
+    assert all(floor <= e <= 0.5 for e in eps)
+    used = sum(p.D * p.bloom_geometry(p.level_cap(l), e)[1] * 4
+               for l, e in enumerate(eps))
+    assert used <= bal_bytes
+
+
+def test_measured_fp_within_2x_of_analytic_per_allocation():
+    """ISSUE-4 acceptance: for each per-level bit allocation the tuner
+    can emit, a filter built at that geometry over a full run keeps its
+    measured FP rate within 2x of the allocation's analytic eps."""
+    p = adaptive_params()
+    rng = np.random.default_rng(7)
+    for alloc in build_presets(p).values():
+        pa = alloc.apply(p)
+        geoms = [(pa.level_cap(l), pa.level_eps(l),
+                  pa.bloom_words_physical(pa.level_cap(l), pa.level_eps(l)))
+                 for l in range(p.max_levels)]
+        geoms.append((p.Rn, pa.mem_eps,
+                      pa.bloom_words_physical(p.Rn, pa.mem_eps)))
+        for n, eps_l, words in geoms:
+            bits, _, k = pa.bloom_geometry(n, eps_l)
+            # full-load worst case: n distinct even keys
+            keys = (rng.choice(2**28, size=n, replace=False) * 2).astype(
+                np.int32)
+            filt = BL.bloom_build(jnp.asarray(keys),
+                                  jnp.ones((n,), bool), words, k, bits)
+            n_probe = max(20_000, int(50 / eps_l))
+            n_probe = min(n_probe, 400_000)
+            absent = (rng.integers(0, 2**28, n_probe) * 2 + 1).astype(
+                np.int32)
+            fp = float(np.asarray(
+                BL.bloom_probe(filt, jnp.asarray(absent), k, bits)).mean())
+            assert fp <= 2.0 * eps_l, (alloc.name, n, eps_l, fp)
+
+
+def test_presets_fit_budget_even_for_sparse_static_eps():
+    """Regression: an adaptive engine whose configured eps is sparser
+    than eps_write must still construct — the write preset takes the
+    sparser of the two per site instead of densifying over budget."""
+    p = adaptive_params(eps=0.1)
+    presets = build_presets(p)
+    budget = allocation_bytes(p, presets[BALANCED])
+    for alloc in presets.values():
+        assert allocation_bytes(p, alloc) <= budget, alloc.name
+    assert presets[WRITE].eps_per_level[0] >= p.eps   # never denser
+    SLSM(p)   # end-to-end: construction no longer raises
+
+
+def test_read_switch_gated_on_disk_probe_traffic():
+    """The read-optimized fold only pays when sampled reads reach the
+    disk levels; with samples showing zero disk candidates the
+    controller must not switch to READ (and must with traffic)."""
+    p = adaptive_params()
+    t = SLSM(p)
+    tun = t.tuner
+    tun.note_probe_stats(np.zeros(p.max_levels, np.int64),
+                         np.zeros(p.max_levels, np.int64))
+    tun.read_frac = 0.99
+    tun.note_reads(10 * p.tuning.interval)
+    tun._win_reads = 10 * p.tuning.interval
+    tun.decide()
+    assert tun.target != READ            # all-memtable reads: no fold
+    tun.note_probe_stats(np.ones(p.max_levels, np.int64),
+                         np.zeros(p.max_levels, np.int64))
+    tun.note_reads(10 * p.tuning.interval)
+    tun._win_reads = 10 * p.tuning.interval
+    tun.decide()
+    assert tun.target == READ            # disk traffic observed
+
+
+def test_read_mode_policy_is_depth_aware():
+    p = adaptive_params()
+    pol = ReadModePolicy()
+    assert pol.needs_spill(p, 1, level=0)         # fold even one L0 run
+    assert not pol.needs_spill(p, p.D - 1, level=1)
+    assert pol.needs_spill(p, p.D, level=2)       # deep: the paper's rule
+    assert set(pol.spill_sizes(p)) == set(range(1, p.D + 1))
+
+
+# -- static mode is the pre-tuner engine ------------------------------------
+
+def test_static_mode_is_inert():
+    t = SLSM(SLSMParams(**SMALL))
+    assert t.p_active is t.p
+    assert not t.tuner.enabled and not t.tuner.pending
+    o = DictOracle()
+    qs = _drive_mixed(t, o, seed=3)
+    t.tuner.note_reads(10**6)
+    t.tuner.decide()                 # inert: no decision machinery runs
+    assert not t.tuner.pending and t.stats["retunes"] == 0
+    got, found = t.lookup_many(qs)
+    ev, ef = o.lookup(qs)
+    assert (found == ef).all() and (got[ef] == ev[ef]).all()
+
+
+def test_effective_knobs_do_not_change_answers():
+    """r_eff / fence_stride / eps_per_level / eps_mem reshape cost, not
+    results: engines differing only in those knobs answer identically."""
+    base = SLSMParams(**SMALL, merge_budget=1)
+    variants = [
+        SLSMParams(**{**SMALL, "merge_budget": 1, "r_eff": 2}),
+        SLSMParams(**{**SMALL, "merge_budget": 1, "fence_stride": 4}),
+        SLSMParams(**{**SMALL, "merge_budget": 1,
+                      "eps_per_level": (5e-3, 2e-2, 0.25)}),
+        SLSMParams(**{**SMALL, "merge_budget": 1, "eps_mem": 0.2}),
+    ]
+    ref, oref = SLSM(base), DictOracle()
+    qs = _drive_mixed(ref, oref, seed=11)
+    want_v, want_f = ref.lookup_many(qs)
+    want_range = ref.range(0, 300)
+    for pv in variants:
+        tv = SLSM(pv)
+        _drive_mixed(tv, DictOracle(), seed=11)
+        got_v, got_f = tv.lookup_many(qs)
+        assert (got_f == want_f).all()
+        assert (got_v[want_f] == want_v[want_f]).all()
+        rk, rv = tv.range(0, 300)
+        assert (rk == want_range[0]).all() and (rv == want_range[1]).all()
+
+
+def test_skip_empty_gate_is_exact():
+    t = SLSM(SLSMParams(**SMALL, merge_budget=1))
+    o = DictOracle()
+    qs = _drive_mixed(t, o, seed=5)
+    v0, f0 = lookup_batch(t.p, t.state, jnp.asarray(qs), False, False)
+    v1, f1 = lookup_batch(t.p, t.state, jnp.asarray(qs), False, True)
+    assert (np.asarray(f0) == np.asarray(f1)).all()
+    assert (np.asarray(v0) == np.asarray(v1)).all()
+
+
+# -- adaptive correctness: the drain-equivalence acceptance bar -------------
+
+def _shifting_stream(t, o, seed, key_space=600):
+    """Write burst -> read burst -> write burst: forces the controller
+    through write-, read-, and back-to-write-optimized allocations."""
+    rng = np.random.default_rng(seed)
+    probe = np.arange(0, key_space, dtype=np.int32)
+    for _ in range(6):                       # write-heavy
+        ks = rng.integers(0, key_space // 2, 80).astype(np.int32) * 2
+        vs = rng.integers(-99, 99, 80).astype(np.int32)
+        t.insert(ks, vs)
+        o.insert(ks, vs)
+    for r in range(10):                      # read-heavy (+ trickle)
+        got, found = t.lookup_many(probe)
+        ev, ef = o.lookup(probe)
+        assert (found == ef).all(), f"read round {r}"
+        assert (got[ef] == ev[ef]).all(), f"read round {r}"
+        if r % 3 == 2:
+            ks = rng.integers(0, key_space // 2, 8).astype(np.int32) * 2
+            t.insert(ks, ks)
+            o.insert(ks, ks)
+    for _ in range(4):                       # back to write-heavy
+        ks = rng.integers(0, key_space // 2, 80).astype(np.int32) * 2
+        vs = rng.integers(-99, 99, 80).astype(np.int32)
+        t.insert(ks, vs)
+        o.insert(ks, vs)
+    return probe
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("budget", [0, 1])
+def test_adaptive_single_tree_oracle_exact_through_retunes(backend, budget):
+    p = adaptive_params(backend=backend, merge_budget=budget)
+    t, o = SLSM(p), DictOracle()
+    probe = _shifting_stream(t, o, seed=23)
+    assert t.stats["retunes"] >= 1, "stream must exercise the tuner"
+    t.drain()
+    assert not t.scheduler.backlog            # retunes drain too
+    got, found = t.lookup_many(probe)
+    ev, ef = o.lookup(probe)
+    assert (found == ef).all() and (got[ef] == ev[ef]).all()
+    rk, rv = t.range(0, 400)
+    ok_, ov = o.range(0, 400)
+    assert (rk == ok_).all() and (rv == ov).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_adaptive_sharded_oracle_exact_through_retunes(backend):
+    p = adaptive_params(backend=backend, merge_budget=1)
+    t, o = ShardedSLSM(p, n_shards=2), DictOracle()
+    probe = _shifting_stream(t, o, seed=29)
+    assert t.stats["retunes"] >= 1
+    t.drain()
+    got, found = t.lookup(probe)
+    ev, ef = o.lookup(probe)
+    assert (found == ef).all() and (got[ef] == ev[ef]).all()
+    rk, rv = t.range(0, 400)
+    ok_, ov = o.range(0, 400)
+    assert (rk == ok_).all() and (rv == ov).all()
+
+
+def test_adaptive_budgeted_matches_sync_static_after_drain():
+    """A tuned, budgeted engine and a plain synchronous engine fed the
+    same ops answer identically at rest — tuning moves cost, not data."""
+    pa = adaptive_params(merge_budget=2)
+    ta, oa = SLSM(pa), DictOracle()
+    ts = SLSM(SLSMParams(**SMALL))           # sync, static, pre-tuner
+    probe = _shifting_stream(ta, oa, seed=31)
+    _shifting_stream(ts, DictOracle(), seed=31)
+    ta.drain()
+    va, fa = ta.lookup_many(probe)
+    vs, fs = ts.lookup_many(probe)
+    assert (fa == fs).all() and (va[fa] == vs[fa]).all()
+
+
+def test_retune_rebuild_leaves_no_false_negatives():
+    """Filters rebuilt by a RETUNE must keep the Bloom no-false-negative
+    contract: every resident key still gate-passes its level."""
+    p = adaptive_params(merge_budget=1)
+    t, o = SLSM(p), DictOracle()
+    rng = np.random.default_rng(41)
+    ks = (rng.choice(5000, size=600, replace=False) * 2).astype(np.int32)
+    t.insert(ks, ks + 1)
+    o.insert(ks, ks + 1)
+    for name in (WRITE, READ, BALANCED, WRITE):
+        t.tuner.target = name
+        t.apply_retune()
+        assert t.tuner.active == name
+        got, found = t.lookup_many(ks)
+        assert found.all() and (got == ks + 1).all()
+    assert t.p_active.level_eps(0) == t.tuner.presets[WRITE].eps_per_level[0]
+
+
+def test_tuner_telemetry_and_stats_counters():
+    p = adaptive_params(merge_budget=1)
+    t, o = SLSM(p), DictOracle()
+    probe = _shifting_stream(t, o, seed=43)
+    assert t.stats["reads"] > 0 and t.stats["writes"] > 0
+    assert t.stats["retunes"] >= 1
+    # probe telemetry: candidates >= hits, fp estimate in [0, 1]
+    assert (t.tuner.level_candidates >= t.tuner.level_hits).all()
+    fp = t.tuner.level_fp_observed
+    assert ((fp >= 0) & (fp <= 1)).all()
+    assert t.tuner.budget_bytes > 0
+    del probe
+
+
+def test_adaptive_rejects_bad_policy():
+    with pytest.raises(ValueError, match="tuning mode"):
+        TuningPolicy(mode="sometimes")
+    with pytest.raises(ValueError, match="interval"):
+        TuningPolicy(interval=0)
+    with pytest.raises(ValueError, match="r_eff"):
+        SLSMParams(**{**SMALL, "r_eff": SMALL["R"] + 1})
+    with pytest.raises(ValueError, match="fence_stride"):
+        SLSMParams(**{**SMALL, "fence_stride": 3})
+    with pytest.raises(ValueError, match="eps_per_level"):
+        SLSMParams(**{**SMALL, "eps_per_level": (0.1,)})

@@ -1,0 +1,133 @@
+"""Docs lint: public-API docstrings + markdown link integrity.
+
+Two checks, both run by the CI docs job and by tests/test_docs.py:
+
+  1. every *public* module / class / function / method under
+     ``repro.engine`` and ``repro.bench`` carries a docstring — the
+     paper-ref docstring convention those packages follow is only
+     useful if it has no holes;
+  2. every relative markdown link in README.md, DESIGN.md, and
+     docs/*.md resolves: the target file exists, and a ``#fragment``
+     matches a real heading (GitHub anchor slugs) in the target.
+
+Usage:
+    PYTHONPATH=src python tools/docs_lint.py           # lint repo root
+    PYTHONPATH=src python tools/docs_lint.py --root .  # explicit root
+
+Exit status 0 = clean; 1 = problems (each printed one per line).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import pkgutil
+import re
+import sys
+from pathlib import Path
+
+LINT_PACKAGES = ("repro.engine", "repro.bench")
+DOC_FILES = ("README.md", "DESIGN.md")
+DOC_GLOBS = ("docs/*.md",)
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+# -- docstring lint ---------------------------------------------------------
+
+def _public_members(mod):
+    """(kind, qualname, obj) for the module's own public API."""
+    for name, obj in vars(mod).items():
+        if name.startswith("_"):
+            continue
+        if getattr(obj, "__module__", None) != mod.__name__:
+            continue   # re-exports are the defining module's problem
+        if inspect.isclass(obj):
+            yield "class", f"{mod.__name__}.{name}", obj
+            for mname, meth in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                fn = getattr(meth, "__func__", meth)
+                if isinstance(meth, property):
+                    yield ("method", f"{mod.__name__}.{name}.{mname}",
+                           meth.fget)
+                elif inspect.isfunction(fn):
+                    yield "method", f"{mod.__name__}.{name}.{mname}", fn
+        elif inspect.isfunction(obj):
+            yield "function", f"{mod.__name__}.{name}", obj
+
+
+def lint_docstrings(packages=LINT_PACKAGES):
+    """Names lacking docstrings across `packages` (empty list = clean)."""
+    problems = []
+    for pkg_name in packages:
+        pkg = importlib.import_module(pkg_name)
+        mod_names = [pkg_name] + [
+            f"{pkg_name}.{m.name}"
+            for m in pkgutil.iter_modules(pkg.__path__)]
+        for mod_name in mod_names:
+            mod = importlib.import_module(mod_name)
+            if not (mod.__doc__ or "").strip():
+                problems.append(f"{mod_name}: module docstring missing")
+            for kind, qual, obj in _public_members(mod):
+                doc = inspect.getdoc(obj)
+                if not (doc or "").strip():
+                    problems.append(f"{qual}: {kind} docstring missing")
+    return problems
+
+
+# -- markdown link check ----------------------------------------------------
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    text = re.sub(r"[`*_]", "", heading.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def _anchors(md_path: Path) -> set:
+    return {_slugify(h) for h in _HEADING_RE.findall(md_path.read_text())}
+
+
+def lint_links(root: Path):
+    """Broken relative links/anchors in the repo's markdown docs."""
+    problems = []
+    files = [root / f for f in DOC_FILES]
+    for pattern in DOC_GLOBS:
+        files.extend(sorted(root.glob(pattern)))
+    for md in files:
+        if not md.exists():
+            problems.append(f"{md.relative_to(root)}: file missing")
+            continue
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, fragment = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            where = f"{md.relative_to(root)} -> {target}"
+            if not dest.exists():
+                problems.append(f"{where}: target missing")
+                continue
+            if fragment and dest.suffix == ".md":
+                if fragment not in _anchors(dest):
+                    problems.append(f"{where}: anchor #{fragment} not found")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=".", help="repo root (default: .)")
+    args = ap.parse_args(argv)
+    problems = lint_docstrings() + lint_links(Path(args.root).resolve())
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"# {len(problems)} docs problem(s)", file=sys.stderr)
+        return 1
+    print("# docs lint clean", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
