@@ -56,14 +56,16 @@ def load_docs(bench_dir: Path) -> list:
 def render_table(docs: list) -> str:
     """One row per BENCH document; '-' where a scenario has no phase."""
     head = ("| scenario | insert ops/s | insert p99 | lookup ops/s "
-            "| lookup p99 | speedup | bloom FP | tuner |\n"
-            "|---|---|---|---|---|---|---|---|")
+            "| lookup p99 | speedup | range scans/s | bloom FP | tuner |\n"
+            "|---|---|---|---|---|---|---|---|---|")
     rows = [head]
     for doc in docs:
         m = doc["metrics"]
         tun = m.get("tuner")
         tuner_cell = (f"{tun['active']} ({m['maintenance']['retunes']} "
                       "retunes)" if tun else "static")
+        rb = m.get("range_batched")
+        range_cell = _fmt_ops(rb["ops_per_s"]) if rb else "-"
         rows.append(
             f"| {doc['name']} "
             f"| {_fmt_ops(m['insert']['ops_per_s'])} "
@@ -71,6 +73,7 @@ def render_table(docs: list) -> str:
             f"| {_fmt_ops(m['lookup_batched']['ops_per_s'])} "
             f"| {_fmt_us(m['lookup_batched']['p99_us'])} "
             f"| {m['batched_speedup']:.0f}x "
+            f"| {range_cell} "
             f"| {m['bloom']['fp_rate_measured']:.1e} "
             f"| {tuner_cell} |")
     return "\n".join(rows)

@@ -1,16 +1,18 @@
 """Scenario executor: one `Scenario` in, one ``BENCH_<name>.json`` out.
 
 Phases run in workload order — insert (merges included), delete, batched
-lookups, per-query lookups, range scans — each timed with
-``block_until_ready`` per dispatch so the latency percentiles are honest
-device-complete times, not async-dispatch times. The `shifting`
+lookups, per-query lookups, per-scan ranges, batched ranges — each timed
+with ``block_until_ready`` per dispatch so the latency percentiles are
+honest device-complete times, not async-dispatch times. The `shifting`
 workload runs a two-phase mixed-op path instead (`_run_shifting`):
 write-heavy inserts with a read trickle, then — with no drain in
 between — read-heavy lookups with a write trickle, so adaptive engines
 meet the flip mid-flight (DESIGN.md §9). The batched vs
 per-query pair is the headline comparison: the same query stream served
 by one fused multi-key dispatch per batch (`lookup_many`) vs one
-dispatch per key — the speedup the batched read path exists for.
+dispatch per key — the speedup the batched read path exists for; the
+range vs range_batched pair (`range_device` vs `range_many`, DESIGN.md
+§10) is its scan-side sibling.
 
 The Bloom false-positive rate is *measured*, not assumed: every disk
 run's filter is probed with the workload's guaranteed-absent key stream
@@ -208,15 +210,63 @@ def _run_shifting(tree, w: Workload, prof: Dict) -> Tuple[Dict, Dict, bool]:
     return insert, lookup, steady
 
 
+# batched range scans dispatch in this many windows per fused call (the
+# RANGE_BUCKETS grid covers it, so the shape is always warm)
+RANGE_BATCH = 32
+
+
 def _run_ranges(tree, ranges: np.ndarray) -> Optional[Dict]:
+    """Per-scan range phase: one device dispatch per window through the
+    device-resident `range_device` — the timed cost is the scan engine
+    itself, not a per-scan host `int(count)` round-trip (the sync the
+    pre-engine driver paid on every scan)."""
     if len(ranges) == 0:
         return None
-    tree.range(int(ranges[0, 0]), int(ranges[0, 1]))   # warm
+    tree.range_device(int(ranges[0, 0]), int(ranges[0, 1]))   # warm
     times = []
     t0 = time.perf_counter()
     for lo, hi in ranges:
-        times.append(_timed(lambda lo=lo, hi=hi: tree.range(int(lo), int(hi))))
+        times.append(_timed(
+            lambda lo=lo, hi=hi: tree.range_device(int(lo), int(hi))))
     return _phase(len(ranges), time.perf_counter() - t0, times)
+
+
+def _run_ranges_batched(tree, ranges: np.ndarray
+                        ) -> Tuple[Optional[Dict], Optional[Dict]]:
+    """Batched range phase: the same windows served by fused
+    `range_many` dispatches, RANGE_BATCH windows per call — the scan
+    analogue of the batched-vs-per-query lookup comparison. Returns
+    (phase, scan_stats) where scan_stats aggregates per-scan
+    `keys_returned` and the truncated-scan count (the exactness
+    telemetry of the candidate budget, DESIGN.md §10)."""
+    if len(ranges) == 0:
+        return None, None
+    tree.range_many(ranges[:RANGE_BATCH])                     # warm
+    tail = len(ranges) % RANGE_BATCH
+    if tail:
+        tree.range_many(ranges[:tail])
+    # small profiles fit the whole window list in one fused call; repeat
+    # the sweep so the phase always has a few timed dispatches (a single
+    # sample would put any one-off hiccup straight into every percentile)
+    n_batches = (len(ranges) + RANGE_BATCH - 1) // RANGE_BATCH
+    reps = max(1, 4 // n_batches)
+    times, counts, truncs = [], [], []
+    t0 = time.perf_counter()
+    for rep in range(reps):
+        for off in range(0, len(ranges), RANGE_BATCH):
+            def one(off=off, rep=rep):
+                out = tree.range_many(ranges[off:off + RANGE_BATCH])
+                if rep == 0:
+                    counts.append(out[2])
+                    truncs.append(out[3])
+                return out
+            times.append(_timed(one))
+    phase = _phase(reps * len(ranges), time.perf_counter() - t0, times)
+    counts = np.concatenate(counts)
+    stats = {"keys_returned_mean": float(counts.mean()),
+             "keys_returned_max": int(counts.max()),
+             "scans_truncated": int(np.concatenate(truncs).sum())}
+    return phase, stats
 
 
 def measured_fp_rate(tree, absent: np.ndarray,
@@ -269,7 +319,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
     """
     prof = PROFILES[profile]
     wargs = dict(sc.wargs)
-    if sc.workload == "range-scan":
+    if sc.workload in ("range-scan", "delete-heavy", "shifting"):
         wargs.setdefault("n_ranges", prof["n_ranges"])
     w = make_workload(sc.workload, prof["n"], seed=sc.seed, **wargs)
     p = sc.engine_params()
@@ -283,7 +333,9 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         nl1 = int(w.meta["n_lookups_phase1"])
         per_query = _run_lookups_per_query(
             tree, w.lookups[nl1:], prof["n_per_query"])
-        delete = ranges = None
+        delete = None
+        ranges = _run_ranges(tree, w.ranges)
+        ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(w.lookups) - nl1
     else:
         insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
@@ -301,6 +353,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         per_query = _run_lookups_per_query(tree, lookups,
                                            prof["n_per_query"])
         ranges = _run_ranges(tree, w.ranges)
+        ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(lookups)
     fp_rate, _, n_probed = measured_fp_rate(tree, w.absent)
 
@@ -313,6 +366,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         "engine": {"R": p.R, "Rn": p.Rn, "eps": p.eps, "D": p.D, "m": p.m,
                    "mu": p.mu, "max_levels": p.max_levels,
                    "max_range": p.max_range, "cand_factor": p.cand_factor,
+                   "range_cand": 0 if p.range_cand is None else p.range_cand,
                    "backend": p.backend, "policy": sc.policy,
                    "n_shards": sc.n_shards, "merge_budget": p.merge_budget,
                    "tuning_mode": p.tuning.mode},
@@ -326,6 +380,8 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
             "lookup_per_query": per_query,
             "delete": delete,
             "range": ranges,
+            "range_batched": ranges_batched,
+            "range_stats": range_stats,
             "batched_speedup": (batched["ops_per_s"]
                                 / max(per_query["ops_per_s"], 1e-12)),
             "maintenance": {k: int(tree.stats[k]) for k in

@@ -37,9 +37,17 @@ def bench_params(**over) -> SLSMParams:
     full flush->spill->compact chain (the seed BENCH_uniform.json
     recorded p99 = 724ms against a ~5ms p50). The sweep-merge-budget
     family keeps the synchronous point (merge_budget=0) measured.
+
+    range_cand=512 caps every scan's candidate gather (DESIGN.md §10):
+    the canonical scan windows hold ~100-250 in-window elements across
+    all structures, so the budget leaves 2x+ headroom while keeping a
+    scan's merge width ~1000x under the tree's total capacity — the
+    range engine's whole point. Overflowing scans are flagged
+    (`truncated`) and counted in the range_batched phase stats.
     """
     base = dict(R=8, Rn=256, eps=1e-3, D=4, m=1.0, mu=64, max_levels=3,
-                max_range=4096, cand_factor=8, merge_budget=1)
+                max_range=4096, cand_factor=8, merge_budget=1,
+                range_cand=512)
     base.update(over)
     return SLSMParams(**base)
 

@@ -10,14 +10,16 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 3):
+Document shape (SCHEMA_VERSION 4):
 
-  schema_version  int     == 3
+  schema_version  int     == 4
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
-                   cand_factor, backend, policy, n_shards, merge_budget,
-                   tuning_mode}
+                   cand_factor, range_cand, backend, policy, n_shards,
+                   merge_budget, tuning_mode}
+                   range_cand = the scan engine's per-scan candidate
+                   budget (0 = unbounded, DESIGN.md §10)
   profile         {name, batch, n_lookups, n_per_query,
                    insert_steady_state}  sizing profile that produced the
                    numbers — p50/p99 and batched_speedup shift with
@@ -31,7 +33,16 @@ Document shape (SCHEMA_VERSION 3):
     lookup_per_query  phase    one dispatch per key (the baseline the
                                batched path is measured against)
     delete            phase|None   tombstone stream (delete-heavy only)
-    range             phase|None   [lo,hi) scans (range-scan only)
+    range             phase|None   [lo,hi) scans, one device dispatch per
+                               window (workloads with scan windows)
+    range_batched     phase|None   the same windows in fused range_many
+                               dispatches (the batched scan fast path,
+                               DESIGN.md §10)
+    range_stats       {keys_returned_mean, keys_returned_max,
+                      scans_truncated}|None   per-scan result-size and
+                      truncation telemetry of the batched range phase
+                      (scans_truncated > 0 means some window overflowed
+                      max_range or the range_cand budget)
     batched_speedup   float    lookup_batched.ops_per_s / lookup_per_query.ops_per_s
     maintenance       {seals, flushes, spills, compactions, backlog_peak,
                       retunes}
@@ -67,20 +78,25 @@ SCHEMA_VERSION history:
   3 — adaptive-tuner PR: engine.tuning_mode and maintenance.retunes
       joined the fingerprint; optional metrics.tuner block records the
       final allocation of adaptive runs (DESIGN.md §9).
+  4 — range-engine PR: engine.range_cand joined the fingerprint; the
+      metrics gained the range_batched phase and the range_stats
+      telemetry block; delete_heavy and shifting scenarios now carry
+      range phases (DESIGN.md §10).
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
                "max_stall_us": float}
 _ENGINE_KEYS = {"R": int, "Rn": int, "eps": float, "D": int, "m": float,
                 "mu": int, "max_levels": int, "max_range": int,
-                "cand_factor": int, "backend": str, "policy": str,
-                "n_shards": int, "merge_budget": int, "tuning_mode": str}
+                "cand_factor": int, "range_cand": int, "backend": str,
+                "policy": str, "n_shards": int, "merge_budget": int,
+                "tuning_mode": str}
 _MAINT_KEYS = ("seals", "flushes", "spills", "compactions", "backlog_peak",
                "retunes")
 
@@ -155,12 +171,33 @@ def validate(doc: Any) -> List[str]:
     if met is not None:
         for req in ("insert", "lookup_batched", "lookup_per_query"):
             _check_phase(met.get(req), f"metrics.{req}", errs)
-        for opt in ("delete", "range"):
+        for opt in ("delete", "range", "range_batched"):
             if met.get(opt) is not None:
                 _check_phase(met[opt], f"metrics.{opt}", errs)
             elif opt not in met:
                 errs.append(f"metrics: missing key {opt!r} (use null when "
                             "the workload has no such phase)")
+        if "range_stats" not in met:
+            errs.append("metrics: missing key 'range_stats' (use null when "
+                        "the workload has no scan windows)")
+        elif met["range_stats"] is not None:
+            rs = _typed(met, "range_stats", dict, errs, "metrics")
+            if rs is not None:
+                km = _typed(rs, "keys_returned_mean", float, errs,
+                            "metrics.range_stats")
+                if isinstance(km, (int, float)) and km < 0:
+                    errs.append(
+                        f"metrics.range_stats.keys_returned_mean: "
+                        f"negative ({km})")
+                for key in ("keys_returned_max", "scans_truncated"):
+                    v = _typed(rs, key, int, errs, "metrics.range_stats")
+                    if isinstance(v, int) and v < 0:
+                        errs.append(
+                            f"metrics.range_stats.{key}: negative ({v})")
+        if ((met.get("range_batched") is None)
+                != (met.get("range_stats") is None)):
+            errs.append("metrics: range_batched and range_stats must be "
+                        "both present or both null")
         sp = _typed(met, "batched_speedup", float, errs, "metrics")
         if isinstance(sp, (int, float)) and sp <= 0:
             errs.append(f"metrics.batched_speedup: must be positive ({sp})")

@@ -176,13 +176,30 @@ def make_zipfian(n: int, seed: int = 0, *, universe: int = 20_000,
               "expected_top1pct_mass": zipf_expected_top_mass(universe, theta)})
 
 
+def _scan_windows(rng, keys: np.ndarray, n_ranges: int,
+                  span: int) -> np.ndarray:
+    """(n_ranges, 2) [lo, hi) windows centred on inserted keys, so every
+    scan touches data. Drawn *after* every other phase's stream so
+    enabling scans in a family leaves its insert/delete/lookup bytes
+    untouched (the trajectory's determinism contract)."""
+    if n_ranges <= 0:
+        return np.zeros((0, 2), np.int32)
+    centres = rng.choice(keys, size=n_ranges, replace=True).astype(np.int64)
+    lo = np.maximum(0, centres - span // 2)
+    hi = np.minimum(_I32_MAX, lo + span)
+    return np.stack([lo, hi], axis=1).astype(np.int32)
+
+
 def make_delete_heavy(n: int, seed: int = 0, *, delete_frac: float = 0.4,
                       key_space: int = 2**26, lookup_frac: float = 0.5,
-                      miss_frac: float = 0.0) -> Workload:
+                      miss_frac: float = 0.0, n_ranges: int = 0,
+                      span: int = 2**18) -> Workload:
     """Insert then tombstone ``delete_frac`` of the distinct keys (paper
     2.8). Lookups: ``miss_frac`` absent probes; the rest split ~50/50
     between deleted keys (must miss once the tombstone is newest) and
-    surviving keys."""
+    surviving keys. ``n_ranges`` adds post-delete scan windows (paper
+    2.9) — scans over tombstone-dense data, the range engine's dedup
+    stress case."""
     rng = _rng("bench-delete-heavy", seed)
     keys = _even_uniform(rng, n, key_space)
     distinct = np.unique(keys)
@@ -198,11 +215,13 @@ def make_delete_heavy(n: int, seed: int = 0, *, delete_frac: float = 0.4,
     lk_live = rng.choice(live, size=n_present - n_present // 2, replace=True)
     lookups = np.concatenate([lk_absent, lk_dead, lk_live]).astype(np.int32)
     rng.shuffle(lookups)
-    return _finish(rng, "delete-heavy", seed, keys, keys,
-                   n_lookups=n_lookups, miss_frac=miss_frac,
-                   deletes=deleted, lookups_override=lookups,
-                   meta={"delete_frac": delete_frac,
-                         "n_deleted": int(n_del)})
+    out = _finish(rng, "delete-heavy", seed, keys, keys,
+                  n_lookups=n_lookups, miss_frac=miss_frac,
+                  deletes=deleted, lookups_override=lookups,
+                  meta={"delete_frac": delete_frac,
+                        "n_deleted": int(n_del), "span": span})
+    out.ranges = _scan_windows(rng, keys, n_ranges, span)
+    return out
 
 
 def make_range_scan(n: int, seed: int = 0, *, key_space: int = 2**24,
@@ -227,8 +246,8 @@ def make_range_scan(n: int, seed: int = 0, *, key_space: int = 2**24,
 
 def make_shifting(n: int, seed: int = 0, *, write_frac: float = 0.85,
                   key_space: int = 2**24, theta: float = 1.1,
-                  lookup_frac: float = 4.0,
-                  miss_frac: float = 0.25) -> Workload:
+                  lookup_frac: float = 4.0, miss_frac: float = 0.25,
+                  n_ranges: int = 0, span: int = 2**16) -> Workload:
     """Mid-run workload shift: uniform write-heavy, then zipfian read-heavy.
 
     The adaptive tuner's proving ground (DESIGN.md §9): phase 1 is a bulk
@@ -243,7 +262,9 @@ def make_shifting(n: int, seed: int = 0, *, write_frac: float = 0.85,
 
     Phase geometry rides in ``meta``: ``n_phase1`` splits ``keys``,
     ``n_lookups_phase1`` splits ``lookups``. Keys stay even (absent
-    probes are ``key | 1``, the module-wide convention).
+    probes are ``key | 1``, the module-wide convention). ``n_ranges``
+    adds scan windows over the phase-1 data (measured after the
+    read-heavy phase, like the per-query lookups).
     """
     rng = _rng("bench-shifting", seed)
     n1 = max(1, int(n * write_frac))
@@ -273,16 +294,18 @@ def make_shifting(n: int, seed: int = 0, *, write_frac: float = 0.85,
         len(distinct) - 1)
     hot_perm = rng.permutation(len(distinct))
     l2 = mixed(distinct[hot_perm[ranks]], nl2)
+    absent = (rng.choice(keys1, size=min(4096, 4 * n1), replace=True)
+              | np.int32(1)).astype(np.int32)
     return Workload(
         name=f"shifting-n{n}-s{seed}", kind="shifting", seed=seed,
         keys=keys.astype(np.int32), vals=vals,
         lookups=np.concatenate([l1, l2]),
-        deletes=np.zeros(0, np.int32), ranges=np.zeros((0, 2), np.int32),
-        absent=(rng.choice(keys1, size=min(4096, 4 * n1), replace=True)
-                | np.int32(1)).astype(np.int32),
+        deletes=np.zeros(0, np.int32),
+        ranges=_scan_windows(rng, keys1, n_ranges, span),
+        absent=absent,
         meta={"n_phase1": int(n1), "n_lookups_phase1": int(nl1),
               "theta": theta, "key_space": key_space,
-              "write_frac": write_frac})
+              "write_frac": write_frac, "span": span})
 
 
 WORKLOAD_FAMILIES: Dict[str, Callable[..., Workload]] = {

@@ -15,6 +15,14 @@ TPU-adaptation-only knobs (static shapes require bounds):
   max_levels  — preallocated tier count (paper: levels grow unboundedly).
   max_range   — static bound on range-query result size.
   cand_factor — per-query candidate bound for the Bloom-compacted lookup.
+  range_cand  — per-scan candidate budget of the range engine (DESIGN.md
+                §10): how many in-window elements one scan gathers and
+                merges across all structures. None (default) = the total
+                resident capacity, i.e. every scan is exact at
+                full-width cost; a finite budget bounds the scan's
+                device work — a scan whose true in-window extent
+                overflows it returns a correct sorted prefix with the
+                `truncated` flag raised.
   backend     — ops-dispatch target for the hot primitives (Bloom probe,
                 fence lookup, run merge): "jnp" reference implementations
                 or "pallas" kernels (repro.kernels, interpret mode off-TPU).
@@ -116,6 +124,11 @@ class SLSMParams:
     max_levels: int = 3  # preallocated disk tiers (grown lazily host-side)
     max_range: int = 4096
     cand_factor: int = 8
+    range_cand: int | None = None  # per-scan candidate budget (None = total
+    #                                capacity: every scan is exact; a finite
+    #                                budget bounds the scan's sort/merge
+    #                                width — overflowing scans return a
+    #                                correct prefix with `truncated` set)
     backend: str = "jnp"  # hot-primitive dispatch: "jnp" | "pallas"
     merge_budget: int = 0  # paced merge steps per insert chunk (0 = sync)
     # -- tuning knobs (DESIGN.md §9; all default to the paper's behaviour) --
@@ -135,6 +148,10 @@ class SLSMParams:
         if self.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend {self.backend!r}; "
                              "expected 'jnp' or 'pallas'")
+        if self.range_cand is not None and self.range_cand < 1:
+            raise ValueError(
+                f"range_cand must be >= 1 or None (got {self.range_cand}); "
+                "None = unbounded (exact scans at full-capacity cost)")
         if self.eps_per_level is not None:
             if len(self.eps_per_level) != self.max_levels:
                 raise ValueError(
@@ -192,6 +209,17 @@ class SLSMParams:
     def stage_cap(self) -> int:
         """Staging (active-run) capacity: 2*Rn so an Rn-chunk always fits."""
         return 2 * self.Rn
+
+    def range_cand_eff(self, n_levels: int) -> int:
+        """Per-scan candidate-buffer width for a tree with `n_levels`
+        materialized disk levels (DESIGN.md §10): the configured
+        `range_cand` budget, clamped to the total resident capacity — a
+        scan can never yield more candidates than the structure holds,
+        so None (unbounded) resolves to that total and stays exact."""
+        total = self.stage_cap + self.R * self.Rn + sum(
+            self.D * self.level_cap(lvl) for lvl in range(n_levels))
+        return total if self.range_cand is None else min(self.range_cand,
+                                                         total)
 
     @property
     def max_candidates(self) -> int:

@@ -27,7 +27,7 @@ from repro.engine.levels import LevelState, empty_level  # noqa: F401
 from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
                                    seal_run, stage_append)
 from repro.engine.read_path import (lookup_batch, lookup_many,  # noqa: F401
-                                    range_query)
+                                    range_many, range_query)
 from repro.engine.scheduler import (MergeScheduler, MergeStep,  # noqa: F401
                                     Occupancy, backlog_cost, pending_steps,
                                     step_cost)

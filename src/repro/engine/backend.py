@@ -61,7 +61,7 @@ def fence_window_idx(queries: jax.Array, fences: jax.Array, keys: jax.Array,
 
 @dataclasses.dataclass(frozen=True)
 class OpsBackend:
-    """The three hot primitives the engine dispatches on.
+    """The four hot primitives the engine dispatches on.
 
     bloom_probe_many:  (blooms (D, W) u32, qs (Q,) i32, k, bits) -> (D, Q) bool
                        `bits` = effective filter width (static, <= W*32):
@@ -71,11 +71,21 @@ class OpsBackend:
                         counts (D,), mu)                          -> (D, Q) i32 idx | -1
     merge_runs:        (keys (k, cap), vals, seqs, drop: bool)    -> (keys, vals,
                                                                       seqs, count)
+    range_merge:       (keys (Q, C), vals, seqs, offsets (Q, P+1),
+                        drop: bool) -> (keys, vals, seqs, keep (Q, C))
+                       the range engine's per-scan candidate merge
+                       (DESIGN.md §10): each row holds P sorted
+                       segments at `offsets`; rows come back in global
+                       (key, seq) order with the newest-wins /
+                       tombstone-drop mask. jnp = per-row sort; pallas =
+                       the merge-path tournament kernel, dedup fused
+                       into the final round.
     """
     name: str
     bloom_probe_many: Callable
     fence_lookup_many: Callable
     merge_runs: Callable
+    range_merge: Callable
 
 
 # -- jnp reference backend ---------------------------------------------------
@@ -90,11 +100,17 @@ def _jnp_fence_many(qs, fences, keys, counts, mu: int):
     )(fences, keys, counts)
 
 
+def _jnp_range_merge(keys, vals, seqs, offsets, drop_tombstones: bool):
+    from repro.kernels.range_merge.ref import range_merge_ref
+    return range_merge_ref(keys, vals, seqs, offsets, drop_tombstones)
+
+
 JNP_BACKEND = OpsBackend(
     name="jnp",
     bloom_probe_many=_jnp_bloom_many,
     fence_lookup_many=_jnp_fence_many,
     merge_runs=RU.merge_runs,
+    range_merge=_jnp_range_merge,
 )
 
 
@@ -120,11 +136,17 @@ def _pallas_merge_runs(keys2d, vals2d, seqs2d, drop_tombstones: bool):
     return heap_merge_op(keys2d, vals2d, seqs2d, drop_tombstones)
 
 
+def _pallas_range_merge(keys, vals, seqs, offsets, drop_tombstones: bool):
+    from repro.kernels.range_merge import range_merge_op
+    return range_merge_op(keys, vals, seqs, offsets, drop_tombstones)
+
+
 PALLAS_BACKEND = OpsBackend(
     name="pallas",
     bloom_probe_many=_pallas_bloom_many,
     fence_lookup_many=_pallas_fence_many,
     merge_runs=_pallas_merge_runs,
+    range_merge=_pallas_range_merge,
 )
 
 
@@ -163,6 +185,34 @@ def lookup_level_many(be: OpsBackend, qs: jax.Array, blooms: jax.Array,
     gate = candidate_gate(be, qs, blooms, mins, maxs, k, bits)
     idx = be.fence_lookup_many(qs, fences, keys, counts, mu)
     return gate & (idx >= 0), jnp.maximum(idx, 0)
+
+
+def fence_window_bounds(lo: jax.Array, hi: jax.Array, fences: jax.Array,
+                        keys: jax.Array, count: jax.Array, mu: int):
+    """[start, end) element bounds of the window [lo, hi) in one disk run,
+    located through the fence pointers (paper 2.4/2.9, DESIGN.md §10).
+
+    For each bound: binary-search the (possibly strided) fences for its
+    page, then refine inside the mu-wide page window — O(log F + log mu)
+    instead of a search over the whole run, and the shape the range
+    kernel's VMEM budget wants. `lo`/`hi` may be batched (any shape);
+    returns (start, end) of the same shape with start <= end <= count.
+    """
+    def locate(q):
+        f = jnp.searchsorted(fences, q, side="right").astype(I32) - 1
+        st = jnp.clip(f, 0, fences.shape[0] - 1) * mu
+        # strided fence views can leave a partial last page: pin the
+        # window inside the run (keys are globally sorted, so a window
+        # reaching back before the fence group still refines correctly)
+        st = jnp.minimum(st, keys.shape[0] - mu)
+        win = jax.lax.dynamic_slice(keys, (st,), (mu,))
+        return st + jnp.searchsorted(win, q).astype(I32)
+
+    batched = jnp.shape(lo) != ()
+    loc = jax.vmap(locate) if batched else locate
+    start, end = loc(lo), loc(hi)
+    end = jnp.minimum(end, count)
+    return jnp.minimum(start, end), end
 
 
 def get_backend(name: str) -> OpsBackend:

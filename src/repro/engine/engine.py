@@ -23,7 +23,8 @@ from repro.engine.backend import get_backend
 from repro.engine.compaction import CompactionPolicy, TieringPolicy
 from repro.engine.memtable import init_state, stage_append
 from repro.engine.read_path import (bucket_pow2, level_probe_stats,
-                                    lookup_batch, lookup_many, range_query)
+                                    lookup_batch, lookup_many, range_many,
+                                    range_query)
 from repro.engine.scheduler import MergeScheduler
 from repro.engine.tuner import READ, ReadModePolicy, Tuner, retune_filters
 
@@ -52,6 +53,11 @@ PROBE_SAMPLE = 256
 # an unwarmed shape for a timed read to trip over
 ADAPTIVE_BUCKETS = (256, 1024, 4096)
 
+# batched range scans quantize to this bucket grid (every engine — the
+# scan program's width axis is the candidate buffer, so the lane count
+# stays coarse); warm() precompiles the whole grid per allocation
+RANGE_BUCKETS = (8, 32)
+
 
 def _adaptive_bucket(n: int) -> int:
     """Smallest warmed adaptive bucket holding n lanes (pow2 past the
@@ -60,6 +66,37 @@ def _adaptive_bucket(n: int) -> int:
         if n <= b:
             return b
     return bucket_pow2(n)
+
+
+def _range_bucket(n: int) -> int:
+    """Smallest warmed scan-count bucket holding n lanes (pow2 past the
+    largest, for callers exceeding the warmed grid)."""
+    for b in RANGE_BUCKETS:
+        if n <= b:
+            return b
+    return bucket_pow2(n)
+
+
+def _range_many_host(dispatch, max_range: int, ranges):
+    """Shared `range_many` driver for both engines: pad the scan list to
+    the `RANGE_BUCKETS` grid, run the engine's jitted batched program
+    ``dispatch(los, his, n_valid)``, trim back to the Q requested rows.
+    One implementation so the bucket grid, padding dtype, and empty-batch
+    contract cannot diverge between drivers."""
+    r = np.asarray(ranges, np.int32).reshape(-1, 2)
+    q = r.shape[0]
+    if q == 0:
+        return (np.zeros((0, max_range), np.int32),
+                np.zeros((0, max_range), np.int32),
+                np.zeros(0, np.int32), np.zeros(0, bool))
+    width = _range_bucket(q)
+    los = np.zeros(width, np.int32)
+    his = np.zeros(width, np.int32)
+    los[:q], his[:q] = r[:, 0], r[:, 1]
+    k, v, c, trunc = dispatch(jnp.asarray(los), jnp.asarray(his),
+                              jnp.int32(q))
+    return (np.asarray(k)[:q], np.asarray(v)[:q],
+            np.asarray(c)[:q], np.asarray(trunc)[:q])
 
 
 def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
@@ -171,13 +208,14 @@ class SLSM:
         latency-sensitive serving.
 
         Also precompile the *read* programs (batched lookup per `bucket`,
-        the single-key shape) for every levels-structure the engine can
-        grow into, so mid-stream level materialization never drops a
-        compile into a live lookup. With adaptive tuning the grid spans
-        every preset allocation — a retune swaps jit-static params, and
-        without this the first read after a switch would pay the compile
-        the pacing budget cannot flatten — plus the probe-telemetry
-        pass."""
+        the single-key shape, the range-scan grid — `RANGE_BUCKETS`
+        batched widths plus the single-scan program) for every
+        levels-structure the engine can grow into, so mid-stream level
+        materialization never drops a compile into a live lookup or
+        scan. With adaptive tuning the grid spans every preset
+        allocation — a retune swaps jit-static params, and without this
+        the first read after a switch would pay the compile the pacing
+        budget cannot flatten — plus the probe-telemetry pass."""
         self.scheduler.warm()
         if self.tuner.enabled:
             param_sets = [alloc.apply(self.p)
@@ -195,6 +233,10 @@ class SLSM:
                                             False, skip))
                 outs.append(lookup_batch(pa, st, jnp.zeros((1,), jnp.int32),
                                          False, skip))
+                for b in RANGE_BUCKETS:
+                    z = jnp.zeros((b,), jnp.int32)
+                    outs.append(range_many(pa, st, z, z, jnp.int32(0)))
+                outs.append(range_query(pa, st, jnp.int32(0), jnp.int32(0)))
                 if skip:
                     outs.append(level_probe_stats(
                         pa, st, jnp.zeros((PROBE_SAMPLE,), jnp.int32)))
@@ -246,16 +288,47 @@ class SLSM:
                                   self.tuner.enabled)
         return np.asarray(vals)[:qs.size], np.asarray(found)[:qs.size]
 
+    def range_device(self, lo: int, hi: int):
+        """Device-resident range query [lo, hi) (paper 2.9): one jitted
+        dispatch of the fence-pruned scan engine (DESIGN.md §10), no
+        host round-trip. Returns jax arrays ``(keys (max_range,), vals,
+        count, truncated)`` — rows KEY_EMPTY-padded past ``count`` —
+        so latency-sensitive callers (the bench runner, `range_many`
+        consumers) can chain or batch transfers instead of paying a
+        per-scan sync."""
+        return range_query(self.p_active, self.state, jnp.int32(lo),
+                           jnp.int32(hi))
+
     def range(self, lo: int, hi: int, return_truncated: bool = False):
         """Range query [lo, hi) (paper 2.9): newest-wins, tombstones
         dropped, key-sorted; truncated at `max_range` results. With
-        `return_truncated`, also returns whether the [lo, hi) window held
-        more than max_range live keys (the result is exact iff False)."""
-        k, v, c, trunc = range_query(self.p_active, self.state, jnp.int32(lo),
-                                     jnp.int32(hi))
+        `return_truncated`, also returns whether the result is only a
+        prefix of the window (more than max_range live keys, or a
+        `range_cand` budget overflow — the result is exact iff False).
+        Convenience trim of `range_device` (this is where the one host
+        sync happens)."""
+        k, v, c, trunc = self.range_device(lo, hi)
         c = int(c)
         out = np.asarray(k)[:c], np.asarray(v)[:c]
         return out + (bool(trunc),) if return_truncated else out
+
+    def range_many(self, ranges):
+        """Batched multi-scan fast path: all Q scans ``[(lo, hi), ...)``
+        in ONE device dispatch of the fence-pruned scan engine — shared
+        candidate gather, one fused merge-dedup pass (DESIGN.md §10) —
+        instead of one dispatch (and one host sync) per scan. Scan
+        counts are padded to the `RANGE_BUCKETS` grid so mixed batch
+        sizes reuse a handful of compiled programs, mirroring
+        `lookup_many`.
+
+        Returns ``(keys (Q, max_range), vals, counts (Q,),
+        truncated (Q,))`` as numpy arrays; row i holds ``counts[i]``
+        key-sorted live pairs for window i (see `range` for the
+        truncated-flag contract)."""
+        return _range_many_host(
+            lambda los, his, n: range_many(self.p_active, self.state,
+                                           los, his, n),
+            self.p.max_range, ranges)
 
     # -- tuner plumbing ----------------------------------------------------
     def sample_probe_stats(self) -> None:

@@ -64,13 +64,20 @@ def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
     bits, _, kk = p.bloom_geometry(cap, p.level_eps(level))
     w = p.bloom_words_physical(cap, p.level_eps(level))
     pad = cap - k.shape[0]
+    if pad < 0:  # deepest-level compaction scratch is larger than cap
+        k, v, s = k[:cap], v[:cap], s[:cap]
+    # build the filter at the pre-pad width: a spill's merged run is often
+    # far narrower than its destination capacity (the deepest level's xD
+    # bonus especially), and the scatter inside bloom_build processes
+    # every lane, padded or not — building before padding cuts the
+    # dominant cost of a deep spill step ~4x (the delete-phase tail).
+    # Padding adds only KEY_EMPTY lanes, which the valid mask drops, so
+    # the filter is bit-identical either way.
+    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk, bits)
     if pad > 0:
         k = jnp.concatenate([k, jnp.full((pad,), KEY_EMPTY, I32)])
         v = jnp.concatenate([v, jnp.zeros((pad,), I32)])
         s = jnp.concatenate([s, jnp.zeros((pad,), I32)])
-    elif pad < 0:  # deepest-level compaction scratch is larger than cap
-        k, v, s = k[:cap], v[:cap], s[:cap]
-    filt = BL.bloom_build(k, k != KEY_EMPTY, w, kk, bits)
     fences = RU.build_fences(k, p.mu, p.n_fences(level))
     mn, mx = RU.run_minmax(k, cnt)
     return k, v, s, filt, fences, mn, mx

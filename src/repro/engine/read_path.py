@@ -19,6 +19,16 @@ Two disk-search strategies:
            candidate-compacted gather is per-(run, query) pair, a shape
            the per-run fence kernel does not take.
 
+Range queries run the fence-pruned scan engine (DESIGN.md §10): each
+scan binary-searches every structure's window bounds through the fence
+machinery, gathers the contiguous in-window extents front-compacted
+into one candidate row of static budgeted width (`range_cand`), and
+merges them through the backend's sorted-segment merge-dedup op — the
+jnp row sort or the Pallas `range_merge` tournament kernel — so a
+scan's device work tracks its window, not the tree's capacity.
+`range_many` is the batched multi-scan form, padded and bucketed like
+`lookup_many`.
+
 All ops exist as pure `_impl` forms (vmappable — the sharded engine maps
 the dense lookup over shards) plus jitted wrappers. `lookup_many` is the
 batched multi-key fast path: a padded lane array + traced valid count,
@@ -33,10 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import runs as RU
 from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
-from repro.engine.backend import (candidate_gate, get_backend,
-                                  lookup_level_many)
+from repro.engine.backend import (candidate_gate, fence_window_bounds,
+                                  get_backend, lookup_level_many)
 from repro.engine.levels import LevelState
 from repro.engine.memtable import SLSMState
 
@@ -285,55 +294,189 @@ level_probe_stats = functools.partial(
 
 
 # --------------------------------------------------------------------------
-# range queries (paper 2.9)
+# range queries (paper 2.9) — the fence-pruned scan engine (DESIGN.md §10)
 # --------------------------------------------------------------------------
 
-def range_from_sorted(keys, vals, seqs, count, lo, hi):
-    """Every in-window element of one structure, full width.
+def _range_group_bounds(p: SLSMParams, state: SLSMState, los: jax.Array,
+                        his: jax.Array):
+    """Per-structure [start, end) window bounds for Q scans.
 
-    Deliberately NOT truncated to max_range per structure: each part may
-    contribute stale versions and tombstones that the global newest-wins
-    dedup removes, so cutting a part's window early would silently evict
-    live keys from the result even when the final count is far below
-    max_range (update-/delete-heavy data). The one truncation happens
-    after dedup, in range_query_impl.
+    Returns a list of groups, one per structure family — the staging
+    buffer, the sealed memory runs, then each materialized disk level —
+    each a tuple ``(keys2d (N, cap), vals2d, seqs2d, starts (Q, N),
+    ends (Q, N))``. Memory structures are bounded by plain binary
+    search; disk runs go through the fence pointers
+    (`backend.fence_window_bounds`) under the level's effective stride
+    view. Every disk level sits behind a min/max + occupancy `lax.cond`
+    gate (the `skip_empty` pattern): a level no scan's window touches
+    contributes zero-extent parts without doing any fence work.
     """
-    idx = jnp.arange(keys.shape[0], dtype=I32)
-    ok = (keys >= lo) & (keys < hi) & (idx < count)
-    return (jnp.where(ok, keys, KEY_EMPTY),
-            jnp.where(ok, vals, 0),
-            jnp.where(ok, seqs, 0))
+    q_n = los.shape[0]
+
+    def sorted_bounds(keys, count):
+        start = jnp.searchsorted(keys, los).astype(I32)
+        end = jnp.minimum(jnp.searchsorted(keys, his).astype(I32), count)
+        return jnp.minimum(start, end), end
+
+    groups = []
+    st, en = sorted_bounds(state.stage_keys, state.stage_count)
+    groups.append((state.stage_keys[None], state.stage_vals[None],
+                   state.stage_seqs[None], st[:, None], en[:, None]))
+    st, en = jax.vmap(sorted_bounds)(state.buf_keys, state.buf_counts)
+    groups.append((state.buf_keys, state.buf_vals, state.buf_seqs,
+                   st.T, en.T))
+    for level, lv in enumerate(state.levels):
+        stride, mu_eff = p.fence_view(level)
+        fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
+
+        def level_bounds(lv=lv, fences=fences, mu_eff=mu_eff):
+            st, en = jax.vmap(
+                lambda f, kk, c: fence_window_bounds(los, his, f, kk, c,
+                                                     mu_eff)
+            )(fences, lv.keys, lv.counts)
+            return st.T, en.T                      # (Q, D)
+
+        touched = ((lv.mins[None, :] < his[:, None])
+                   & (lv.maxs[None, :] >= los[:, None])
+                   & (lv.counts[None, :] > 0))
+        zeros = jnp.zeros((q_n, lv.keys.shape[0]), I32)
+        st, en = jax.lax.cond(jnp.any(touched), level_bounds,
+                              lambda: (zeros, zeros))
+        groups.append((lv.keys, lv.vals, lv.seqs, st, en))
+    return groups
+
+
+def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
+                    his: jax.Array):
+    """Q range scans [lo, hi) in one fused pass (paper 2.9, DESIGN.md §10).
+
+    Per scan: fence-prune every structure to its contiguous in-window
+    extent, gather the extents front-compacted into one candidate row of
+    static width ``range_cand_eff`` (a budget, not per-structure
+    padding — a scan's device work is O(its window), never O(capacity)),
+    then one backend-dispatched sorted-segment merge applies newest-wins
+    dedup and tombstone elision before the single ``max_range`` cut.
+
+    Returns ``(keys (Q, max_range), vals, counts (Q,), truncated (Q,))``,
+    rows key-sorted and KEY_EMPTY-padded past their count. Exactness
+    contract: a result row is always a correct sorted *prefix* of the
+    window's live keys; ``truncated`` is False iff the row is the whole
+    window — it is raised when the live keys exceed ``max_range`` or
+    when the candidate budget overflowed (a structure's in-window extent
+    was cut; the result then stops at the first key the cut could have
+    affected, so stale versions and tombstones still cancel exactly —
+    PR 3's full-window dedup contract, budgeted).
+    """
+    be = get_backend(p.backend)
+    mr = p.max_range
+    cand = p.range_cand_eff(len(state.levels))
+    los, his = los.astype(I32), his.astype(I32)
+    q_n = los.shape[0]
+
+    groups = _range_group_bounds(p, state, los, his)
+    starts = jnp.concatenate([g[3] for g in groups], axis=1)   # (Q, P)
+    ends = jnp.concatenate([g[4] for g in groups], axis=1)
+    exts = jnp.maximum(ends - starts, 0)
+    n_parts = starts.shape[1]
+
+    # sequential budget fill: part p gets taken_p = clip(C - cum_p) slots
+    cum_full = jnp.cumsum(exts, axis=1)
+    cum_full_ex = jnp.concatenate([jnp.zeros((q_n, 1), I32),
+                                   cum_full[:, :-1]], axis=1)
+    taken = jnp.clip(cand - cum_full_ex, 0, exts)
+    partial = taken < exts
+    offsets = jnp.concatenate([jnp.zeros((q_n, 1), I32),
+                               jnp.cumsum(taken, axis=1)], axis=1)
+    total = offsets[:, -1]
+
+    # gather candidates front-compacted: lane j of a row belongs to the
+    # part whose [offsets[p], offsets[p+1]) span covers j
+    j = jnp.arange(cand, dtype=I32)
+    part = jax.vmap(
+        lambda off: jnp.searchsorted(off, j, side="right").astype(I32) - 1
+    )(offsets)                                                  # (Q, C)
+    part_c = jnp.clip(part, 0, n_parts - 1)
+    src = (jnp.take_along_axis(starts, part_c, axis=1)
+           + j[None, :] - jnp.take_along_axis(offsets, part_c, axis=1))
+
+    k = jnp.full((q_n, cand), KEY_EMPTY, I32)
+    v = jnp.zeros((q_n, cand), I32)
+    s = jnp.zeros((q_n, cand), I32)
+    # per-part key at the first excluded in-window element (the cut
+    # boundary a budget overflow imposes); KEY_EMPTY where nothing is cut
+    cut_keys = jnp.full((q_n, n_parts), KEY_EMPTY, I32)
+    g0 = 0
+    for gk, gv, gs, gst, _ in groups:
+        n_g, cap_g = gk.shape
+        in_g = (part >= g0) & (part < g0 + n_g) & (j[None, :] < total[:, None])
+        d = jnp.clip(part - g0, 0, n_g - 1)
+        srcc = jnp.clip(src, 0, cap_g - 1)
+        k = jnp.where(in_g, gk[d, srcc], k)
+        v = jnp.where(in_g, gv[d, srcc], v)
+        s = jnp.where(in_g, gs[d, srcc], s)
+        cut_idx = jnp.clip(gst + taken[:, g0:g0 + n_g], 0, cap_g - 1)
+        d_iota = jnp.broadcast_to(jnp.arange(n_g), (q_n, n_g))
+        cut_keys = cut_keys.at[:, g0:g0 + n_g].set(
+            jnp.where(partial[:, g0:g0 + n_g], gk[d_iota, cut_idx],
+                      KEY_EMPTY))
+        g0 += n_g
+    cut = cut_keys.min(axis=1)                                  # (Q,)
+
+    # budget-overflow cut: drop everything at or past the first key any
+    # structure's extent was cut at — below it every structure is fully
+    # represented, so dedup over the survivors is exact
+    ok = k < cut[:, None]
+    k = jnp.where(ok, k, KEY_EMPTY)
+    v = jnp.where(ok, v, 0)
+    s = jnp.where(ok, s, 0)
+
+    k, v, s, keep = be.range_merge(k, v, s, offsets, True)
+    live = keep.sum(axis=1, dtype=I32)
+    pos = jnp.cumsum(keep, axis=1, dtype=I32) - 1
+    idx = jnp.where(keep, pos, mr)
+    row = jnp.broadcast_to(jnp.arange(q_n)[:, None], idx.shape)
+    out_k = jnp.full((q_n, mr), KEY_EMPTY, I32).at[row, idx].set(
+        k, mode="drop")
+    out_v = jnp.zeros((q_n, mr), I32).at[row, idx].set(v, mode="drop")
+    return (out_k, out_v, jnp.minimum(live, mr),
+            (live > mr) | jnp.any(partial, axis=1))
 
 
 def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
                      hi: jax.Array):
     """All live (key, value) with lo <= key < hi, newest-wins, tombstones
-    dropped. Sort-based dedup replaces the paper's hash table (DESIGN.md §2).
+    dropped — the single-scan form of `range_scan_impl` (one row of the
+    batched engine; same exactness contract).
 
     Returns (keys, vals, count, truncated): up to max_range results,
-    key-sorted; `truncated` flags that the window held more than max_range
-    live keys (the result is the first max_range of them — exact iff the
-    flag is False).
+    key-sorted; `truncated` False guarantees the result is the whole
+    window (it is raised past max_range live keys, or — with a finite
+    `range_cand` budget — when a scan's candidate gather overflowed and
+    the result is a cut-bounded prefix).
     """
-    mr = p.max_range
-    parts = [range_from_sorted(state.stage_keys, state.stage_vals,
-                               state.stage_seqs, state.stage_count,
-                               lo, hi)]
-    part = jax.vmap(lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi))(
-        state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
-    parts.append(tuple(x.reshape(-1) for x in part))
-    for lv in state.levels:
-        part = jax.vmap(
-            lambda k, v, s, c: range_from_sorted(k, v, s, c, lo, hi)
-        )(lv.keys, lv.vals, lv.seqs, lv.counts)
-        parts.append(tuple(x.reshape(-1) for x in part))
-    k = jnp.concatenate([x[0] for x in parts])
-    v = jnp.concatenate([x[1] for x in parts])
-    s = jnp.concatenate([x[2] for x in parts])
-    k, v, s = RU.sort_by_key_seq(k, v, s)
-    ok = RU.newest_wins_mask(k, v, drop_tombstones=True)
-    k, v, s, cnt = RU.compact(k, v, s, ok)
-    return k[:mr], v[:mr], jnp.minimum(cnt, mr), cnt > mr
+    k, v, cnt, trunc = range_scan_impl(
+        p, state, jnp.reshape(lo, (1,)), jnp.reshape(hi, (1,)))
+    return k[0], v[0], cnt[0], trunc[0]
 
 
 range_query = functools.partial(jax.jit, static_argnums=0)(range_query_impl)
+
+
+def range_many_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
+                    his: jax.Array, n_valid: jax.Array):
+    """Padded-batch range scans: the batched multi-scan fast path.
+
+    Semantically `range_scan_impl` over ``(los, his)[:n_valid]``, but the
+    window arrays are fixed-size (padded) lanes and ``n_valid`` is
+    *traced*, so one compiled program serves any scan count up to the pad
+    width (the drivers pad to the `RANGE_BUCKETS` grid, mirroring
+    `lookup_many`). Padded lanes report count 0, truncated False.
+    """
+    k, v, cnt, trunc = range_scan_impl(p, state, los, his)
+    lane = jnp.arange(los.shape[0], dtype=I32) < n_valid
+    return (jnp.where(lane[:, None], k, KEY_EMPTY),
+            jnp.where(lane[:, None], v, 0),
+            jnp.where(lane, cnt, 0), jnp.where(lane, trunc, False))
+
+
+range_many = functools.partial(jax.jit, static_argnums=0)(range_many_impl)

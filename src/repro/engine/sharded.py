@@ -51,7 +51,8 @@ from repro.engine import read_path as RP
 from repro.engine import scheduler as SCH
 from repro.engine import tuner as TU
 from repro.engine.backend import get_backend
-from repro.engine.engine import reject_reserved
+from repro.engine.engine import (RANGE_BUCKETS, _range_bucket,
+                                 _range_many_host, reject_reserved)
 
 _GOLDEN = np.uint32(0x9E3779B9)   # bloom.SEED1 — same hash family
 _C1 = np.uint32(0x85EBCA6B)
@@ -144,6 +145,30 @@ def _retune_filters_sharded(p: SLSMParams, state):
 @functools.partial(jax.jit, static_argnums=0)
 def _range_sharded(p: SLSMParams, state, lo, hi):
     return jax.vmap(lambda st: RP.range_query_impl(p, st, lo, hi))(state)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _range_many_sharded(p: SLSMParams, state, los, his, n_valid):
+    """Q scans against all S shards in one dispatch, merged on device.
+
+    Every shard answers the whole scan batch through the fence-pruned
+    engine (`read_path.range_many_impl` vmapped over the shard axis);
+    the per-shard result rows — key-sorted, disjoint key sets — are then
+    combined per scan with a single on-device sort, so the global result
+    never round-trips through host numpy. Returns the same
+    ``(keys (Q, max_range), vals, counts, truncated)`` contract as the
+    single-tree batched path, with ``truncated[i]`` true when any shard
+    truncated scan i or the combined live count exceeds max_range."""
+    k, v, c, tr = jax.vmap(
+        lambda st: RP.range_many_impl(p, st, los, his, n_valid))(state)
+    mr = p.max_range
+    s_n, q_n = k.shape[0], k.shape[1]
+    kq = jnp.moveaxis(k, 0, 1).reshape(q_n, s_n * mr)
+    vq = jnp.moveaxis(v, 0, 1).reshape(q_n, s_n * mr)
+    kq, vq = jax.lax.sort((kq, vq), num_keys=1)
+    total = c.sum(axis=0)
+    return (kq[:, :mr], vq[:, :mr], jnp.minimum(total, mr),
+            tr.any(axis=0) | (total > mr))
 
 
 # --------------------------------------------------------------------------
@@ -348,7 +373,9 @@ class ShardedSLSM:
     def warm(self) -> None:
         """Precompile the sharded maintenance program set (one program
         per step kind — the stacked pytree has a single structure, unlike
-        the single tree's lazily grown levels), so no insert round pays a
+        the single tree's lazily grown levels) plus the range-scan
+        program grid (`RANGE_BUCKETS` batched widths and the legacy
+        per-shard scan), so no insert round or first scan pays a
         first-use jit compile. Masks are all-False: the vmapped ops still
         compile fully, the dummy state passes through unchanged. With
         adaptive tuning each preset allocation is its own static-param
@@ -379,6 +406,12 @@ class ShardedSLSM:
                 outs.append(_merge_level_down_where(p, dummy, lvl,
                                                     p.disk_runs_merged, no))
             outs.append(_compact_last_where(p, dummy, no))
+            # the batched range-scan grid + the legacy per-shard program
+            for b in RANGE_BUCKETS:
+                z = jnp.zeros((b,), jnp.int32)
+                outs.append(_range_many_sharded(p, dummy, z, z,
+                                                jnp.int32(0)))
+            outs.append(_range_sharded(p, dummy, jnp.int32(0), jnp.int32(0)))
         jax.block_until_ready(outs)
 
     def drain(self) -> None:
@@ -463,12 +496,14 @@ class ShardedSLSM:
 
     def range(self, lo: int, hi: int, return_truncated: bool = False):
         """Global range = concat of per-shard ranges (disjoint key sets),
-        re-sorted by key. Each shard's contribution is bounded by
-        max_range: results are exact while no shard truncates, and with
-        `return_truncated` the (S,) per-shard truncation flags are
-        returned so callers can tell (shard s's flag set means shard s
-        held more than max_range live keys in [lo, hi) and contributed
-        only its first max_range)."""
+        re-sorted by key. Each shard contributes a correct sorted prefix
+        of its live window (bounded by max_range and, when finite, the
+        `range_cand` candidate budget): results are exact while no shard
+        truncates, and with `return_truncated` the (S,) per-shard
+        truncation flags are returned so callers can tell (shard s's
+        flag set means its contribution is only a prefix — it held more
+        than max_range live keys in [lo, hi), or its scan overflowed the
+        candidate budget)."""
         k, v, c, trunc = _range_sharded(self.p_active, self.state,
                                         jnp.int32(lo), jnp.int32(hi))
         k, v, c = np.asarray(k), np.asarray(v), np.asarray(c)
@@ -477,6 +512,36 @@ class ShardedSLSM:
         order = np.argsort(ks, kind="stable")
         out = ks[order], vs[order]
         return out + (np.asarray(trunc),) if return_truncated else out
+
+    def range_device(self, lo: int, hi: int):
+        """Device-resident global range query: one fused dispatch over
+        all shards with the per-shard results merged on device (no host
+        argsort, no per-scan sync). Returns jax arrays ``(keys
+        (max_range,), vals, count, truncated)`` — the single-tree
+        `SLSM.range_device` contract, with `truncated` already folded
+        across shards. The single scan rides the smallest warmed
+        `RANGE_BUCKETS` lane width, so it never pays a first-use
+        compile after `warm()`."""
+        width = _range_bucket(1)
+        los = np.zeros(width, np.int32)
+        his = np.zeros(width, np.int32)
+        los[0], his[0] = lo, hi
+        k, v, c, tr = _range_many_sharded(
+            self.p_active, self.state, jnp.asarray(los), jnp.asarray(his),
+            jnp.int32(1))
+        return k[0], v[0], c[0], tr[0]
+
+    def range_many(self, ranges):
+        """Batched multi-scan fast path over the shard fleet: all Q
+        scans answered by every shard in ONE vmapped dispatch, with the
+        disjoint per-shard rows merged per scan on device
+        (`_range_many_sharded`) — same numpy return contract as
+        `SLSM.range_many` (one shared pad/trim driver), padded to the
+        `RANGE_BUCKETS` grid."""
+        return _range_many_host(
+            lambda los, his, n: _range_many_sharded(
+                self.p_active, self.state, los, his, n),
+            self.p.max_range, ranges)
 
     # -- stats ----------------------------------------------------------------
     @property

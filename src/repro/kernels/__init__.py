@@ -10,6 +10,9 @@ Kernels:
   heap_merge    — HeapMerge (paper 2.5) as a merge-path binary-search
                   network: k-way newest-wins merge in log2(k) dense passes
   fence_lookup  — fence-pointer page search on sorted runs (paper 2.4)
+  range_merge   — range-scan k-way merge-dedup (paper 2.9): per-scan
+                  sorted candidate segments merged with newest-wins
+                  dedup / tombstone elision applied during the merge
   lsm_attention — tiered decode attention over an sLSM KV cache (hot
                   window + summary-gated cold blocks) — the paper's
                   read path fused into attention

@@ -1,0 +1,3 @@
+"""Range-scan k-way merge-dedup kernel (paper 2.9, DESIGN.md §10)."""
+from repro.kernels.range_merge.ops import range_merge_op  # noqa: F401
+from repro.kernels.range_merge.ref import range_merge_ref  # noqa: F401

@@ -1,0 +1,66 @@
+"""Public range-merge op: log2(P) Pallas tournament rounds + dedup mask.
+
+Matches `range_merge_ref` (the jnp sort-based form the jnp backend uses)
+exactly: rows come back (key, seq)-sorted with a keep mask that applies
+newest-wins dedup and (optionally) tombstone dropping — computed by the
+kernel during the final merge round, not by a separate sort pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import KEY_EMPTY
+from repro.kernels.range_merge.range_merge import OUT_TILE, merge_round_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnums=4)
+def range_merge_op(keys, vals, seqs, offsets, drop_tombstones: bool):
+    """Merge P sorted segments per candidate row (paper 2.9).
+
+    keys/vals/seqs: (Q, C) int32 rows, each holding P sorted-by-(key,
+    seq) segments back to back; offsets: (Q, P+1) int32 exclusive
+    segment boundaries (lanes past offsets[:, P] are padding). Returns
+    (keys, vals, seqs, keep): rows in global (key, seq) order, `keep`
+    marking the newest live copy of every key (tombstones dropped when
+    `drop_tombstones`).
+    """
+    q, cand = keys.shape
+    n_seg = offsets.shape[1] - 1
+    keys = keys.astype(jnp.int32)
+    vals = vals.astype(jnp.int32)
+    seqs = seqs.astype(jnp.int32)
+    offsets = offsets.astype(jnp.int32)
+
+    # pad rows to the kernel tile and the segment count to a power of two
+    # (appended segments are empty: their boundary repeats the last one)
+    cp = ((cand + OUT_TILE - 1) // OUT_TILE) * OUT_TILE
+    if cp != cand:
+        pk = jnp.full((q, cp - cand), KEY_EMPTY, jnp.int32)
+        keys = jnp.concatenate([keys, pk], axis=1)
+        vals = jnp.concatenate([vals, jnp.zeros_like(pk)], axis=1)
+        seqs = jnp.concatenate([seqs, jnp.zeros_like(pk)], axis=1)
+    s0 = max(2, 1 << (n_seg - 1).bit_length())
+    if s0 != n_seg:
+        tail = jnp.repeat(offsets[:, -1:], s0 - n_seg, axis=1)
+        offsets = jnp.concatenate([offsets, tail], axis=1)
+
+    interpret = not _on_tpu()
+    off = offsets
+    segs = s0
+    while segs > 2:
+        keys, vals, seqs = merge_round_pallas(
+            keys, vals, seqs, off, final=False,
+            drop_tombstones=drop_tombstones, interpret=interpret)
+        off = off[:, ::2]
+        segs //= 2
+    keys, vals, seqs, keep = merge_round_pallas(
+        keys, vals, seqs, off, final=True,
+        drop_tombstones=drop_tombstones, interpret=interpret)
+    return keys[:, :cand], vals[:, :cand], seqs[:, :cand], keep[:, :cand]

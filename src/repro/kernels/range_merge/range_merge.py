@@ -1,0 +1,162 @@
+"""Pallas kernel: k-way range-scan merge-dedup (paper 2.9, DESIGN.md §10).
+
+The range engine gathers each scan's candidates — the contiguous
+in-window slice of every structure — into one (Q, C) row buffer holding
+P sorted segments at per-query offsets. This kernel turns those rows
+into a single (key, seq)-sorted stream per scan, and on the final
+tournament round computes the newest-wins / tombstone-drop keep mask
+*during* the merge, replacing the read path's historical
+O(total-capacity * log) global sort with O(window) merge work.
+
+Shape of the computation:
+
+  * one launch merges adjacent segment pairs for all Q scans: grid
+    (Q, C / OUT_TILE), the whole candidate row VMEM-resident per scan
+    (constant index_map), one output tile per grid step;
+  * segment boundaries are *runtime* values (each scan prunes its own
+    window), so unlike `heap_merge` the merge-path binary search runs
+    on dynamic (n, m) read out of the per-scan offsets vector: each
+    output lane locates its segment pair with a branch-free search over
+    the paired offsets, then walks the merge-path diagonal (Green et
+    al.) inside the pair — all lanes in lockstep on the VPU;
+  * log2(P) rounds (driven by ops.py) halve the segment count; the
+    final round also emits the keep mask: an output element survives iff
+    it is not padding, the next merged element carries a different key
+    (newest-wins — seqnos are globally unique, so the last element of an
+    equal-key block is the newest copy), and it is not a committed
+    tombstone.
+
+Ordering is lexicographic on (key, seq), the same rule every other merge
+in the engine uses.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.params import KEY_EMPTY as _KEY_EMPTY
+from repro.core.params import TOMBSTONE as _TOMBSTONE
+from repro.kernels.common import upper_bound
+
+OUT_TILE = 512
+
+
+def _before(ak, as_, bk, bs):
+    """(key, seq) lexicographic strict less-than."""
+    return (ak < bk) | ((ak == bk) & (as_ < bs))
+
+
+def _merge_path(bk, bs, a_lo, n, a_hi, m, tt, steps: int):
+    """Per-lane merge-path split: i = #elements of segment a among the
+    first tt outputs of the (a, b) pair. `bk`/`bs` are the whole resident
+    candidate row; a = row[a_lo : a_lo+n], b = row[a_hi : a_hi+m]."""
+    lo = jnp.maximum(tt - m, 0)
+    hi = jnp.minimum(tt, n)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = (lo + hi) // 2
+        ai = a_lo + jnp.clip(mid, 0, jnp.maximum(n - 1, 0))
+        bj = a_hi + jnp.clip(tt - mid - 1, 0, jnp.maximum(m - 1, 0))
+        go_right = (_before(jnp.take(bk, ai), jnp.take(bs, ai),
+                            jnp.take(bk, bj), jnp.take(bs, bj))
+                    | (tt - mid - 1 >= m))
+        go_right &= mid < n
+        active = lo < hi
+        new_lo = jnp.where(go_right, mid + 1, lo)
+        new_hi = jnp.where(go_right, hi, mid)
+        return (jnp.where(active, new_lo, lo), jnp.where(active, new_hi, hi))
+
+    lo, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo
+
+
+def _pick(bk, bv, bs, a_lo, n, a_hi, m, i, j):
+    """Gather the pair element a merge position (i, j) emits."""
+    ai = a_lo + jnp.clip(i, 0, jnp.maximum(n - 1, 0))
+    bj = a_hi + jnp.clip(j, 0, jnp.maximum(m - 1, 0))
+    take_a = (j >= m) | ((i < n) & _before(jnp.take(bk, ai), jnp.take(bs, ai),
+                                           jnp.take(bk, bj),
+                                           jnp.take(bs, bj)))
+    k = jnp.where(take_a, jnp.take(bk, ai), jnp.take(bk, bj))
+    v = jnp.where(take_a, jnp.take(bv, ai), jnp.take(bv, bj))
+    s = jnp.where(take_a, jnp.take(bs, ai), jnp.take(bs, bj))
+    return k, v, s, take_a
+
+
+def _round_kernel(bk_ref, bv_ref, bs_ref, off_ref,
+                  ok_ref, ov_ref, os_ref, *refs, n_seg: int, cand: int,
+                  final: bool, drop_tombstones: bool):
+    tile = ok_ref.shape[1]
+    t = pl.program_id(1) * tile + jnp.arange(tile, dtype=jnp.int32)
+
+    bk, bv, bs = bk_ref[0, :], bv_ref[0, :], bs_ref[0, :]
+    off = off_ref[0, :]                              # (n_seg + 1,)
+    total = off[n_seg]
+
+    # locate each lane's segment pair via the paired boundaries off[::2]
+    paired = off[::2]                                # (n_seg // 2 + 1,)
+    p = jnp.clip(upper_bound(paired, t) - 1, 0, n_seg // 2 - 1)
+    a_lo = jnp.take(off, 2 * p)
+    a_hi = jnp.take(off, 2 * p + 1)
+    b_hi = jnp.take(off, 2 * p + 2)
+    n, m = a_hi - a_lo, b_hi - a_hi
+    tt = t - a_lo
+
+    steps = max(1, math.ceil(math.log2(cand + 1)) + 1)
+    i = _merge_path(bk, bs, a_lo, n, a_hi, m, tt, steps)
+    j = tt - i
+    k, v, s, take_a = _pick(bk, bv, bs, a_lo, n, a_hi, m, i, j)
+    valid = t < total
+    ok_ref[0, :] = jnp.where(valid, k, _KEY_EMPTY)
+    ov_ref[0, :] = jnp.where(valid, v, 0)
+    os_ref[0, :] = jnp.where(valid, s, 0)
+
+    if final:
+        # newest-wins mask, computed during the merge: the element at t
+        # survives iff the *next* merged element (split advanced by one
+        # on the taken side) carries a different key. The final round
+        # merges the last two segments, so the pair stream IS the global
+        # (key, seq) order and the neighbor test is exact.
+        keep_ref = refs[0]
+        i2 = i + take_a.astype(jnp.int32)
+        j2 = (tt + 1) - i2
+        nk, _, _, _ = _pick(bk, bv, bs, a_lo, n, a_hi, m, i2, j2)
+        nk = jnp.where(t + 1 < total, nk, _KEY_EMPTY)
+        keep = valid & (k != _KEY_EMPTY) & (k != nk)
+        if drop_tombstones:
+            keep &= v != _TOMBSTONE
+        keep_ref[0, :] = keep
+
+
+def merge_round_pallas(bk, bv, bs, off, *, final: bool,
+                       drop_tombstones: bool, interpret: bool = True):
+    """One tournament round over (Q, C) candidate rows: merge adjacent
+    segment pairs (boundaries in `off`, shape (Q, n_seg+1), n_seg even).
+    Returns merged (keys, vals, seqs) and, when `final`, the keep mask."""
+    q, cand = bk.shape
+    n_seg = off.shape[1] - 1
+    assert n_seg >= 2 and n_seg % 2 == 0, "segment count must be even >= 2"
+    assert cand % OUT_TILE == 0, f"pad candidate rows to {OUT_TILE} lanes"
+    grid = (q, cand // OUT_TILE)
+    row = lambda width: pl.BlockSpec((1, width), lambda i, t: (i, 0))
+    out_spec = pl.BlockSpec((1, OUT_TILE), lambda i, t: (i, t))
+    shapes = [jax.ShapeDtypeStruct((q, cand), jnp.int32)] * 3
+    out_specs = [out_spec] * 3
+    if final:
+        shapes.append(jax.ShapeDtypeStruct((q, cand), jnp.bool_))
+        out_specs.append(out_spec)
+    return pl.pallas_call(
+        functools.partial(_round_kernel, n_seg=n_seg, cand=cand, final=final,
+                          drop_tombstones=drop_tombstones),
+        out_shape=shapes,
+        grid=grid,
+        in_specs=[row(cand)] * 3 + [row(n_seg + 1)],
+        out_specs=out_specs,
+        interpret=interpret,
+        name="slsm_range_merge",
+    )(bk, bv, bs, off)

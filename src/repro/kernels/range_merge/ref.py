@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for range_merge: per-row (key, seq) sort + the same
+newest-wins / tombstone-drop mask, computed after the fact. This is also
+the jnp backend's production range-merge path (backend.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import KEY_EMPTY, TOMBSTONE
+
+
+def range_merge_ref(keys, vals, seqs, offsets, drop_tombstones: bool):
+    """Sort-based equivalent of `range_merge_op` (same output contract).
+
+    `offsets` is accepted for interface parity and ignored: sorting each
+    row by (key, seq) yields the same stream a segment merge does, since
+    the rows hold the same multiset.
+    """
+    del offsets
+    k, s, v = jax.lax.sort((keys.astype(jnp.int32), seqs.astype(jnp.int32),
+                            vals.astype(jnp.int32)), num_keys=2)
+    nxt = jnp.concatenate(
+        [k[:, 1:], jnp.full((k.shape[0], 1), KEY_EMPTY, k.dtype)], axis=1)
+    keep = (k != KEY_EMPTY) & (k != nxt)
+    if drop_tombstones:
+        keep &= v != TOMBSTONE
+    return k, v, s, keep

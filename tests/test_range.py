@@ -1,0 +1,276 @@
+"""Range-scan engine tests (ISSUE 5, DESIGN.md §10).
+
+Load-bearing properties:
+  * `range_many` is oracle-exact — overwrites, tombstones, empty
+    windows, windows straddling stage/memory-runs/disk-levels — on both
+    backends x both drivers, mid-stream, through a drain() barrier, and
+    (adaptive engines) through RETUNE allocation switches;
+  * the truncated-flag contract: a result row is ALWAYS a correct
+    sorted prefix of the window's live keys; the flag is False iff the
+    row is the whole window (it is raised past max_range live keys or
+    on a `range_cand` budget overflow);
+  * sharded and single-tree `range_many` agree bit-for-bit (disjoint
+    hash shards, on-device merge);
+  * the `range_merge` kernel matches its jnp reference on adversarial
+    segment layouts (the per-kernel sweep lives in test_kernels.py
+    style, here beside its consumers).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.oracle import DictOracle
+from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams, TuningPolicy
+from repro.engine import SLSM, ShardedSLSM
+from repro.kernels.range_merge import range_merge_op, range_merge_ref
+
+SMALL = dict(R=2, Rn=8, eps=0.02, D=2, m=1.0, mu=4, max_levels=3,
+             max_range=64)
+
+
+def small_params(**over):
+    return SLSMParams(**{**SMALL, **over})
+
+
+def _drive(t, o, seed, key_space=600, rounds=6, deletes=True):
+    """Mixed insert/overwrite/delete stream pushing data through every
+    structure tier (stage, memory runs, multiple disk levels)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(rounds):
+        n = int(rng.integers(6, 20))
+        ks = rng.integers(0, key_space // 2, n).astype(np.int32) * 2
+        vs = rng.integers(-50, 50, n).astype(np.int32)
+        t.insert(ks, vs)
+        o.insert(ks, vs)
+        if deletes:
+            dels = rng.integers(0, key_space // 2,
+                                int(rng.integers(1, 4))).astype(np.int32) * 2
+            t.delete(dels)
+            o.delete(dels)
+
+
+WINDOWS = [(0, 600), (0, 0), (100, 101), (550, 700), (-50, 40), (300, 200),
+           (37, 411)]
+
+
+def _check_windows(t, o, windows=WINDOWS):
+    """range_many rows must be exact prefixes of the oracle's windows,
+    and complete wherever the truncated flag is clear."""
+    ks, vs, cs, trunc = t.range_many(windows)
+    for i, (lo, hi) in enumerate(windows):
+        ko, vo = o.range(lo, hi)
+        n = int(cs[i])
+        if not trunc[i]:
+            assert n == len(ko), (i, n, len(ko))
+        np.testing.assert_array_equal(ks[i][:n], ko[:n], err_msg=str(i))
+        np.testing.assert_array_equal(vs[i][:n], vo[:n], err_msg=str(i))
+        assert (ks[i][n:] == KEY_EMPTY).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("budget", [0, 1])
+def test_range_many_oracle_exact_single_tree(backend, budget):
+    t = SLSM(small_params(backend=backend, merge_budget=budget))
+    o = DictOracle()
+    _drive(t, o, seed=3)
+    _check_windows(t, o)          # mid-stream: pending merges visible
+    t.drain()
+    _check_windows(t, o)          # at rest: drain barrier equivalence
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_range_many_oracle_exact_sharded(backend):
+    s = ShardedSLSM(small_params(backend=backend, merge_budget=1),
+                    n_shards=4)
+    o = DictOracle()
+    _drive(s, o, seed=5)
+    _check_windows(s, o)
+    s.drain()
+    _check_windows(s, o)
+
+
+def test_sharded_matches_single_tree_bitwise():
+    t = SLSM(small_params())
+    s = ShardedSLSM(small_params(), n_shards=4)
+    o = DictOracle()
+    _drive(t, o, seed=7)
+    _drive(s, DictOracle(), seed=7)
+    kt, vt, ct, rt = t.range_many(WINDOWS)
+    ks, vs, cs, rs = s.range_many(WINDOWS)
+    np.testing.assert_array_equal(ct, cs)
+    np.testing.assert_array_equal(rt, rs)
+    np.testing.assert_array_equal(kt, ks)
+    np.testing.assert_array_equal(vt, vs)
+
+
+def test_window_straddles_every_tier():
+    """A window covering keys resident in the stage, the sealed memory
+    runs, and multiple disk levels at once must merge them newest-wins."""
+    t, o = SLSM(small_params()), DictOracle()
+    ks = np.arange(0, 80, 2, dtype=np.int32)      # 40 keys -> disk
+    t.insert(ks, ks)
+    o.insert(ks, ks)
+    t.insert(ks[:10], ks[:10] * 100)              # overwrites, shallower
+    o.insert(ks[:10], ks[:10] * 100)
+    t.delete(ks[20:25])
+    o.delete(ks[20:25])
+    t.insert(np.asarray([81], np.int32), np.asarray([7], np.int32))  # stage
+    o.insert([81], [7])
+    assert t.n_levels >= 1                        # data actually spilled
+    _check_windows(t, o, [(0, 100)])
+
+
+def test_overwrites_and_tombstones_never_evict_live_keys():
+    """The PR 3 regression, through the new engine: stale versions and
+    tombstones filling a window must cancel before the max_range cut."""
+    p = small_params(max_range=16)
+    t, o = SLSM(p), DictOracle()
+    keys = np.arange(0, 40, dtype=np.int32)
+    t.insert(keys, keys)
+    o.insert(keys, keys)
+    t.delete(keys[:32])
+    o.delete(keys[:32])
+    k1, v1, trunc = t.range(0, 80, return_truncated=True)
+    k2, v2 = o.range(0, 80)
+    assert not trunc and len(k2) == 8
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(v1, v2)
+
+
+def test_truncation_flag_at_max_range():
+    t = SLSM(small_params(max_range=16))
+    ks = np.arange(0, 64, dtype=np.int32)
+    t.insert(ks, ks)
+    k, v, trunc = t.range(0, 64, return_truncated=True)
+    assert trunc and len(k) == 16
+    np.testing.assert_array_equal(k, ks[:16])
+    k, v, trunc = t.range(0, 10, return_truncated=True)
+    assert not trunc and len(k) == 10
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_range_cand_overflow_is_prefix_exact_and_flagged(backend):
+    """A finite candidate budget may cut a scan short, but the result
+    must stay a correct prefix and the flag must be raised."""
+    p = small_params(backend=backend, max_range=64, range_cand=16)
+    t, o = SLSM(p), DictOracle()
+    ks = np.arange(0, 100, 2, dtype=np.int32)
+    t.insert(ks, ks * 3)
+    o.insert(ks, ks * 3)
+    k, v, trunc = t.range(0, 200, return_truncated=True)
+    ko, vo = o.range(0, 200)
+    assert trunc, "budget overflow must raise the truncated flag"
+    np.testing.assert_array_equal(k, ko[:len(k)])
+    np.testing.assert_array_equal(v, vo[:len(k)])
+    # narrow windows stay under the budget: exact and unflagged
+    k, v, trunc = t.range(10, 22, return_truncated=True)
+    ko, vo = o.range(10, 22)
+    assert not trunc
+    np.testing.assert_array_equal(k, ko)
+    np.testing.assert_array_equal(v, vo)
+
+
+def test_range_cand_validation():
+    with pytest.raises(ValueError, match="range_cand"):
+        small_params(range_cand=0)
+    assert small_params(range_cand=None).range_cand_eff(0) == \
+        small_params().stage_cap + 2 * 8
+
+
+def test_range_device_matches_range():
+    t, o = SLSM(small_params()), DictOracle()
+    _drive(t, o, seed=11)
+    k, v, c, trunc = t.range_device(0, 600)
+    kk, vv = np.asarray(k), np.asarray(v)
+    n = int(c)
+    rk, rv, rt = t.range(0, 600, return_truncated=True)
+    assert bool(trunc) == rt and n == len(rk)
+    np.testing.assert_array_equal(kk[:n], rk)
+    np.testing.assert_array_equal(vv[:n], rv)
+    # sharded driver honors the same device contract
+    s = ShardedSLSM(small_params(), n_shards=2)
+    _drive(s, DictOracle(), seed=11)
+    sk, sv, sc, st_ = s.range_device(0, 600)
+    np.testing.assert_array_equal(np.asarray(sk)[:int(sc)], rk)
+
+
+@pytest.mark.parametrize("engine", ["single", "sharded"])
+def test_range_many_through_retune_and_drain(engine):
+    """Adaptive engines must answer scans exactly across RETUNE
+    allocation switches (filters/fence views swap under the scan)."""
+    pol = TuningPolicy(mode="adaptive", interval=64, eps_floor=1e-3)
+    p = SLSMParams(R=4, Rn=32, eps=1e-2, D=3, m=1.0, mu=8, max_levels=3,
+                   max_range=2048, merge_budget=1, tuning=pol)
+    if engine == "single":
+        t = SLSM(p)
+    else:
+        t = ShardedSLSM(p, n_shards=2)
+    o = DictOracle()
+    rng = np.random.default_rng(23)
+    probe_windows = [(0, 400), (50, 250), (0, 0)]
+    for _ in range(6):                       # write burst
+        ks = rng.integers(0, 200, 80).astype(np.int32) * 2
+        vs = rng.integers(-99, 99, 80).astype(np.int32)
+        t.insert(ks, vs)
+        o.insert(ks, vs)
+    for r in range(10):                      # read burst flips the tuner
+        t.lookup_many(np.arange(0, 400, dtype=np.int32))
+        _check_windows(t, o, probe_windows)
+        if r % 3 == 2:
+            ks = rng.integers(0, 200, 8).astype(np.int32) * 2
+            t.insert(ks, ks)
+            o.insert(ks, ks)
+    assert t.stats["retunes"] >= 1, "stream must exercise the tuner"
+    t.drain()
+    _check_windows(t, o, probe_windows)
+
+
+def test_range_many_empty_batch_and_bucketing():
+    t = SLSM(small_params())
+    k, v, c, trunc = t.range_many([])
+    assert k.shape == (0, t.p.max_range) and c.shape == (0,)
+    t.insert(np.asarray([2, 4], np.int32), np.asarray([1, 2], np.int32))
+    # odd batch sizes ride the padded bucket grid and trim back
+    for q in (1, 3, 9):
+        wins = [(0, 10)] * q
+        k, v, c, trunc = t.range_many(wins)
+        assert k.shape == (q, t.p.max_range)
+        assert (c == 2).all() and not trunc.any()
+
+
+# -- the range_merge kernel against its jnp oracle ---------------------------
+
+@pytest.mark.parametrize("q,widths", [
+    (1, [16]), (2, [8, 8, 8]), (3, [0, 5, 0, 9, 2]),
+    (4, [32] * 7), (1, [1] * 12),
+])
+def test_range_merge_kernel_matches_ref(rng, q, widths):
+    cand = sum(widths) + int(rng.integers(0, 4))
+    cand = max(cand, 1)
+    for drop in (False, True):
+        k = np.full((q, cand), KEY_EMPTY, np.int32)
+        v = np.zeros((q, cand), np.int32)
+        s = np.zeros((q, cand), np.int32)
+        off = np.zeros((q, len(widths) + 1), np.int32)
+        seq = 0
+        for qi in range(q):
+            pos = 0
+            for pi, w in enumerate(widths):
+                e = int(rng.integers(0, w + 1))
+                k[qi, pos:pos + e] = np.sort(
+                    rng.integers(0, 60, e)).astype(np.int32)
+                v[qi, pos:pos + e] = np.where(
+                    rng.random(e) < 0.3, TOMBSTONE,
+                    rng.integers(0, 100, e)).astype(np.int32)
+                s[qi, pos:pos + e] = np.arange(seq, seq + e)
+                seq += e
+                pos += e
+                off[qi, pi + 1] = pos
+        args = (jnp.asarray(k), jnp.asarray(v), jnp.asarray(s),
+                jnp.asarray(off), drop)
+        got = range_merge_op(*args)
+        want = range_merge_ref(*args)
+        for name, g, w in zip(("keys", "vals", "seqs", "keep"), got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                          err_msg=f"{name} drop={drop}")
