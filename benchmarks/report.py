@@ -25,7 +25,7 @@ MARK_END = "<!-- BENCH_TABLE_END -->"
 
 # canonical scenarios first (trajectory headliners), then sweeps sorted
 _CANONICAL_ORDER = ("uniform", "sequential", "zipfian", "delete_heavy",
-                    "range_scan", "shifting")
+                    "range_scan", "shifting", "serving")
 
 
 def _fmt_ops(x: float) -> str:
@@ -54,10 +54,18 @@ def load_docs(bench_dir: Path) -> list:
 
 
 def render_table(docs: list) -> str:
-    """One row per BENCH document; '-' where a scenario has no phase."""
+    """One row per BENCH document; '-' where a scenario has no phase.
+
+    Serving documents (schema v5: standard phases null) fill the lookup
+    columns from their coalesced closed-loop point and the speedup
+    column from the coalesced-vs-per-request ratio; the platform column
+    comes from each document's ``env.platform`` (the jax backend the
+    numbers were measured on — rows are only comparable within one
+    platform)."""
     head = ("| scenario | insert ops/s | insert p99 | lookup ops/s "
-            "| lookup p99 | speedup | range scans/s | bloom FP | tuner |\n"
-            "|---|---|---|---|---|---|---|---|---|")
+            "| lookup p99 | speedup | range scans/s | bloom FP | tuner "
+            "| platform |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
     rows = [head]
     for doc in docs:
         m = doc["metrics"]
@@ -66,16 +74,31 @@ def render_table(docs: list) -> str:
                       "retunes)" if tun else "static")
         rb = m.get("range_batched")
         range_cell = _fmt_ops(rb["ops_per_s"]) if rb else "-"
+        platform = doc.get("env", {}).get("platform", "-")
+        srv = m.get("serving")
+        if srv:
+            co = srv["coalesced"]
+            ins_ops, ins_p99 = "-", "-"
+            lk_ops = _fmt_ops(co["ops_per_s"])
+            lk_p99 = _fmt_us(co["p99_us"])
+            speedup = f"{srv['coalesced_speedup']:.0f}x serve"
+        else:
+            ins_ops = _fmt_ops(m["insert"]["ops_per_s"])
+            ins_p99 = _fmt_us(m["insert"]["p99_us"])
+            lk_ops = _fmt_ops(m["lookup_batched"]["ops_per_s"])
+            lk_p99 = _fmt_us(m["lookup_batched"]["p99_us"])
+            speedup = f"{m['batched_speedup']:.0f}x"
         rows.append(
             f"| {doc['name']} "
-            f"| {_fmt_ops(m['insert']['ops_per_s'])} "
-            f"| {_fmt_us(m['insert']['p99_us'])} "
-            f"| {_fmt_ops(m['lookup_batched']['ops_per_s'])} "
-            f"| {_fmt_us(m['lookup_batched']['p99_us'])} "
-            f"| {m['batched_speedup']:.0f}x "
+            f"| {ins_ops} "
+            f"| {ins_p99} "
+            f"| {lk_ops} "
+            f"| {lk_p99} "
+            f"| {speedup} "
             f"| {range_cell} "
             f"| {m['bloom']['fp_rate_measured']:.1e} "
-            f"| {tuner_cell} |")
+            f"| {tuner_cell} "
+            f"| {platform} |")
     return "\n".join(rows)
 
 

@@ -28,6 +28,16 @@ from pathlib import Path
 
 def _summary(doc: dict) -> str:
     m = doc["metrics"]
+    if m.get("serving"):
+        s = m["serving"]
+        return (f"{doc['name']}: coalesced "
+                f"{s['coalesced']['ops_per_s']:.0f} ops/s "
+                f"(p99 {s['coalesced']['p99_us']:.0f}us) vs per-request "
+                f"{s['per_request']['ops_per_s']:.0f} ops/s "
+                f"({s['coalesced_speedup']:.1f}x) at "
+                f"{s['coalesced']['clients']} clients, sustained@SLO "
+                f"{s['sustained_ops_at_slo']:.0f} ops/s, "
+                f"governor {s['governor']['steps']} steps")
     parts = [
         f"{doc['name']}:",
         f"insert {m['insert']['ops_per_s']:.0f} ops/s,",
@@ -65,6 +75,14 @@ def run_scenarios(selector: str, out_dir: str, profile: str) -> None:
         print(_summary(doc), flush=True)
         print(f"#   wrote {path} in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
+        # compiled executables accumulate memory mappings; a long
+        # multi-scenario run (each scenario warms its own parameter
+        # set, so there is no cross-scenario cache reuse to lose) can
+        # hit the kernel's vm.max_map_count ceiling and segfault XLA's
+        # next compile — release each scenario's programs before the
+        # next one starts
+        import jax
+        jax.clear_caches()
 
 
 def check_dir(out_dir: str) -> None:

@@ -14,6 +14,12 @@ dispatch per key — the speedup the batched read path exists for; the
 range vs range_batched pair (`range_device` vs `range_many`, DESIGN.md
 §10) is its scan-side sibling.
 
+The `serving` workload runs a third path (`_run_serving`): the
+closed-loop offered-load sweep of the continuous-batching server
+(repro.serve) plus its per-request dispatch baseline, emitted as the
+schema's ``metrics.serving`` block with the standard phases null
+(DESIGN.md §11).
+
 The Bloom false-positive rate is *measured*, not assumed: every disk
 run's filter is probed with the workload's guaranteed-absent key stream
 (inserted keys are even, probes are odd) and the admit rate is averaged
@@ -214,6 +220,53 @@ def _run_shifting(tree, w: Workload, prof: Dict) -> Tuple[Dict, Dict, bool]:
 # RANGE_BUCKETS grid covers it, so the shape is always warm)
 RANGE_BATCH = 32
 
+# the serving scenario's p99 SLO (enqueue->reply): sustained throughput
+# is the best swept offered load whose p99 stays under this
+SERVING_SLO_P99_US = 50_000.0
+
+
+def _run_serving(sc: Scenario, w, prof: Dict) -> Tuple[Dict, Any]:
+    """The closed-loop serving scenario (repro.serve, DESIGN.md §11).
+
+    Offered-load sweep: one fresh engine + batching server per client
+    count (`profile.serving_clients`), the SAME deterministic request
+    stream re-partitioned across the clients, coalesced mixed-op-tape
+    dispatch. Then the per-request baseline: the same stream at the top
+    offered load, every request its own classic driver call. Returns
+    ``(metrics.serving block, the last coalesced engine)`` — the engine
+    feeds the document's maintenance/bloom sections.
+    """
+    from repro.serve import Server, closed_loop, sustained_at_slo
+
+    sweep, tree, srv = [], None, None
+    for c in prof["serving_clients"]:
+        tree = build_engine(sc)
+        srv = Server(tree)
+        srv.warm()          # maintenance + read grid + tape interpreters
+        sweep.append(closed_loop(srv, w.requests, c))
+        srv.drain()
+    coalesced = sweep[-1]
+    top = prof["serving_clients"][-1]
+    baseline_tree = build_engine(sc)
+    baseline = Server(baseline_tree, mode="per_request")
+    baseline.warm()
+    per_request = closed_loop(baseline, w.requests, top)
+    baseline.drain()
+    gov = srv.stats()["governor"]
+    block = {
+        "sweep": sweep,
+        "coalesced": coalesced,
+        "per_request": per_request,
+        "coalesced_speedup": (coalesced["ops_per_s"]
+                              / max(per_request["ops_per_s"], 1e-12)),
+        "slo_p99_us": SERVING_SLO_P99_US,
+        "sustained_ops_at_slo": sustained_at_slo(sweep,
+                                                 SERVING_SLO_P99_US),
+        "governor": {"steps": int(gov["steps"]),
+                     "idle_steps": int(gov["idle_steps"])},
+    }
+    return block, tree
+
 
 def _run_ranges(tree, ranges: np.ndarray) -> Optional[Dict]:
     """Per-scan range phase: one device dispatch per window through the
@@ -321,12 +374,22 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
     wargs = dict(sc.wargs)
     if sc.workload in ("range-scan", "delete-heavy", "shifting"):
         wargs.setdefault("n_ranges", prof["n_ranges"])
-    w = make_workload(sc.workload, prof["n"], seed=sc.seed, **wargs)
+    n_ops = prof["serving_ops"] if sc.workload == "serving" else prof["n"]
+    w = make_workload(sc.workload, n_ops, seed=sc.seed, **wargs)
     p = sc.engine_params()
-    tree = build_engine(sc)
-    tree.warm()   # precompile all maintenance programs (untimed)
+    serving = None
 
-    if w.kind == "shifting":
+    if w.kind == "serving":
+        # closed-loop serving: no standard phases (the schema's nullable
+        # block); engines are built per sweep point inside _run_serving
+        serving, tree = _run_serving(sc, w, prof)
+        insert = batched = per_query = delete = None
+        ranges = ranges_batched = range_stats = None
+        insert_steady = True
+        n_batched_lookups = prof["n_lookups"]
+    elif w.kind == "shifting":
+        tree = build_engine(sc)
+        tree.warm()   # precompile all maintenance programs (untimed)
         # phased mixed-op stream, never drained mid-run: the adaptive
         # tuner must catch the write->read flip in flight (DESIGN.md §9)
         insert, batched, insert_steady = _run_shifting(tree, w, prof)
@@ -338,6 +401,8 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(w.lookups) - nl1
     else:
+        tree = build_engine(sc)
+        tree.warm()   # precompile all maintenance programs (untimed)
         insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
         delete = _run_deletes(tree, w, chunk=4 * p.Rn)
         if p.merge_budget > 0:
@@ -382,7 +447,9 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
             "range": ranges,
             "range_batched": ranges_batched,
             "range_stats": range_stats,
-            "batched_speedup": (batched["ops_per_s"]
+            "serving": serving,
+            "batched_speedup": (None if batched is None else
+                                batched["ops_per_s"]
                                 / max(per_query["ops_per_s"], 1e-12)),
             "maintenance": {k: int(tree.stats[k]) for k in
                             ("seals", "flushes", "spills", "compactions",

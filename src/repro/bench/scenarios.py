@@ -2,9 +2,10 @@
 
 A `Scenario` = one workload family + one full engine configuration
 (SLSMParams overrides, compaction policy, shard count). The canonical
-six (`--scenario all`) cover the workload taxonomy — uniform,
-sequential, zipfian, delete-heavy, range-scan, and the mid-run
-`shifting` scenario that proves the adaptive tuner — at the CPU-scaled
+seven (`--scenario all`) cover the workload taxonomy — uniform,
+sequential, zipfian, delete-heavy, range-scan, the mid-run `shifting`
+scenario that proves the adaptive tuner, and the closed-loop `serving`
+scenario that proves the continuous-batching layer — at the CPU-scaled
 paper baseline; the sweep families (`--scenario sweeps`, or one of
 `sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-merge-budget|
 sweep-policy|sweep-backend|sweep-shards|sweep-tuner`) vary exactly one
@@ -63,12 +64,19 @@ PROFILES: Dict[str, Dict[str, int]] = {
     # drop_tombstones=False flush variant. smoke satisfies this only for
     # the base params (canonical five); default/full also cover the
     # largest sweep points (Rn=1024, R=32: 2*R*Rn + chunk = 20480).
+    # serving_clients = the closed-loop offered-load sweep (client
+    # counts, each client 1 outstanding request); serving_ops scales the
+    # serving scenario's request stream separately from n (the stream is
+    # ~6 ops/request, so n-sized streams would dominate the suite's wall
+    # clock at per-request dispatch)
     "smoke": dict(n=7_500, n_lookups=1_024, n_per_query=24, batch=256,
-                  n_ranges=8),
+                  n_ranges=8, serving_ops=2_000, serving_clients=(1, 8)),
     "default": dict(n=30_000, n_lookups=4_096, n_per_query=64, batch=1_024,
-                    n_ranges=32),
+                    n_ranges=32, serving_ops=8_000,
+                    serving_clients=(1, 8, 32)),
     "full": dict(n=60_000, n_lookups=8_192, n_per_query=128, batch=1_024,
-                 n_ranges=64),
+                 n_ranges=64, serving_ops=16_000,
+                 serving_clients=(1, 8, 32, 64)),
 }
 
 
@@ -90,7 +98,7 @@ class Scenario:
         return bench_params(**self.params)
 
 
-# -- the canonical six: one per workload family (--scenario all) -----------
+# -- the canonical seven: one per workload family (--scenario all) ---------
 
 # the adaptive tuner's policy for the canonical shifting point: decide
 # every 512 ops so both phases see decisions even at the smoke profile
@@ -112,6 +120,10 @@ CANONICAL: List[Scenario] = [
     # adaptive controller on; sweep-tuner holds the static comparisons
     Scenario("shifting", "shifting",
              params=dict(tuning=ADAPTIVE, **SHIFT_PARAMS)),
+    # the continuous-batching serving layer (repro.serve, DESIGN.md §11):
+    # closed-loop offered-load sweep, coalesced mixed-op tape dispatch vs
+    # the per-request baseline at the top offered load
+    Scenario("serving", "serving"),
 ]
 
 
@@ -170,7 +182,7 @@ SCENARIOS: Dict[str, Scenario] = {
 
 
 def scenarios_for(selector: str) -> List[Scenario]:
-    """Resolve a CLI selector: 'all' (canonical five), 'sweeps' (every
+    """Resolve a CLI selector: 'all' (canonical seven), 'sweeps' (every
     sweep), a sweep family ('sweep-R'), a scenario name, or a
     comma-separated mix of the above."""
     out: List[Scenario] = []

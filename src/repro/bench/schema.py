@@ -10,9 +10,9 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 4):
+Document shape (SCHEMA_VERSION 5):
 
-  schema_version  int     == 4
+  schema_version  int     == 5
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
@@ -32,6 +32,10 @@ Document shape (SCHEMA_VERSION 4):
     lookup_batched    phase    one fused multi-key dispatch per batch
     lookup_per_query  phase    one dispatch per key (the baseline the
                                batched path is measured against)
+                               (insert/lookup_batched/lookup_per_query/
+                               batched_speedup are null — and only
+                               null — on serving documents, whose
+                               stream has no standard phases)
     delete            phase|None   tombstone stream (delete-heavy only)
     range             phase|None   [lo,hi) scans, one device dispatch per
                                window (workloads with scan windows)
@@ -56,8 +60,31 @@ Document shape (SCHEMA_VERSION 4):
                       allocation the run ended on, the EWMA read
                       fraction, the byte budget it managed, and the
                       sampled per-level observed-FP fractions
+    serving           {sweep, coalesced, per_request, coalesced_speedup,
+                      slo_p99_us, sustained_ops_at_slo, governor}|None
+                      the continuous-batching serving scenario's block
+                      (null on every other scenario): ``sweep`` is the
+                      closed-loop offered-load sweep (one serving-point
+                      per client count), ``coalesced`` its top-load
+                      point, ``per_request`` the same stream at the same
+                      offered load dispatched one classic driver call
+                      per request, ``coalesced_speedup`` their ops/s
+                      ratio (the dispatch-coalescing win the mixed-op
+                      tape exists for, DESIGN.md §11),
+                      ``sustained_ops_at_slo`` the best swept ops/s
+                      whose p99 enqueue->reply latency meets
+                      ``slo_p99_us``, and ``governor`` the maintenance
+                      steps spent at window boundaries / idle gaps
     bloom             {eps_configured, fp_rate_measured, n_probed}
   env               {jax, numpy, python, platform, timestamp}
+
+  serving-point := {clients int    offered load (closed-loop clients)
+                    ops, requests  int   stream size served
+                    wall_s, ops_per_s, requests_per_s   float
+                    p50_us, p99_us, p999_us, max_stall_us
+                                   float  enqueue->reply request latency
+                    windows, dispatches   int  coalescing windows served
+                                   / device dispatch count}
 
   phase := {ops          int   ops executed
             wall_s       float total wall-clock seconds
@@ -82,12 +109,17 @@ SCHEMA_VERSION history:
       metrics gained the range_batched phase and the range_stats
       telemetry block; delete_heavy and shifting scenarios now carry
       range phases (DESIGN.md §10).
+  5 — serving PR: optional metrics.serving block (the closed-loop
+      offered-load sweep + coalesced-vs-per-request comparison of the
+      continuous-batching layer, DESIGN.md §11); the standard phases
+      (insert, lookup_batched, lookup_per_query, batched_speedup)
+      became nullable on — and only on — serving documents.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -133,6 +165,60 @@ def _check_phase(phase: Any, where: str, errs: List[str]) -> None:
         errs.append(f"{where}.ops: phase present but empty")
 
 
+_SERVING_POINT_KEYS = {"clients": int, "ops": int, "requests": int,
+                       "wall_s": float, "ops_per_s": float,
+                       "requests_per_s": float, "p50_us": float,
+                       "p99_us": float, "p999_us": float,
+                       "max_stall_us": float, "windows": int,
+                       "dispatches": int}
+
+
+def _check_serving_point(pt: Any, where: str, errs: List[str]) -> None:
+    """One closed-loop measurement (see module docstring serving-point)."""
+    if not isinstance(pt, dict):
+        errs.append(f"{where}: expected object, got {type(pt).__name__}")
+        return
+    for key, typ in _SERVING_POINT_KEYS.items():
+        v = _typed(pt, key, typ, errs, where)
+        if isinstance(v, (int, float)) and v < 0:
+            errs.append(f"{where}.{key}: negative ({v})")
+    for key in ("clients", "ops", "requests", "windows", "dispatches"):
+        v = pt.get(key)
+        if isinstance(v, int) and v <= 0:
+            errs.append(f"{where}.{key}: must be positive ({v})")
+
+
+def _check_serving(srv: Dict[str, Any], errs: List[str]) -> None:
+    """The metrics.serving block of a serving-scenario document."""
+    where = "metrics.serving"
+    sweep = _typed(srv, "sweep", list, errs, where)
+    if sweep is not None:
+        if not sweep:
+            errs.append(f"{where}.sweep: empty offered-load sweep")
+        for i, pt in enumerate(sweep):
+            _check_serving_point(pt, f"{where}.sweep[{i}]", errs)
+    for key in ("coalesced", "per_request"):
+        if key not in srv:
+            errs.append(f"{where}: missing key {key!r}")
+        else:
+            _check_serving_point(srv[key], f"{where}.{key}", errs)
+    sp = _typed(srv, "coalesced_speedup", float, errs, where)
+    if isinstance(sp, (int, float)) and sp <= 0:
+        errs.append(f"{where}.coalesced_speedup: must be positive ({sp})")
+    slo = _typed(srv, "slo_p99_us", float, errs, where)
+    if isinstance(slo, (int, float)) and slo <= 0:
+        errs.append(f"{where}.slo_p99_us: must be positive ({slo})")
+    sus = _typed(srv, "sustained_ops_at_slo", float, errs, where)
+    if isinstance(sus, (int, float)) and sus < 0:
+        errs.append(f"{where}.sustained_ops_at_slo: negative ({sus})")
+    gov = _typed(srv, "governor", dict, errs, where)
+    if gov is not None:
+        for key in ("steps", "idle_steps"):
+            v = _typed(gov, key, int, errs, f"{where}.governor")
+            if isinstance(v, int) and v < 0:
+                errs.append(f"{where}.governor.{key}: negative ({v})")
+
+
 def validate(doc: Any) -> List[str]:
     """Structural check of one BENCH document; [] means valid."""
     errs: List[str] = []
@@ -169,8 +255,24 @@ def validate(doc: Any) -> List[str]:
 
     met = _typed(doc, "metrics", dict, errs, "document")
     if met is not None:
+        # the serving block gates the standard phases' nullability: a
+        # serving document has no phase arrays (and must say so with
+        # explicit nulls); every other document must carry them
+        if "serving" not in met:
+            errs.append("metrics: missing key 'serving' (use null for "
+                        "non-serving scenarios)")
+        serving = met.get("serving")
+        if serving is not None:
+            _check_serving(serving, errs)
         for req in ("insert", "lookup_batched", "lookup_per_query"):
-            _check_phase(met.get(req), f"metrics.{req}", errs)
+            if met.get(req) is None:
+                if serving is None:
+                    errs.append(f"metrics.{req}: null is only valid on "
+                                "serving documents")
+                elif req not in met:
+                    errs.append(f"metrics: missing key {req!r}")
+            else:
+                _check_phase(met.get(req), f"metrics.{req}", errs)
         for opt in ("delete", "range", "range_batched"):
             if met.get(opt) is not None:
                 _check_phase(met[opt], f"metrics.{opt}", errs)
@@ -198,9 +300,17 @@ def validate(doc: Any) -> List[str]:
                 != (met.get("range_stats") is None)):
             errs.append("metrics: range_batched and range_stats must be "
                         "both present or both null")
-        sp = _typed(met, "batched_speedup", float, errs, "metrics")
-        if isinstance(sp, (int, float)) and sp <= 0:
-            errs.append(f"metrics.batched_speedup: must be positive ({sp})")
+        if met.get("batched_speedup") is None:
+            if serving is None:
+                errs.append("metrics.batched_speedup: null is only valid "
+                            "on serving documents")
+            elif "batched_speedup" not in met:
+                errs.append("metrics: missing key 'batched_speedup'")
+        else:
+            sp = _typed(met, "batched_speedup", float, errs, "metrics")
+            if isinstance(sp, (int, float)) and sp <= 0:
+                errs.append(
+                    f"metrics.batched_speedup: must be positive ({sp})")
         maint = _typed(met, "maintenance", dict, errs, "metrics")
         if maint is not None:
             for key in _MAINT_KEYS:

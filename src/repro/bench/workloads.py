@@ -24,6 +24,9 @@ Families (registry `WORKLOAD_FAMILIES`):
                  lookups split between deleted (must miss) and live keys
   range-scan   — uniform load + a stream of [lo, hi) scan windows
                  (paper 2.9 / 3.7: latency linear in span)
+  serving      — interleaved multi-client tagged request stream (a
+                 `ServingWorkload`, not phase arrays: the continuous-
+                 batching serving scenario's input, DESIGN.md §11)
 
 `make_kv_workload` (the original `repro.data` generator used by the
 per-figure benches) also lives here now; `repro.data` re-exports it.
@@ -308,6 +311,116 @@ def make_shifting(n: int, seed: int = 0, *, write_frac: float = 0.85,
               "write_frac": write_frac, "span": span})
 
 
+@dataclass
+class ServingRequest:
+    """One tagged request in a serving stream: ``kind`` is insert /
+    delete / lookup / range; ``keys``/``vals`` follow `repro.serve`'s
+    submit convention (vals = values for inserts, hi bounds for ranges,
+    unused otherwise). ``client`` tags the generating client — the
+    closed-loop driver re-partitions the stream by concurrency, so the
+    tag documents provenance rather than routing."""
+
+    client: int
+    kind: str
+    keys: np.ndarray
+    vals: np.ndarray
+
+
+@dataclass
+class ServingWorkload:
+    """One deterministic interleaved multi-client request stream (the
+    `serving` scenario's input — not phase arrays like `Workload`, but
+    a stream-ordered tagged request list the batching server coalesces
+    at runtime)."""
+
+    name: str
+    kind: str
+    seed: int
+    requests: list
+    absent: np.ndarray               # guaranteed-absent keys (odd)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        """Total ops across the stream (the size parameter)."""
+        return int(sum(len(r.keys) for r in self.requests))
+
+
+def make_serving(n: int, seed: int = 0, *, n_clients: int = 16,
+                 key_space: int = 2**22, insert_frac: float = 0.50,
+                 lookup_frac: float = 0.33, delete_frac: float = 0.07,
+                 miss_frac: float = 0.25, max_req: int = 16,
+                 span: int = 2**12) -> ServingWorkload:
+    """Interleaved multi-client tagged request stream (~`n` total ops).
+
+    Serving-shaped requests: each carries 1..`max_req` ops (scan
+    requests carry 1-2 windows), kinds drawn from the configured mix
+    (the remainder after insert/lookup/delete is range scans). The
+    stream opens with an insert-only warm prefix (~10% of `n`) so reads
+    have data to hit; lookups mix hits over the inserted-so-far prefix
+    with guaranteed-absent probes (``key | 1`` — inserted keys are even,
+    the module-wide convention), deletes tombstone previously inserted
+    keys, and scan windows are centred on inserted keys. Deterministic
+    under (family, seed), like every generator here.
+    """
+    rng = _rng("bench-serving", seed)
+    kinds = np.array(["insert", "lookup", "delete", "range"])
+    probs = np.array([insert_frac, lookup_frac, delete_frac,
+                      1.0 - insert_frac - lookup_frac - delete_frac])
+    if probs[-1] < 0:
+        raise ValueError("serving op mix exceeds 1.0")
+    requests: list = []
+    inserted: list = []
+    ops = 0
+    warm_ops = max(max_req, n // 10)
+    i = 0
+    while ops < n:
+        client = i % n_clients
+        kind = ("insert" if ops < warm_ops or not inserted
+                else str(rng.choice(kinds, p=probs)))
+        if kind == "insert":
+            sz = int(rng.integers(1, max_req + 1))
+            ks = _even_uniform(rng, sz, key_space)
+            vs = rng.integers(1, 2**30, sz, dtype=np.int32)
+            inserted.append(ks)
+            requests.append(ServingRequest(client, "insert", ks, vs))
+        elif kind == "lookup":
+            sz = int(rng.integers(1, max_req + 1))
+            pool = inserted[int(rng.integers(0, len(inserted)))]
+            ks = rng.choice(pool, sz, replace=True).astype(np.int32)
+            miss = rng.random(sz) < miss_frac
+            ks[miss] |= np.int32(1)
+            requests.append(ServingRequest(
+                client, "lookup", ks, np.zeros(sz, np.int32)))
+        elif kind == "delete":
+            sz = int(rng.integers(1, max(2, max_req // 4)))
+            pool = inserted[int(rng.integers(0, len(inserted)))]
+            ks = rng.choice(pool, sz, replace=True).astype(np.int32)
+            requests.append(ServingRequest(
+                client, "delete", ks, np.zeros(sz, np.int32)))
+        else:  # range
+            sz = int(rng.integers(1, 3))
+            pool = inserted[int(rng.integers(0, len(inserted)))]
+            centres = rng.choice(pool, sz, replace=True).astype(np.int64)
+            lo = np.maximum(0, centres - span // 2).astype(np.int32)
+            hi = np.minimum(_I32_MAX, lo.astype(np.int64) + span).astype(
+                np.int32)
+            requests.append(ServingRequest(client, "range", lo, hi))
+        ops += len(requests[-1].keys)
+        i += 1
+    all_keys = np.concatenate(inserted)
+    absent = (rng.choice(all_keys, size=min(4096, 4 * len(all_keys)),
+                         replace=True) | np.int32(1)).astype(np.int32)
+    return ServingWorkload(
+        name=f"serving-n{n}-s{seed}", kind="serving", seed=seed,
+        requests=requests, absent=absent,
+        meta={"n_clients": n_clients, "key_space": key_space,
+              "insert_frac": insert_frac, "lookup_frac": lookup_frac,
+              "delete_frac": delete_frac, "miss_frac": miss_frac,
+              "max_req": max_req, "span": span,
+              "n_requests": len(requests)})
+
+
 WORKLOAD_FAMILIES: Dict[str, Callable[..., Workload]] = {
     "uniform": make_uniform,
     "sequential": make_sequential,
@@ -315,6 +428,7 @@ WORKLOAD_FAMILIES: Dict[str, Callable[..., Workload]] = {
     "delete-heavy": make_delete_heavy,
     "range-scan": make_range_scan,
     "shifting": make_shifting,
+    "serving": make_serving,
 }
 
 

@@ -2,6 +2,7 @@
 
 Layer map (DESIGN.md has the full tour):
   backend.py    — ops dispatch: jnp reference vs Pallas kernels
+  batching.py   — the pad/bucket grid every batched entry point shares
   memtable.py   — staging buffer (active run) + sealed memory runs
   levels.py     — disk-tier state: runs, Bloom filters, fences, min/max
   compaction.py — the Do-Merge cascade ops + tiering/leveling policies
@@ -9,6 +10,7 @@ Layer map (DESIGN.md has the full tour):
   tuner.py      — adaptive memory/filter tuner: one byte budget moved
                   between write buffer, per-level Bloom bits, and fences
   read_path.py  — dense + Bloom-compacted lookups, range queries
+  tape.py       — device-resident mixed-op tape (lax.scan interpreter)
   engine.py     — the host-side `SLSM` driver
   sharded.py    — S hash-partitioned trees in one vmapped pytree
 
@@ -17,6 +19,10 @@ compatibility.
 """
 from repro.engine.backend import (BACKENDS, OpsBackend,  # noqa: F401
                                   get_backend, lookup_level_many)
+from repro.engine.batching import (ADAPTIVE_BUCKETS,  # noqa: F401
+                                   RANGE_BUCKETS, adaptive_bucket,
+                                   bucket_pow2, pad_pow2, pad_to,
+                                   range_bucket, range_many_host)
 from repro.engine.compaction import (CompactionPolicy,  # noqa: F401
                                      LevelingPolicy, TieringPolicy,
                                      compact_last_level,

@@ -36,6 +36,17 @@ from repro.core import runs as RU
 I32 = jnp.int32
 
 
+def strided_fences(fences: jax.Array, stride: int) -> jax.Array:
+    """A level's *effective* fence array under the current allocation's
+    stride view (every stride-th fence, an (mu*stride)-wide page window —
+    DESIGN.md §9). Stride 1 returns the physical array untouched, so the
+    static-tuning path lowers to a no-op. Every fence consumer — dense
+    and sparse lookups, probe telemetry, range window bounds, and the
+    mixed-op tape's branches — derives its view here, so the strided
+    geometry cannot diverge between read paths."""
+    return fences[:, ::stride] if stride > 1 else fences
+
+
 def fence_window_idx(queries: jax.Array, fences: jax.Array, keys: jax.Array,
                      count: jax.Array, mu: int) -> jax.Array:
     """Fence-pointer lookup on one disk run (paper 2.4): binary-search the

@@ -19,84 +19,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.engine import tape as TP
 from repro.engine.backend import get_backend
+from repro.engine.batching import (ADAPTIVE_BUCKETS, RANGE_BUCKETS,
+                                   TAPE_BUCKETS, adaptive_bucket,
+                                   bucket_pow2, pad_to, range_many_host)
 from repro.engine.compaction import CompactionPolicy, TieringPolicy
 from repro.engine.memtable import init_state, stage_append
-from repro.engine.read_path import (bucket_pow2, level_probe_stats,
-                                    lookup_batch, lookup_many, range_many,
-                                    range_query)
+from repro.engine.read_path import (level_probe_stats, lookup_batch,
+                                    lookup_many, range_many, range_query)
 from repro.engine.scheduler import MergeScheduler
 from repro.engine.tuner import READ, ReadModePolicy, Tuner, retune_filters
-
-
-def _pad_to(qs: np.ndarray, width: int) -> np.ndarray:
-    """Pad a query vector with KEY_EMPTY to `width` lanes."""
-    out = np.full(width, KEY_EMPTY, np.int32)
-    out[:len(qs)] = qs
-    return out
-
-
-def _pad_pow2(qs: np.ndarray) -> np.ndarray:
-    """Pad a query vector with KEY_EMPTY to its `bucket_pow2` width, so
-    repeated mixed-size batches hit O(log Q) compiled programs."""
-    return _pad_to(qs, bucket_pow2(len(qs)))
-
 
 # fixed width of the tuner's sampled probe-telemetry dispatch: one shape
 # -> one compiled level_probe_stats program per (allocation, structure)
 PROBE_SAMPLE = 256
-
-# adaptive engines quantize batched-lookup lanes to this coarse bucket
-# set: every preset allocation is its own static-param read program, so
-# the bucket set must stay small enough for warm() to precompile the
-# whole (preset x structure x bucket) grid — a retune must never leave
-# an unwarmed shape for a timed read to trip over
-ADAPTIVE_BUCKETS = (256, 1024, 4096)
-
-# batched range scans quantize to this bucket grid (every engine — the
-# scan program's width axis is the candidate buffer, so the lane count
-# stays coarse); warm() precompiles the whole grid per allocation
-RANGE_BUCKETS = (8, 32)
-
-
-def _adaptive_bucket(n: int) -> int:
-    """Smallest warmed adaptive bucket holding n lanes (pow2 past the
-    largest, for callers exceeding the warmed grid)."""
-    for b in ADAPTIVE_BUCKETS:
-        if n <= b:
-            return b
-    return bucket_pow2(n)
-
-
-def _range_bucket(n: int) -> int:
-    """Smallest warmed scan-count bucket holding n lanes (pow2 past the
-    largest, for callers exceeding the warmed grid)."""
-    for b in RANGE_BUCKETS:
-        if n <= b:
-            return b
-    return bucket_pow2(n)
-
-
-def _range_many_host(dispatch, max_range: int, ranges):
-    """Shared `range_many` driver for both engines: pad the scan list to
-    the `RANGE_BUCKETS` grid, run the engine's jitted batched program
-    ``dispatch(los, his, n_valid)``, trim back to the Q requested rows.
-    One implementation so the bucket grid, padding dtype, and empty-batch
-    contract cannot diverge between drivers."""
-    r = np.asarray(ranges, np.int32).reshape(-1, 2)
-    q = r.shape[0]
-    if q == 0:
-        return (np.zeros((0, max_range), np.int32),
-                np.zeros((0, max_range), np.int32),
-                np.zeros(0, np.int32), np.zeros(0, bool))
-    width = _range_bucket(q)
-    los = np.zeros(width, np.int32)
-    his = np.zeros(width, np.int32)
-    los[:q], his[:q] = r[:, 0], r[:, 1]
-    k, v, c, trunc = dispatch(jnp.asarray(los), jnp.asarray(his),
-                              jnp.int32(q))
-    return (np.asarray(k)[:q], np.asarray(v)[:q],
-            np.asarray(c)[:q], np.asarray(trunc)[:q])
 
 
 def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
@@ -280,10 +217,10 @@ class SLSM:
         if qs.size == 0:
             return np.zeros(0, np.int32), np.zeros(0, bool)
         self._on_reads(qs)
-        width = (_adaptive_bucket(qs.size) if self.tuner.enabled
+        width = (adaptive_bucket(qs.size) if self.tuner.enabled
                  else bucket_pow2(qs.size))
         vals, found = lookup_many(self.p_active, self.state,
-                                  jnp.asarray(_pad_to(qs, width)),
+                                  jnp.asarray(pad_to(qs, width)),
                                   jnp.int32(qs.size), sparse,
                                   self.tuner.enabled)
         return np.asarray(vals)[:qs.size], np.asarray(found)[:qs.size]
@@ -325,10 +262,165 @@ class SLSM:
         truncated (Q,))`` as numpy arrays; row i holds ``counts[i]``
         key-sorted live pairs for window i (see `range` for the
         truncated-flag contract)."""
-        return _range_many_host(
+        return range_many_host(
             lambda los, his, n: range_many(self.p_active, self.state,
                                            los, his, n),
             self.p.max_range, ranges)
+
+    # -- mixed-op tape (repro.engine.tape, DESIGN.md §11) -------------------
+    def tape_write_capacity(self) -> int:
+        """Max write keys the next `run_tape` call may carry, under the
+        current occupancy: its headroom pass must be able to reserve one
+        free run slot per in-scan seal the writes can force
+        (`tape.tape_seal_bound`), and flushing can only push `run_count`
+        down to ``run_count % runs_merged_eff``. Serving layers split
+        windows that exceed this into multiple tapes."""
+        p = self.p_active
+        rc, sc = int(self.state.run_count), int(self.state.stage_count)
+        # mirror ensure_stage_space(): pre-existing full stage seals first
+        while sc >= p.Rn:
+            if rc >= p.R:
+                rc -= p.runs_merged_eff
+            rc += 1
+            sc -= p.Rn
+        free = p.R - rc % p.runs_merged_eff
+        return (free + 1) * p.Rn - 1 - sc
+
+    def run_tape(self, chunks, sparse: bool = False):
+        """Execute a coalesced mixed-op window as ONE device dispatch.
+
+        `chunks` is a stream-ordered sequence of `tape.TapeChunk`s (or
+        ``(kind, keys, vals)`` tuples): ``write`` chunks stage key/value
+        pairs (a TOMBSTONE value is a delete — the engine's own marker
+        is legal here, unlike `insert`), ``lookup`` chunks carry point
+        queries, ``range`` chunks carry (lo, hi) window bounds. The
+        whole window lowers to one `lax.scan` over tagged slots
+        (`tape.tape_exec`), so a mixed stream pays one host->device
+        launch and one device->host sync instead of one per op — the
+        serving layer's steady-state data plane (DESIGN.md §11).
+
+        Results are per-chunk, in order: writes -> in-scan seal count,
+        lookups -> ``(vals, found)``, ranges -> ``(keys, vals, counts,
+        truncated)`` — numpy, trimmed to each chunk's op count, and
+        identical to what the per-op driver calls would have returned
+        (same `_impl` ops in the same stream order; maintenance timing
+        never changes read results — DESIGN.md §8).
+
+        Headroom precondition (handled here, before each dispatch): the
+        staging buffer absorbs every write slot and a free run slot
+        exists for every seal the tape can trigger
+        (`scheduler.ensure_stage_space` / `reserve_run_slots`). Windows
+        whose writes exceed `tape_write_capacity` are segmented into
+        multiple tapes at write boundaries (splitting a write chunk is
+        stream-order-neutral), so steady-state serving usually stays at
+        one dispatch per window and never fails on a heavy one.
+        Flush/spill/compact/retune stay host steps *between* tapes (the
+        maintenance governor's job), never inside one.
+        """
+        chunks = [c if isinstance(c, TP.TapeChunk) else TP.TapeChunk(*c)
+                  for c in chunks]
+        if not chunks:
+            return []
+        n_writes = n_reads = 0
+        last_reads = None
+        for ch in chunks:
+            k = np.asarray(ch.keys, np.int32).reshape(-1)
+            if ch.kind == "write":
+                reject_reserved(k, op="tape write")
+                n_writes += k.size
+            elif ch.kind == "lookup":
+                reject_reserved(k, op="tape lookup")
+                n_reads += k.size
+                last_reads = k
+            elif ch.kind != "range":
+                raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        results = [0] * len(chunks)
+        # stream-ordered work list of (original chunk index, chunk);
+        # oversized writes split across segments under the same index
+        work = list(enumerate(chunks))
+        while work:
+            self.scheduler.ensure_stage_space()
+            budget = self.tape_write_capacity()
+            seg, seg_idx = [], []
+            while work:
+                i, ch = work[0]
+                if ch.kind == "write":
+                    k = np.asarray(ch.keys, np.int32).reshape(-1)
+                    v = np.asarray(ch.vals, np.int32).reshape(-1)
+                    if budget <= 0:
+                        break
+                    if k.size > budget:
+                        seg.append(TP.TapeChunk("write", k[:budget],
+                                                v[:budget]))
+                        seg_idx.append(i)
+                        work[0] = (i, TP.TapeChunk("write", k[budget:],
+                                                   v[budget:]))
+                        budget = 0
+                        continue
+                    budget -= k.size
+                seg.append(ch)
+                seg_idx.append(i)
+                work.pop(0)
+            assert seg, "tape segmentation made no progress"
+            seals = TP.tape_seal_bound(self.p_active,
+                                       int(self.state.stage_count), seg)
+            if seals:
+                self.scheduler.reserve_run_slots(seals)
+            ops, keys, vals, nv = TP.build_tape(self.p_active, seg)
+            self.state, ys = TP.tape_exec(
+                self.p_active, self.state, jnp.asarray(ops),
+                jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(nv),
+                sparse, self.tuner.enabled)
+            for i, res in zip(seg_idx, TP.unpack_tape(self.p_active, seg, ys)):
+                if chunks[i].kind == "write":
+                    results[i] += res
+                    self.stats["seals"] += res
+                else:
+                    results[i] = res
+        self.stats["writes"] += n_writes
+        self.stats["reads"] += n_reads
+        if n_writes:
+            self.tuner.note_writes(n_writes)
+        if n_reads:
+            self.tuner.note_reads(n_reads)
+            if self.tuner.enabled and last_reads is not None:
+                self.tuner.last_queries = last_reads[:PROBE_SAMPLE].copy()
+        return results
+
+    def voluntary_steps(self, budget: int) -> int:
+        """Roll the tuner's decision boundary, then run up to `budget`
+        ready maintenance steps (scheduler.voluntary_steps; a decided
+        RETUNE rides the backlog like any merge). The maintenance
+        governor's uniform entry point (repro.serve) — identical
+        signature on `ShardedSLSM` — for spending merge budget in idle
+        gaps and at window boundaries instead of per insert chunk.
+        Returns how many steps ran."""
+        self.tuner.decide()
+        return self.scheduler.voluntary_steps(budget)
+
+    def warm_tape(self, buckets: tuple = TAPE_BUCKETS) -> None:
+        """Precompile the mixed-op tape interpreter grid: one program
+        per (allocation x levels-structure x slot bucket), like `warm`'s
+        read grid — after this, steady-state serving windows never JIT
+        (`run_tape` only ever dispatches these shapes). Call alongside
+        `warm()` before latency-sensitive serving."""
+        if self.tuner.enabled:
+            param_sets = [alloc.apply(self.p)
+                          for alloc in self.tuner.presets.values()]
+        else:
+            param_sets = [self.p]
+        skip = self.tuner.enabled
+        outs = []
+        for pa in param_sets:
+            for n_levels in range(self.p.max_levels + 1):
+                for t in buckets:
+                    st = init_state(pa, n_levels)
+                    outs.append(TP.tape_exec(
+                        pa, st, jnp.zeros((t,), jnp.int32),
+                        jnp.full((t, pa.Rn), KEY_EMPTY, jnp.int32),
+                        jnp.zeros((t, pa.Rn), jnp.int32),
+                        jnp.zeros((t,), jnp.int32), False, skip))
+        jax.block_until_ready(outs)
 
     # -- tuner plumbing ----------------------------------------------------
     def sample_probe_stats(self) -> None:

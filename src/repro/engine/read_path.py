@@ -45,18 +45,15 @@ import numpy as np
 
 from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
 from repro.engine.backend import (candidate_gate, fence_window_bounds,
-                                  get_backend, lookup_level_many)
+                                  get_backend, lookup_level_many,
+                                  strided_fences)
+# re-export (PR 6 moved the bucketing policy to repro.engine.batching):
+# callers historically import bucket_pow2 from here
+from repro.engine.batching import bucket_pow2  # noqa: F401
 from repro.engine.levels import LevelState
 from repro.engine.memtable import SLSMState
 
 I32 = jnp.int32
-
-
-def bucket_pow2(n: int, floor: int = 16) -> int:
-    """Round a query count up to the next power-of-two bucket (>= floor).
-    The one bucketing policy for every batched-lookup entry point: padded
-    lane counts hit O(log Q) compiled programs instead of one per Q."""
-    return max(floor, 1 << (n - 1).bit_length())
 
 
 def consider(best_seq, best_val, seq_c, val_c):
@@ -121,7 +118,7 @@ def search_level_dense(p: SLSMParams, lv: LevelState, level: int,
     be = get_backend(p.backend)
     bits, _, kk = p.bloom_geometry(p.level_cap(level), p.level_eps(level))
     stride, mu_eff = p.fence_view(level)
-    fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
+    fences = strided_fences(lv.fences, stride)
     hit, idxc = lookup_level_many(be, qs, lv.blooms, lv.mins, lv.maxs,
                                   fences, lv.keys, lv.counts, kk, mu_eff,
                                   bits)
@@ -154,7 +151,7 @@ def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
     d_c, q_c = jnp.maximum(d_idx, 0), jnp.maximum(q_idx, 0)
     qk = qs[q_c]
     stride, mu_eff = p.fence_view(level)
-    fences_v = lv.fences[:, ::stride] if stride > 1 else lv.fences
+    fences_v = strided_fences(lv.fences, stride)
 
     def one(d, q):
         f = jnp.searchsorted(fences_v[d], q, side="right").astype(I32) - 1
@@ -281,7 +278,7 @@ def level_probe_stats_impl(p: SLSMParams, state: SLSMState, qs: jax.Array):
     for level, lv in enumerate(state.levels):
         bits, _, kk = p.bloom_geometry(p.level_cap(level), p.level_eps(level))
         stride, mu_eff = p.fence_view(level)
-        fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
+        fences = strided_fences(lv.fences, stride)
         gate = candidate_gate(be, qs, lv.blooms, lv.mins, lv.maxs, kk, bits)
         idx = be.fence_lookup_many(qs, fences, lv.keys, lv.counts, mu_eff)
         cands[level] = gate.sum(dtype=I32)
@@ -327,7 +324,7 @@ def _range_group_bounds(p: SLSMParams, state: SLSMState, los: jax.Array,
                    st.T, en.T))
     for level, lv in enumerate(state.levels):
         stride, mu_eff = p.fence_view(level)
-        fences = lv.fences[:, ::stride] if stride > 1 else lv.fences
+        fences = strided_fences(lv.fences, stride)
 
         def level_bounds(lv=lv, fences=fences, mu_eff=mu_eff):
             st, en = jax.vmap(

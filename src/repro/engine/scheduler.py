@@ -357,12 +357,58 @@ class MergeScheduler:
         if p.merge_budget == 0 and self._retune_pending():
             self.run_step(MergeStep(RETUNE, -1, step_cost(RETUNE, -1, p)))
         # forced: the staging buffer must fit the next Rn-chunk
-        p = self.p   # a retune may have swapped the active params
+        self.ensure_stage_space()
+
+    def ensure_stage_space(self) -> None:
+        """Forced chain: seal (flushing/cascading first when the buffer
+        is out of run slots) until the staging buffer can absorb a full
+        Rn-chunk — the structural precondition every insert chunk and
+        every mixed-op tape dispatch relies on. This is `on_chunk`'s
+        forced tail, callable standalone (the serving layer's headroom
+        pass runs it between tapes)."""
+        drv, p = self.drv, self.p
         while int(drv.state.stage_count) >= p.Rn:
             if int(drv.state.run_count) >= p.R:
                 self.force_space(0)
                 self.run_step(MergeStep(FLUSH, -1, step_cost(FLUSH, -1, p)))
             self.run_step(MergeStep(SEAL, -1, step_cost(SEAL, -1, p)))
+
+    def reserve_run_slots(self, n: int) -> None:
+        """Guarantee >= `n` free memory-run slots (flushing — and
+        cascading, when level 0 is full — until they exist): the
+        headroom a mixed-op tape needs before it can seal in-scan,
+        where no host decision can intervene (tape.tape_seal_bound).
+
+        A flush retires `runs_merged_eff` runs and needs that many
+        resident, so the reachable floor from run_count rc is
+        ``rc % runs_merged_eff``; raises ValueError when `n` exceeds
+        ``R - that`` (the tape carries too many write keys — split it;
+        `SLSM.tape_write_capacity` is the matching key budget)."""
+        p = self.p
+        floor = int(self.drv.state.run_count) % p.runs_merged_eff
+        if n > p.R - floor:
+            raise ValueError(
+                f"cannot reserve {n} run slots: only {p.R - floor} "
+                f"reachable (R={p.R}, {floor} unflushable resident runs)")
+        while p.R - int(self.drv.state.run_count) < n:
+            self.force_space(0)
+            self.run_step(MergeStep(FLUSH, -1, step_cost(FLUSH, -1, p)))
+
+    def voluntary_steps(self, budget: int) -> int:
+        """Run up to `budget` ready steps, deepest-first, re-deriving the
+        backlog after each (the same fixpoint semantics as `on_chunk`'s
+        voluntary pass); returns how many ran. The maintenance governor's
+        entry point (repro.serve): idle gaps and window boundaries spend
+        accumulated budget here instead of pacing per insert chunk. A
+        pending RETUNE rides the backlog like any merge."""
+        ran = 0
+        while ran < budget:
+            step = self._next_ready()
+            if step is None:
+                break
+            self.run_step(step)
+            ran += 1
+        return ran
 
     def on_read(self) -> None:
         """Decision boundary on the read path (adaptive tuning only —

@@ -49,10 +49,15 @@ from repro.engine import compaction as CP
 from repro.engine import memtable as MT
 from repro.engine import read_path as RP
 from repro.engine import scheduler as SCH
+from repro.engine import tape as TP
 from repro.engine import tuner as TU
 from repro.engine.backend import get_backend
-from repro.engine.engine import (RANGE_BUCKETS, _range_bucket,
-                                 _range_many_host, reject_reserved)
+from repro.engine.batching import (RANGE_BUCKETS, TAPE_BUCKETS, bucket_pow2,
+                                   range_bucket, range_many_host,
+                                   tape_bucket)
+from repro.engine.engine import reject_reserved
+
+I32 = jnp.int32
 
 _GOLDEN = np.uint32(0x9E3779B9)   # bloom.SEED1 — same hash family
 _C1 = np.uint32(0x85EBCA6B)
@@ -147,20 +152,14 @@ def _range_sharded(p: SLSMParams, state, lo, hi):
     return jax.vmap(lambda st: RP.range_query_impl(p, st, lo, hi))(state)
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def _range_many_sharded(p: SLSMParams, state, los, his, n_valid):
-    """Q scans against all S shards in one dispatch, merged on device.
+def _merge_shard_ranges(p: SLSMParams, k, v, c, tr):
+    """Fold per-shard batched-scan results into global rows, on device.
 
-    Every shard answers the whole scan batch through the fence-pruned
-    engine (`read_path.range_many_impl` vmapped over the shard axis);
-    the per-shard result rows — key-sorted, disjoint key sets — are then
-    combined per scan with a single on-device sort, so the global result
-    never round-trips through host numpy. Returns the same
-    ``(keys (Q, max_range), vals, counts, truncated)`` contract as the
-    single-tree batched path, with ``truncated[i]`` true when any shard
-    truncated scan i or the combined live count exceeds max_range."""
-    k, v, c, tr = jax.vmap(
-        lambda st: RP.range_many_impl(p, st, los, his, n_valid))(state)
+    Inputs are the (S, Q, max_range) result planes of
+    `read_path.range_many_impl` vmapped over shards (disjoint key sets,
+    each row key-sorted): one `lax.sort` per scan merges them without a
+    host round-trip. Shared by `_range_many_sharded` and the sharded
+    mixed-op tape's range branch, so the merge contract cannot diverge."""
     mr = p.max_range
     s_n, q_n = k.shape[0], k.shape[1]
     kq = jnp.moveaxis(k, 0, 1).reshape(q_n, s_n * mr)
@@ -169,6 +168,89 @@ def _range_many_sharded(p: SLSMParams, state, los, his, n_valid):
     total = c.sum(axis=0)
     return (kq[:, :mr], vq[:, :mr], jnp.minimum(total, mr),
             tr.any(axis=0) | (total > mr))
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _range_many_sharded(p: SLSMParams, state, los, his, n_valid):
+    """Q scans against all S shards in one dispatch, merged on device.
+
+    Every shard answers the whole scan batch through the fence-pruned
+    engine (`read_path.range_many_impl` vmapped over the shard axis);
+    the per-shard result rows — key-sorted, disjoint key sets — are then
+    combined per scan with a single on-device sort (`_merge_shard_ranges`),
+    so the global result never round-trips through host numpy. Returns
+    the same ``(keys (Q, max_range), vals, counts, truncated)`` contract
+    as the single-tree batched path, with ``truncated[i]`` true when any
+    shard truncated scan i or the combined live count exceeds max_range."""
+    k, v, c, tr = jax.vmap(
+        lambda st: RP.range_many_impl(p, st, los, his, n_valid))(state)
+    return _merge_shard_ranges(p, k, v, c, tr)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6), donate_argnums=1)
+def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
+                       skip_empty: bool = False):
+    """Sharded mixed-op tape: one `lax.scan` over T tagged slots, every
+    branch the single-tree tape's op vmapped over the shard axis.
+
+    xs are ``opcodes (T,)`` (one op kind per slot — the stream is
+    global), ``keys/vals (T, S, Rn)`` and ``n_valid (T, S)`` host-routed
+    per shard. WRITE slots append per shard and seal in-scan under a
+    per-shard mask (compute-both + `_select`, the same lockstep price
+    every masked maintenance op pays); LOOKUP slots answer each shard's
+    routed lanes; RANGE slots broadcast their (lo, hi) lanes to every
+    shard and fold the disjoint rows with `_merge_shard_ranges`. Host
+    headroom preconditions are per shard (`ShardedSLSM.run_tape`)."""
+    rb = TP.range_lanes(p)
+    mr = p.max_range
+    s_n, width = keys.shape[1], keys.shape[2]
+
+    def zeros():
+        return (jnp.zeros((s_n, width), I32),        # lookup vals
+                jnp.zeros((s_n, width), bool),       # lookup found
+                jnp.full((rb, mr), KEY_EMPTY, I32),  # range keys (merged)
+                jnp.zeros((rb, mr), I32),            # range vals
+                jnp.zeros((rb,), I32),               # range counts
+                jnp.zeros((rb,), bool),              # range truncated
+                jnp.zeros((), I32))                  # seals this slot
+
+    def nop(st, k, v, n):
+        return st, zeros()
+
+    def write(st, k, v, n):
+        new = jax.vmap(
+            lambda s_, k_, v_, n_: MT.stage_append_impl(p, s_, k_, v_, n_)
+        )(st, k, v, n)
+        mask = new.stage_count >= p.Rn
+        sealed = jax.vmap(lambda s_: MT.seal_run_impl(p, s_))(new)
+        out = zeros()
+        return (_select(mask, sealed, new),
+                out[:6] + (mask.sum(dtype=I32),))
+
+    def lookup(st, k, v, n):
+        lv, lf = jax.vmap(
+            lambda s_, k_, n_: RP.lookup_many_impl(p, s_, k_, n_, False,
+                                                   skip_empty)
+        )(st, k, n)
+        out = zeros()
+        return st, (lv, lf) + out[2:]
+
+    def range_(st, k, v, n):
+        los, his, nr = k[0, :rb], v[0, :rb], n[0]
+        kk, vv, cc, tt = jax.vmap(
+            lambda s_: RP.range_many_impl(p, s_, los, his, nr))(st)
+        rk, rv, rc, rt = _merge_shard_ranges(p, kk, vv, cc, tt)
+        out = zeros()
+        return st, out[:2] + (rk, rv, rc, rt) + out[6:]
+
+    def body(st, xs):
+        op, k, v, n = xs
+        return jax.lax.switch(jnp.clip(op, 0, 3),
+                              [nop, write, lookup, range_], st, k, v, n)
+
+    return jax.lax.scan(body, state,
+                        (opcodes.astype(I32), keys.astype(I32),
+                         vals.astype(I32), n_valid.astype(I32)))
 
 
 # --------------------------------------------------------------------------
@@ -436,6 +518,37 @@ class ShardedSLSM:
             if not progressed:   # pragma: no cover — invariant violation
                 raise RuntimeError("sharded merge drain stalled")
 
+    def voluntary_steps(self, budget: int) -> int:
+        """Run up to `budget` ready maintenance steps per shard,
+        deepest-first, re-deriving the masks after each applied op (the
+        `_voluntary_pass` fixpoint, with an explicit budget): the
+        maintenance governor's entry point (repro.serve), mirroring
+        `MergeScheduler.voluntary_steps` on the single tree. A pending
+        tuner allocation switch applies first (the lockstep swap cannot
+        be per-shard masked) and counts as one step. Returns the total
+        steps applied across the fleet."""
+        self.tuner.decide()
+        ran = 0
+        if self.tuner.pending and budget > 0:
+            self._apply_retune()
+            ran, budget = 1, budget - 1
+        per_shard = np.full(self.S, budget, np.int64)
+        while (per_shard > 0).any():
+            occs = self._occupancies()
+            progressed = False
+            for kind, level in SCH.step_order(self.p_active):
+                _, ready = self._step_masks(kind, level, occs)
+                mask = ready & (per_shard > 0)
+                if mask.any():
+                    self._apply_step(kind, level, mask)
+                    per_shard[mask] -= 1
+                    ran += int(mask.sum())
+                    progressed = True
+                    break   # state changed: re-snapshot before the next op
+            if not progressed:
+                break
+        return ran
+
     # -- read path ----------------------------------------------------------
     def _on_reads(self, n: int) -> None:
         """Tuner signal on the read path (adaptive mode): reads feed and
@@ -469,7 +582,7 @@ class ShardedSLSM:
         self._on_reads(nq)
         sid = shard_ids(qs, self.S)
         counts = np.bincount(sid, minlength=self.S)
-        qmax = RP.bucket_pow2(int(counts.max()))
+        qmax = bucket_pow2(int(counts.max()))
         routed = np.full((self.S, qmax), KEY_EMPTY, np.int32)
         # vectorized routing: stable-sort by shard, then each query's slot
         # is its rank within its shard (index minus the shard's start)
@@ -522,7 +635,7 @@ class ShardedSLSM:
         across shards. The single scan rides the smallest warmed
         `RANGE_BUCKETS` lane width, so it never pays a first-use
         compile after `warm()`."""
-        width = _range_bucket(1)
+        width = range_bucket(1)
         los = np.zeros(width, np.int32)
         his = np.zeros(width, np.int32)
         los[0], his[0] = lo, hi
@@ -538,10 +651,206 @@ class ShardedSLSM:
         (`_range_many_sharded`) — same numpy return contract as
         `SLSM.range_many` (one shared pad/trim driver), padded to the
         `RANGE_BUCKETS` grid."""
-        return _range_many_host(
+        return range_many_host(
             lambda los, his, n: _range_many_sharded(
                 self.p_active, self.state, los, his, n),
             self.p.max_range, ranges)
+
+    # -- mixed-op tape (repro.engine.tape, DESIGN.md §11) -------------------
+    def _route_lanes(self, keys, vals=None):
+        """Route one chunk's lanes to their owner shards. Returns
+        ``(k (S, Rn), v (S, Rn), n (S,), sid, pos)`` — sid/pos are each
+        input lane's (shard, rank-within-shard) coordinates, the scatter
+        map for lookup results (same vectorized routing as `lookup`)."""
+        rn = self.p.Rn
+        qs = np.asarray(keys, np.int32).reshape(-1)
+        sid = shard_ids(qs, self.S)
+        counts = np.bincount(sid, minlength=self.S)
+        order = np.argsort(sid, kind="stable")
+        starts = np.zeros(self.S + 1, np.int64)
+        np.cumsum(counts, out=starts[1:])
+        pos = np.empty(len(qs), np.int64)
+        pos[order] = np.arange(len(qs), dtype=np.int64) - starts[sid[order]]
+        k = np.full((self.S, rn), KEY_EMPTY, np.int32)
+        k[sid, pos] = qs
+        v = np.zeros((self.S, rn), np.int32)
+        if vals is not None:
+            v[sid, pos] = np.asarray(vals, np.int32).reshape(-1)
+        return k, v, counts.astype(np.int32), sid, pos
+
+    def tape_write_capacity(self) -> int:
+        """Max write keys the next `run_tape` call may carry — the
+        single-tree bound (`SLSM.tape_write_capacity`) evaluated per
+        shard and min-folded, since routing may land every key on the
+        worst shard."""
+        p = self.p_active
+        rcs = np.asarray(self.state.run_count)
+        scs = np.asarray(self.state.stage_count)
+        caps = []
+        for s in range(self.S):
+            rc, sc = int(rcs[s]), int(scs[s])
+            while sc >= p.Rn:
+                if rc >= p.R:
+                    rc -= p.runs_merged_eff
+                rc += 1
+                sc -= p.Rn
+            free = p.R - rc % p.runs_merged_eff
+            caps.append((free + 1) * p.Rn - 1 - sc)
+        return min(caps)
+
+    def _reserve_run_slots(self, need: np.ndarray) -> None:
+        """Per-shard headroom for the tape's in-scan seals: masked
+        flushes (cascading first when level 0 is full) until every shard
+        has >= need[s] free run slots. Mirrors
+        `MergeScheduler.reserve_run_slots`, lockstep-masked."""
+        p = self.p_active
+        rm = p.runs_merged_eff
+        while True:
+            rc = np.asarray(self.state.run_count)
+            short = (p.R - rc) < need
+            if not short.any():
+                return
+            mask = short & (rc >= rm)
+            if not mask.any():
+                floors = rc % rm
+                raise ValueError(
+                    f"cannot reserve {need.max()} run slots on every "
+                    f"shard: worst shard reaches {p.R - int(floors.max())} "
+                    f"(R={p.R})")
+            self._cascade(mask)
+            self._apply_step(SCH.FLUSH, -1, mask)
+
+    def run_tape(self, chunks):
+        """Execute a coalesced mixed-op window as ONE vmapped device
+        dispatch — the sharded form of `SLSM.run_tape` (same chunk
+        kinds, same per-chunk result contract, same headroom and
+        window-segmentation behaviour, with every precondition enforced
+        per shard). Write and lookup lanes are host-routed to their
+        owner shards; range slots are answered by every shard and
+        merged on device (`_merge_shard_ranges`)."""
+        chunks = [c if isinstance(c, TP.TapeChunk) else TP.TapeChunk(*c)
+                  for c in chunks]
+        if not chunks:
+            return []
+        n_writes = n_reads = 0
+        for ch in chunks:
+            k = np.asarray(ch.keys, np.int32).reshape(-1)
+            if ch.kind == "write":
+                reject_reserved(k, op="tape write")
+                n_writes += k.size
+            elif ch.kind == "lookup":
+                reject_reserved(k, op="tape lookup")
+                n_reads += k.size
+            elif ch.kind != "range":
+                raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        rb = TP.range_lanes(self.p_active)
+        results = [0] * len(chunks)
+        work = list(enumerate(chunks))
+        while work:
+            self._forced_pass()   # every shard's stage absorbs a chunk
+            budget = self.tape_write_capacity()
+            seg, seg_idx = [], []
+            while work:
+                i, ch = work[0]
+                if ch.kind == "write":
+                    k = np.asarray(ch.keys, np.int32).reshape(-1)
+                    v = np.asarray(ch.vals, np.int32).reshape(-1)
+                    if budget <= 0:
+                        break
+                    if k.size > budget:
+                        seg.append(TP.TapeChunk("write", k[:budget],
+                                                v[:budget]))
+                        seg_idx.append(i)
+                        work[0] = (i, TP.TapeChunk("write", k[budget:],
+                                                   v[budget:]))
+                        budget = 0
+                        continue
+                    budget -= k.size
+                seg.append(ch)
+                seg_idx.append(i)
+                work.pop(0)
+            assert seg, "tape segmentation made no progress"
+            self._run_tape_segment(seg, seg_idx, rb, results)
+        self.stats["writes"] += n_writes
+        self.stats["reads"] += n_reads
+        if n_writes:
+            self.tuner.note_writes(n_writes)
+        if n_reads:
+            self.tuner.note_reads(n_reads)
+        return results
+
+    def _run_tape_segment(self, seg, seg_idx, rb, results) -> None:
+        """Pack, reserve, dispatch, and scatter back one tape segment."""
+        p = self.p_active
+        rn, t = p.Rn, len(seg)
+        t_pad = tape_bucket(t)
+        ops = np.zeros(t_pad, np.int32)
+        keys = np.full((t_pad, self.S, rn), KEY_EMPTY, np.int32)
+        vals = np.zeros((t_pad, self.S, rn), np.int32)
+        nv = np.zeros((t_pad, self.S), np.int32)
+        scatter = [None] * t
+        seal_need = np.asarray(self.state.stage_count).astype(np.int64)
+        for i, ch in enumerate(seg):
+            if ch.kind == "range":
+                los = np.asarray(ch.keys, np.int32).reshape(-1)
+                his = np.asarray(ch.vals, np.int32).reshape(-1)
+                if len(los) > rb:
+                    raise ValueError(
+                        f"range chunk of {len(los)} scans exceeds its "
+                        f"per-slot capacity {rb}")
+                ops[i] = TP.OP_RANGE
+                keys[i, :, :len(los)] = los[None, :]
+                vals[i, :, :len(his)] = his[None, :]
+                nv[i, :] = len(los)
+                continue
+            k, v, n, sid, pos = self._route_lanes(
+                ch.keys, ch.vals if ch.kind == "write" else None)
+            ops[i] = TP.OPCODES[ch.kind]
+            keys[i], vals[i], nv[i] = k, v, n
+            scatter[i] = (sid, pos)
+            if ch.kind == "write":
+                seal_need += np.bincount(sid, minlength=self.S)
+        need = (seal_need // rn).astype(np.int64)
+        if need.any():
+            self._reserve_run_slots(need)
+        self.state, ys = _tape_exec_sharded(
+            p, self.state, jnp.asarray(ops), jnp.asarray(keys),
+            jnp.asarray(vals), jnp.asarray(nv), self.tuner.enabled)
+        lv, lf, rk, rv, rc, rt, sealed = (np.asarray(y) for y in ys)
+        for i, ch in enumerate(seg):
+            j = seg_idx[i]
+            if ch.kind == "write":
+                results[j] += int(sealed[i])
+                self.stats["seals"] += int(sealed[i])
+            elif ch.kind == "lookup":
+                sid, pos = scatter[i]
+                results[j] = (lv[i, sid, pos], lf[i, sid, pos])
+            else:
+                n = len(np.asarray(ch.keys).reshape(-1))
+                results[j] = (rk[i, :n], rv[i, :n], rc[i, :n], rt[i, :n])
+
+    def warm_tape(self, buckets: tuple = TAPE_BUCKETS) -> None:
+        """Precompile the sharded tape interpreter grid (one program per
+        allocation x slot bucket — the stacked pytree has a single
+        structure), mirroring `SLSM.warm_tape`: after this, steady-state
+        serving windows never JIT."""
+        base = MT.init_state(self.p, n_levels=self.p.max_levels)
+        if self.tuner.enabled:
+            param_sets = [alloc.apply(self.p)
+                          for alloc in self.tuner.presets.values()]
+        else:
+            param_sets = [self.p]
+        skip = self.tuner.enabled
+        outs = []
+        for p in param_sets:
+            for t in buckets:
+                st = jax.tree.map(lambda x: jnp.stack([x] * self.S), base)
+                outs.append(_tape_exec_sharded(
+                    p, st, jnp.zeros((t,), jnp.int32),
+                    jnp.full((t, self.S, p.Rn), KEY_EMPTY, jnp.int32),
+                    jnp.zeros((t, self.S, p.Rn), jnp.int32),
+                    jnp.zeros((t, self.S), jnp.int32), skip))
+        jax.block_until_ready(outs)
 
     # -- stats ----------------------------------------------------------------
     @property

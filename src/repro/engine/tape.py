@@ -1,0 +1,222 @@
+"""Device-resident mixed-op tape: one `lax.scan` over a tagged op window.
+
+The host-side drivers execute a mixed op stream as one device dispatch
+per operation — every insert chunk, lookup batch, and range scan pays a
+host->device launch and (for reads) a device->host sync before the next
+op can even be issued. For a *serving* workload, where a coalescing
+window holds a few dozen small heterogeneous chunks, that per-op
+ping-pong dominates the wall clock.
+
+This module lowers a whole window to ONE jitted program: a `lax.scan`
+whose carry is the engine state and whose xs are T tagged slots —
+
+  opcode (T,) i32        OP_NOP | OP_WRITE | OP_LOOKUP | OP_RANGE
+  keys   (T, Rn) i32     write keys / lookup queries / range los lanes
+  vals   (T, Rn) i32     write values (TOMBSTONE = delete) / range his
+  n_valid (T,) i32       live lanes in the slot
+
+Each slot's body `lax.switch`es on the opcode into the engine's own
+pure `_impl` ops (memtable.stage_append_impl + seal_run_impl,
+read_path.lookup_many_impl / range_many_impl), so tape semantics are
+the host path's semantics by construction — same ops, same order. A
+WRITE slot seals in-scan (`lax.cond` on the staged count) when it fills
+the staging buffer; the host precondition (`SLSM.run_tape`'s headroom
+pass) guarantees a free run slot exists for every seal the tape can
+trigger, because `seal_run_impl` at run_count == R would silently
+overwrite the newest run.
+
+Slot counts quantize to `batching.TAPE_BUCKETS` (NOP-padded), so the
+whole serving grid is a handful of precompiled interpreters
+(`SLSM.warm_tape`); steady-state windows never JIT and never sync
+per-op — results come back as stacked per-slot lanes, one transfer per
+tape.
+
+Range slots carry `range_lanes(p)` (lo, hi) pairs in their first lanes
+(los in `keys`, his in `vals`); write and lookup slots carry up to Rn
+lanes. Maintenance beyond the in-scan seal (flush/spill/compact/retune)
+stays a host decision between tapes — the serving layer's maintenance
+governor (repro.serve) spends that budget at window boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import KEY_EMPTY, SLSMParams
+from repro.engine import memtable as MT
+from repro.engine import read_path as RP
+from repro.engine.batching import tape_bucket
+
+I32 = jnp.int32
+
+# slot opcodes (the scan body's switch index; NOP pads tapes to their
+# bucket width and contributes nothing)
+OP_NOP, OP_WRITE, OP_LOOKUP, OP_RANGE = 0, 1, 2, 3
+
+OPCODES = {"write": OP_WRITE, "lookup": OP_LOOKUP, "range": OP_RANGE}
+
+
+def range_lanes(p: SLSMParams) -> int:
+    """Range (lo, hi) lanes per tape slot: a small static width — range
+    slots are rare next to write/lookup slots, and each lane is a whole
+    `max_range`-wide result row in the tape's output."""
+    return min(4, p.Rn)
+
+
+class TapeChunk(NamedTuple):
+    """One coalesced same-kind op chunk, host-side.
+
+    kind: 'write' | 'lookup' | 'range'. For writes, `keys`/`vals` are
+    the staged pairs (TOMBSTONE values are deletes) — at most Rn of
+    them. For lookups, `keys` are the queries (vals unused) — at most
+    Rn. For ranges, `keys` are the lo bounds and `vals` the hi bounds —
+    at most `range_lanes(p)` scans.
+    """
+    kind: str
+    keys: np.ndarray
+    vals: np.ndarray
+
+
+def chunk_capacity(p: SLSMParams, kind: str) -> int:
+    """Max ops one tape slot of `kind` carries (the coalescer's chunk
+    split bound): Rn lanes for writes/lookups, `range_lanes` scans for
+    ranges."""
+    return range_lanes(p) if kind == "range" else p.Rn
+
+
+def build_tape(p: SLSMParams, chunks: Sequence[TapeChunk],
+               slots: int | None = None):
+    """Pack host chunks into the tape's padded slot arrays.
+
+    Returns ``(opcodes (T,), keys (T, Rn), vals (T, Rn), n_valid (T,))``
+    numpy arrays with ``T = tape_bucket(len(chunks))`` (or the explicit
+    `slots` override, which must hold them); slots past the chunk list
+    are NOP. Each chunk must respect `chunk_capacity`.
+    """
+    n = len(chunks)
+    t = tape_bucket(n) if slots is None else slots
+    if n > t:
+        raise ValueError(f"{n} chunks exceed the {t}-slot tape")
+    rn = p.Rn
+    ops = np.zeros(t, np.int32)
+    keys = np.full((t, rn), KEY_EMPTY, np.int32)
+    vals = np.zeros((t, rn), np.int32)
+    nv = np.zeros(t, np.int32)
+    for i, ch in enumerate(chunks):
+        cap = chunk_capacity(p, ch.kind)
+        k = np.asarray(ch.keys, np.int32).reshape(-1)
+        v = np.asarray(ch.vals, np.int32).reshape(-1)
+        if len(k) > cap:
+            raise ValueError(
+                f"{ch.kind} chunk of {len(k)} ops exceeds its per-slot "
+                f"capacity {cap}")
+        ops[i] = OPCODES[ch.kind]
+        keys[i, :len(k)] = k
+        vals[i, :len(v)] = v
+        nv[i] = len(k)
+    return ops, keys, vals, nv
+
+
+def _slot_zeros(p: SLSMParams, width: int):
+    """The all-miss per-slot output pytree (what NOP slots — and the
+    lanes a slot's kind does not produce — report)."""
+    rb, mr = range_lanes(p), p.max_range
+    return (jnp.zeros((width,), I32),                 # lookup vals
+            jnp.zeros((width,), bool),                # lookup found
+            jnp.full((rb, mr), KEY_EMPTY, I32),       # range keys
+            jnp.zeros((rb, mr), I32),                 # range vals
+            jnp.zeros((rb,), I32),                    # range counts
+            jnp.zeros((rb,), bool),                   # range truncated
+            jnp.zeros((), I32))                       # seals this slot
+
+
+def tape_exec_impl(p: SLSMParams, state, opcodes: jax.Array,
+                   keys: jax.Array, vals: jax.Array, n_valid: jax.Array,
+                   sparse: bool = False, skip_empty: bool = False):
+    """Run a T-slot mixed-op tape as one `lax.scan` (pure; vmappable).
+
+    Returns ``(state, ys)`` where ys is the per-slot output tuple of
+    `_slot_zeros` shapes stacked along a leading T axis: lookup slots
+    fill lanes ``[:n_valid]`` of the (T, Rn) val/found planes, range
+    slots fill rows ``[:n_valid]`` of the (T, rb, max_range) planes,
+    write slots report their in-scan seal count. Slot semantics are
+    exactly the host driver's op sequence: state flows through the scan
+    carry, so every slot reads its predecessors' writes.
+
+    `sparse`/`skip_empty` are the read path's static mode flags
+    (read_path.lookup_batch_impl), applied to every lookup slot.
+    """
+    rb = range_lanes(p)
+    width = keys.shape[1]
+
+    def nop(st, k, v, n):
+        return st, _slot_zeros(p, width)
+
+    def write(st, k, v, n):
+        st = MT.stage_append_impl(p, st, k, v, n)
+        do_seal = st.stage_count >= p.Rn
+        st = jax.lax.cond(do_seal, lambda s: MT.seal_run_impl(p, s),
+                          lambda s: s, st)
+        out = _slot_zeros(p, width)
+        return st, out[:6] + (do_seal.astype(I32),)
+
+    def lookup(st, k, v, n):
+        lv, lf = RP.lookup_many_impl(p, st, k, n, sparse, skip_empty)
+        out = _slot_zeros(p, width)
+        return st, (lv, lf) + out[2:]
+
+    def range_(st, k, v, n):
+        rk, rv, rc, rt = RP.range_many_impl(p, st, k[:rb], v[:rb], n)
+        out = _slot_zeros(p, width)
+        return st, out[:2] + (rk, rv, rc, rt) + out[6:]
+
+    def body(st, xs):
+        op, k, v, n = xs
+        return jax.lax.switch(jnp.clip(op, 0, 3),
+                              [nop, write, lookup, range_], st, k, v, n)
+
+    return jax.lax.scan(body, state,
+                        (opcodes.astype(I32), keys.astype(I32),
+                         vals.astype(I32), n_valid.astype(I32)))
+
+
+tape_exec = functools.partial(
+    jax.jit, static_argnums=(0, 6, 7), donate_argnums=1)(tape_exec_impl)
+
+
+def unpack_tape(p: SLSMParams, chunks: Sequence[TapeChunk], ys) -> List:
+    """Per-chunk host results from a tape's stacked device outputs.
+
+    One `np.asarray` pass per output plane (the tape's single
+    device->host sync), then slot i's lanes are trimmed to chunk i's op
+    count. Returns one entry per chunk: writes -> the in-scan seal count
+    (int); lookups -> ``(vals (n,), found (n,))``; ranges -> ``(keys
+    (n, max_range), vals, counts (n,), truncated (n,))``.
+    """
+    lv, lf, rk, rv, rc, rt, sealed = (np.asarray(y) for y in ys)
+    out = []
+    for i, ch in enumerate(chunks):
+        n = len(np.asarray(ch.keys).reshape(-1))
+        if ch.kind == "write":
+            out.append(int(sealed[i]))
+        elif ch.kind == "lookup":
+            out.append((lv[i, :n], lf[i, :n]))
+        else:
+            out.append((rk[i, :n], rv[i, :n], rc[i, :n], rt[i, :n]))
+    return out
+
+
+def tape_seal_bound(p: SLSMParams, stage_count: int,
+                    chunks: Sequence[TapeChunk]) -> int:
+    """Upper bound on the seals a tape can trigger in-scan: every Rn
+    staged keys force one (dedup only ever lowers the true count). The
+    headroom precondition (`SLSM.run_tape`) must reserve this many free
+    run slots before dispatching the tape."""
+    staged = stage_count + sum(
+        len(np.asarray(c.keys).reshape(-1)) for c in chunks
+        if c.kind == "write")
+    return staged // p.Rn

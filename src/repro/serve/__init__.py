@@ -1,0 +1,26 @@
+"""repro.serve — the continuous-batching serving layer (DESIGN.md §11).
+
+Module map:
+
+  coalescer.py — hazard-ordered request->tape-chunk folding (adjacent
+                 same-kind ops merge; stream order is preserved, which
+                 is what makes serving bitwise-equal to sequential
+                 per-op execution) + result scatter
+  server.py    — `Server` (submit/pump/drain/warm/stats), the adaptive
+                 time/size `WindowPolicy`, the maintenance `Governor`,
+                 and per-client latency accounting
+  frontend.py  — `AsyncServer`, the asyncio ``await submit(...)`` facade
+  loadgen.py   — closed-loop multi-client driver + SLO helper (the
+                 `serving` bench scenario's engine room)
+
+The data plane is the engine's device-resident mixed-op tape
+(`repro.engine.tape`): one coalescing window lowers to one `lax.scan`
+dispatch, so steady-state serving pays one host->device launch and one
+device->host sync per *window*, never per op — and, after `warm()`,
+never JITs.
+"""
+from repro.serve.coalescer import Placement, coalesce, scatter  # noqa: F401
+from repro.serve.frontend import AsyncServer                    # noqa: F401
+from repro.serve.loadgen import closed_loop, sustained_at_slo   # noqa: F401
+from repro.serve.server import (Governor, Server, Ticket,       # noqa: F401
+                                WindowPolicy)

@@ -1,0 +1,364 @@
+"""The continuous-batching server: windows, the governor, and accounting.
+
+`Server` fronts one engine (`SLSM` or `ShardedSLSM`) with a
+submit/pump loop:
+
+  * `submit` enqueues one per-client tagged request (insert / delete /
+    lookup / range) and returns its `Ticket` immediately;
+  * `pump` closes the current coalescing window when the adaptive
+    time/size policy says so (or on `force`), folds the window into
+    hazard-ordered tape chunks (`repro.serve.coalescer`), executes them
+    as one device dispatch (`SLSM.run_tape` — the mixed-op tape,
+    DESIGN.md §11), scatters results onto the tickets, and lets the
+    maintenance governor spend its accumulated merge budget;
+  * `drain` is the barrier: every pending request served, every pending
+    maintenance step retired.
+
+Steady state never JITs (`warm` precompiles the tape interpreter grid)
+and never syncs per-op (one device->host transfer per tape). The
+``per_request`` mode is the measured baseline: the same submit/pump
+loop, but every request dispatched through the classic per-op driver
+calls — what the serving bench's coalesced-vs-per-request comparison is
+made of.
+
+Per-client latency accounting rides the tickets: every reply stamps
+enqueue->reply seconds into the server's client ledgers, and `stats()`
+folds them into p50/p99/p999/max-stall percentiles per client and
+overall.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.engine.engine import reject_reserved
+from repro.serve.coalescer import OP_OF, coalesce, scatter
+
+KINDS = ("insert", "delete", "lookup", "range")
+
+
+class Ticket:
+    """One submitted request: identity, payload, timing, and (after its
+    window executes) the result.
+
+    ``result`` is None for insert/delete, ``(vals, found)`` for lookup,
+    ``(keys, vals, counts, truncated)`` for range — the driver-call
+    shapes. ``done`` flips when the reply is stamped; ``latency_s`` is
+    the enqueue->reply interval the server's accounting is built on.
+    """
+
+    __slots__ = ("client", "kind", "keys", "vals", "t_enqueue", "t_reply",
+                 "result", "future")
+
+    def __init__(self, client: str, kind: str, keys: np.ndarray,
+                 vals: np.ndarray, t_enqueue: float):
+        self.client = client
+        self.kind = kind
+        self.keys = keys
+        self.vals = vals
+        self.t_enqueue = t_enqueue
+        self.t_reply: Optional[float] = None
+        self.result: Any = None
+        self.future: Any = None   # set by the asyncio front-end
+
+    @property
+    def done(self) -> bool:
+        """True once the window holding this request has executed."""
+        return self.t_reply is not None
+
+    @property
+    def latency_s(self) -> float:
+        """Enqueue->reply seconds (raises if not yet served)."""
+        if self.t_reply is None:
+            raise RuntimeError("ticket not served yet")
+        return self.t_reply - self.t_enqueue
+
+    @property
+    def n_ops(self) -> int:
+        """Ops this request carries (keys, queries, or scan windows)."""
+        return int(self.keys.size)
+
+
+@dataclass
+class WindowPolicy:
+    """Adaptive time/size coalescing window.
+
+    A window closes when either trigger fires: ``max_ops`` pending ops
+    (size — the tape bucket grid is full enough to be worth a dispatch)
+    or the oldest pending request aging past the adaptive deadline
+    ``wait_s`` (time — latency floor under light load). The deadline
+    adapts between ``min_wait_s`` and ``max_wait_s`` on every close:
+    windows that fill on size push it up (heavier batching is free when
+    load is high — requests were not waiting on the clock), windows
+    that close by timeout while thin pull it down (waiting longer would
+    only add latency, not batch size). ``adapt`` is the multiplicative
+    step; ``fill_target`` the occupancy that leaves the deadline alone.
+    """
+
+    max_ops: int = 512
+    min_wait_s: float = 1e-4
+    max_wait_s: float = 5e-3
+    adapt: float = 0.25
+    fill_target: float = 0.5
+    wait_s: float = field(default=1e-3)
+
+    def should_close(self, pending_ops: int, oldest_age_s: float) -> bool:
+        """Fire on either trigger: size (pending ops) or time (age of
+        the oldest pending request vs the adaptive deadline)."""
+        if pending_ops <= 0:
+            return False
+        return pending_ops >= self.max_ops or oldest_age_s >= self.wait_s
+
+    def closed(self, pending_ops: int) -> None:
+        """Adapt the deadline after a close at `pending_ops` occupancy
+        (see class docstring for the direction of the adjustment)."""
+        fill = pending_ops / max(self.max_ops, 1)
+        self.wait_s *= 1.0 + self.adapt * np.clip(
+            fill - self.fill_target, -1.0, 1.0)
+        self.wait_s = float(np.clip(self.wait_s, self.min_wait_s,
+                                    self.max_wait_s))
+
+
+@dataclass
+class Governor:
+    """Maintenance governor: merge budget spent at window boundaries
+    and in idle gaps instead of per insert chunk.
+
+    The mixed-op tape seals in-scan but defers every other maintenance
+    step (flush/spill/compact/RETUNE) to the host. The governor accrues
+    the same budget the per-chunk scheduler would have granted —
+    ``merge_budget`` steps per Rn write ops — and spends it through the
+    drivers' uniform `voluntary_steps` after each window, where no
+    request is waiting on the device. Idle pumps (nothing pending)
+    additionally spend ``idle_steps`` for free: an idle gap is exactly
+    when background work is invisible to clients. ``credit_cap`` bounds
+    banked credits so a long write burst cannot bankroll an unbounded
+    maintenance storm later.
+    """
+
+    idle_steps: int = 1
+    credit_cap: float = 16.0
+    credits: float = 0.0
+    steps_run: int = 0
+    idle_steps_run: int = 0
+
+    def window_done(self, tree, write_ops: int) -> int:
+        """Accrue credit for the window's writes and spend whole steps
+        (tree.voluntary_steps); returns how many ran."""
+        p = tree.p_active
+        self.credits = min(self.credit_cap,
+                           self.credits
+                           + p.merge_budget * write_ops / max(p.Rn, 1))
+        budget = int(self.credits)
+        if budget <= 0:
+            return 0
+        ran = tree.voluntary_steps(budget)
+        self.credits -= ran
+        self.steps_run += ran
+        return ran
+
+    def idle(self, tree) -> int:
+        """Spend the idle allowance (an empty pump): background steps no
+        client can observe. Returns how many ran."""
+        if self.idle_steps <= 0:
+            return 0
+        ran = tree.voluntary_steps(self.idle_steps)
+        self.idle_steps_run += ran
+        self.steps_run += ran
+        return ran
+
+
+def _percentiles(lat_s: List[float]) -> Dict[str, float]:
+    """Latency ledger -> the phase-style percentile block (µs)."""
+    ts = np.asarray(lat_s, np.float64) * 1e6
+    return {"n": int(ts.size),
+            "p50_us": float(np.percentile(ts, 50)),
+            "p99_us": float(np.percentile(ts, 99)),
+            "p999_us": float(np.percentile(ts, 99.9)),
+            "max_stall_us": float(ts.max())}
+
+
+class Server:
+    """Continuous-batching front-end over one engine (see module doc).
+
+    ``mode`` selects the dispatch strategy the pump uses:
+    ``"coalesced"`` (default) folds each window into mixed-op tapes;
+    ``"per_request"`` serves each request with its own classic driver
+    call (`insert`/`delete`/`lookup_many`/`range_many`) — the baseline
+    the serving bench measures the tape against. Both modes share the
+    submit/window/accounting machinery, so their latency numbers are
+    directly comparable.
+    """
+
+    def __init__(self, tree, *, window: WindowPolicy | None = None,
+                 governor: Governor | None = None, mode: str = "coalesced",
+                 clock=time.perf_counter):
+        if mode not in ("coalesced", "per_request"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+        self.tree = tree
+        self.window = window or WindowPolicy()
+        self.governor = governor or Governor()
+        self.mode = mode
+        self.clock = clock
+        self._pending: List[Ticket] = []
+        self._pending_ops = 0
+        self._lat: Dict[str, List[float]] = collections.defaultdict(list)
+        self.counters = collections.Counter(
+            requests=0, ops=0, windows=0, dispatches=0,
+            write_ops=0, read_ops=0, range_ops=0)
+
+    # -- intake -------------------------------------------------------------
+    def submit(self, client: str, kind: str, keys, vals=None) -> Ticket:
+        """Enqueue one tagged request; returns its `Ticket` immediately.
+
+        ``kind``: ``insert`` (keys+vals), ``delete`` (keys), ``lookup``
+        (keys), or ``range`` (keys = lo bounds, vals = hi bounds, one
+        scan window per lane). Reserved-sentinel validation happens
+        here, at the submitting client's call site, so a bad request
+        fails fast instead of poisoning a whole window.
+        """
+        if kind not in KINDS:
+            raise ValueError(f"unknown request kind {kind!r}; "
+                             f"options: {KINDS}")
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        if kind == "insert":
+            vals = np.asarray(vals, np.int32).reshape(-1)
+            if keys.shape != vals.shape:
+                raise ValueError("insert: keys and vals must match")
+            reject_reserved(keys, vals, op="serve insert")
+        elif kind == "delete":
+            vals = np.zeros_like(keys)
+            reject_reserved(keys, op="serve delete")
+        elif kind == "lookup":
+            vals = np.zeros_like(keys)
+            reject_reserved(keys, op="serve lookup")
+        else:  # range
+            vals = np.asarray(vals, np.int32).reshape(-1)
+            if keys.shape != vals.shape:
+                raise ValueError("range: lo and hi bounds must match")
+        t = Ticket(client, kind, keys, vals, self.clock())
+        self._pending.append(t)
+        self._pending_ops += t.n_ops
+        self.counters["requests"] += 1
+        self.counters["ops"] += t.n_ops
+        key = {"insert": "write_ops", "delete": "write_ops",
+               "lookup": "read_ops", "range": "range_ops"}[kind]
+        self.counters[key] += t.n_ops
+        return t
+
+    @property
+    def pending(self) -> int:
+        """Requests currently waiting for a window."""
+        return len(self._pending)
+
+    def poll(self) -> bool:
+        """Would `pump()` fire a window right now? (per_request mode
+        dispatches whenever anything pends — there is no window)."""
+        if not self._pending:
+            return False
+        if self.mode == "per_request":
+            return True
+        age = self.clock() - self._pending[0].t_enqueue
+        return self.window.should_close(self._pending_ops, age)
+
+    # -- the pump -----------------------------------------------------------
+    def pump(self, force: bool = False) -> int:
+        """Serve one window if due (or `force`d); returns requests served.
+
+        An empty pump is an idle gap: the governor spends its idle
+        allowance there and 0 is returned. After a served window the
+        governor spends the window's accrued merge budget — both happen
+        strictly *between* device dispatches, so maintenance never rides
+        inside a request's tape (DESIGN.md §11).
+        """
+        if not self._pending:
+            self.governor.idle(self.tree)
+            return 0
+        if not (force or self.poll()):
+            return 0
+        batch, self._pending = self._pending, []
+        batch_ops, self._pending_ops = self._pending_ops, 0
+        if self.mode == "coalesced":
+            chunks, placements = coalesce(self.tree.p_active, batch)
+            results = self.tree.run_tape(chunks)
+            scatter(batch, placements, results)
+            self.counters["dispatches"] += 1
+        else:
+            self._serve_per_request(batch)
+        t_reply = self.clock()
+        write_ops = 0
+        for t in batch:
+            t.t_reply = t_reply
+            self._lat[t.client].append(t_reply - t.t_enqueue)
+            if OP_OF[t.kind] == "write":
+                write_ops += t.n_ops
+            if t.future is not None and not t.future.done():
+                t.future.set_result(t.result)
+        self.counters["windows"] += 1
+        self.window.closed(batch_ops)
+        self.governor.window_done(self.tree, write_ops)
+        return len(batch)
+
+    def _serve_per_request(self, batch: List[Ticket]) -> None:
+        """Baseline dispatch: one classic driver call per request, in
+        stream order — the per-op host/device ping-pong the tape
+        replaces (each read pays its own device->host sync)."""
+        tree = self.tree
+        for t in batch:
+            if t.kind == "insert":
+                tree.insert(t.keys, t.vals)
+            elif t.kind == "delete":
+                tree.delete(t.keys)
+            elif t.kind == "lookup":
+                t.result = tree.lookup_many(t.keys)
+            else:
+                t.result = tree.range_many(
+                    np.stack([t.keys, t.vals], axis=1))
+            self.counters["dispatches"] += 1
+
+    # -- barriers / warm-up ---------------------------------------------------
+    def drain(self) -> None:
+        """Serve everything pending, then retire the engine's whole
+        maintenance backlog (the read-equivalence barrier — after this,
+        the tree answers exactly as a sequential per-op engine fed the
+        same stream)."""
+        while self._pending:
+            self.pump(force=True)
+        self.tree.drain()
+
+    def warm(self, full: bool = True) -> None:
+        """Precompile the serving grid so steady state never JITs: the
+        tape interpreter buckets (`warm_tape`) and — with `full` — the
+        engine's maintenance + read program set (`warm`, which the
+        governor's steps and per_request mode dispatch from)."""
+        if full:
+            self.tree.warm()
+        if self.mode == "coalesced":
+            self.tree.warm_tape()
+
+    # -- accounting -----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Serving telemetry: per-client and overall enqueue->reply
+        latency percentiles (p50/p99/p999/max stall, µs), the window /
+        dispatch / op counters, the governor's spend, and the window
+        policy's current adaptive deadline."""
+        overall: List[float] = []
+        clients = {}
+        for c, lat in sorted(self._lat.items()):
+            clients[c] = _percentiles(lat)
+            overall.extend(lat)
+        return {
+            "clients": clients,
+            "overall": _percentiles(overall) if overall else None,
+            "counters": dict(self.counters),
+            "governor": {"steps": self.governor.steps_run,
+                         "idle_steps": self.governor.idle_steps_run,
+                         "credits": self.governor.credits},
+            "window": {"wait_s": self.window.wait_s,
+                       "max_ops": self.window.max_ops},
+            "engine": {k: int(v) for k, v in self.tree.stats.items()},
+        }

@@ -1,6 +1,8 @@
 # NOTE: do NOT set --xla_force_host_platform_device_count here.
 # Smoke tests and benches must see 1 device; only launch/dryrun.py (its own
 # process) and the subprocess tests force multi-device host platforms.
+import gc
+
 import numpy as np
 import pytest
 
@@ -8,3 +10,22 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_jax_executables_between_modules():
+    """Drop jax's compiled-executable caches after every test module.
+
+    The jit cache is process-global and every compiled executable holds
+    multiple memory mappings; a full suite run accumulates enough of
+    them (each module compiles its own parameterizations) to hit the
+    kernel's vm.max_map_count ceiling, at which point XLA's next mmap
+    fails and the process segfaults mid-compile. Per-module clearing
+    bounds the live-executable population while leaving within-module
+    cache reuse (which the no-recompile assertions depend on) intact.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()

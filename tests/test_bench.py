@@ -29,19 +29,38 @@ TINY = dict(R=2, Rn=16, D=2, mu=8, max_levels=3, eps=1e-3)
 # generators
 # --------------------------------------------------------------------------
 
+def _stream_sig(w):
+    """Order-sensitive signature of a serving stream (for determinism
+    comparisons): one (client, kind, keys, vals) tuple per request."""
+    return [(r.client, r.kind, r.keys.tolist(), r.vals.tolist())
+            for r in w.requests]
+
+
 @pytest.mark.parametrize("kind", FAMILIES)
 def test_generator_deterministic_under_fixed_seed(kind):
     a = make_workload(kind, 2_000, seed=7)
     b = make_workload(kind, 2_000, seed=7)
+    c = make_workload(kind, 2_000, seed=8)
+    if kind == "serving":       # request stream, not phase arrays
+        assert _stream_sig(a) == _stream_sig(b)
+        assert _stream_sig(a) != _stream_sig(c)
+        return
     for f in ("keys", "vals", "lookups", "deletes", "ranges", "absent"):
         assert np.array_equal(getattr(a, f), getattr(b, f)), f
-    c = make_workload(kind, 2_000, seed=8)
     assert not np.array_equal(a.keys, c.keys)
 
 
 @pytest.mark.parametrize("kind", FAMILIES)
 def test_inserted_keys_even_absent_odd(kind):
     w = make_workload(kind, 1_000, seed=3)
+    if kind == "serving":
+        writes = np.concatenate([r.keys for r in w.requests
+                                 if r.kind in ("insert", "delete")])
+        assert (writes % 2 == 0).all()
+        assert (w.absent % 2 == 1).all()
+        assert not np.isin(w.absent, writes).any()
+        assert any(r.kind == "lookup" for r in w.requests)
+        return
     assert (w.keys % 2 == 0).all()
     assert (w.absent % 2 == 1).all()
     assert not np.isin(w.absent, w.keys).any()
@@ -145,7 +164,7 @@ def test_maintenance_counters_track_merges():
 def test_scenarios_for_selectors():
     assert [s.name for s in scenarios_for("all")] == [
         "uniform", "sequential", "zipfian", "delete_heavy", "range_scan",
-        "shifting"]
+        "shifting", "serving"]
     sweep = scenarios_for("sweep-R")
     assert all(s.name.startswith("sweep_R") for s in sweep)
     mixed = scenarios_for("uniform,sweep-policy,uniform")

@@ -3,9 +3,9 @@
 Two checks, both run by the CI docs job and by tests/test_docs.py:
 
   1. every *public* module / class / function / method under
-     ``repro.engine`` and ``repro.bench`` carries a docstring — the
-     paper-ref docstring convention those packages follow is only
-     useful if it has no holes;
+     ``repro.engine``, ``repro.bench``, and ``repro.serve`` carries a
+     docstring — the paper-ref docstring convention those packages
+     follow is only useful if it has no holes;
   2. every relative markdown link in README.md, DESIGN.md, and
      docs/*.md resolves: the target file exists, and a ``#fragment``
      matches a real heading (GitHub anchor slugs) in the target.
@@ -26,7 +26,7 @@ import re
 import sys
 from pathlib import Path
 
-LINT_PACKAGES = ("repro.engine", "repro.bench")
+LINT_PACKAGES = ("repro.engine", "repro.bench", "repro.serve")
 DOC_FILES = ("README.md", "DESIGN.md")
 DOC_GLOBS = ("docs/*.md",)
 
