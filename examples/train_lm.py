@@ -1,8 +1,9 @@
-"""End-to-end LM training driver with sLSM incremental checkpointing.
+"""End-to-end LM training driver with atomic, hash-verified checkpoints.
 
 Trains a small model (default ~10M params, CPU-feasible) for a few hundred
-steps on the synthetic sharded TokenStream, checkpointing incrementally
-through the LSM store (deltas only) and atomically (full, hash-verified).
+steps on the synthetic sharded TokenStream, checkpointing through the
+`repro.checkpoint` facade — the same snapshot codec the sLSM durability
+layer uses (repro.engine.wal, DESIGN.md §12).
 
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
 (Use --d-model 512 --layers 12 for a ~100M-param run on real hardware.)
@@ -14,7 +15,7 @@ from dataclasses import replace
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import CheckpointManager, LSMCheckpointStore
+from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data import TokenStream
 from repro.models import lm
@@ -47,7 +48,6 @@ def main():
                                       total_steps=args.steps))
     stream = iter(TokenStream(cfg.vocab, args.batch, args.seq, seed=0))
     mgr = CheckpointManager(args.ckpt_dir + "/full", keep_last=2)
-    inc = LSMCheckpointStore(args.ckpt_dir + "/incremental")
 
     t0 = time.perf_counter()
     for step in range(1, args.steps + 1):
@@ -59,16 +59,13 @@ def main():
             print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
                   f"gnorm {float(m['grad_norm']):.3f}  {tok_s:,.0f} tok/s")
         if step % args.ckpt_every == 0:
-            mgr.save(step, params, blocking=False)       # atomic full
-            stats = inc.save_delta(params)               # LSM delta
-            print(f"  ckpt @ {step}: incremental wrote "
-                  f"{stats['written_chunks']}/{stats['total_chunks']} chunks "
-                  f"({stats['write_bytes']/1e6:.1f} MB of "
-                  f"{stats['full_bytes']/1e6:.1f} MB)")
+            path = mgr.save(step, params, blocking=False)  # atomic full
+            print(f"  ckpt @ {step}: async save -> {path}")
     mgr.wait()
 
-    # restart drill: restore from the incremental store, verify
-    restored = inc.restore(params)
+    # restart drill: restore the latest full checkpoint, verify
+    restored, at = mgr.restore(params)
+    print(f"restore drill: loaded step {at}")
     diff = max(float(jnp.abs(a.astype(jnp.float32)
                              - b.astype(jnp.float32)).max())
                for a, b in zip(jax.tree_util.tree_leaves(params),

@@ -35,7 +35,9 @@ import datetime
 import json
 import platform
 import re
+import struct
 import sys
+import tempfile
 import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
@@ -49,6 +51,7 @@ from repro.bench.scenarios import PROFILES, Scenario
 from repro.bench.workloads import Workload, make_workload
 from repro.core import bloom as BL
 from repro.engine import SLSM, LevelingPolicy, ShardedSLSM, TieringPolicy
+from repro.engine import wal as WAL
 
 
 def _phase(ops: int, wall_s: float, dispatch_times: List[float]) -> Dict:
@@ -73,17 +76,20 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
-def build_engine(sc: Scenario):
+def build_engine(sc: Scenario, wal_dir: Optional[str] = None):
     """Instantiate the scenario's engine: single tree (with its compaction
-    policy) or the vmapped sharded engine (tiering only, see sharded.py)."""
+    policy) or the vmapped sharded engine (tiering only, see sharded.py).
+    `wal_dir` (durability scenarios) attaches a fsyncing WAL — every
+    timed driver call then pays the real group-commit barrier."""
     p = sc.engine_params()
+    dur = WAL.Durability(wal_dir) if wal_dir is not None else None
     if sc.n_shards > 1:
         if sc.policy != "tiering":
             raise ValueError(
                 f"scenario {sc.name!r}: ShardedSLSM supports tiering only")
-        return ShardedSLSM(p, n_shards=sc.n_shards)
+        return ShardedSLSM(p, n_shards=sc.n_shards, durability=dur)
     policy = {"tiering": TieringPolicy, "leveling": LevelingPolicy}[sc.policy]()
-    return SLSM(p, policy=policy)
+    return SLSM(p, policy=policy, durability=dur)
 
 
 def _run_inserts(tree, w: Workload, chunk: int) -> Dict:
@@ -322,6 +328,39 @@ def _run_ranges_batched(tree, ranges: np.ndarray
     return phase, stats
 
 
+def _measure_durability(tree) -> Dict[str, Any]:
+    """The metrics.durability block of a WAL-on run (DESIGN.md §12).
+
+    `restore()` is timed FIRST — before any snapshot exists — so
+    restore_ms prices the worst case: a full replay-from-genesis of
+    everything the run logged. Then one device-pytree snapshot is timed
+    (the cost the serving governor hides in idle gaps). wal_bytes_per_op
+    is log bytes per logged *element* (key+value), the durability tax
+    per user write."""
+    dur = tree.durability
+    dur.sync()
+    records = dur.read_records()
+    n_elems = sum(struct.unpack_from("<I", r.payload, 0)[0]
+                  for r in records if r.kind == WAL.REC_WRITE)
+    t0 = time.perf_counter()
+    restored = type(tree).restore(str(dur.dir))
+    jax.block_until_ready(restored.state)
+    restore_ms = (time.perf_counter() - t0) * 1e3
+    replayed = int(restored.stats["replayed_records"])
+    restored.durability.close()
+    tree.snapshot()
+    st = dur.stats()
+    return {
+        "wal_bytes": int(st["wal_bytes"]),
+        "wal_records": int(st["wal_records"]),
+        "wal_bytes_per_op": float(st["wal_bytes"] / max(1, n_elems)),
+        "snapshot_ms": float(dur.last_snapshot_ms),
+        "restore_ms": float(restore_ms),
+        "replayed_chunks": replayed,
+        "fsync": bool(dur.fsync),
+    }
+
+
 def measured_fp_rate(tree, absent: np.ndarray,
                      max_runs: int = 64) -> Tuple[float, int, int]:
     """Mean Bloom admit rate of the disk runs' filters on guaranteed-absent
@@ -378,6 +417,13 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
     w = make_workload(sc.workload, n_ops, seed=sc.seed, **wargs)
     p = sc.engine_params()
     serving = None
+    if sc.durability and w.kind == "serving":
+        raise ValueError(f"scenario {sc.name!r}: the serving sweep builds "
+                         "one engine per point; use a phase workload for "
+                         "the durability axis")
+    wal_ctx = (tempfile.TemporaryDirectory(prefix="bench_wal_")
+               if sc.durability else None)
+    wal_dir = wal_ctx.name if wal_ctx is not None else None
 
     if w.kind == "serving":
         # closed-loop serving: no standard phases (the schema's nullable
@@ -388,7 +434,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         insert_steady = True
         n_batched_lookups = prof["n_lookups"]
     elif w.kind == "shifting":
-        tree = build_engine(sc)
+        tree = build_engine(sc, wal_dir)
         tree.warm()   # precompile all maintenance programs (untimed)
         # phased mixed-op stream, never drained mid-run: the adaptive
         # tuner must catch the write->read flip in flight (DESIGN.md §9)
@@ -401,7 +447,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(w.lookups) - nl1
     else:
-        tree = build_engine(sc)
+        tree = build_engine(sc, wal_dir)
         tree.warm()   # precompile all maintenance programs (untimed)
         insert, insert_steady = _run_inserts(tree, w, chunk=4 * p.Rn)
         delete = _run_deletes(tree, w, chunk=4 * p.Rn)
@@ -421,6 +467,10 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(lookups)
     fp_rate, _, n_probed = measured_fp_rate(tree, w.absent)
+    durability = _measure_durability(tree) if sc.durability else None
+    if wal_ctx is not None:
+        tree.durability.close()
+        wal_ctx.cleanup()
 
     doc: Dict[str, Any] = {
         "schema_version": SCHEMA.SCHEMA_VERSION,
@@ -463,6 +513,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
             "bloom": {"eps_configured": p.eps,
                       "fp_rate_measured": fp_rate,
                       "n_probed": n_probed},
+            "durability": durability,
         },
         "env": _env(),
     }

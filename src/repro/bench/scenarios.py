@@ -8,11 +8,12 @@ scenario that proves the adaptive tuner, and the closed-loop `serving`
 scenario that proves the continuous-batching layer — at the CPU-scaled
 paper baseline; the sweep families (`--scenario sweeps`, or one of
 `sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-merge-budget|
-sweep-policy|sweep-backend|sweep-shards|sweep-tuner`) vary exactly one
-knob at a time, reproducing the paper's experimental axes (Table 1 +
-Section 3) plus the axes this repro adds: the ops backend (jnp vs
-pallas), the shard count (1 vs S), the merge scheduler's pacing budget
-(synchronous vs incremental, DESIGN.md §8), and the adaptive tuner vs
+sweep-policy|sweep-backend|sweep-shards|sweep-durability|sweep-tuner`)
+vary exactly one knob at a time, reproducing the paper's experimental
+axes (Table 1 + Section 3) plus the axes this repro adds: the ops
+backend (jnp vs pallas), the shard count (1 vs S), the merge
+scheduler's pacing budget (synchronous vs incremental, DESIGN.md §8),
+the WAL on vs off (the durability tax, §12), and the adaptive tuner vs
 every static eps on the shifting workload (DESIGN.md §9).
 
 Scenario names are stable identifiers: `BENCH_<name>.json` files keyed
@@ -91,6 +92,7 @@ class Scenario:
     policy: str = "tiering"                    # tiering | leveling
     n_shards: int = 1                          # 1 = single tree, >1 = ShardedSLSM
     seed: int = 0
+    durability: bool = False                   # WAL + fsync on (DESIGN.md §12)
 
     def engine_params(self) -> SLSMParams:
         """The scenario's full `SLSMParams`: the CPU-scaled paper
@@ -161,6 +163,15 @@ SWEEPS: Dict[str, List[Scenario]] = {
     "sweep-shards": [
         Scenario("sweep_shards_1", "uniform", n_shards=1),
         Scenario("sweep_shards_4", "uniform", n_shards=4),
+    ],
+    # the durability tax (DESIGN.md §12): the same uniform load with the
+    # sequence-numbered WAL group-committing (fsync) at every driver call
+    # vs the WAL off — insert throughput/stall deltas are the log's
+    # price, and the WAL-on document's metrics.durability block carries
+    # the recovery-side costs (snapshot_ms, restore_ms, replay size)
+    "sweep-durability": [
+        Scenario("sweep_durability_wal", "uniform", durability=True),
+        Scenario("sweep_durability_off", "uniform"),
     ],
     # the adaptive tuner vs every static eps on the shifting workload
     # (DESIGN.md §9): the canonical `shifting` scenario is the tuned run;

@@ -10,9 +10,10 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 5):
+Document shape (SCHEMA_VERSION 6):
 
-  schema_version  int     == 5
+  schema_version  int     in COMPAT_VERSIONS (v5 documents predate the
+                          durability block and stay valid as committed)
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
@@ -76,6 +77,18 @@ Document shape (SCHEMA_VERSION 5):
                       ``slo_p99_us``, and ``governor`` the maintenance
                       steps spent at window boundaries / idle gaps
     bloom             {eps_configured, fp_rate_measured, n_probed}
+    durability        {wal_bytes, wal_records, wal_bytes_per_op,
+                      snapshot_ms, restore_ms, replayed_chunks,
+                      fsync}|None   (v6+, required key) the durability
+                      tax and recovery cost of a WAL-on run (DESIGN.md
+                      §12): total log size and record count, log bytes
+                      per logged element, one timed device-pytree
+                      snapshot, one timed `restore()` of the full run's
+                      WAL (measured BEFORE the snapshot exists, so it
+                      prices the worst-case replay-from-genesis), the
+                      WRITE chunks that replay processed, and whether
+                      the log fsynced at each group commit. null on
+                      WAL-off runs.
   env               {jax, numpy, python, platform, timestamp}
 
   serving-point := {clients int    offered load (closed-loop clients)
@@ -114,12 +127,19 @@ SCHEMA_VERSION history:
       continuous-batching layer, DESIGN.md §11); the standard phases
       (insert, lookup_batched, lookup_per_query, batched_speedup)
       became nullable on — and only on — serving documents.
+  6 — durability PR: nullable-but-required metrics.durability block
+      (WAL size/overhead, snapshot and restore wall times, replay
+      chunk count — DESIGN.md §12) emitted by the sweep-durability
+      family's WAL-on point; v5 documents remain valid
+      (COMPAT_VERSIONS), the new key is enforced on v6 only.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
+# accepted on read: the committed trajectory keeps its v5 documents
+COMPAT_VERSIONS = (5, 6)
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -226,8 +246,9 @@ def validate(doc: Any) -> List[str]:
         return [f"document: expected object, got {type(doc).__name__}"]
 
     ver = _typed(doc, "schema_version", int, errs, "document")
-    if ver is not None and ver != SCHEMA_VERSION:
-        errs.append(f"schema_version: {ver} != supported {SCHEMA_VERSION}")
+    if ver is not None and ver not in COMPAT_VERSIONS:
+        errs.append(f"schema_version: {ver} not in supported "
+                    f"{COMPAT_VERSIONS}")
     _typed(doc, "name", str, errs, "document")
 
     wl = _typed(doc, "workload", dict, errs, "document")
@@ -341,6 +362,30 @@ def validate(doc: Any) -> List[str]:
                 errs.append(f"metrics.bloom.eps_configured: out of (0,1) ({eps})")
             if isinstance(fp, (int, float)) and not 0 <= fp <= 1:
                 errs.append(f"metrics.bloom.fp_rate_measured: out of [0,1] ({fp})")
+        # v6: the durability block is a required (nullable) key — null on
+        # WAL-off runs; v5 documents predate it and are exempt
+        if ver == SCHEMA_VERSION:
+            if "durability" not in met:
+                errs.append("metrics: missing key 'durability' (use null "
+                            "for WAL-off runs)")
+            elif met["durability"] is not None:
+                dur = _typed(met, "durability", dict, errs, "metrics")
+                if dur is not None:
+                    where = "metrics.durability"
+                    for key, typ in (("wal_bytes", int),
+                                     ("wal_records", int),
+                                     ("wal_bytes_per_op", float),
+                                     ("snapshot_ms", float),
+                                     ("restore_ms", float),
+                                     ("replayed_chunks", int)):
+                        v = _typed(dur, key, typ, errs, where)
+                        if isinstance(v, (int, float)) and v < 0:
+                            errs.append(f"{where}.{key}: negative ({v})")
+                    _typed(dur, "fsync", bool, errs, where)
+                    wr = dur.get("wal_records")
+                    if isinstance(wr, int) and wr <= 0:
+                        errs.append(f"{where}.wal_records: a WAL-on run "
+                                    f"must have logged records ({wr})")
 
     env = _typed(doc, "env", dict, errs, "document")
     if env is not None:

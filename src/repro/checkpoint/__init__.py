@@ -1,2 +1,100 @@
-from repro.checkpoint.manager import CheckpointManager  # noqa: F401
-from repro.checkpoint.lsm_store import LSMCheckpointStore  # noqa: F401
+"""Model-checkpoint facade over the repo's ONE serialization path.
+
+`CheckpointManager` keeps the seed module's ``step_<n>/`` layout and
+save/restore API (used by ``examples/train_lm.py``) but is now a thin
+wrapper over `repro.engine.wal`'s snapshot codec — the same atomic
+``.tmp-<pid>`` + rename publish, per-leaf ``.npy`` + sha256
+verification, and ml_dtypes bit-view shim the sLSM durability layer
+uses for its device-pytree snapshots (DESIGN.md §12). There is no
+second serialization implementation to drift.
+
+The old incremental ``LSMCheckpointStore`` is retired: logging deltas
+is the engine WAL's job now (`repro.engine.wal.Durability`), with
+CRC framing, seqno watermarks, and crash-exact `restore()` the ad-hoc
+store never had.
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+import jax
+import numpy as np
+
+from repro.engine.wal import (SnapshotError, gc_tmp_snapshots,  # noqa: F401
+                              list_snapshots, read_snapshot,
+                              write_snapshot)
+
+_PREFIX = "step_"
+
+
+class CheckpointManager:
+    """Numbered model checkpoints: atomic, hash-verified, mesh-agnostic.
+
+    Layout per step (written by `wal.write_snapshot` with the ``step_``
+    prefix):
+
+        <dir>/step_<n>.tmp-<pid>/   (in progress — ignored, GC'd)
+        <dir>/step_<n>/             (atomic rename on completion)
+            meta.json               shapes, dtypes, sha256 per leaf
+            leaf_<i>.npy            one file per pytree leaf
+
+    A crash mid-save leaves only a ``.tmp`` dir; `latest_step` only
+    ever sees complete checkpoints; every leaf is sha256-verified on
+    restore. Leaves are host numpy, so a checkpoint restores onto any
+    mesh (elastic.reshard)."""
+
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = directory
+        self.keep_last = keep_last
+        os.makedirs(directory, exist_ok=True)
+        gc_tmp_snapshots(directory)
+        self._async_thread: threading.Thread | None = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = True) -> str:
+        """Write checkpoint `step` (device leaves fetched here, so the
+        caller's pytree may keep training). ``blocking=False`` hands the
+        file I/O to a background thread (one in flight at a time — a
+        second async save first `wait`s out the previous one); the
+        published path is returned either way."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        meta = {"step": step, "treedef": str(treedef)}
+        if blocking:
+            return str(self._write(step, host_leaves, meta))
+        self.wait()
+        self._async_thread = threading.Thread(
+            target=self._write, args=(step, host_leaves, meta))
+        self._async_thread.start()
+        return os.path.join(self.dir, f"{_PREFIX}{step}")
+
+    def wait(self) -> None:
+        """Join the in-flight async save, if any (idempotent)."""
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _write(self, step: int, host_leaves, meta) -> str:
+        return str(write_snapshot(self.dir, step, host_leaves, meta,
+                                  keep_last=self.keep_last, prefix=_PREFIX))
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        """Highest fully published checkpoint step (None when empty)."""
+        steps = list_snapshots(self.dir, prefix=_PREFIX)
+        return steps[-1][0] if steps else None
+
+    def restore(self, template_tree, step: int | None = None):
+        """-> (host numpy pytree shaped like `template_tree`, step).
+
+        Defaults to the latest step. Raises `FileNotFoundError` when no
+        checkpoint exists and `wal.SnapshotError` on corruption (a leaf
+        whose sha256 does not match what was written)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"{_PREFIX}{step}")
+        leaves, _meta = read_snapshot(path)
+        _, treedef = jax.tree_util.tree_flatten(template_tree)
+        return jax.tree_util.tree_unflatten(treedef, leaves), step

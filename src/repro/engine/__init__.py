@@ -11,6 +11,8 @@ Layer map (DESIGN.md has the full tour):
                   between write buffer, per-level Bloom bits, and fences
   read_path.py  — dense + Bloom-compacted lookups, range queries
   tape.py       — device-resident mixed-op tape (lax.scan interpreter)
+  wal.py        — durability: CRC-framed sequence-numbered WAL + atomic
+                  pytree snapshots + the Durability manager (restore())
   engine.py     — the host-side `SLSM` driver
   sharded.py    — S hash-partitioned trees in one vmapped pytree
 
@@ -41,3 +43,8 @@ from repro.engine.sharded import ShardedSLSM, shard_ids  # noqa: F401
 from repro.engine.tuner import (Allocation, ReadModePolicy,  # noqa: F401
                                 Tuner, allocation_bytes, build_presets,
                                 monkey_eps_per_level, retune_filters)
+from repro.engine.wal import (Durability, SnapshotError,  # noqa: F401
+                              WalRecord, WalWriter, as_durability,
+                              list_snapshots, load_latest_snapshot,
+                              read_snapshot, read_wal, record_offsets,
+                              write_snapshot)

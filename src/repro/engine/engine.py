@@ -13,6 +13,8 @@ device computation dispatched through the ops backend selected by
 from __future__ import annotations
 
 import collections
+import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -20,11 +22,13 @@ import numpy as np
 
 from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
 from repro.engine import tape as TP
+from repro.engine import wal as WAL
 from repro.engine.backend import get_backend
 from repro.engine.batching import (ADAPTIVE_BUCKETS, RANGE_BUCKETS,
                                    TAPE_BUCKETS, adaptive_bucket,
                                    bucket_pow2, pad_to, range_many_host)
-from repro.engine.compaction import CompactionPolicy, TieringPolicy
+from repro.engine.compaction import (CompactionPolicy, LevelingPolicy,
+                                     TieringPolicy)
 from repro.engine.memtable import init_state, stage_append
 from repro.engine.read_path import (level_probe_stats, lookup_batch,
                                     lookup_many, range_many, range_query)
@@ -34,6 +38,19 @@ from repro.engine.tuner import READ, ReadModePolicy, Tuner, retune_filters
 # fixed width of the tuner's sampled probe-telemetry dispatch: one shape
 # -> one compiled level_probe_stats program per (allocation, structure)
 PROBE_SAMPLE = 256
+
+# WAL/snapshot fingerprints name compaction policies by kind string so
+# restore() can rebuild the configured policy without pickling it
+_POLICY_KINDS = {"tiering": TieringPolicy, "leveling": LevelingPolicy}
+
+
+def _policy_kind(policy: CompactionPolicy) -> str:
+    """Fingerprint name of a configured compaction policy (the inverse
+    of the `_POLICY_KINDS` lookup restore() performs)."""
+    for name, cls in _POLICY_KINDS.items():
+        if type(policy) is cls:
+            return name
+    return type(policy).__name__.lower()
 
 
 def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
@@ -70,7 +87,8 @@ class SLSM:
     """
 
     def __init__(self, params: SLSMParams | None = None,
-                 policy: CompactionPolicy | None = None):
+                 policy: CompactionPolicy | None = None,
+                 durability=None):
         self.p = params or SLSMParams()
         get_backend(self.p.backend)  # fail fast on unknown backends
         self.policy = policy or TieringPolicy()
@@ -90,6 +108,14 @@ class SLSM:
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
                                          compactions=0, backlog_peak=0,
                                          retunes=0, reads=0, writes=0)
+        # durability surface (DESIGN.md §12): None (default) = volatile
+        # engine, a path or wal.Durability = WAL every write op +
+        # snapshot on demand; _replaying suppresses re-logging while
+        # restore() replays the WAL tail through this same write path
+        self._replaying = False
+        self.durability = WAL.as_durability(durability)
+        if self.durability is not None:
+            self.durability.ensure_header(self._wal_meta())
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -106,7 +132,14 @@ class SLSM:
 
     def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
         """Post-validation write path (delete() enters here: its tombstone
-        values are the engine's own, not user data)."""
+        values are the engine's own, not user data). With durability on,
+        the whole op is logged as one WAL record before any device state
+        changes and group-committed before returning (one fsync per
+        driver call, not per chunk — DESIGN.md §12)."""
+        log = (self.durability is not None and not self._replaying
+               and len(keys) > 0)
+        if log:
+            self.durability.log_write(keys, vals)
         self.stats["writes"] += len(keys)
         self.tuner.note_writes(len(keys))
         rn = self.p.Rn
@@ -120,6 +153,8 @@ class SLSM:
                                       jnp.asarray(ck), jnp.asarray(cv),
                                       jnp.int32(n))
             self.scheduler.on_chunk()
+        if log:
+            self.durability.sync()
 
     def delete(self, keys) -> None:
         """Deletes are tombstone inserts (paper 2.8); they commit — i.e.
@@ -334,6 +369,19 @@ class SLSM:
                 last_reads = k
             elif ch.kind != "range":
                 raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        # durability: one WAL record per write chunk (stream order is
+        # preserved; segmentation below never reorders writes), group-
+        # committed before this call returns — the serving layer stamps
+        # replies only after run_tape returns, so every acked window is
+        # durable (log-before-ack, DESIGN.md §12)
+        log = self.durability is not None and not self._replaying
+        if log:
+            for ch in chunks:
+                if ch.kind == "write":
+                    k = np.asarray(ch.keys, np.int32).reshape(-1)
+                    if k.size:
+                        self.durability.log_write(
+                            k, np.asarray(ch.vals, np.int32).reshape(-1))
         results = [0] * len(chunks)
         # stream-ordered work list of (original chunk index, chunk);
         # oversized writes split across segments under the same index
@@ -385,6 +433,8 @@ class SLSM:
             self.tuner.note_reads(n_reads)
             if self.tuner.enabled and last_reads is not None:
                 self.tuner.last_queries = last_reads[:PROBE_SAMPLE].copy()
+        if log:
+            self.durability.sync()
         return results
 
     def voluntary_steps(self, budget: int) -> int:
@@ -453,11 +503,136 @@ class SLSM:
         parameter set to the tuner's target allocation and rebuild every
         resident Bloom filter under it in one jitted dispatch
         (tuner.retune_filters). Runs written afterwards pick up the new
-        geometry at their own construction (levels.index_new_run)."""
+        geometry at their own construction (levels.index_new_run). With
+        durability on, the applied switch is WAL-logged and synced so a
+        restored engine carries the same allocation trajectory (retunes
+        are answer-invariant, so losing an unsynced one is harmless —
+        DESIGN.md §9/§12)."""
+        if self.durability is not None and not self._replaying:
+            self.durability.log_retune(self.tuner.target)
         alloc = self.tuner.allocation(self.tuner.target)
         self.p_active = alloc.apply(self.p)
         self.state = retune_filters(self.p_active, self.state)
         self.tuner.applied()
+        if self.durability is not None and not self._replaying:
+            self.durability.sync()
+
+    # -- durability (repro.engine.wal, DESIGN.md §12) -----------------------
+    def _wal_meta(self) -> dict:
+        """Engine fingerprint for the WAL's META record: enough to
+        rebuild — and refuse to mix up — this engine configuration."""
+        return {"driver": "slsm", "params": WAL.params_to_dict(self.p),
+                "policy": _policy_kind(self.policy)}
+
+    def _snapshot_meta(self) -> dict:
+        """Host-side state that rides a snapshot beside the pytree
+        leaves: the engine fingerprint, the levels-structure depth the
+        leaves were captured at, the tuner's controller position, and
+        the stats counters at the watermark (replaying the WAL tail
+        re-counts the rest, so restored totals match an uncrashed
+        run)."""
+        return {**self._wal_meta(), "n_levels": self.n_levels,
+                "tuner": {"active": self.tuner.active,
+                          "read_frac": float(self.tuner.read_frac)},
+                "stats": {k: int(v) for k, v in self.stats.items()}}
+
+    def snapshot(self):
+        """Serialize the full device pytree (stage + runs + levels +
+        filters, under the current allocation) as one atomic snapshot
+        stamped with the WAL seqno watermark; restore() then only
+        replays records past it. Returns the published directory.
+        Requires a durability layer (the Governor triggers this in idle
+        gaps — repro.serve)."""
+        if self.durability is None:
+            raise ValueError("snapshot() requires a durability layer: "
+                             "construct with SLSM(..., durability=path)")
+        return self.durability.snapshot(self)
+
+    def _adopt_snapshot(self, leaves, meta: dict) -> None:
+        """Install snapshot `leaves` as the live state pytree and adopt
+        the host-side controller/stats position captured in `meta`.
+        The physical geometry is params-determined (filters are sized at
+        eps_floor — DESIGN.md §9), so a template built from the same
+        params always matches the leaves' shapes."""
+        template = init_state(self.p, int(meta["n_levels"]))
+        treedef = jax.tree_util.tree_structure(template)
+        self.state = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in leaves])
+        for k, v in meta.get("stats", {}).items():
+            self.stats[k] = int(v)
+        t = meta.get("tuner")
+        if t and self.tuner.enabled:
+            name = t.get("active", self.tuner.active)
+            self.tuner.active = self.tuner.target = name
+            self.tuner.read_frac = float(t.get("read_frac",
+                                               self.tuner.read_frac))
+            self.p_active = self.tuner.allocation(name).apply(self.p)
+
+    def _replay(self, records) -> None:
+        """Re-apply a WAL tail through the existing chunk-apply programs
+        (_insert / apply_retune) with re-logging suppressed. Replay is
+        answer-exact, not bitwise-state-exact: maintenance may pace
+        differently than the crashed run, but reads are exact at every
+        point between merge steps (DESIGN.md §8), so every lookup/range
+        afterwards matches an uncrashed engine fed the same records."""
+        self._replaying = True
+        try:
+            n = 0
+            for rec in records:
+                if rec.kind == WAL.REC_WRITE:
+                    k, v = WAL.decode_write(rec.payload)
+                    self._insert(k, v)
+                elif rec.kind == WAL.REC_RETUNE:
+                    if self.tuner.enabled:
+                        self.tuner.target = rec.payload.decode()
+                        if self.tuner.pending:
+                            self.apply_retune()
+                            self.stats["retunes"] += 1
+                else:
+                    continue
+                n += 1
+            self.stats["replayed_records"] += n
+        finally:
+            self._replaying = False
+
+    @classmethod
+    def restore(cls, path, params: SLSMParams | None = None,
+                policy: CompactionPolicy | None = None, durability=None):
+        """Recover an engine from a durability directory: load the
+        newest snapshot that passes verification (none is fine — replay
+        then starts from genesis), replay every WAL record past its
+        watermark, and return the live engine. A torn final WAL record
+        is dropped cleanly (CRC framing rejects it as a unit — no
+        partial apply). `params`/`policy` default to the fingerprint
+        recorded in the snapshot/WAL META. Restore wall time and replay
+        size are reported in ``stats()`` as ``restore_us`` /
+        ``replayed_records``."""
+        t0 = time.perf_counter()
+        dur = WAL.as_durability(durability if durability is not None
+                                else path)
+        # decode the durable prefix BEFORE any writer truncates the tail
+        records = dur.read_records()
+        header = next((json.loads(r.payload.decode()) for r in records
+                       if r.kind == WAL.REC_META), None)
+        snap = WAL.load_latest_snapshot(dur.dir)
+        meta = snap[2] if snap is not None else header
+        if meta is None and params is None:
+            raise ValueError(f"nothing to restore in {dur.dir}: no valid "
+                             "snapshot and no readable WAL header")
+        if params is None:
+            params = WAL.params_from_dict(meta["params"])
+        if policy is None and meta is not None:
+            policy = _POLICY_KINDS.get(meta.get("policy", "tiering"),
+                                       TieringPolicy)()
+        drv = cls(params, policy, durability=dur)
+        watermark = -1
+        if snap is not None:
+            num, leaves, smeta = snap
+            drv._adopt_snapshot(leaves, smeta)
+            watermark = num
+        drv._replay([r for r in records if r.seqno > watermark])
+        drv.stats["restore_us"] += int((time.perf_counter() - t0) * 1e6)
+        return drv
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -39,6 +39,8 @@ from __future__ import annotations
 
 import collections
 import functools
+import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +53,7 @@ from repro.engine import read_path as RP
 from repro.engine import scheduler as SCH
 from repro.engine import tape as TP
 from repro.engine import tuner as TU
+from repro.engine import wal as WAL
 from repro.engine.backend import get_backend
 from repro.engine.batching import (RANGE_BUCKETS, TAPE_BUCKETS, bucket_pow2,
                                    range_bucket, range_many_host,
@@ -260,7 +263,8 @@ def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
 class ShardedSLSM:
     """S hash-partitioned sLSM trees in one fused, vmapped state pytree."""
 
-    def __init__(self, params: SLSMParams | None = None, n_shards: int = 4):
+    def __init__(self, params: SLSMParams | None = None, n_shards: int = 4,
+                 durability=None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         self.p = params or SLSMParams()
@@ -280,6 +284,15 @@ class ShardedSLSM:
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
                                          compactions=0, backlog_peak=0,
                                          retunes=0, reads=0, writes=0)
+        # durability surface (DESIGN.md §12): write ops are logged at the
+        # driver boundary BEFORE shard routing, so single-tree and
+        # sharded engines fed the same stream produce byte-identical
+        # WALs (modulo the META fingerprint) — the recovery-parity tests
+        # lean on that
+        self._replaying = False
+        self.durability = WAL.as_durability(durability)
+        if self.durability is not None:
+            self.durability.ensure_header(self._wal_meta())
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -295,9 +308,15 @@ class ShardedSLSM:
 
     def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
         """Post-validation write path (delete() enters here: its tombstone
-        values are the engine's own, not user data)."""
+        values are the engine's own, not user data). With durability on,
+        the whole op is WAL-logged pre-routing as one record and
+        group-committed before returning (one fsync per driver call —
+        SLSM._insert's contract, byte-identical records)."""
         if len(keys) == 0:
             return
+        log = self.durability is not None and not self._replaying
+        if log:
+            self.durability.log_write(keys, vals)
         self.stats["writes"] += len(keys)
         self.tuner.note_writes(len(keys))
         sid = shard_ids(keys, self.S)
@@ -317,6 +336,8 @@ class ShardedSLSM:
                 self.p_active, self.state, jnp.asarray(ck), jnp.asarray(cv),
                 jnp.asarray(n))
             self._maintain()
+        if log:
+            self.durability.sync()
 
     def delete(self, keys) -> None:
         """Tombstone inserts (paper 2.8); elided at deepest-level
@@ -377,12 +398,19 @@ class ShardedSLSM:
         rebuild every shard's filters in one vmapped dispatch. A retune
         is a *global static swap* (the stacked pytree runs one program),
         so unlike merges it cannot be per-shard masked — it applies at
-        the round boundary that decided it, whatever the pacing budget."""
+        the round boundary that decided it, whatever the pacing budget.
+        With durability on the applied switch is WAL-logged and synced
+        (SLSM.apply_retune's contract)."""
         t = self.tuner
+        log = self.durability is not None and not self._replaying
+        if log:
+            self.durability.log_retune(t.target)
         self.p_active = t.allocation(t.target).apply(self.p)
         self.state = _retune_filters_sharded(self.p_active, self.state)
         t.applied()
         self.stats["retunes"] += 1
+        if log:
+            self.durability.sync()
 
     def _maintain(self) -> None:
         """Per-round scheduler pass: tuner decision (adaptive mode),
@@ -743,6 +771,17 @@ class ShardedSLSM:
                 n_reads += k.size
             elif ch.kind != "range":
                 raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        # one WAL record per write chunk, pre-routing, group-committed
+        # before the window's results are returned (log-before-ack —
+        # SLSM.run_tape's contract, byte-identical records)
+        log = self.durability is not None and not self._replaying
+        if log:
+            for ch in chunks:
+                if ch.kind == "write":
+                    k = np.asarray(ch.keys, np.int32).reshape(-1)
+                    if k.size:
+                        self.durability.log_write(
+                            k, np.asarray(ch.vals, np.int32).reshape(-1))
         rb = TP.range_lanes(self.p_active)
         results = [0] * len(chunks)
         work = list(enumerate(chunks))
@@ -777,6 +816,8 @@ class ShardedSLSM:
             self.tuner.note_writes(n_writes)
         if n_reads:
             self.tuner.note_reads(n_reads)
+        if log:
+            self.durability.sync()
         return results
 
     def _run_tape_segment(self, seg, seg_idx, rb, results) -> None:
@@ -851,6 +892,114 @@ class ShardedSLSM:
                     jnp.zeros((t, self.S, p.Rn), jnp.int32),
                     jnp.zeros((t, self.S), jnp.int32), skip))
         jax.block_until_ready(outs)
+
+    # -- durability (repro.engine.wal, DESIGN.md §12) -----------------------
+    def _wal_meta(self) -> dict:
+        """Engine fingerprint for the WAL's META record (driver kind,
+        params, shard count) — verified on every reattach so a
+        durability directory can never be replayed into a mismatched
+        fleet."""
+        return {"driver": "sharded",
+                "params": WAL.params_to_dict(self.p),
+                "policy": "tiering", "n_shards": self.S}
+
+    def _snapshot_meta(self) -> dict:
+        """Host-side state riding a snapshot beside the stacked pytree
+        leaves (see SLSM._snapshot_meta; the levels structure is always
+        fully preallocated here, so n_levels is max_levels)."""
+        return {**self._wal_meta(), "n_levels": self.p.max_levels,
+                "tuner": {"active": self.tuner.active,
+                          "read_frac": float(self.tuner.read_frac)},
+                "stats": {k: int(v) for k, v in self.stats.items()}}
+
+    def snapshot(self):
+        """Serialize the whole fleet's stacked pytree as one atomic
+        snapshot stamped with the WAL seqno watermark (see
+        SLSM.snapshot). Requires a durability layer."""
+        if self.durability is None:
+            raise ValueError("snapshot() requires a durability layer: "
+                             "construct with ShardedSLSM(..., "
+                             "durability=path)")
+        return self.durability.snapshot(self)
+
+    def _adopt_snapshot(self, leaves, meta: dict) -> None:
+        """Install snapshot `leaves` as the live stacked state and adopt
+        the controller/stats position captured in `meta` (see
+        SLSM._adopt_snapshot; the stacked template is structure-fixed at
+        init, so it always matches)."""
+        base = MT.init_state(self.p, n_levels=self.p.max_levels)
+        template = jax.tree.map(lambda x: jnp.stack([x] * self.S), base)
+        treedef = jax.tree_util.tree_structure(template)
+        self.state = jax.tree_util.tree_unflatten(
+            treedef, [jnp.asarray(x) for x in leaves])
+        for k, v in meta.get("stats", {}).items():
+            self.stats[k] = int(v)
+        t = meta.get("tuner")
+        if t and self.tuner.enabled:
+            name = t.get("active", self.tuner.active)
+            self.tuner.active = self.tuner.target = name
+            self.tuner.read_frac = float(t.get("read_frac",
+                                               self.tuner.read_frac))
+            self.p_active = self.tuner.allocation(name).apply(self.p)
+
+    def _replay(self, records) -> None:
+        """Re-apply a WAL tail through the existing chunk-apply programs
+        with re-logging suppressed (see SLSM._replay: answer-exact by
+        the scheduler invariant, not bitwise-state-exact)."""
+        self._replaying = True
+        try:
+            n = 0
+            for rec in records:
+                if rec.kind == WAL.REC_WRITE:
+                    k, v = WAL.decode_write(rec.payload)
+                    self._insert(k, v)
+                elif rec.kind == WAL.REC_RETUNE:
+                    if self.tuner.enabled:
+                        self.tuner.target = rec.payload.decode()
+                        if self.tuner.pending:
+                            self._apply_retune()
+                else:
+                    continue
+                n += 1
+            self.stats["replayed_records"] += n
+        finally:
+            self._replaying = False
+
+    @classmethod
+    def restore(cls, path, params: SLSMParams | None = None,
+                n_shards: int | None = None, durability=None):
+        """Recover a sharded fleet from a durability directory: newest
+        valid snapshot + WAL-tail replay, exactly `SLSM.restore`'s
+        contract (torn final record dropped cleanly; `params`/`n_shards`
+        default to the recorded fingerprint; restore wall time and
+        replay size reported as ``restore_us``/``replayed_records``)."""
+        t0 = time.perf_counter()
+        dur = WAL.as_durability(durability if durability is not None
+                                else path)
+        records = dur.read_records()
+        header = next((json.loads(r.payload.decode()) for r in records
+                       if r.kind == WAL.REC_META), None)
+        snap = WAL.load_latest_snapshot(dur.dir)
+        meta = snap[2] if snap is not None else header
+        if meta is None and params is None:
+            raise ValueError(f"nothing to restore in {dur.dir}: no valid "
+                             "snapshot and no readable WAL header")
+        if params is None:
+            params = WAL.params_from_dict(meta["params"])
+        if n_shards is None:
+            # a foreign (single-tree) fingerprint has no shard count; let
+            # the constructor's ensure_header raise the clear mismatch
+            n_shards = (int(meta.get("n_shards", 4))
+                        if meta is not None else 4)
+        drv = cls(params, n_shards, durability=dur)
+        watermark = -1
+        if snap is not None:
+            num, leaves, smeta = snap
+            drv._adopt_snapshot(leaves, smeta)
+            watermark = num
+        drv._replay([r for r in records if r.seqno > watermark])
+        drv.stats["restore_us"] += int((time.perf_counter() - t0) * 1e6)
+        return drv
 
     # -- stats ----------------------------------------------------------------
     @property

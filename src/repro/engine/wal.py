@@ -1,0 +1,598 @@
+"""Durability layer: sequence-numbered WAL + device-pytree snapshots.
+
+The sLSM's deferred-write design (paper 2.1: buffer in memory, push
+updates down later) means the whole tree lives in device memory and
+dies with the process. This module is the recovery story (DESIGN.md
+§12): every *driver-boundary write op* — the same tagged chunks the
+tape and scheduler produce, including RETUNE decisions — is appended to
+a CRC-framed, strictly sequence-numbered write-ahead log before the
+device state that absorbs it can be observed by a client
+(log-before-ack); periodically the full device pytree is serialized as
+an atomic snapshot stamped with the WAL seqno watermark; and
+``SLSM.restore`` / ``ShardedSLSM.restore`` (engine.py / sharded.py)
+load the newest valid snapshot and replay the WAL tail through the
+*existing* chunk-apply programs, so recovery reuses the warmed write
+path instead of maintaining a second one.
+
+Correctness contract: replay is oracle-exact at the *answer* level, not
+the bitwise-state level. The scheduler's invariant — reads are exact at
+every point between maintenance steps (DESIGN.md §8) — plus the tuner's
+answer-invariant retunes (§9) mean a restored engine may hold its runs
+at a different maintenance progress than the crashed one did, yet every
+lookup and range answers bitwise-identically to a fresh engine fed the
+durable op prefix. The crash-point injection suite
+(``tests/durability/``) asserts exactly that, at byte-level torn tails,
+chunk boundaries, and mid-seal/mid-spill/mid-RETUNE crash points.
+
+WAL file format (little-endian):
+
+    magic  b"SLSMWAL1"
+    record := crc32 u32 | length u32 | seqno u64 | kind u8 | pad[3]
+              | payload[length]
+
+The crc32 covers everything after the crc field (length through
+payload), so a torn or bit-flipped tail is rejected as a unit; seqnos
+are strictly consecutive, so a valid-looking record after a gap is
+rejected too. `read_wal` returns the longest well-formed prefix — a
+torn final record is *dropped cleanly*, never partially applied — and
+`WalWriter` truncates that torn tail before resuming appends.
+
+Record kinds:
+
+    REC_META    json engine fingerprint (driver kind, params, shards) —
+                always the first record, verified on reattach
+    REC_WRITE   one driver-boundary write chunk: n u32, keys int32[n],
+                vals int32[n] (a TOMBSTONE value is a delete)
+    REC_RETUNE  one applied tuner allocation switch (utf-8 preset name)
+
+Fsync batching: `WalWriter.append` only buffers; `Durability.sync`
+writes and fsyncs the whole batch once — one fsync per driver call (or
+per serving window), not per record. That group commit is what makes
+log-before-ack affordable: `repro.serve` stamps replies only after
+`run_tape` returns, and `run_tape` syncs its window's records before
+dispatching it.
+
+Snapshots are directories ``snap_<seqno>/`` (atomic ``.tmp-<pid>`` +
+rename publish, one ``leaf_<i>.npy`` per pytree leaf, sha256-verified
+``meta.json``), garbage-collected to ``keep_snapshots``. The WAL is
+never pruned here — replay-from-genesis stays possible, and bounding
+log growth by trimming below the watermark is future work (ROADMAP).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import struct
+import sys
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.params import SLSMParams, TuningPolicy
+
+MAGIC = b"SLSMWAL1"
+
+# record framing: crc32 u32 | payload length u32 | seqno u64 | kind u8 | pad3
+_HEADER = struct.Struct("<IIQB3x")
+_CRC_BODY_LEN = _HEADER.size - 4          # crc covers header-after-crc+payload
+_MAX_PAYLOAD = 1 << 28                    # sanity bound while scanning
+
+REC_META = 0      # json engine fingerprint (first record of every WAL)
+REC_WRITE = 1     # one driver-boundary write chunk (keys+vals int32)
+REC_RETUNE = 2    # one applied tuner allocation switch (preset name)
+
+
+class WalRecord(NamedTuple):
+    """One decoded WAL record: its sequence number, kind tag, and raw
+    payload bytes (see the module docstring for the payload codecs)."""
+
+    seqno: int
+    kind: int
+    payload: bytes
+
+
+class SnapshotError(RuntimeError):
+    """A snapshot directory failed integrity verification (missing or
+    malformed meta.json, or a leaf whose sha256 does not match)."""
+
+
+# --------------------------------------------------------------------------
+# record codecs
+# --------------------------------------------------------------------------
+
+def encode_record(seqno: int, kind: int, payload: bytes) -> bytes:
+    """Frame one record: crc32 header (covering length/seqno/kind and the
+    payload) + payload bytes."""
+    head = _HEADER.pack(0, len(payload), seqno, kind)
+    crc = zlib.crc32(head[4:] + payload) & 0xFFFFFFFF
+    return _HEADER.pack(crc, len(payload), seqno, kind) + payload
+
+
+def encode_write(keys, vals) -> bytes:
+    """REC_WRITE payload: n u32 + keys int32[n] + vals int32[n] — one
+    driver-boundary write chunk (a TOMBSTONE value marks a delete)."""
+    k = np.ascontiguousarray(np.asarray(keys, np.int32).reshape(-1))
+    v = np.ascontiguousarray(np.asarray(vals, np.int32).reshape(-1))
+    if k.shape != v.shape:
+        raise ValueError("encode_write: keys and vals must match")
+    return struct.pack("<I", k.size) + k.tobytes() + v.tobytes()
+
+
+def decode_write(payload: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of `encode_write`: -> (keys int32[n], vals int32[n])."""
+    (n,) = struct.unpack_from("<I", payload, 0)
+    if len(payload) != 4 + 8 * n:
+        raise ValueError(f"malformed REC_WRITE payload: n={n}, "
+                         f"{len(payload)} bytes")
+    k = np.frombuffer(payload, np.int32, count=n, offset=4)
+    v = np.frombuffer(payload, np.int32, count=n, offset=4 + 4 * n)
+    return k.copy(), v.copy()
+
+
+def read_wal(path) -> Tuple[List[WalRecord], int]:
+    """Decode the longest well-formed prefix of a WAL file.
+
+    Returns ``(records, good_bytes)``: every record up to — but not
+    including — the first framing violation (short header, implausible
+    length, CRC mismatch, or a non-consecutive seqno), and the byte
+    offset where that violation starts. A torn or corrupted tail is
+    thereby dropped as a unit: no partial record is ever surfaced.
+    ``good_bytes == 0`` means the file (or its magic) is unreadable and
+    a resuming writer must start it over. A missing file decodes to
+    ``([], 0)``.
+    """
+    p = Path(path)
+    if not p.exists():
+        return [], 0
+    data = p.read_bytes()
+    if len(data) < len(MAGIC) or data[:len(MAGIC)] != MAGIC:
+        return [], 0
+    records: List[WalRecord] = []
+    off = len(MAGIC)
+    prev: Optional[int] = None
+    while off + _HEADER.size <= len(data):
+        crc, length, seqno, kind = _HEADER.unpack_from(data, off)
+        end = off + _HEADER.size + length
+        if length > _MAX_PAYLOAD or end > len(data):
+            break
+        if zlib.crc32(data[off + 4:end]) & 0xFFFFFFFF != crc:
+            break
+        if prev is not None and seqno != prev + 1:
+            break
+        records.append(WalRecord(seqno, kind,
+                                 bytes(data[off + _HEADER.size:end])))
+        prev = seqno
+        off = end
+    return records, off
+
+
+def record_offsets(path) -> List[Tuple[WalRecord, int, int]]:
+    """``[(record, start, end), ...]`` byte extents of every well-formed
+    record — the crash-point injection harness's map of where to cut."""
+    records, _ = read_wal(path)
+    out, off = [], len(MAGIC)
+    for rec in records:
+        end = off + _HEADER.size + len(rec.payload)
+        out.append((rec, off, end))
+        off = end
+    return out
+
+
+class WalWriter:
+    """Append-only writer with torn-tail recovery and group commit.
+
+    Opening an existing WAL scans it (`read_wal`), truncates whatever
+    torn tail a crash left, and resumes seqnos after the last valid
+    record (never below ``min_next_seqno``, so a log restarted after
+    snapshot-only recovery cannot reuse watermarked seqnos). `append`
+    only buffers; `sync` writes the whole batch in one OS write and —
+    when asked — one fsync: the per-driver-call group commit the
+    serving layer's log-before-ack window boundary rides.
+    """
+
+    def __init__(self, path, min_next_seqno: int = 0):
+        self.path = Path(path)
+        self.head: Optional[WalRecord] = None   # the META record, if any
+        if self.path.exists():
+            records, good = read_wal(self.path)
+            if good == 0:
+                self.path.write_bytes(MAGIC)    # unreadable: start over
+                good, records = len(MAGIC), []
+            else:
+                with open(self.path, "r+b") as f:
+                    f.truncate(good)            # drop the torn tail
+            self.next_seqno = records[-1].seqno + 1 if records else 0
+            if records and records[0].kind == REC_META:
+                self.head = records[0]
+        else:
+            self.path.write_bytes(MAGIC)
+            good = len(MAGIC)
+            self.next_seqno = 0
+        self.next_seqno = max(self.next_seqno, min_next_seqno)
+        self._f = open(self.path, "ab")
+        self._buf: List[bytes] = []
+        self.size = good          # well-formed bytes incl. buffered records
+        self.records = 0          # records appended by THIS writer
+        self.syncs = 0            # sync() calls that flushed something
+
+    @property
+    def last_seqno(self) -> int:
+        """Seqno of the most recently appended record (-1 if none ever)."""
+        return self.next_seqno - 1
+
+    def append(self, kind: int, payload: bytes) -> int:
+        """Buffer one framed record; returns the seqno it was stamped
+        with. Nothing reaches the OS until `sync`."""
+        seqno = self.next_seqno
+        rec = encode_record(seqno, kind, payload)
+        self._buf.append(rec)
+        self.next_seqno += 1
+        self.size += len(rec)
+        self.records += 1
+        if kind == REC_META and self.head is None:
+            self.head = WalRecord(seqno, kind, payload)
+        return seqno
+
+    def sync(self, fsync: bool = True) -> None:
+        """Group commit: one OS write of every buffered record, then —
+        with `fsync` — one fdatasync-equivalent barrier. A no-op when
+        nothing is buffered."""
+        if not self._buf:
+            return
+        self._f.write(b"".join(self._buf))
+        self._buf.clear()
+        self._f.flush()
+        if fsync:
+            os.fsync(self._f.fileno())
+        self.syncs += 1
+
+    def close(self) -> None:
+        """Flush (without fsync) and release the file handle."""
+        self.sync(fsync=False)
+        self._f.close()
+
+
+# --------------------------------------------------------------------------
+# pytree snapshot codec (the repo's one serialization path — the
+# repro.checkpoint facade reuses it)
+# --------------------------------------------------------------------------
+
+# numpy can't natively save/compare ml_dtypes types; store bit-views
+try:
+    import ml_dtypes
+    _EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+except ImportError:             # pragma: no cover — ml_dtypes ships with jax
+    _EXOTIC = {}
+
+
+def _encode_leaf(leaf: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = leaf.dtype.name
+    if name in _EXOTIC:
+        return leaf.view(_EXOTIC[name][1]), name
+    return leaf, name
+
+
+def _decode_leaf(arr: np.ndarray, name: str) -> np.ndarray:
+    if name in _EXOTIC:
+        return arr.view(_EXOTIC[name][0])
+    return arr
+
+
+def _sha256_file(path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def write_snapshot(directory, num: int, leaves, meta: Dict[str, Any],
+                   keep_last: Optional[int] = None,
+                   prefix: str = "snap_") -> Path:
+    """Atomically publish one numbered pytree snapshot.
+
+    Writes ``<directory>/<prefix><num>.tmp-<pid>/`` — one
+    ``leaf_<i>.npy`` per host-numpy leaf plus a ``meta.json`` carrying
+    `meta`, per-leaf shapes/dtypes, and sha256 digests — then renames
+    it to ``<prefix><num>/`` (the atomic publish: a crash mid-write
+    leaves only an ignored ``.tmp`` dir). With `keep_last`, older
+    numbered snapshots beyond that count are garbage-collected.
+    Returns the published path.
+    """
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"{prefix}{num}"
+    tmp = Path(f"{final}.tmp-{os.getpid()}")
+    tmp.mkdir(parents=True, exist_ok=True)
+    doc = dict(meta)
+    doc["leaves"] = []
+    for i, leaf in enumerate(leaves):
+        leaf = np.asarray(leaf)
+        fn = f"leaf_{i}.npy"
+        enc, dt_name = _encode_leaf(leaf)
+        np.save(tmp / fn, enc)
+        doc["leaves"].append({"file": fn, "shape": list(leaf.shape),
+                              "dtype": dt_name,
+                              "sha256": _sha256_file(tmp / fn)})
+    (tmp / "meta.json").write_text(json.dumps(doc))
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    if keep_last is not None:
+        for _, old in list_snapshots(directory, prefix)[:-keep_last]:
+            shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def list_snapshots(directory, prefix: str = "snap_"
+                   ) -> List[Tuple[int, Path]]:
+    """Published (non-``.tmp``) snapshots under `directory`, as
+    ``[(num, path), ...]`` sorted ascending by number."""
+    directory = Path(directory)
+    if not directory.is_dir():
+        return []
+    out = []
+    for d in directory.iterdir():
+        if not d.is_dir() or ".tmp" in d.name:
+            continue
+        if not d.name.startswith(prefix):
+            continue
+        suffix = d.name[len(prefix):]
+        if suffix.lstrip("-").isdigit():
+            out.append((int(suffix), d))
+    return sorted(out)
+
+
+def gc_tmp_snapshots(directory) -> None:
+    """Remove orphaned ``.tmp-<pid>`` snapshot dirs (a crash mid-write
+    leaves one; it was never published, so deleting it is always safe)."""
+    directory = Path(directory)
+    if not directory.is_dir():
+        return
+    for d in directory.iterdir():
+        if d.is_dir() and ".tmp-" in d.name:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def read_snapshot(path) -> Tuple[List[np.ndarray], Dict[str, Any]]:
+    """Load + verify one published snapshot directory.
+
+    Every leaf file's sha256 is checked against ``meta.json`` before
+    its array is surfaced. Returns ``(leaves, meta)``; raises
+    `SnapshotError` on any missing file, malformed metadata, or digest
+    mismatch (the caller falls back to an older snapshot)."""
+    path = Path(path)
+    try:
+        meta = json.loads((path / "meta.json").read_text())
+    except (OSError, ValueError) as e:
+        raise SnapshotError(f"unreadable snapshot meta in {path}: {e}")
+    leaves = []
+    for entry in meta.get("leaves", []):
+        fp = path / entry["file"]
+        try:
+            if _sha256_file(fp) != entry["sha256"]:
+                raise SnapshotError(f"snapshot corruption detected: {fp}")
+            arr = np.load(fp)
+        except OSError as e:
+            raise SnapshotError(f"unreadable snapshot leaf {fp}: {e}")
+        leaves.append(_decode_leaf(arr, entry["dtype"]))
+    return leaves, meta
+
+
+def load_latest_snapshot(directory, prefix: str = "snap_"
+                         ) -> Optional[Tuple[int, List[np.ndarray],
+                                             Dict[str, Any]]]:
+    """Newest snapshot that passes verification, or None.
+
+    Tries snapshots newest-first; a corrupted one is reported to stderr
+    and skipped — recovery then proceeds from the previous snapshot (or
+    from a full-WAL replay when none survive), trading restore time for
+    correctness instead of failing."""
+    for num, path in reversed(list_snapshots(directory, prefix)):
+        try:
+            leaves, meta = read_snapshot(path)
+            return num, leaves, meta
+        except SnapshotError as e:
+            print(f"# durability: skipping bad snapshot {path.name}: {e}",
+                  file=sys.stderr)
+    return None
+
+
+# --------------------------------------------------------------------------
+# params serialization (the snapshot/WAL engine fingerprint)
+# --------------------------------------------------------------------------
+
+def params_to_dict(p: SLSMParams) -> Dict[str, Any]:
+    """JSON-safe dict form of an `SLSMParams` (nested `TuningPolicy`
+    included) — the engine fingerprint stored in the WAL's META record
+    and every snapshot, so `restore` can rebuild the exact static
+    configuration without the caller re-supplying it."""
+    d = dataclasses.asdict(p)
+    d["eps_per_level"] = (None if p.eps_per_level is None
+                          else list(p.eps_per_level))
+    return d
+
+
+def params_from_dict(d: Dict[str, Any]) -> SLSMParams:
+    """Inverse of `params_to_dict` (lists back to tuples, the tuning
+    dict back to a `TuningPolicy`)."""
+    d = dict(d)
+    tuning = d.get("tuning")
+    if isinstance(tuning, dict):
+        d["tuning"] = TuningPolicy(**tuning)
+    if d.get("eps_per_level") is not None:
+        d["eps_per_level"] = tuple(d["eps_per_level"])
+    return SLSMParams(**d)
+
+
+def _canon(obj: Any) -> Any:
+    """JSON-normalized form (tuples->lists etc.) for fingerprint
+    comparison between a fresh meta dict and one parsed from the WAL."""
+    return json.loads(json.dumps(obj, sort_keys=True))
+
+
+# --------------------------------------------------------------------------
+# the durability manager (what the drivers own)
+# --------------------------------------------------------------------------
+
+class Durability:
+    """One engine's durability surface: its WAL + its snapshot series.
+
+    Owned by a driver (``SLSM(..., durability=...)`` /
+    ``ShardedSLSM(..., durability=...)``) — the driver logs every write
+    chunk and applied RETUNE through `log_write`/`log_retune`, group-
+    commits with `sync` at each driver-call (or serving-window)
+    boundary, and snapshots the device pytree with `snapshot`. The
+    maintenance governor polls `should_snapshot` in idle gaps
+    (``repro.serve.Governor.idle``) so snapshot cost never rides a
+    client's window.
+
+    ``fsync=False`` keeps the write+flush (process-crash durability,
+    what the injection tests simulate) but skips the disk barrier — for
+    tests and benches that do not model power loss."""
+
+    def __init__(self, directory, *, fsync: bool = True,
+                 snapshot_every_bytes: int = 1 << 20,
+                 keep_snapshots: int = 2):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        gc_tmp_snapshots(self.dir)
+        self.wal_path = self.dir / "wal.log"
+        self.fsync = fsync
+        self.snapshot_every_bytes = snapshot_every_bytes
+        self.keep_snapshots = keep_snapshots
+        self._writer: Optional[WalWriter] = None
+        self._bytes_at_snapshot = len(MAGIC)
+        self.last_snapshot_ms = 0.0
+        self.counters = collections.Counter(snapshots=0)
+
+    @property
+    def writer(self) -> WalWriter:
+        """The lazily opened `WalWriter` (opening truncates any torn
+        tail; seqnos resume past both the log and the newest snapshot's
+        watermark)."""
+        if self._writer is None:
+            snaps = list_snapshots(self.dir)
+            min_next = snaps[-1][0] + 1 if snaps else 0
+            self._writer = WalWriter(self.wal_path, min_next_seqno=min_next)
+        return self._writer
+
+    # -- logging (driver write boundary) -----------------------------------
+    def ensure_header(self, meta: Dict[str, Any]) -> None:
+        """Write the leading META record on a fresh WAL, or verify an
+        existing one matches `meta` — attaching an engine with different
+        params/driver kind to a populated durability directory is a
+        configuration error, not something replay can paper over."""
+        w = self.writer
+        if w.head is None:
+            w.append(REC_META, json.dumps(_canon(meta),
+                                          sort_keys=True).encode())
+            self.sync()
+            return
+        existing = json.loads(w.head.payload.decode())
+        if existing != _canon(meta):
+            raise ValueError(
+                f"durability dir {self.dir} belongs to a different engine "
+                f"configuration (logged {existing.get('driver')!r} "
+                f"fingerprint does not match this engine)")
+
+    def header_meta(self) -> Optional[Dict[str, Any]]:
+        """The decoded META fingerprint of this WAL, or None when the
+        log is missing/unreadable (restore then falls back to the
+        snapshot's copy)."""
+        records, _ = read_wal(self.wal_path)
+        if records and records[0].kind == REC_META:
+            return json.loads(records[0].payload.decode())
+        return None
+
+    def log_write(self, keys, vals) -> int:
+        """Buffer one driver-boundary write chunk; returns its seqno.
+        Durable only after the next `sync` (the driver calls it before
+        any result of the op can reach a client)."""
+        return self.writer.append(REC_WRITE, encode_write(keys, vals))
+
+    def log_retune(self, target: str) -> int:
+        """Buffer one applied tuner allocation switch; returns its
+        seqno. Replay re-applies it so a restored adaptive engine
+        carries the allocation its WAL position had (answers are
+        invariant either way — DESIGN.md §9)."""
+        return self.writer.append(REC_RETUNE, target.encode())
+
+    def sync(self) -> None:
+        """Group commit: flush every buffered record in one write (+ one
+        fsync unless configured off)."""
+        self.writer.sync(fsync=self.fsync)
+
+    def read_records(self) -> List[WalRecord]:
+        """Decode the WAL's well-formed prefix without opening a writer
+        (pure read: a torn tail is ignored here, truncated only when a
+        writer attaches)."""
+        return read_wal(self.wal_path)[0]
+
+    # -- snapshots ----------------------------------------------------------
+    def should_snapshot(self) -> bool:
+        """Has the WAL grown `snapshot_every_bytes` past the last
+        snapshot? (The governor's idle-gap trigger.) False until the
+        writer exists — an engine that never logged has nothing to
+        snapshot."""
+        if self._writer is None:
+            return False
+        return (self._writer.size
+                - self._bytes_at_snapshot) >= self.snapshot_every_bytes
+
+    def snapshot(self, drv) -> Path:
+        """Serialize `drv`'s full device pytree as one atomic snapshot
+        stamped with the current WAL seqno watermark (everything logged
+        is synced first, so snapshot seqno S == "records <= S are fully
+        reflected in these leaves"). Returns the published path."""
+        t0 = time.perf_counter()
+        self.sync()
+        seqno = self.writer.last_seqno
+        leaves = [np.asarray(x) for x in
+                  jax.device_get(jax.tree_util.tree_leaves(drv.state))]
+        meta = {"seqno": seqno, **drv._snapshot_meta()}
+        path = write_snapshot(self.dir, seqno, leaves, meta,
+                              keep_last=self.keep_snapshots)
+        self._bytes_at_snapshot = self.writer.size
+        self.counters["snapshots"] += 1
+        self.last_snapshot_ms = (time.perf_counter() - t0) * 1e3
+        return path
+
+    # -- telemetry / lifecycle ----------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Durability telemetry: WAL size/record/sync counters, snapshot
+        count, last snapshot wall-time, and bytes logged since the last
+        snapshot (the `should_snapshot` residual)."""
+        size = self._writer.size if self._writer else (
+            os.path.getsize(self.wal_path) if self.wal_path.exists() else 0)
+        return {
+            "wal_bytes": int(size),
+            "wal_records": int(self._writer.records if self._writer else 0),
+            "wal_syncs": int(self._writer.syncs if self._writer else 0),
+            "snapshots": int(self.counters["snapshots"]),
+            "snapshot_ms_last": float(self.last_snapshot_ms),
+            "bytes_since_snapshot": int(max(0, size
+                                            - self._bytes_at_snapshot)),
+        }
+
+    def close(self) -> None:
+        """Flush and release the WAL file handle (idempotent)."""
+        if self._writer is not None:
+            self._writer.close()
+            self._writer = None
+
+
+def as_durability(spec) -> Optional[Durability]:
+    """Driver-constructor coercion: None passes through, a `Durability`
+    passes through, a path becomes ``Durability(path)`` with defaults."""
+    if spec is None or isinstance(spec, Durability):
+        return spec
+    return Durability(spec)

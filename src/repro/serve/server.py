@@ -138,6 +138,13 @@ class Governor:
     when background work is invisible to clients. ``credit_cap`` bounds
     banked credits so a long write burst cannot bankroll an unbounded
     maintenance storm later.
+
+    Idle gaps are also where durability snapshots land: when the served
+    engine has a durability layer whose WAL has grown past its snapshot
+    threshold (`wal.Durability.should_snapshot`), an idle pump
+    serializes the device pytree (DESIGN.md §12) — snapshot cost rides
+    the same no-client-is-waiting window as background merges, so the
+    log-before-ack write path never absorbs a multi-ms snapshot stall.
     """
 
     idle_steps: int = 1
@@ -145,6 +152,7 @@ class Governor:
     credits: float = 0.0
     steps_run: int = 0
     idle_steps_run: int = 0
+    snapshots_run: int = 0
 
     def window_done(self, tree, write_ops: int) -> int:
         """Accrue credit for the window's writes and spend whole steps
@@ -163,7 +171,13 @@ class Governor:
 
     def idle(self, tree) -> int:
         """Spend the idle allowance (an empty pump): background steps no
-        client can observe. Returns how many ran."""
+        client can observe, plus a due durability snapshot — the WAL has
+        outgrown its threshold and nobody is waiting on the device.
+        Returns how many maintenance steps ran."""
+        dur = getattr(tree, "durability", None)
+        if dur is not None and dur.should_snapshot():
+            tree.snapshot()
+            self.snapshots_run += 1
         if self.idle_steps <= 0:
             return 0
         ran = tree.voluntary_steps(self.idle_steps)
@@ -344,21 +358,29 @@ class Server:
     def stats(self) -> Dict[str, Any]:
         """Serving telemetry: per-client and overall enqueue->reply
         latency percentiles (p50/p99/p999/max stall, µs), the window /
-        dispatch / op counters, the governor's spend, and the window
-        policy's current adaptive deadline."""
+        dispatch / op counters, the governor's spend (including idle-gap
+        snapshots), the window policy's current adaptive deadline, and —
+        when the served engine is durable — the durability block (WAL
+        bytes/records/syncs, snapshots, last snapshot ms). A restored
+        engine's ``engine`` block carries its ``restore_us`` /
+        ``replayed_records``, so recovery stall time is first-class
+        telemetry."""
         overall: List[float] = []
         clients = {}
         for c, lat in sorted(self._lat.items()):
             clients[c] = _percentiles(lat)
             overall.extend(lat)
+        dur = getattr(self.tree, "durability", None)
         return {
             "clients": clients,
             "overall": _percentiles(overall) if overall else None,
             "counters": dict(self.counters),
             "governor": {"steps": self.governor.steps_run,
                          "idle_steps": self.governor.idle_steps_run,
+                         "snapshots": self.governor.snapshots_run,
                          "credits": self.governor.credits},
             "window": {"wait_s": self.window.wait_s,
                        "max_ops": self.window.max_ops},
             "engine": {k: int(v) for k, v in self.tree.stats.items()},
+            "durability": dur.stats() if dur is not None else None,
         }

@@ -1,0 +1,13 @@
+"""Fixtures for the durability suite (the machinery lives in
+harness.py so test modules can import it flatly — the tests directory
+is not a package)."""
+import pytest
+
+from harness import CrashHarness
+
+
+@pytest.fixture(scope="module")
+def harness(tmp_path_factory):
+    """Module-scoped `CrashHarness` (reference runs and oracles are
+    shared across every crash point in the module)."""
+    return CrashHarness(tmp_path_factory)

@@ -1,0 +1,218 @@
+"""Crash-point injection harness for the durability layer (DESIGN.md §12).
+
+The machinery these tests share:
+
+  * a deterministic mixed insert/delete op stream where each op is
+    exactly one driver call — and therefore exactly one WAL WRITE
+    record, so the j-th WRITE record in the log corresponds to the j-th
+    op of the stream;
+  * a reference run with durability on, which yields the final WAL and
+    the byte extents of every record (`wal.record_offsets`) — the map
+    of legal crash points;
+  * `crash_copy`: clone the durability directory and truncate/corrupt
+    the WAL at an arbitrary byte offset, dropping any snapshot whose
+    watermark exceeds the surviving log (a real crash cannot produce
+    one — `Durability.snapshot` syncs the log before serializing);
+  * the sequential oracle: a fresh *non-durable* engine fed the exact
+    durable op prefix, cached per prefix length so a sweep of crash
+    points at the same boundary prices one oracle build.
+
+The correctness claim under test: `restore()` after any crash is
+answer-exact — bitwise-equal lookups and ranges — vs the oracle for the
+durable prefix, on both drivers and both backends, regardless of where
+inside a record (or between records) the crash landed.
+"""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.params import SLSMParams, TuningPolicy
+from repro.engine import wal as WAL
+from repro.engine.engine import SLSM
+from repro.engine.sharded import ShardedSLSM
+
+KEY_SPACE = 4000
+
+DRIVERS = ("single", "sharded")
+BACKENDS = ("jnp", "pallas")
+
+
+def small_params(backend: str = "jnp", adaptive: bool = False) -> SLSMParams:
+    """Tiny geometry (R=2, Rn=32, D=2) so a short stream exercises
+    seals, flushes, spills, and compactions; `adaptive` switches on the
+    tuner with a small decision interval so retunes happen in-stream."""
+    tuning = (TuningPolicy(mode="adaptive", interval=64)
+              if adaptive else TuningPolicy())
+    return SLSMParams(R=2, Rn=32, eps=1e-2, D=2, m=1.0, mu=16, max_levels=3,
+                      max_range=2048, merge_budget=1, backend=backend,
+                      tuning=tuning)
+
+
+def make_engine(driver: str, p: SLSMParams, durability=None):
+    """One constructor for the driver axis of the test matrix."""
+    if driver == "sharded":
+        return ShardedSLSM(p, n_shards=2, durability=durability)
+    return SLSM(p, durability=durability)
+
+
+def write_stream(n_ops: int = 12, op_size: int = 48, seed: int = 0):
+    """Deterministic mixed op stream: every 4th op deletes a slice of
+    the keys the previous ops wrote (so tombstones ride the WAL), the
+    rest insert with overwrites (key space is small enough to collide).
+    One list entry == one driver call == one WAL WRITE record."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(n_ops):
+        keys = rng.integers(0, KEY_SPACE, op_size).astype(np.int32)
+        if i % 4 == 3:
+            ops.append(("delete", keys[:op_size // 3], None))
+        else:
+            vals = rng.integers(0, 1 << 20, op_size).astype(np.int32)
+            ops.append(("insert", keys, vals))
+    return ops
+
+
+def apply_ops(drv, ops, upto=None):
+    """Feed `ops[:upto]` (None = all) through the classic driver calls."""
+    for kind, keys, vals in (ops if upto is None else ops[:upto]):
+        if kind == "insert":
+            drv.insert(keys, vals)
+        else:
+            drv.delete(keys)
+
+
+def probe_answers(drv, key_space: int = KEY_SPACE):
+    """The oracle-comparison read set: a full-keyspace-stride batched
+    lookup plus a sweep of range windows (whole space, small, straddling
+    levels). Returns plain numpy so comparisons are bitwise."""
+    probe = np.arange(0, key_space, 3, dtype=np.int32)
+    v, f = drv.lookup_many(probe)
+    rs = []
+    for lo, hi in ((0, key_space), (123, 456), (1000, 3500)):
+        k, vv = drv.range(lo, hi)
+        rs.append((np.asarray(k), np.asarray(vv)))
+    return np.asarray(v), np.asarray(f), rs
+
+
+def assert_same_answers(got, want, strict_vals: bool = True):
+    """Bitwise answer equality. `strict_vals=False` compares lookup
+    values only on found lanes (cross-driver-class comparisons: the
+    not-found lanes' padding is an implementation detail)."""
+    gv, gf, gr = got
+    wv, wf, wr = want
+    np.testing.assert_array_equal(gf, wf)
+    if strict_vals:
+        np.testing.assert_array_equal(gv, wv)
+    else:
+        np.testing.assert_array_equal(gv[gf], wv[wf])
+    assert len(gr) == len(wr)
+    for (gk, gvv), (wk, wvv) in zip(gr, wr):
+        np.testing.assert_array_equal(gk, wk)
+        np.testing.assert_array_equal(gvv, wvv)
+
+
+def crash_copy(durdir, dst, cut=None, corrupt=None):
+    """Simulate a crash: clone the durability dir, then truncate the
+    WAL at byte `cut` and/or XOR-flip the byte at offset `corrupt`.
+    Snapshots whose watermark exceeds the surviving log's last seqno
+    are dropped — a real crash cannot produce one, since snapshot()
+    group-commits the WAL before serializing. Returns `dst`."""
+    shutil.copytree(durdir, dst)
+    wal_path = os.path.join(dst, "wal.log")
+    if cut is not None:
+        with open(wal_path, "r+b") as f:
+            f.truncate(cut)
+    if corrupt is not None:
+        with open(wal_path, "r+b") as f:
+            f.seek(corrupt)
+            b = f.read(1)
+            f.seek(corrupt)
+            f.write(bytes([b[0] ^ 0xFF]))
+    records, _ = WAL.read_wal(wal_path)
+    last = records[-1].seqno if records else -1
+    for num, spath in WAL.list_snapshots(dst):
+        if num > last:
+            shutil.rmtree(spath)
+    return dst
+
+
+def durable_write_ops(wal_path) -> int:
+    """How many write ops the well-formed WAL prefix holds — the oracle
+    prefix length j (one WRITE record per op, by construction)."""
+    return sum(1 for r in WAL.read_wal(wal_path)[0]
+               if r.kind == WAL.REC_WRITE)
+
+
+class CrashHarness:
+    """Caches one reference run and its oracles per test-matrix cell.
+
+    A cell is (driver, backend, adaptive): `reference()` builds the
+    durable run once (returning the durability dir, the op stream, the
+    record byte-extent map, and per-op maintenance-counter deltas so
+    tests can find the mid-seal/mid-spill ops); `oracle(j)` builds —
+    and caches — the sequential-oracle answers for the j-op prefix;
+    `restore_at()` crash-copies, restores, and returns the restored
+    driver plus its durable prefix length."""
+
+    def __init__(self, tmp_factory):
+        self.tmp = tmp_factory
+        self._refs = {}
+        self._oracles = {}
+        self._n = 0
+
+    def _dir(self, tag: str) -> str:
+        self._n += 1
+        return str(self.tmp.mktemp(f"{tag}-{self._n}"))
+
+    def reference(self, driver: str, backend: str, adaptive: bool = False,
+                  n_ops: int = 12, snapshot_at=None):
+        """The durable reference run for one matrix cell (cached)."""
+        key = (driver, backend, adaptive, n_ops, snapshot_at)
+        if key in self._refs:
+            return self._refs[key]
+        p = small_params(backend, adaptive)
+        durdir = self._dir(f"ref-{driver}-{backend}")
+        dur = WAL.Durability(durdir, fsync=False,
+                             snapshot_every_bytes=1 << 30)
+        drv = make_engine(driver, p, durability=dur)
+        ops = write_stream(n_ops=n_ops)
+        deltas = []
+        for i, (kind, keys, vals) in enumerate(ops):
+            before = dict(drv.stats)
+            if kind == "insert":
+                drv.insert(keys, vals)
+            else:
+                drv.delete(keys)
+            deltas.append({k: drv.stats[k] - before.get(k, 0)
+                           for k in ("seals", "flushes", "spills",
+                                     "compactions", "retunes")})
+            if snapshot_at is not None and i == snapshot_at:
+                drv.snapshot()
+        dur.close()
+        ref = {"dir": durdir, "ops": ops, "params": p,
+               "offsets": WAL.record_offsets(os.path.join(durdir,
+                                                          "wal.log")),
+               "deltas": deltas, "answers": probe_answers(drv)}
+        self._refs[key] = ref
+        return ref
+
+    def oracle(self, driver: str, backend: str, adaptive: bool, ops, j: int):
+        """Answers of a fresh non-durable engine fed ops[:j] (cached)."""
+        key = (driver, backend, adaptive, len(ops), j)
+        if key not in self._oracles:
+            drv = make_engine(driver, small_params(backend, adaptive))
+            apply_ops(drv, ops, upto=j)
+            self._oracles[key] = probe_answers(drv)
+        return self._oracles[key]
+
+    def restore_at(self, ref, driver: str, cut=None, corrupt=None):
+        """Crash-copy the reference dir at (`cut`, `corrupt`) and
+        restore; returns (restored driver, durable write-op count)."""
+        dst = self._dir("crash")
+        os.rmdir(dst)              # copytree wants to create it
+        crash_copy(ref["dir"], dst, cut=cut, corrupt=corrupt)
+        j = durable_write_ops(os.path.join(dst, "wal.log"))
+        cls = ShardedSLSM if driver == "sharded" else SLSM
+        return cls.restore(dst), j

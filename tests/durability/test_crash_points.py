@@ -1,0 +1,203 @@
+"""Crash-point injection: restore() is oracle-exact at every boundary.
+
+The acceptance matrix (ISSUE 7): byte-level torn tails, chunk (record)
+boundaries, mid-seal, mid-spill, and mid-RETUNE crash points, on both
+drivers x both backends, plus snapshot-watermark crashes and the
+serving Governor's idle-gap snapshot trigger. Every test reduces to the
+same oracle claim: whatever byte the WAL dies at, `restore()` answers
+exactly like a fresh engine fed the durable op prefix.
+
+The pallas cells run the same boundaries over a shorter stream — the
+kernels execute in interpret mode on CPU, so every dispatch is orders
+of magnitude slower than compiled jnp.
+"""
+import numpy as np
+import pytest
+
+from repro.engine import wal as WAL
+
+from harness import (BACKENDS, DRIVERS, assert_same_answers,
+                     make_engine, small_params, write_stream)
+
+_HDR = WAL._HEADER.size
+
+
+def _cells(full=True):
+    out = []
+    for d in DRIVERS:
+        for b in BACKENDS:
+            if full or b == "jnp":
+                out.append((d, b))
+    return out
+
+
+def _n_ops(backend: str) -> int:
+    return 12 if backend == "jnp" else 6
+
+
+@pytest.mark.parametrize("driver,backend", _cells())
+def test_torn_tail_byte_level(harness, driver, backend):
+    """Cuts at arbitrary byte offsets inside the final records: the torn
+    record is dropped as a unit and restore lands exactly on the last
+    complete op."""
+    from harness import probe_answers
+    ref = harness.reference(driver, backend, n_ops=_n_ops(backend))
+    offsets = ref["offsets"]
+    writes = [(rec, s, e) for rec, s, e in offsets
+              if rec.kind == WAL.REC_WRITE]
+    targets = writes[-2:] if backend == "jnp" else writes[-1:]
+    for rec, start, end in targets:
+        for cut in (start + 1, start + _HDR, start + _HDR + 5, end - 1):
+            drv, j = harness.restore_at(ref, driver, cut=cut)
+            want = harness.oracle(driver, backend, False, ref["ops"], j)
+            assert_same_answers(probe_answers(drv), want)
+            # the torn record itself is not in the durable prefix
+            assert j < sum(1 for r, _, _ in offsets
+                           if r.kind == WAL.REC_WRITE and r.seqno <= rec.seqno)
+
+
+@pytest.mark.parametrize("driver,backend", _cells())
+def test_chunk_boundary_cuts(harness, driver, backend):
+    """Cuts exactly at record boundaries: the durable prefix is every
+    op up to the cut, nothing more, nothing less."""
+    from harness import probe_answers
+    ref = harness.reference(driver, backend, n_ops=_n_ops(backend))
+    writes = [(rec, s, e) for rec, s, e in ref["offsets"]
+              if rec.kind == WAL.REC_WRITE]
+    picks = ([0, len(writes) // 2, len(writes) - 1] if backend == "jnp"
+             else [len(writes) - 1])
+    seen_j = set()
+    for i in picks:
+        _, _, end = writes[i]
+        drv, j = harness.restore_at(ref, driver, cut=end)
+        assert j == i + 1          # exactly the ops before the boundary
+        want = harness.oracle(driver, backend, False, ref["ops"], j)
+        assert_same_answers(probe_answers(drv), want)
+        seen_j.add(j)
+    assert len(seen_j) == len(picks)
+
+
+@pytest.mark.parametrize("driver,backend", _cells())
+def test_mid_seal_and_mid_spill(harness, driver, backend):
+    """Crashes inside the records of ops that triggered seals and spills
+    (the per-op maintenance deltas of the reference run say which):
+    maintenance progress is never replay-relevant — restore still lands
+    answer-exact on the op boundary."""
+    from harness import probe_answers
+    # the sharded cells route ~half the stream to each shard, so the
+    # short pallas stream never fills a shard's memory tier — they need
+    # the full 12 ops to provoke a spill
+    n_ops = 12 if driver == "sharded" else _n_ops(backend)
+    ref = harness.reference(driver, backend, n_ops=n_ops)
+    writes = [(rec, s, e) for rec, s, e in ref["offsets"]
+              if rec.kind == WAL.REC_WRITE]
+    seal_ops = [i for i, d in enumerate(ref["deltas"]) if d["seals"]]
+    spill_ops = [i for i, d in enumerate(ref["deltas"]) if d["spills"]]
+    assert seal_ops, "stream too small: no op sealed"
+    assert spill_ops, "stream too small: no op spilled"
+    targets = ([seal_ops[0], seal_ops[-1], spill_ops[0], spill_ops[-1]]
+               if backend == "jnp" else [seal_ops[-1], spill_ops[-1]])
+    for i in sorted(set(targets)):
+        _, start, end = writes[i]
+        for cut in (start + _HDR + 3, end):
+            drv, j = harness.restore_at(ref, driver, cut=cut)
+            assert j == (i if cut < end else i + 1)
+            want = harness.oracle(driver, backend, False, ref["ops"], j)
+            assert_same_answers(probe_answers(drv), want)
+
+
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_mid_retune(harness, driver):
+    """A crash inside (or right after) a logged RETUNE record: the
+    switch is answer-invariant, so restore is oracle-exact whether the
+    record survived or was torn away."""
+    from harness import apply_ops, probe_answers
+    p = small_params("jnp", adaptive=True)
+    durdir = harness._dir(f"retune-{driver}")
+    dur = WAL.Durability(durdir, fsync=False, snapshot_every_bytes=1 << 30)
+    drv = make_engine(driver, p, durability=dur)
+    ops = write_stream(n_ops=6)
+    apply_ops(drv, ops[:4])
+    # read-heavy phase rolls the tuner toward the read allocation;
+    # decisions bind at the next write boundary (scheduler invariant)
+    probe = np.arange(0, 4000, 2, dtype=np.int32)
+    for _ in range(12):
+        drv.lookup_many(probe)
+    apply_ops(drv, ops[4:])
+    dur.close()
+    assert drv.stats["retunes"] >= 1, "stream failed to provoke a retune"
+    wal_path = durdir + "/wal.log"
+    offsets = WAL.record_offsets(wal_path)
+    retunes = [(r, s, e) for r, s, e in offsets
+               if r.kind == WAL.REC_RETUNE]
+    assert retunes, "no RETUNE record reached the WAL"
+    rec, start, end = retunes[-1]
+    ref = {"dir": durdir, "ops": ops, "offsets": offsets}
+    for cut in (start + 1, start + _HDR, end):
+        dst_drv, j = harness.restore_at(ref, driver, cut=cut)
+        want_drv = make_engine(driver, p)
+        apply_ops(want_drv, ops, upto=j)
+        assert_same_answers(probe_answers(dst_drv),
+                            probe_answers(want_drv))
+
+
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_crash_around_snapshot_watermark(harness, driver):
+    """Cuts before, at, and after a mid-stream snapshot's watermark:
+    after it, restore replays only the tail; before it, the
+    from-the-future snapshot is dropped and recovery replays from
+    genesis — both oracle-exact."""
+    from harness import probe_answers
+    ref = harness.reference(driver, "jnp", n_ops=12, snapshot_at=6)
+    snaps = WAL.list_snapshots(ref["dir"])
+    assert len(snaps) == 1
+    watermark = snaps[0][0]
+    writes = [(rec, s, e) for rec, s, e in ref["offsets"]
+              if rec.kind == WAL.REC_WRITE]
+    before = [e for rec, s, e in writes if rec.seqno < watermark][-2]
+    after = [e for rec, s, e in writes if rec.seqno > watermark]
+    for cut in (before, after[0], after[-1], after[-1] - 3):
+        drv, j = harness.restore_at(ref, driver, cut=cut)
+        want = harness.oracle(driver, "jnp", False, ref["ops"], j)
+        assert_same_answers(probe_answers(drv), want)
+    # full (uncut) restore must also use the snapshot: tail-only replay
+    cls = type(make_engine(driver, small_params()))
+    full = cls.restore(ref["dir"])
+    total_writes = len(writes)
+    assert full.stats["replayed_records"] < total_writes
+    assert_same_answers(probe_answers(full), ref["answers"])
+
+
+def test_governor_idle_snapshot_and_serving_restore(harness, tmp_path):
+    """End-to-end through repro.serve: a durable served engine
+    snapshots in an idle pump once the WAL passes its threshold
+    (Governor.idle), the durability block shows up in stats(), and a
+    restore of the serving directory answers exactly like the live
+    server's engine."""
+    from repro.serve.server import Server
+
+    from harness import probe_answers
+    p = small_params("jnp")
+    dur = WAL.Durability(str(tmp_path), fsync=False,
+                         snapshot_every_bytes=2048)
+    drv = make_engine("single", p, durability=dur)
+    srv = Server(drv)
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        keys = rng.integers(0, 4000, 64).astype(np.int32)
+        vals = rng.integers(0, 1 << 20, 64).astype(np.int32)
+        srv.submit(f"c{i % 2}", "insert", keys, vals)
+        srv.pump(force=True)    # one served (and WAL-synced) window each
+    srv.pump()                  # nothing pending: the governor's idle gap
+    st = srv.stats()
+    assert st["durability"] is not None
+    assert st["durability"]["wal_records"] >= 6
+    assert srv.governor.snapshots_run >= 1
+    assert st["governor"]["snapshots"] == srv.governor.snapshots_run
+    dur.close()
+    restored = type(drv).restore(str(tmp_path))
+    assert_same_answers(probe_answers(restored), probe_answers(drv))
+    # the restore stall is first-class telemetry
+    assert restored.stats["restore_us"] > 0
+    srv2 = Server(restored)
+    assert srv2.stats()["engine"]["restore_us"] > 0

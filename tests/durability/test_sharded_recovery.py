@@ -1,0 +1,119 @@
+"""Sharded recovery parity (ISSUE 7 satellite 3): the driver-boundary
+WAL makes single-tree and sharded recovery interchangeable.
+
+Both drivers log writes *before* shard routing, so two engines fed the
+same op stream produce identical WRITE/RETUNE record streams (the META
+fingerprints differ — driver kind and shard count — which is why the
+comparisons below are per-record, not byte-for-byte). Consequently a
+crash at the same record index leaves both logs with the same durable
+prefix, and both `restore()`s must answer identically."""
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.engine import wal as WAL
+from repro.engine.engine import SLSM
+from repro.engine.sharded import ShardedSLSM
+
+from harness import (apply_ops, assert_same_answers, make_engine,
+                     probe_answers, small_params, write_stream)
+
+
+def _wal(ref):
+    return os.path.join(ref["dir"], "wal.log")
+
+
+def test_drivers_log_identical_record_streams(harness):
+    """Same op stream -> same (kind, payload) sequence in both WALs;
+    only the META fingerprint distinguishes them."""
+    single = harness.reference("single", "jnp")
+    sharded = harness.reference("sharded", "jnp")
+    s_recs = [(r.kind, r.payload) for r, _, _ in single["offsets"]]
+    h_recs = [(r.kind, r.payload) for r, _, _ in sharded["offsets"]]
+    assert s_recs[0][0] == h_recs[0][0] == WAL.REC_META
+    assert s_recs[0][1] != h_recs[0][1]          # fingerprints differ
+    assert s_recs[1:] == h_recs[1:]              # op streams identical
+    assert all(k == WAL.REC_WRITE for k, _ in s_recs[1:])
+
+
+@pytest.mark.parametrize("record_index", [2, 7, -1])
+def test_crash_parity_at_same_record(harness, record_index):
+    """Crash both drivers at the end (and mid-body) of the same WRITE
+    record: their restores answer identically (found-lane values — the
+    not-found padding differs by driver class)."""
+    refs = {d: harness.reference(d, "jnp") for d in ("single", "sharded")}
+    answers = {}
+    for driver, ref in refs.items():
+        writes = [(r, s, e) for r, s, e in ref["offsets"]
+                  if r.kind == WAL.REC_WRITE]
+        rec, start, end = writes[record_index]
+        for tag, cut in (("end", end), ("mid", start + WAL._HEADER.size + 2)):
+            drv, j = harness.restore_at(ref, driver, cut=cut)
+            answers.setdefault(tag, {})[driver] = (probe_answers(drv), j)
+    for tag, by_driver in answers.items():
+        (sa, sj), (ha, hj) = by_driver["single"], by_driver["sharded"]
+        assert sj == hj, f"durable prefixes diverged at cut {tag!r}"
+        assert_same_answers(sa, ha, strict_vals=False)
+
+
+def test_torn_final_record_dropped_cleanly(harness, tmp_path):
+    """A torn final record is invisible to recovery (CRC rejects it, no
+    partial apply) and physically truncated when a writer reattaches —
+    on both drivers."""
+    for driver in ("single", "sharded"):
+        ref = harness.reference(driver, "jnp")
+        writes = [(r, s, e) for r, s, e in ref["offsets"]
+                  if r.kind == WAL.REC_WRITE]
+        _, start, end = writes[-1]
+        cut = end - 5                      # mid-payload: CRC must reject
+        drv, j = harness.restore_at(ref, driver, cut=cut)
+        assert j == len(writes) - 1
+        want = harness.oracle(driver, "jnp", False, ref["ops"], j)
+        assert_same_answers(probe_answers(drv), want)
+        # the keys of the torn record are NOT partially visible
+        torn_keys = WAL.decode_write(writes[-1][0].payload)[0]
+        prefix_keys = np.concatenate(
+            [WAL.decode_write(r.payload)[0] for r, _, _ in writes[:-1]])
+        only_torn = np.setdiff1d(torn_keys, prefix_keys)
+        if only_torn.size:
+            _, found = drv.lookup_many(only_torn.astype(np.int32))
+            assert not np.asarray(found).any()
+        # a reattaching writer truncates the torn bytes away
+        drv.durability.sync()
+        w = drv.durability.writer
+        assert w.size >= start             # resumed past the good prefix
+        records, good = WAL.read_wal(_wal({"dir": str(drv.durability.dir)}))
+        assert all(r.seqno == i for i, r in enumerate(records))
+        drv.durability.close()
+
+
+def test_sharded_restore_recovers_shard_count(harness, tmp_path):
+    """`ShardedSLSM.restore` rebuilds the logged shard count without the
+    caller re-supplying it, and a mismatched explicit engine attach is
+    rejected by the fingerprint check."""
+    p = small_params()
+    dur = WAL.Durability(tmp_path, fsync=False)
+    drv = ShardedSLSM(p, n_shards=2, durability=dur)
+    ops = write_stream(n_ops=6)
+    apply_ops(drv, ops)
+    dur.close()
+    got = ShardedSLSM.restore(str(tmp_path))
+    assert got.S == 2
+    assert_same_answers(probe_answers(got), probe_answers(drv))
+    with pytest.raises(ValueError, match="different engine"):
+        ShardedSLSM(p, n_shards=4, durability=str(tmp_path))
+
+
+def test_cross_driver_restore_rejected(harness, tmp_path):
+    """Restoring a sharded WAL with the single-tree driver class (or
+    vice versa) fails the fingerprint check instead of replaying into
+    the wrong engine shape."""
+    p = small_params()
+    dur = WAL.Durability(tmp_path, fsync=False)
+    drv = SLSM(p, durability=dur)
+    apply_ops(drv, write_stream(n_ops=4))
+    dur.close()
+    with pytest.raises(ValueError, match="different engine"):
+        ShardedSLSM.restore(str(tmp_path))

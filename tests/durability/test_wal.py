@@ -1,0 +1,384 @@
+"""Unit coverage of `repro.engine.wal`: record framing, torn-tail
+truncation, the snapshot codec, the Durability manager's contracts, the
+driver `restore` edge cases, and the `repro.checkpoint` facade that now
+rides the same serialization path (ISSUE 7 satellite: one path, no
+drift)."""
+import json
+import os
+import struct
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.params import SLSMParams, TuningPolicy
+from repro.engine import wal as WAL
+from repro.engine.engine import SLSM
+
+from harness import (apply_ops, assert_same_answers, make_engine,
+                     probe_answers, small_params, write_stream)
+
+
+# --------------------------------------------------------------------------
+# record framing
+# --------------------------------------------------------------------------
+
+def test_write_codec_roundtrip():
+    k = np.array([5, -3, 7], np.int32)
+    v = np.array([50, -30, 70], np.int32)
+    k2, v2 = WAL.decode_write(WAL.encode_write(k, v))
+    np.testing.assert_array_equal(k, k2)
+    np.testing.assert_array_equal(v, v2)
+    # empty chunks frame fine too (drivers skip logging them, but the
+    # codec itself is total)
+    k3, v3 = WAL.decode_write(WAL.encode_write([], []))
+    assert k3.size == 0 and v3.size == 0
+
+
+def test_write_codec_shape_mismatch():
+    with pytest.raises(ValueError, match="must match"):
+        WAL.encode_write([1, 2], [1])
+
+
+def test_read_wal_missing_and_bad_magic(tmp_path):
+    assert WAL.read_wal(tmp_path / "nope.log") == ([], 0)
+    bad = tmp_path / "bad.log"
+    bad.write_bytes(b"NOTAWAL!" + WAL.encode_record(0, WAL.REC_RETUNE, b"x"))
+    assert WAL.read_wal(bad) == ([], 0)
+
+
+def _write_raw(path, recs):
+    path.write_bytes(WAL.MAGIC + b"".join(recs))
+
+
+def test_read_wal_stops_at_crc_break(tmp_path):
+    p = tmp_path / "wal.log"
+    good = [WAL.encode_record(i, WAL.REC_RETUNE, f"r{i}".encode())
+            for i in range(3)]
+    blob = WAL.MAGIC + b"".join(good)
+    # flip one payload byte inside the SECOND record
+    off = len(WAL.MAGIC) + len(good[0]) + WAL._HEADER.size
+    blob = blob[:off] + bytes([blob[off] ^ 0xFF]) + blob[off + 1:]
+    p.write_bytes(blob)
+    records, good_bytes = WAL.read_wal(p)
+    assert [r.seqno for r in records] == [0]
+    assert good_bytes == len(WAL.MAGIC) + len(good[0])
+
+
+def test_read_wal_stops_at_seqno_gap(tmp_path):
+    p = tmp_path / "wal.log"
+    _write_raw(p, [WAL.encode_record(0, WAL.REC_RETUNE, b"a"),
+                   WAL.encode_record(1, WAL.REC_RETUNE, b"b"),
+                   WAL.encode_record(3, WAL.REC_RETUNE, b"gap")])
+    records, _ = WAL.read_wal(p)
+    assert [r.seqno for r in records] == [0, 1]
+
+
+def test_read_wal_drops_short_tail(tmp_path):
+    p = tmp_path / "wal.log"
+    rec = WAL.encode_record(0, WAL.REC_WRITE, WAL.encode_write([1], [2]))
+    torn = WAL.encode_record(1, WAL.REC_WRITE, WAL.encode_write([3], [4]))
+    for cut in (1, WAL._HEADER.size, len(torn) - 1):
+        _write_raw(p, [rec, torn[:cut]])
+        records, good = WAL.read_wal(p)
+        assert [r.seqno for r in records] == [0]
+        assert good == len(WAL.MAGIC) + len(rec)
+
+
+def test_read_wal_rejects_implausible_length(tmp_path):
+    p = tmp_path / "wal.log"
+    head = WAL._HEADER.pack(0, WAL._MAX_PAYLOAD + 1, 0, WAL.REC_WRITE)
+    _write_raw(p, [head + b"x" * 64])
+    assert WAL.read_wal(p)[0] == []
+
+
+# --------------------------------------------------------------------------
+# WalWriter
+# --------------------------------------------------------------------------
+
+def test_writer_resumes_and_truncates_torn_tail(tmp_path):
+    p = tmp_path / "wal.log"
+    w = WAL.WalWriter(p)
+    assert w.append(WAL.REC_RETUNE, b"a") == 0
+    assert w.append(WAL.REC_RETUNE, b"b") == 1
+    w.sync(fsync=False)
+    w.close()
+    # tear the tail mid-record, then reopen: the torn record is
+    # physically truncated away and seqnos resume after the survivor
+    size = p.stat().st_size
+    with open(p, "r+b") as f:
+        f.truncate(size - 3)
+    w2 = WAL.WalWriter(p)
+    assert w2.last_seqno == 0
+    assert p.stat().st_size == size - 3 - (WAL._HEADER.size + 1 - 3)
+    assert w2.append(WAL.REC_RETUNE, b"c") == 1
+    w2.close()
+    records, _ = WAL.read_wal(p)
+    assert [(r.seqno, r.payload) for r in records] == [(0, b"a"), (1, b"c")]
+
+
+def test_writer_unreadable_log_starts_over(tmp_path):
+    p = tmp_path / "wal.log"
+    p.write_bytes(b"garbage that is not a WAL at all")
+    w = WAL.WalWriter(p)
+    assert w.next_seqno == 0
+    w.append(WAL.REC_RETUNE, b"x")
+    w.close()
+    records, _ = WAL.read_wal(p)
+    assert [r.payload for r in records] == [b"x"]
+
+
+def test_writer_min_next_seqno(tmp_path):
+    w = WAL.WalWriter(tmp_path / "wal.log", min_next_seqno=17)
+    assert w.append(WAL.REC_RETUNE, b"x") == 17
+
+
+def test_writer_append_buffers_until_sync(tmp_path):
+    p = tmp_path / "wal.log"
+    w = WAL.WalWriter(p)
+    w.append(WAL.REC_RETUNE, b"x")
+    assert WAL.read_wal(p)[0] == []        # not on disk yet
+    w.sync(fsync=False)
+    assert len(WAL.read_wal(p)[0]) == 1
+    assert w.syncs == 1
+    w.sync(fsync=False)                    # empty batch: no-op
+    assert w.syncs == 1
+    w.close()
+
+
+# --------------------------------------------------------------------------
+# snapshot codec
+# --------------------------------------------------------------------------
+
+def _leaves(rng):
+    import ml_dtypes
+    return [np.asarray(rng.normal(size=(8, 4)), np.float32),
+            np.asarray(rng.normal(size=(16,)), ml_dtypes.bfloat16),
+            np.arange(6, dtype=np.int32)]
+
+
+def test_snapshot_roundtrip_with_bfloat16(tmp_path, rng):
+    leaves = _leaves(rng)
+    path = WAL.write_snapshot(tmp_path, 3, leaves, {"seqno": 3})
+    assert path.name == "snap_3"
+    got, meta = WAL.read_snapshot(path)
+    assert meta["seqno"] == 3
+    for a, b in zip(leaves, got):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a).view(np.uint8).ravel(),
+                                      np.asarray(b).view(np.uint8).ravel())
+
+
+def test_snapshot_corruption_detected(tmp_path, rng):
+    path = WAL.write_snapshot(tmp_path, 1, _leaves(rng), {})
+    leaf = path / "leaf_0.npy"
+    blob = bytearray(leaf.read_bytes())
+    blob[-1] ^= 0xFF
+    leaf.write_bytes(bytes(blob))
+    with pytest.raises(WAL.SnapshotError, match="corruption"):
+        WAL.read_snapshot(path)
+
+
+def test_list_snapshots_numeric_order_and_keep_last(tmp_path, rng):
+    for n in (2, 10, 1):
+        WAL.write_snapshot(tmp_path, n, _leaves(rng), {})
+    assert [n for n, _ in WAL.list_snapshots(tmp_path)] == [1, 2, 10]
+    WAL.write_snapshot(tmp_path, 11, _leaves(rng), {}, keep_last=2)
+    assert [n for n, _ in WAL.list_snapshots(tmp_path)] == [10, 11]
+
+
+def test_gc_tmp_snapshots(tmp_path):
+    orphan = tmp_path / "snap_5.tmp-1234"
+    orphan.mkdir()
+    (orphan / "leaf_0.npy").write_bytes(b"partial")
+    WAL.gc_tmp_snapshots(tmp_path)
+    assert not orphan.exists()
+    assert WAL.list_snapshots(tmp_path) == []
+
+
+def test_load_latest_falls_back_past_corruption(tmp_path, rng, capsys):
+    leaves = _leaves(rng)
+    WAL.write_snapshot(tmp_path, 1, leaves, {"tag": "old"})
+    bad = WAL.write_snapshot(tmp_path, 2, leaves, {"tag": "new"})
+    (bad / "leaf_1.npy").write_bytes(b"smashed")
+    num, got, meta = WAL.load_latest_snapshot(tmp_path)
+    assert num == 1 and meta["tag"] == "old"
+    assert len(got) == len(leaves)
+    assert "skipping bad snapshot snap_2" in capsys.readouterr().err
+
+
+# --------------------------------------------------------------------------
+# params fingerprint
+# --------------------------------------------------------------------------
+
+def test_params_dict_roundtrip():
+    p = SLSMParams(R=3, Rn=64, eps=1e-2, D=2, m=1.0, mu=16, max_levels=2,
+                   eps_per_level=(1e-2, 5e-3),
+                   tuning=TuningPolicy(mode="adaptive", interval=32))
+    q = WAL.params_from_dict(json.loads(json.dumps(WAL.params_to_dict(p))))
+    assert q == p
+
+
+# --------------------------------------------------------------------------
+# Durability manager
+# --------------------------------------------------------------------------
+
+def test_ensure_header_rejects_foreign_engine(tmp_path):
+    d1 = WAL.Durability(tmp_path, fsync=False)
+    d1.ensure_header({"driver": "slsm", "params": {"R": 2}})
+    d1.close()
+    d2 = WAL.Durability(tmp_path, fsync=False)
+    d2.ensure_header({"driver": "slsm", "params": {"R": 2}})  # same: fine
+    d2.close()
+    d3 = WAL.Durability(tmp_path, fsync=False)
+    with pytest.raises(ValueError, match="different engine"):
+        d3.ensure_header({"driver": "sharded", "params": {"R": 2}})
+    d3.close()
+
+
+def test_should_snapshot_threshold(tmp_path):
+    dur = WAL.Durability(tmp_path, fsync=False, snapshot_every_bytes=256)
+    assert not dur.should_snapshot()       # no writer yet
+    while not dur.should_snapshot():
+        dur.log_write(np.arange(8, dtype=np.int32),
+                      np.arange(8, dtype=np.int32))
+        dur.sync()
+    st = dur.stats()
+    assert st["bytes_since_snapshot"] >= 256
+    assert st["wal_records"] == st["wal_syncs"] > 0
+    assert set(st) == {"wal_bytes", "wal_records", "wal_syncs", "snapshots",
+                       "snapshot_ms_last", "bytes_since_snapshot"}
+    dur.close()
+
+
+def test_as_durability_coercions(tmp_path):
+    assert WAL.as_durability(None) is None
+    dur = WAL.Durability(tmp_path)
+    assert WAL.as_durability(dur) is dur
+    made = WAL.as_durability(str(tmp_path / "sub"))
+    assert isinstance(made, WAL.Durability)
+    assert made.dir == Path(tmp_path / "sub")
+
+
+# --------------------------------------------------------------------------
+# driver restore edge cases
+# --------------------------------------------------------------------------
+
+def test_restore_without_snapshot_replays_from_genesis(tmp_path):
+    p = small_params()
+    dur = WAL.Durability(tmp_path, fsync=False,
+                         snapshot_every_bytes=1 << 30)
+    drv = make_engine("single", p, durability=dur)
+    ops = write_stream(n_ops=6)
+    apply_ops(drv, ops)
+    dur.close()
+    assert WAL.list_snapshots(tmp_path) == []
+    got = SLSM.restore(str(tmp_path))
+    # params resolved from the WAL's META fingerprint, not re-supplied
+    assert got.p == p
+    assert got.stats["replayed_records"] == 6
+    assert got.stats["restore_us"] > 0
+    assert_same_answers(probe_answers(got), probe_answers(drv))
+
+
+def test_restore_empty_dir_is_fresh_engine(tmp_path):
+    with pytest.raises(ValueError, match="nothing to restore"):
+        SLSM.restore(str(tmp_path / "a"))  # no fingerprint, no params
+    drv = SLSM.restore(str(tmp_path), params=small_params())
+    assert drv.stats["replayed_records"] == 0
+    vals, found = drv.lookup_many(np.array([1, 2, 3], np.int32))
+    assert not np.asarray(found).any()
+
+
+def test_restore_then_continue_writing(tmp_path):
+    """The restored engine's Durability keeps appending where the
+    crashed log stopped — seqnos stay strictly consecutive."""
+    p = small_params()
+    dur = WAL.Durability(tmp_path, fsync=False)
+    drv = make_engine("single", p, durability=dur)
+    ops = write_stream(n_ops=6)
+    apply_ops(drv, ops[:4])
+    dur.close()
+    got = SLSM.restore(str(tmp_path))
+    apply_ops(got, ops[4:])
+    got.durability.close()
+    records, _ = WAL.read_wal(Path(tmp_path) / "wal.log")
+    seqs = [r.seqno for r in records]
+    assert seqs == list(range(len(seqs)))
+    assert sum(1 for r in records if r.kind == WAL.REC_WRITE) == 6
+    want = make_engine("single", p)
+    apply_ops(want, ops)
+    assert_same_answers(probe_answers(got), probe_answers(want))
+
+
+# --------------------------------------------------------------------------
+# repro.checkpoint facade (folded from the retired test_checkpoint.py)
+# --------------------------------------------------------------------------
+
+def _tree(rng):
+    import jax.numpy as jnp
+    return {"w": jnp.asarray(rng.normal(size=(16, 8)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(8,)), jnp.bfloat16)}
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    tree = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    restored, step = mgr.restore(tree)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(restored["w"]))
+    np.testing.assert_array_equal(
+        np.asarray(tree["b"]).view(np.uint16),
+        np.asarray(restored["b"]).view(np.uint16))
+
+
+def test_checkpoint_keep_last_and_latest(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    tree = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for step in range(4):
+        mgr.save(step, tree)
+    assert mgr.latest_step() == 3
+    assert sorted(d.name for d in Path(tmp_path).iterdir()) == ["step_2",
+                                                                "step_3"]
+
+
+def test_checkpoint_corruption_detected(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    tree = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    leaf = next(Path(tmp_path, "step_1").glob("leaf_*.npy"))
+    blob = bytearray(leaf.read_bytes())
+    blob[-1] ^= 0xFF
+    leaf.write_bytes(bytes(blob))
+    with pytest.raises(WAL.SnapshotError, match="corruption"):
+        mgr.restore(tree)
+
+
+def test_checkpoint_partial_save_invisible(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    orphan = tmp_path / "step_9.tmp-777"
+    orphan.mkdir()
+    (orphan / "leaf_0.npy").write_bytes(b"torn")
+    mgr = CheckpointManager(str(tmp_path))   # GCs the orphan on open
+    assert not orphan.exists()
+    assert mgr.latest_step() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree(rng))
+
+
+def test_checkpoint_async_save(tmp_path, rng):
+    from repro.checkpoint import CheckpointManager
+    tree = _tree(rng)
+    mgr = CheckpointManager(str(tmp_path))
+    path = mgr.save(7, tree, blocking=False)
+    mgr.wait()
+    assert Path(path).is_dir()
+    restored, step = mgr.restore(tree)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(restored["w"]))

@@ -261,3 +261,59 @@ def test_schema_rejects_malformed_documents(bench_doc):
     assert any("insert_steady_state" in e for e in SCH.validate(bad))
 
     assert SCH.validate([]) and SCH.validate(None)
+
+
+def test_schema_v6_durability_block(bench_doc):
+    """SCHEMA_VERSION 6: metrics.durability is a required (nullable)
+    key on v6 documents, enforced only there — committed v5 trajectory
+    points predate the WAL and stay valid."""
+    _, doc = bench_doc
+    assert doc["schema_version"] == 6
+    assert doc["metrics"]["durability"] is None   # WAL-off run
+
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["durability"]
+    assert any("durability" in e for e in SCH.validate(bad))
+    # the same document labeled v5 is exempt (compat window)
+    bad["schema_version"] = 5
+    assert SCH.validate(bad) == []
+
+    good = json.loads(json.dumps(doc))
+    good["metrics"]["durability"] = {
+        "wal_bytes": 1 << 20, "wal_records": 128,
+        "wal_bytes_per_op": 8.4, "snapshot_ms": 12.5, "restore_ms": 80.0,
+        "replayed_chunks": 128, "fsync": True}
+    assert SCH.validate(good) == []
+    good["metrics"]["durability"]["restore_ms"] = -1.0
+    assert any("restore_ms" in e for e in SCH.validate(good))
+    good["metrics"]["durability"]["restore_ms"] = 80.0
+    good["metrics"]["durability"]["wal_records"] = 0
+    assert any("wal_records" in e for e in SCH.validate(good))
+
+
+def test_sweep_durability_family():
+    """The durability sweep isolates the WAL axis: identical uniform
+    points, one logging + fsyncing, one not."""
+    sweep = scenarios_for("sweep-durability")
+    assert [s.name for s in sweep] == ["sweep_durability_wal",
+                                      "sweep_durability_off"]
+    assert [s.durability for s in sweep] == [True, False]
+    on, off = sweep
+    assert on.engine_params() == off.engine_params()
+
+
+def test_runner_emits_durability_block(tmp_path):
+    """A WAL-on smoke run emits a validating metrics.durability block
+    whose restore replayed every logged write chunk (restore is timed
+    before the snapshot exists)."""
+    from repro.bench.runner import run_scenario
+
+    path, doc = run_scenario(SCENARIOS["sweep_durability_wal"], tmp_path,
+                             profile="smoke")
+    assert SCH.validate(doc) == []
+    dur = doc["metrics"]["durability"]
+    assert dur is not None and dur["fsync"] is True
+    assert dur["wal_records"] > 0
+    assert dur["replayed_chunks"] > 0
+    assert dur["wal_bytes_per_op"] > 0
+    assert dur["restore_ms"] > 0 and dur["snapshot_ms"] > 0

@@ -252,3 +252,26 @@ def test_elastic_reshard_roundtrip():
         print('RESHARD-OK')
     """)
     assert "RESHARD-OK" in out
+
+
+def test_straggler_monitor():
+    from repro.distributed.elastic import StragglerMonitor
+    mon = StragglerMonitor(threshold=2.0, min_samples=4)
+    for _ in range(10):
+        assert mon.record(0, 1.0) == "ok"
+    assert mon.record(7, 5.0) == "skip"
+    assert mon.record(7, 5.0) == "skip"
+    assert mon.record(7, 5.0) == "quarantine"
+    assert mon.healthy_hosts([0, 7]) == [0]
+
+
+def test_elastic_mesh_factoring():
+    from repro.distributed.elastic import factor_devices
+    assert factor_devices(512, 16) == (32, 16)
+    assert factor_devices(256, 16) == (16, 16)
+    assert factor_devices(8, 4) == (2, 4)
+    assert factor_devices(6, 4) == (2, 3)      # TP degrades gracefully
+    assert factor_devices(7, 4) == (7, 1)      # prime counts still work
+    for n in (8, 48, 96, 384, 512):
+        d, m = factor_devices(n)
+        assert d * m == n
