@@ -63,9 +63,9 @@ def render_table(docs: list) -> str:
     numbers were measured on — rows are only comparable within one
     platform)."""
     head = ("| scenario | insert ops/s | insert p99 | lookup ops/s "
-            "| lookup p99 | speedup | range scans/s | bloom FP | tuner "
-            "| platform |\n"
-            "|---|---|---|---|---|---|---|---|---|---|")
+            "| lookup p99 | speedup | range scans/s | annihilated "
+            "| bloom FP | tuner | platform |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|")
     rows = [head]
     for doc in docs:
         m = doc["metrics"]
@@ -74,6 +74,16 @@ def render_table(docs: list) -> str:
                       "retunes)" if tun else "static")
         rb = m.get("range_batched")
         range_cell = _fmt_ops(rb["ops_per_s"]) if rb else "-"
+        # v7+: annihilated rows / merge input rows (the weighted-merge
+        # dedup+delete elision share, DESIGN.md §13); '-' on older docs
+        zs = m.get("zset")
+        if zs and zs.get("rows_merged_in"):
+            ann_cell = (f"{zs['rows_annihilated'] / 1e3:.0f}k "
+                        f"({100 * zs['rows_annihilated'] / zs['rows_merged_in']:.0f}%)")
+        elif zs:
+            ann_cell = "0"
+        else:
+            ann_cell = "-"
         platform = doc.get("env", {}).get("platform", "-")
         srv = m.get("serving")
         if srv:
@@ -96,6 +106,7 @@ def render_table(docs: list) -> str:
             f"| {lk_p99} "
             f"| {speedup} "
             f"| {range_cell} "
+            f"| {ann_cell} "
             f"| {m['bloom']['fp_rate_measured']:.1e} "
             f"| {tuner_cell} "
             f"| {platform} |")

@@ -40,13 +40,15 @@ _, found = store.lookup_many(absent)
 assert not found.any()  # Bloom FPs are filtered by the exact key match
 print("lookup_many of 1,000 absent keys: none found")
 
-# deletes are tombstones (paper 2.8)
+# deletes are weight -1 records (paper 2.8's tombstones recast as Z-set
+# retractions, DESIGN.md §13); merges annihilate matched insert/delete
+# pairs without ever touching their payloads
 store.delete(keys[:10])
 _, found = store.lookup(keys[:10])
 assert not found.any()
 print("deleted 10 keys: lookups now miss")
 
-# range query (paper 2.9): newest-wins, tombstones dropped, key-sorted
+# range query (paper 2.9): newest-wins, deleted keys elided, key-sorted
 lo, hi = 2**20, 2**20 + 2**16
 rk, rv = store.range(lo, hi)
 expect = np.sort(keys[(keys >= lo) & (keys < hi)])
@@ -55,4 +57,11 @@ assert (rk == expect).all()
 kv = dict(zip(keys.tolist(), vals.tolist()))  # keys are drawn unique
 assert all(kv[k] == v for k, v in zip(rk.tolist(), rv.tolist()))
 print(f"range [{lo}, {hi}): {len(rk)} results, key-sorted, values verified")
+
+# batched aggregates (DESIGN.md §13): count/sum over a key range ride
+# the fence-pruned scan machinery without materializing the rows
+cnt, total = store.count(lo, hi), store.sum(lo, hi)
+assert cnt == len(rk)
+assert total == int(rv.astype(np.int32).sum(dtype=np.int32))  # int32 wraparound
+print(f"count/sum over [{lo}, {hi}): {cnt} rows, sum {total}")
 print("quickstart OK")

@@ -341,7 +341,7 @@ def _measure_durability(tree) -> Dict[str, Any]:
     dur.sync()
     records = dur.read_records()
     n_elems = sum(struct.unpack_from("<I", r.payload, 0)[0]
-                  for r in records if r.kind == WAL.REC_WRITE)
+                  for r in records if r.kind in WAL.WRITE_KINDS)
     t0 = time.perf_counter()
     restored = type(tree).restore(str(dur.dir))
     jax.block_until_ready(restored.state)
@@ -501,6 +501,9 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
             "batched_speedup": (None if batched is None else
                                 batched["ops_per_s"]
                                 / max(per_query["ops_per_s"], 1e-12)),
+            "zset": {k: int(tree.stats[k]) for k in
+                     ("rows_merged_in", "rows_merged_out",
+                      "rows_annihilated", "ghost_payload_bytes_skipped")},
             "maintenance": {k: int(tree.stats[k]) for k in
                             ("seals", "flushes", "spills", "compactions",
                              "backlog_peak", "retunes")},

@@ -10,10 +10,11 @@ returns a list of human-readable problems (empty == valid). The runner
 validates before writing; CI re-validates the emitted files
 (``python -m benchmarks.run --check --out DIR``).
 
-Document shape (SCHEMA_VERSION 6):
+Document shape (SCHEMA_VERSION 7):
 
-  schema_version  int     in COMPAT_VERSIONS (v5 documents predate the
-                          durability block and stay valid as committed)
+  schema_version  int     in COMPAT_VERSIONS (v5/v6 documents predate
+                          the durability / zset blocks and stay valid
+                          as committed)
   name            str     scenario name (file is BENCH_<sanitized name>.json)
   workload        {kind, n, seed, args{...}}
   engine          {R, Rn, eps, D, m, mu, max_levels, max_range,
@@ -49,6 +50,12 @@ Document shape (SCHEMA_VERSION 6):
                       (scans_truncated > 0 means some window overflowed
                       max_range or the range_cand budget)
     batched_speedup   float    lookup_batched.ops_per_s / lookup_per_query.ops_per_s
+    zset              {rows_merged_in, rows_merged_out, rows_annihilated,
+                      ghost_payload_bytes_skipped}   (v7+, required key)
+                      weighted-merge telemetry (DESIGN.md §13): rows
+                      entering vs. surviving every merge of the run —
+                      the gap is dedup + annihilation, payload bytes the
+                      Ghost gather never touched
     maintenance       {seals, flushes, spills, compactions, backlog_peak,
                       retunes}
                       merge counts + the deepest pending-merge-step
@@ -132,14 +139,18 @@ SCHEMA_VERSION history:
       chunk count — DESIGN.md §12) emitted by the sweep-durability
       family's WAL-on point; v5 documents remain valid
       (COMPAT_VERSIONS), the new key is enforced on v6 only.
+  7 — Z-set merge-algebra PR: required metrics.zset block (weighted
+      merge telemetry — rows in/out of every merge, annihilated rows,
+      Ghost-gather payload bytes skipped, DESIGN.md §13); v5/v6
+      documents remain valid, the new key is enforced on v7 only.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 6
-# accepted on read: the committed trajectory keeps its v5 documents
-COMPAT_VERSIONS = (5, 6)
+SCHEMA_VERSION = 7
+# accepted on read: the committed trajectory keeps its v5/v6 documents
+COMPAT_VERSIONS = (5, 6, 7)
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -362,9 +373,32 @@ def validate(doc: Any) -> List[str]:
                 errs.append(f"metrics.bloom.eps_configured: out of (0,1) ({eps})")
             if isinstance(fp, (int, float)) and not 0 <= fp <= 1:
                 errs.append(f"metrics.bloom.fp_rate_measured: out of [0,1] ({fp})")
-        # v6: the durability block is a required (nullable) key — null on
+        # v7: the zset merge-telemetry block is required; earlier
+        # documents predate the weighted algebra and are exempt
+        if ver is not None and ver >= 7:
+            zs = _typed(met, "zset", dict, errs, "metrics")
+            if zs is not None:
+                where = "metrics.zset"
+                for key in ("rows_merged_in", "rows_merged_out",
+                            "rows_annihilated",
+                            "ghost_payload_bytes_skipped"):
+                    v = _typed(zs, key, int, errs, where)
+                    if isinstance(v, int) and v < 0:
+                        errs.append(f"{where}.{key}: negative ({v})")
+                ri, ro = zs.get("rows_merged_in"), zs.get("rows_merged_out")
+                ra = zs.get("rows_annihilated")
+                if (isinstance(ri, int) and isinstance(ro, int)
+                        and ro > ri):
+                    errs.append(f"{where}: rows_merged_out ({ro}) exceeds "
+                                f"rows_merged_in ({ri})")
+                if (isinstance(ri, int) and isinstance(ro, int)
+                        and isinstance(ra, int) and ra != ri - ro):
+                    errs.append(f"{where}: rows_annihilated ({ra}) != "
+                                f"rows_merged_in - rows_merged_out "
+                                f"({ri - ro})")
+        # v6+: the durability block is a required (nullable) key — null on
         # WAL-off runs; v5 documents predate it and are exempt
-        if ver == SCHEMA_VERSION:
+        if ver is not None and ver >= 6:
             if "durability" not in met:
                 errs.append("metrics: missing key 'durability' (use null "
                             "for WAL-off runs)")

@@ -2,15 +2,18 @@
 
 Property tests drive identical op sequences through SLSM and this model
 and require identical observable results (lookup values / found flags,
-range contents). The model is the ground truth for *what* the structure
-stores; `skiplist_ref.py` is the ground truth for *how* the paper's
-in-memory component behaves.
+range contents, windowed aggregates). The model is the ground truth for
+*what* the structure stores; `skiplist_ref.py` is the ground truth for
+*how* the paper's in-memory component behaves.
+
+Presence is tracked explicitly (the Z-set view, DESIGN.md §13): a
+delete removes the key rather than storing a reserved value, so every
+int32 — including the engine's historical TOMBSTONE bit pattern — is a
+legal, round-trippable payload.
 """
 from __future__ import annotations
 
 import numpy as np
-
-from repro.core.params import TOMBSTONE
 
 
 class DictOracle:
@@ -23,21 +26,43 @@ class DictOracle:
             self.d[int(k)] = int(v)
 
     def delete(self, keys) -> None:
-        self.insert(keys, [int(TOMBSTONE)] * len(np.asarray(keys).reshape(-1)))
+        for k in np.asarray(keys).reshape(-1).tolist():
+            self.d.pop(int(k), None)
+
+    def apply(self, keys, vals, wts) -> None:
+        """Weighted write chunk (the WAL replay form): weight +1 inserts
+        the pair, weight <= 0 deletes the key."""
+        for k, v, w in zip(np.asarray(keys).reshape(-1).tolist(),
+                           np.asarray(vals).reshape(-1).tolist(),
+                           np.asarray(wts).reshape(-1).tolist()):
+            if int(w) > 0:
+                self.d[int(k)] = int(v)
+            else:
+                self.d.pop(int(k), None)
 
     def lookup(self, keys):
         vals, found = [], []
         for k in np.asarray(keys).reshape(-1).tolist():
             v = self.d.get(int(k))
-            ok = v is not None and v != int(TOMBSTONE)
+            ok = v is not None
             vals.append(v if ok else 0)
             found.append(ok)
         return np.asarray(vals, np.int32), np.asarray(found, bool)
 
     def range(self, lo: int, hi: int):
-        items = sorted((k, v) for k, v in self.d.items()
-                       if lo <= k < hi and v != int(TOMBSTONE))
+        items = sorted((k, v) for k, v in self.d.items() if lo <= k < hi)
         if not items:
             return np.zeros(0, np.int32), np.zeros(0, np.int32)
         ks, vs = zip(*items)
         return np.asarray(ks, np.int32), np.asarray(vs, np.int32)
+
+    def aggregate(self, lo: int, hi: int):
+        """(count, sum) over the live keys in [lo, hi); the sum matches
+        the engine's int32 wraparound arithmetic."""
+        total = np.int32(0)
+        count = 0
+        for k, v in self.d.items():
+            if lo <= k < hi:
+                count += 1
+                total = np.int32(total + np.int32(v))
+        return count, int(total)

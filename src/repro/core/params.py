@@ -66,8 +66,12 @@ from dataclasses import dataclass
 import numpy as np
 
 # Key/value sentinels. Keys are int32 (paper: 32-bit integer keys).
-KEY_EMPTY = np.int32(np.iinfo(np.int32).max)   # reserved: empty slot / padding
-TOMBSTONE = np.int32(np.iinfo(np.int32).min)   # reserved value: deleted key
+KEY_EMPTY = np.int32(np.iinfo(np.int32).max)   # reserved KEY: empty slot/pad
+# Historical reserved value: pre-weighted engines marked deletes by storing
+# this value. The Z-set record algebra (DESIGN.md §13) made deletion a
+# -1-weight record instead, so every int32 payload is legal; the constant
+# survives only for legacy WAL decode (wal.decode_write on REC_WRITE).
+TOMBSTONE = np.int32(np.iinfo(np.int32).min)
 SEQ_NONE = np.int32(-1)                        # "no match" sequence number
 
 

@@ -1,7 +1,12 @@
-"""Sorted-run primitives: sort, newest-wins dedup, k-way merge, fences.
+"""Sorted-run primitives: sort, weighted survivor dedup, k-way merge, fences.
 
-TPU adaptation of the paper's run machinery:
-  * a run is a dense sorted (keys, vals, seqs) triple padded with KEY_EMPTY;
+TPU adaptation of the paper's run machinery, on the Z-set record algebra
+(DESIGN.md §13): a record is ``(key, weight, seq | payload)`` with weight
++1 for an insert and -1 for a delete — structure-of-arrays, the payload
+lane separate from the merge lanes.
+
+  * a run is a dense sorted (keys, vals, wts, seqs) quad padded with
+    KEY_EMPTY;
   * HeapMerge (paper 2.5, O(n log k) serial heap) becomes either
       - a multi-operand stable `lax.sort` on (key, seq) — XLA's bitonic
         network, O(n log^2 n) comparisons but fully parallel; or
@@ -9,10 +14,19 @@ TPU adaptation of the paper's run machinery:
         its own index plus its rank in every other run, computed with
         vectorized binary searches. O(n log k) *work*, data-independent
         control flow. Same asymptotics as the paper's heap, no heap.
-  * newest-wins dedup: after a (key, seq)-ordered sort, the last element of
-    every equal-key block carries the max seqno — a shift-compare mask.
-  * tombstone elision happens only when merging into the deepest level
-    (paper 2.5/2.8: deletes are "committed" there).
+  * weighted dedup: after a (key, seq)-ordered sort, the last element of
+    every equal-key block carries the max seqno. Each op implicitly
+    retracts its predecessor (an update is the Z-set -1/+1 pair fused
+    into one record), so the per-key weight sum telescopes to the newest
+    record's weight — presence is its sign, and the survivor mask is a
+    shift-compare plus a sign test.
+  * annihilation (zero-weight elision) happens only when merging into the
+    deepest level (paper 2.5/2.8: deletes are "committed" there) —
+    shallower merges keep the newest record per key even when its weight
+    is negative, because it must still retract older copies below.
+  * the Ghost property: merges move only the (key, weight, seq) lanes
+    plus a provenance index through the sort/merge network; the payload
+    lane is gathered once, at the end, for surviving rows only.
 """
 from __future__ import annotations
 
@@ -22,54 +36,74 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import KEY_EMPTY, TOMBSTONE
+from repro.core.params import KEY_EMPTY
+
+# neutral "max key of an empty run" (min/max filters need a -inf)
+_KEY_MIN = np.int32(np.iinfo(np.int32).min)
 
 
-def sort_by_key_seq(keys, vals, seqs):
-    """Stable lexicographic sort by (key, seq). Sentinels sort to the end."""
-    keys, seqs, vals = jax.lax.sort((keys, seqs, vals), num_keys=2)
-    return keys, vals, seqs
+def sort_records(keys, vals, wts, seqs):
+    """Stable lexicographic sort by (key, seq); vals/wts ride as payload.
+    Sentinels sort to the end. Returns (keys, vals, wts, seqs)."""
+    keys, seqs, vals, wts = jax.lax.sort((keys, seqs, vals, wts), num_keys=2)
+    return keys, vals, wts, seqs
 
 
-def newest_wins_mask(keys: jax.Array, vals: jax.Array,
-                     drop_tombstones: bool) -> jax.Array:
-    """Valid-mask over a (key, seq)-sorted run: keep the last (newest) copy
-    of each key; drop padding; optionally commit deletes."""
+def survivor_mask(keys: jax.Array, wts: jax.Array,
+                  drop_annihilated: bool) -> jax.Array:
+    """Valid-mask over a (key, seq)-sorted run: keep the newest record of
+    each key (the telescoped per-key weight sum); drop padding; when
+    `drop_annihilated`, elide keys whose summed weight is <= 0 (deletes
+    commit — the deepest-level merge)."""
     nxt = jnp.concatenate([keys[1:], jnp.full((1,), KEY_EMPTY, keys.dtype)])
     valid = (keys != KEY_EMPTY) & (keys != nxt)
-    if drop_tombstones:
-        valid &= vals != TOMBSTONE
+    if drop_annihilated:
+        valid &= wts > 0
     return valid
 
 
-def compact(keys, vals, seqs, valid):
+def compact(keys, vals, wts, seqs, valid):
     """Stable-partition valid elements to the front; pad the rest.
 
-    Returns (keys, vals, seqs, count). Order among valid elements is
+    Returns (keys, vals, wts, seqs, count). Order among valid elements is
     preserved (stable argsort on the invalid flag).
     """
     order = jnp.argsort((~valid).astype(jnp.int32), stable=True)
-    keys = jnp.where(valid[order], keys[order], KEY_EMPTY)
-    vals = jnp.where(valid[order], vals[order], 0)
-    seqs = jnp.where(valid[order], seqs[order], 0)
-    return keys, vals, seqs, valid.sum(dtype=jnp.int32)
+    ok = valid[order]
+    keys = jnp.where(ok, keys[order], KEY_EMPTY)
+    vals = jnp.where(ok, vals[order], 0)
+    wts = jnp.where(ok, wts[order], 0)
+    seqs = jnp.where(ok, seqs[order], 0)
+    return keys, vals, wts, seqs, valid.sum(dtype=jnp.int32)
 
 
-def merge_runs(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+def merge_runs(keys2d, vals2d, wts2d, seqs2d, drop_annihilated: bool):
     """Merge k sorted runs (k, cap) -> one compacted run (k*cap,).
 
-    Sort-based path (XLA bitonic network). Newest-wins is free because the
-    sort is keyed on (key, seq) and dedup keeps the last copy — exactly the
-    paper's "highest-ranked run's value is written" rule, with run recency
-    generalized to global seqnos.
+    Sort-based path (XLA bitonic network) over the (key, weight, seq,
+    source-index) lanes only — the payload lane never enters the sort.
+    The per-key weight sum telescopes to the newest record (the sort is
+    keyed on (key, seq) and dedup keeps the last copy — the paper's
+    "highest-ranked run's value is written" rule, with run recency
+    generalized to global seqnos); payloads are gathered through the
+    surviving rows' source indices in one final pass (the Ghost
+    property). Returns (keys, vals, wts, seqs, count).
     """
-    k, v, s = keys2d.reshape(-1), vals2d.reshape(-1), seqs2d.reshape(-1)
-    k, v, s = sort_by_key_seq(k, v, s)
-    valid = newest_wins_mask(k, v, drop_tombstones)
-    return compact(k, v, s, valid)
+    k, w, s = keys2d.reshape(-1), wts2d.reshape(-1), seqs2d.reshape(-1)
+    idx = jnp.arange(k.shape[0], dtype=jnp.int32)
+    k, s, w, idx = jax.lax.sort((k, s, w, idx), num_keys=2)
+    valid = survivor_mask(k, w, drop_annihilated)
+    order = jnp.argsort((~valid).astype(jnp.int32), stable=True)
+    ok = valid[order]
+    keys = jnp.where(ok, k[order], KEY_EMPTY)
+    wts = jnp.where(ok, w[order], 0)
+    seqs = jnp.where(ok, s[order], 0)
+    # payload gather — survivors only (annihilated rows never touch vals)
+    vals = jnp.where(ok, vals2d.reshape(-1)[idx[order]], 0)
+    return keys, vals, wts, seqs, valid.sum(dtype=jnp.int32)
 
 
-def merge_two_ranked(ak, av, as_, bk, bv, bs):
+def merge_two_ranked(ak, av, aw, as_, bk, bv, bw, bs):
     """Rank-merge of two sorted runs — the TPU HeapMerge step.
 
     out_pos(a[i]) = i + #{b[j] < a[i] by (key, seq)};  symmetrical for b.
@@ -109,14 +143,16 @@ def merge_two_ranked(ak, av, as_, bk, bv, bs):
     total = n + mth
     ok = jnp.full((total,), KEY_EMPTY, ak.dtype).at[pa].set(ak).at[pb].set(bk)
     ov = jnp.zeros((total,), av.dtype).at[pa].set(av).at[pb].set(bv)
+    ow = jnp.zeros((total,), aw.dtype).at[pa].set(aw).at[pb].set(bw)
     os_ = jnp.zeros((total,), as_.dtype).at[pa].set(as_).at[pb].set(bs)
-    return ok, ov, os_
+    return ok, ov, ow, os_
 
 
-def merge_kway_ranked(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+def merge_kway_ranked(keys2d, vals2d, wts2d, seqs2d, drop_annihilated: bool):
     """Tournament of rank-merges: log2(k) parallel passes (paper-equivalent
     O(n log k) work). Used by benchmarks to compare against `merge_runs`."""
-    runs = [(keys2d[i], vals2d[i], seqs2d[i]) for i in range(keys2d.shape[0])]
+    runs = [(keys2d[i], vals2d[i], wts2d[i], seqs2d[i])
+            for i in range(keys2d.shape[0])]
     while len(runs) > 1:
         nxt = []
         for i in range(0, len(runs) - 1, 2):
@@ -124,9 +160,9 @@ def merge_kway_ranked(keys2d, vals2d, seqs2d, drop_tombstones: bool):
         if len(runs) % 2:
             nxt.append(runs[-1])
         runs = nxt
-    k, v, s = runs[0]
-    valid = newest_wins_mask(k, v, drop_tombstones)
-    return compact(k, v, s, valid)
+    k, v, w, s = runs[0]
+    valid = survivor_mask(k, w, drop_annihilated)
+    return compact(k, v, w, s, valid)
 
 
 def build_fences(keys: jax.Array, mu: int, n_fences: int) -> jax.Array:
@@ -138,5 +174,5 @@ def build_fences(keys: jax.Array, mu: int, n_fences: int) -> jax.Array:
 def run_minmax(keys: jax.Array, count: jax.Array):
     """(min, max) key of a compacted sorted run (paper 2.3 max/min filter)."""
     mn = jnp.where(count > 0, keys[0], KEY_EMPTY)
-    mx = jnp.where(count > 0, keys[jnp.maximum(count - 1, 0)], TOMBSTONE)
+    mx = jnp.where(count > 0, keys[jnp.maximum(count - 1, 0)], _KEY_MIN)
     return mn, mx

@@ -14,8 +14,9 @@ Paper structure (Szanto 2018) preserved exactly:
   * newest-wins on duplicate keys, keyed on a global seqno (the paper keys
     recency on run index; seqnos are the batched generalization and give
     identical semantics — proven by the dict-oracle property tests);
-  * deletes are tombstones, committed (elided) when a merge creates the
-    deepest data (paper 2.5/2.8);
+  * deletes are weight -1 records (the paper's tombstones recast as
+    Z-set retractions, DESIGN.md §13), committed (annihilated) when a
+    merge creates the deepest data (paper 2.5/2.8);
   * every run carries min/max keys + a Bloom filter; disk runs add fence
     pointers every mu slots (paper 2.3/2.4).
 

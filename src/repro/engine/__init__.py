@@ -9,7 +9,7 @@ Layer map (DESIGN.md has the full tour):
   scheduler.py  — the cascade as paced, bounded MergeSteps (merge_budget)
   tuner.py      — adaptive memory/filter tuner: one byte budget moved
                   between write buffer, per-level Bloom bits, and fences
-  read_path.py  — dense + Bloom-compacted lookups, range queries
+  read_path.py  — dense + Bloom-compacted lookups, ranges, aggregates
   tape.py       — device-resident mixed-op tape (lax.scan interpreter)
   wal.py        — durability: CRC-framed sequence-numbered WAL + atomic
                   pytree snapshots + the Durability manager (restore())
@@ -34,7 +34,8 @@ from repro.engine.engine import SLSM  # noqa: F401
 from repro.engine.levels import LevelState, empty_level  # noqa: F401
 from repro.engine.memtable import (SLSMState, init_state,  # noqa: F401
                                    seal_run, stage_append)
-from repro.engine.read_path import (lookup_batch, lookup_many,  # noqa: F401
+from repro.engine.read_path import (aggregate_many,  # noqa: F401
+                                    lookup_batch, lookup_many,
                                     range_many, range_query)
 from repro.engine.scheduler import (MergeScheduler, MergeStep,  # noqa: F401
                                     Occupancy, backlog_cost, pending_steps,

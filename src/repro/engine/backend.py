@@ -80,17 +80,24 @@ class OpsBackend:
                        probes the whole physical bitset.
     fence_lookup_many: (qs (Q,), fences (D, F), keys (D, cap),
                         counts (D,), mu)                          -> (D, Q) i32 idx | -1
-    merge_runs:        (keys (k, cap), vals, seqs, drop: bool)    -> (keys, vals,
-                                                                      seqs, count)
-    range_merge:       (keys (Q, C), vals, seqs, offsets (Q, P+1),
-                        drop: bool) -> (keys, vals, seqs, keep (Q, C))
+    merge_runs:        (keys (k, cap), vals, wts, seqs, drop: bool)
+                       -> (keys, vals, wts, seqs, count)
+                       weighted k-way merge (DESIGN.md §13): only the
+                       (key, weight, seq) lanes enter the merge network;
+                       payloads are gathered once, for surviving rows.
+                       `drop` elides records whose summed weight is <= 0
+                       (annihilation — the deepest-merge delete commit).
+    range_merge:       (keys (Q, C), vals, wts, seqs, offsets (Q, P+1),
+                        drop: bool) -> (keys, vals, wts, seqs, keep (Q, C))
                        the range engine's per-scan candidate merge
                        (DESIGN.md §10): each row holds P sorted
                        segments at `offsets`; rows come back in global
-                       (key, seq) order with the newest-wins /
-                       tombstone-drop mask. jnp = per-row sort; pallas =
-                       the merge-path tournament kernel, dedup fused
-                       into the final round.
+                       (key, seq) order with the weighted survivor mask
+                       (negative-weight rows dropped when `drop`). jnp =
+                       per-row sort; pallas = the merge-path tournament
+                       kernel, the mask fused into the final round —
+                       both gather the payload lane only after the
+                       merge, through the survivors' source indices.
     """
     name: str
     bloom_probe_many: Callable
@@ -111,9 +118,9 @@ def _jnp_fence_many(qs, fences, keys, counts, mu: int):
     )(fences, keys, counts)
 
 
-def _jnp_range_merge(keys, vals, seqs, offsets, drop_tombstones: bool):
+def _jnp_range_merge(keys, vals, wts, seqs, offsets, drop_annihilated: bool):
     from repro.kernels.range_merge.ref import range_merge_ref
-    return range_merge_ref(keys, vals, seqs, offsets, drop_tombstones)
+    return range_merge_ref(keys, vals, wts, seqs, offsets, drop_annihilated)
 
 
 JNP_BACKEND = OpsBackend(
@@ -142,14 +149,15 @@ def _pallas_fence_many(qs, fences, keys, counts, mu: int):
                       for d in range(keys.shape[0])])
 
 
-def _pallas_merge_runs(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+def _pallas_merge_runs(keys2d, vals2d, wts2d, seqs2d, drop_annihilated: bool):
     from repro.kernels.heap_merge import heap_merge_op
-    return heap_merge_op(keys2d, vals2d, seqs2d, drop_tombstones)
+    return heap_merge_op(keys2d, vals2d, wts2d, seqs2d, drop_annihilated)
 
 
-def _pallas_range_merge(keys, vals, seqs, offsets, drop_tombstones: bool):
+def _pallas_range_merge(keys, vals, wts, seqs, offsets,
+                        drop_annihilated: bool):
     from repro.kernels.range_merge import range_merge_op
-    return range_merge_op(keys, vals, seqs, offsets, drop_tombstones)
+    return range_merge_op(keys, vals, wts, seqs, offsets, drop_annihilated)
 
 
 PALLAS_BACKEND = OpsBackend(

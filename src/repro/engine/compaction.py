@@ -3,7 +3,9 @@
 Device side: three jitted merge ops (buffer flush, level spill, deepest
 compaction), all built on the backend-dispatched k-way merge — so the
 paper's HeapMerge runs either as the XLA sort network or as the Pallas
-merge-path tournament (`SLSMParams.backend`).
+merge-path tournament (`SLSMParams.backend`). Records are weighted
+(DESIGN.md §13): merges move (key, weight, seq) lanes and gather
+payloads only for surviving rows.
 
 Host side: a `CompactionPolicy` decides *when* a level spills and *how
 many* runs move — the axis along which real LSM systems specialize
@@ -16,12 +18,12 @@ many* runs move — the axis along which real LSM systems specialize
                    two coexist, keeping read amplification at ~1 run per
                    level at the cost of more merge work.
 
-Tombstone elision stays a host decision (`scheduler.drop_tombstones_into`):
-deletes are committed only when a merge's output becomes the deepest
-data (paper 2.5/2.8). *When* these ops run is the merge scheduler's
-call (`repro.engine.scheduler`): each op here is exactly one bounded
-`MergeStep`, dispatched either synchronously (merge_budget=0) or paced
-across insert chunks.
+Annihilation stays a host decision (`scheduler.drop_annihilated_into`):
+negative-weight records are elided only when a merge's output becomes
+the deepest data (paper 2.5/2.8: deletes are committed there). *When*
+these ops run is the merge scheduler's call (`repro.engine.scheduler`):
+each op here is exactly one bounded `MergeStep`, dispatched either
+synchronously (merge_budget=0) or paced across insert chunks.
 """
 from __future__ import annotations
 
@@ -30,10 +32,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 from repro.engine.backend import get_backend
-from repro.engine.levels import (empty_level, index_new_run, set_level_run,
-                                 shift_level)
+from repro.engine.levels import (_KEY_MIN, empty_level, index_new_run,
+                                 set_level_run, shift_level)
 from repro.engine.memtable import SLSMState
 
 
@@ -66,7 +68,7 @@ class CompactionPolicy:
         """Every distinct `runs_to_spill` value this policy can produce.
 
         The merge scheduler's warm() precompiles one spill program per
-        (level, size, tombstone-flag) — `n_merge` is a jit-static
+        (level, size, annihilation-flag) — `n_merge` is a jit-static
         argument, so each size is its own compiled program and an
         unwarmed size would stall the first insert chunk that needs it.
         """
@@ -135,18 +137,19 @@ class LevelingPolicy(CompactionPolicy):
 # --------------------------------------------------------------------------
 
 def merge_buffer_to_level0_impl(p: SLSMParams, state: SLSMState,
-                                drop_tombstones: bool) -> SLSMState:
+                                drop_annihilated: bool) -> SLSMState:
     """Flush ceil(m*R_eff) oldest memory runs into disk level 0 (paper
     2.1/2.5). R_eff == R unless the tuner's write-buffer arm shrank the
     active buffer (DESIGN.md §9); level-0 capacity is sized from the
     physical R, so a smaller flush always fits."""
     be = get_backend(p.backend)
     mr = p.runs_merged_eff
-    k, v, s, cnt = be.merge_runs(state.buf_keys[:mr], state.buf_vals[:mr],
-                                 state.buf_seqs[:mr], drop_tombstones)
-    k, v, s, filt, fences, mn, mx = index_new_run(p, 0, k, v, s, cnt)
+    k, v, w, s, cnt = be.merge_runs(state.buf_keys[:mr], state.buf_vals[:mr],
+                                    state.buf_wts[:mr], state.buf_seqs[:mr],
+                                    drop_annihilated)
+    k, v, w, s, filt, fences, mn, mx = index_new_run(p, 0, k, v, w, s, cnt)
     lv0 = set_level_run(state.levels[0], state.levels[0].n_runs,
-                        k, v, s, cnt, filt, fences, mn, mx)
+                        k, v, w, s, cnt, filt, fences, mn, mx)
 
     def roll(a, fill):
         tail_shape = (mr,) + a.shape[1:]
@@ -155,10 +158,11 @@ def merge_buffer_to_level0_impl(p: SLSMParams, state: SLSMState,
     return state._replace(
         buf_keys=roll(state.buf_keys, KEY_EMPTY),
         buf_vals=roll(state.buf_vals, 0),
+        buf_wts=roll(state.buf_wts, 0),
         buf_seqs=roll(state.buf_seqs, 0),
         buf_counts=roll(state.buf_counts, 0),
         buf_mins=roll(state.buf_mins, KEY_EMPTY),
-        buf_maxs=roll(state.buf_maxs, TOMBSTONE),
+        buf_maxs=roll(state.buf_maxs, _KEY_MIN),
         buf_blooms=roll(state.buf_blooms, 0),
         run_count=state.run_count - mr,
         levels=(lv0,) + state.levels[1:],
@@ -171,18 +175,21 @@ merge_buffer_to_level0 = functools.partial(
 
 
 def merge_level_down_impl(p: SLSMParams, state: SLSMState, level: int,
-                          n_merge: int, drop_tombstones: bool) -> SLSMState:
+                          n_merge: int, drop_annihilated: bool) -> SLSMState:
     """Merge the `n_merge` oldest runs of `level` into one run of `level+1`.
 
     `n_merge` is the policy's `runs_to_spill` (ceil(m*D) for tiering, the
     level's occupancy for leveling)."""
     be = get_backend(p.backend)
     src = state.levels[level]
-    k, v, s, cnt = be.merge_runs(src.keys[:n_merge], src.vals[:n_merge],
-                                 src.seqs[:n_merge], drop_tombstones)
-    k, v, s, filt, fences, mn, mx = index_new_run(p, level + 1, k, v, s, cnt)
+    k, v, w, s, cnt = be.merge_runs(src.keys[:n_merge], src.vals[:n_merge],
+                                    src.wts[:n_merge], src.seqs[:n_merge],
+                                    drop_annihilated)
+    k, v, w, s, filt, fences, mn, mx = index_new_run(p, level + 1,
+                                                     k, v, w, s, cnt)
     dst = state.levels[level + 1]
-    dst = set_level_run(dst, dst.n_runs, k, v, s, cnt, filt, fences, mn, mx)
+    dst = set_level_run(dst, dst.n_runs, k, v, w, s, cnt, filt, fences,
+                        mn, mx)
     src = shift_level(p, src, n_merge)
     levels = (state.levels[:level] + (src, dst)
               + state.levels[level + 2:])
@@ -197,18 +204,18 @@ merge_level_down = functools.partial(
 def compact_last_level_impl(p: SLSMParams, state: SLSMState):
     """In-place compaction of the deepest level: merge all D runs into slot 0.
 
-    This is always the deepest data, so tombstones are committed here
-    (paper 2.5: 'keys flagged for delete are not written ... at all').
+    This is always the deepest data, so annihilation commits here (paper
+    2.5: 'keys flagged for delete are not written ... at all' — the
+    newest record's weight sums to <= 0 and the row is dropped).
     Returns (state, raw_count); the host raises if raw_count exceeds the
     deepest run capacity (the TPU analogue of running out of disk)."""
     be = get_backend(p.backend)
     last = p.max_levels - 1
     lv = state.levels[last]
-    k, v, s, cnt = be.merge_runs(lv.keys, lv.vals, lv.seqs,
-                                 drop_tombstones=True)
-    k, v, s, filt, fences, mn, mx = index_new_run(p, last, k, v, s, cnt)
+    k, v, w, s, cnt = be.merge_runs(lv.keys, lv.vals, lv.wts, lv.seqs, True)
+    k, v, w, s, filt, fences, mn, mx = index_new_run(p, last, k, v, w, s, cnt)
     fresh = empty_level(p, last)
-    fresh = set_level_run(fresh, 0, k, v, s,
+    fresh = set_level_run(fresh, 0, k, v, w, s,
                           jnp.minimum(cnt, p.level_cap(last)),
                           filt, fences, mn, mx)
     return state._replace(levels=state.levels[:last] + (fresh,)), cnt

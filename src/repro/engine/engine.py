@@ -20,18 +20,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 from repro.engine import tape as TP
 from repro.engine import wal as WAL
 from repro.engine.backend import get_backend
 from repro.engine.batching import (ADAPTIVE_BUCKETS, RANGE_BUCKETS,
                                    TAPE_BUCKETS, adaptive_bucket,
-                                   bucket_pow2, pad_to, range_many_host)
+                                   bucket_pow2, pad_to, range_bucket,
+                                   range_many_host)
 from repro.engine.compaction import (CompactionPolicy, LevelingPolicy,
                                      TieringPolicy)
 from repro.engine.memtable import init_state, stage_append
-from repro.engine.read_path import (level_probe_stats, lookup_batch,
-                                    lookup_many, range_many, range_query)
+from repro.engine.read_path import (aggregate_many, level_probe_stats,
+                                    lookup_batch, lookup_many, range_many,
+                                    range_query)
 from repro.engine.scheduler import MergeScheduler
 from repro.engine.tuner import READ, ReadModePolicy, Tuner, retune_filters
 
@@ -57,23 +59,20 @@ def reject_reserved(keys: np.ndarray, vals: np.ndarray | None = None,
                     op: str = "insert") -> None:
     """Reserved-sentinel guard at the public API boundary.
 
-    KEY_EMPTY (INT32_MAX) is the engine's padding/empty-slot key and
-    TOMBSTONE (INT32_MIN) its delete marker value; letting either in from
-    user data would alias padding (silently dropped keys) or deletes
-    (vanishing values), and a lookup of KEY_EMPTY can false-positive
-    against empty stage slots. Both drivers call this before touching
-    device state.
+    KEY_EMPTY (INT32_MAX) is the engine's padding/empty-slot key;
+    letting it in from user data would alias padding (silently dropped
+    keys), and a lookup of KEY_EMPTY can false-positive against empty
+    stage slots. Values are unrestricted: deletes are carried by the
+    record's weight lane (DESIGN.md §13), not a reserved value, so
+    every int32 — including the historical TOMBSTONE bit pattern — is a
+    legal payload. Both drivers call this before touching device state.
     """
+    del vals  # no reserved values under the weighted record algebra
     if keys.size and (keys == KEY_EMPTY).any():
         raise ValueError(
             f"{op}: key {int(KEY_EMPTY)} (KEY_EMPTY/INT32_MAX) is reserved "
             "as the engine's empty-slot sentinel and cannot be stored or "
             "queried")
-    if vals is not None and vals.size and (vals == TOMBSTONE).any():
-        raise ValueError(
-            f"{op}: value {int(TOMBSTONE)} (TOMBSTONE/INT32_MIN) is "
-            "reserved as the delete marker; storing it would make the key "
-            "unreadable — use delete() instead")
 
 
 class SLSM:
@@ -107,7 +106,10 @@ class SLSM:
         # deferred); reads/writes feed the tuner's workload-mix signal
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
                                          compactions=0, backlog_peak=0,
-                                         retunes=0, reads=0, writes=0)
+                                         retunes=0, reads=0, writes=0,
+                                         rows_merged_in=0, rows_merged_out=0,
+                                         rows_annihilated=0,
+                                         ghost_payload_bytes_skipped=0)
         # durability surface (DESIGN.md §12): None (default) = volatile
         # engine, a path or wal.Durability = WAL every write op +
         # snapshot on demand; _replaying suppresses re-logging while
@@ -128,41 +130,46 @@ class SLSM:
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
         reject_reserved(keys, vals, op="insert")
-        self._insert(keys, vals)
+        self._insert(keys, vals, np.ones_like(keys))
 
-    def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
-        """Post-validation write path (delete() enters here: its tombstone
-        values are the engine's own, not user data). With durability on,
-        the whole op is logged as one WAL record before any device state
-        changes and group-committed before returning (one fsync per
-        driver call, not per chunk — DESIGN.md §12)."""
+    def _insert(self, keys: np.ndarray, vals: np.ndarray,
+                wts: np.ndarray) -> None:
+        """Post-validation weighted write path (delete() enters here with
+        weight -1 records). With durability on, the whole op is logged as
+        one WAL record before any device state changes and
+        group-committed before returning (one fsync per driver call, not
+        per chunk — DESIGN.md §12)."""
         log = (self.durability is not None and not self._replaying
                and len(keys) > 0)
         if log:
-            self.durability.log_write(keys, vals)
+            self.durability.log_write(keys, vals, wts)
         self.stats["writes"] += len(keys)
         self.tuner.note_writes(len(keys))
         rn = self.p.Rn
         for off in range(0, len(keys), rn):
             ck, cv = keys[off:off + rn], vals[off:off + rn]
+            cw = wts[off:off + rn]
             n = len(ck)
             if n < rn:
                 ck = np.pad(ck, (0, rn - n), constant_values=KEY_EMPTY)
                 cv = np.pad(cv, (0, rn - n))
+                cw = np.pad(cw, (0, rn - n))
             self.state = stage_append(self.p_active, self.state,
                                       jnp.asarray(ck), jnp.asarray(cv),
-                                      jnp.int32(n))
+                                      jnp.asarray(cw), jnp.int32(n))
             self.scheduler.on_chunk()
         if log:
             self.durability.sync()
 
     def delete(self, keys) -> None:
-        """Deletes are tombstone inserts (paper 2.8); they commit — i.e.
-        the key-value pairs vanish — when a merge creates the deepest data
+        """Deletes are weight -1 records (paper 2.8 tombstones, recast as
+        the Z-set retraction — DESIGN.md §13); a key's presence is the
+        sign of its newest record's weight, and the pair physically
+        vanishes (annihilates) when a merge creates the deepest data
         (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         reject_reserved(keys, op="delete")
-        self._insert(keys, np.full_like(keys, TOMBSTONE))
+        self._insert(keys, np.zeros_like(keys), np.full_like(keys, -1))
 
     def drain(self) -> None:
         """Merge barrier: retire every pending maintenance step. After
@@ -272,8 +279,9 @@ class SLSM:
                            jnp.int32(hi))
 
     def range(self, lo: int, hi: int, return_truncated: bool = False):
-        """Range query [lo, hi) (paper 2.9): newest-wins, tombstones
-        dropped, key-sorted; truncated at `max_range` results. With
+        """Range query [lo, hi) (paper 2.9): newest-wins, deleted keys
+        (negative newest weight) dropped, key-sorted; truncated at
+        `max_range` results. With
         `return_truncated`, also returns whether the result is only a
         prefix of the window (more than max_range live keys, or a
         `range_cand` budget overflow — the result is exact iff False).
@@ -302,6 +310,44 @@ class SLSM:
                                            los, his, n),
             self.p.max_range, ranges)
 
+    def aggregate_many(self, ranges):
+        """Batched windowed aggregates: ``count(lo, hi)`` and
+        ``sum(lo, hi)`` over the live keys of each window ``[(lo, hi),
+        ...)`` in ONE device dispatch (DESIGN.md §13). Rides the same
+        fence-pruned candidate gather as `range_many` but reduces the
+        merged survivor mask on-device instead of materializing rows, so
+        a window's aggregate is exact past `max_range` — only a
+        `range_cand` candidate-budget overflow (reported per-row in
+        `truncated`) can clip it.
+
+        Returns ``(counts (Q,), sums (Q,), truncated (Q,))`` as numpy
+        arrays; sums use the engine's int32 wraparound arithmetic."""
+        r = np.asarray(ranges, np.int32).reshape(-1, 2)
+        q = r.shape[0]
+        if q == 0:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, bool))
+        width = range_bucket(q)
+        los = np.zeros(width, np.int32)
+        his = np.zeros(width, np.int32)
+        los[:q], his[:q] = r[:, 0], r[:, 1]
+        c, s, t = aggregate_many(self.p_active, self.state,
+                                 jnp.asarray(los), jnp.asarray(his),
+                                 jnp.int32(q))
+        return np.asarray(c)[:q], np.asarray(s)[:q], np.asarray(t)[:q]
+
+    def count(self, lo: int, hi: int) -> int:
+        """Live-key count over [lo, hi) (exact; one-window
+        `aggregate_many`)."""
+        c, _, _ = self.aggregate_many([(lo, hi)])
+        return int(c[0])
+
+    def sum(self, lo: int, hi: int) -> int:
+        """Sum of live values over [lo, hi) (int32 wraparound; one-window
+        `aggregate_many`)."""
+        _, s, _ = self.aggregate_many([(lo, hi)])
+        return int(s[0])
+
     # -- mixed-op tape (repro.engine.tape, DESIGN.md §11) -------------------
     def tape_write_capacity(self) -> int:
         """Max write keys the next `run_tape` call may carry, under the
@@ -325,10 +371,10 @@ class SLSM:
         """Execute a coalesced mixed-op window as ONE device dispatch.
 
         `chunks` is a stream-ordered sequence of `tape.TapeChunk`s (or
-        ``(kind, keys, vals)`` tuples): ``write`` chunks stage key/value
-        pairs (a TOMBSTONE value is a delete — the engine's own marker
-        is legal here, unlike `insert`), ``lookup`` chunks carry point
-        queries, ``range`` chunks carry (lo, hi) window bounds. The
+        ``(kind, keys, vals)`` tuples): ``write`` chunks stage weighted
+        records — `wts` lanes of +1 (insert) or -1 (delete), all +1 when
+        omitted — ``lookup`` chunks carry point queries, ``range``
+        chunks carry (lo, hi) window bounds. The
         whole window lowers to one `lax.scan` over tagged slots
         (`tape.tape_exec`), so a mixed stream pays one host->device
         launch and one device->host sync instead of one per op — the
@@ -380,8 +426,10 @@ class SLSM:
                 if ch.kind == "write":
                     k = np.asarray(ch.keys, np.int32).reshape(-1)
                     if k.size:
+                        w = (np.ones_like(k) if ch.wts is None
+                             else np.asarray(ch.wts, np.int32).reshape(-1))
                         self.durability.log_write(
-                            k, np.asarray(ch.vals, np.int32).reshape(-1))
+                            k, np.asarray(ch.vals, np.int32).reshape(-1), w)
         results = [0] * len(chunks)
         # stream-ordered work list of (original chunk index, chunk);
         # oversized writes split across segments under the same index
@@ -395,14 +443,16 @@ class SLSM:
                 if ch.kind == "write":
                     k = np.asarray(ch.keys, np.int32).reshape(-1)
                     v = np.asarray(ch.vals, np.int32).reshape(-1)
+                    w = (np.ones_like(k) if ch.wts is None
+                         else np.asarray(ch.wts, np.int32).reshape(-1))
                     if budget <= 0:
                         break
                     if k.size > budget:
                         seg.append(TP.TapeChunk("write", k[:budget],
-                                                v[:budget]))
+                                                v[:budget], w[:budget]))
                         seg_idx.append(i)
                         work[0] = (i, TP.TapeChunk("write", k[budget:],
-                                                   v[budget:]))
+                                                   v[budget:], w[budget:]))
                         budget = 0
                         continue
                     budget -= k.size
@@ -414,11 +464,11 @@ class SLSM:
                                        int(self.state.stage_count), seg)
             if seals:
                 self.scheduler.reserve_run_slots(seals)
-            ops, keys, vals, nv = TP.build_tape(self.p_active, seg)
+            ops, keys, vals, wts, nv = TP.build_tape(self.p_active, seg)
             self.state, ys = TP.tape_exec(
                 self.p_active, self.state, jnp.asarray(ops),
-                jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(nv),
-                sparse, self.tuner.enabled)
+                jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(wts),
+                jnp.asarray(nv), sparse, self.tuner.enabled)
             for i, res in zip(seg_idx, TP.unpack_tape(self.p_active, seg, ys)):
                 if chunks[i].kind == "write":
                     results[i] += res
@@ -468,6 +518,7 @@ class SLSM:
                     outs.append(TP.tape_exec(
                         pa, st, jnp.zeros((t,), jnp.int32),
                         jnp.full((t, pa.Rn), KEY_EMPTY, jnp.int32),
+                        jnp.zeros((t, pa.Rn), jnp.int32),
                         jnp.zeros((t, pa.Rn), jnp.int32),
                         jnp.zeros((t,), jnp.int32), False, skip))
         jax.block_until_ready(outs)
@@ -522,7 +573,8 @@ class SLSM:
         """Engine fingerprint for the WAL's META record: enough to
         rebuild — and refuse to mix up — this engine configuration."""
         return {"driver": "slsm", "params": WAL.params_to_dict(self.p),
-                "policy": _policy_kind(self.policy)}
+                "policy": _policy_kind(self.policy),
+                "wal": WAL.WAL_FORMAT}
 
     def _snapshot_meta(self) -> dict:
         """Host-side state that rides a snapshot beside the pytree
@@ -579,9 +631,9 @@ class SLSM:
         try:
             n = 0
             for rec in records:
-                if rec.kind == WAL.REC_WRITE:
-                    k, v = WAL.decode_write(rec.payload)
-                    self._insert(k, v)
+                if rec.kind in WAL.WRITE_KINDS:
+                    k, v, w = WAL.decode_write(rec.payload, rec.kind)
+                    self._insert(k, v, w)
                 elif rec.kind == WAL.REC_RETUNE:
                     if self.tuner.enabled:
                         self.tuner.target = rec.payload.decode()
@@ -638,7 +690,8 @@ class SLSM:
     @property
     def n_live(self) -> int:
         """Resident elements across stage + memory runs + disk levels
-        (duplicates/tombstones count until a merge elides them)."""
+        (duplicates and negative-weight delete records count until a
+        merge annihilates them)."""
         n = int(self.state.stage_count) + int(self.state.buf_counts.sum())
         for lv in self.state.levels:
             n += int(lv.counts.sum())

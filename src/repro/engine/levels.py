@@ -2,7 +2,9 @@
 
 A level is a statically-shaped pytree: run payloads plus the per-run
 index structures the paper attaches to disk runs — min/max keys, a Bloom
-filter, and fence pointers every mu slots. Slot 0 is always the oldest
+filter, and fence pointers every mu slots. Runs are weighted-record SoA
+(DESIGN.md §13): the weight plane rides next to keys/seqs in the merge
+lanes, the payload plane stays separate. Slot 0 is always the oldest
 resident run; `shift_level` preserves that invariant when runs spill.
 """
 from __future__ import annotations
@@ -14,15 +16,19 @@ import jax.numpy as jnp
 
 from repro.core import bloom as BL
 from repro.core import runs as RU
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 
 I32 = jnp.int32
+
+# -inf key sentinel for "max key of an empty run"
+_KEY_MIN = -(2 ** 31)
 
 
 class LevelState(NamedTuple):
     """One disk tier: D immutable sorted runs (paper 2.4)."""
     keys: jax.Array    # (D, cap_l) sorted ascending, KEY_EMPTY padded
     vals: jax.Array    # (D, cap_l)
+    wts: jax.Array     # (D, cap_l) record weights: +1 insert, -1 delete
     seqs: jax.Array    # (D, cap_l)
     counts: jax.Array  # (D,)
     mins: jax.Array    # (D,)
@@ -40,17 +46,18 @@ def empty_level(p: SLSMParams, level: int) -> LevelState:
     return LevelState(
         keys=jnp.full((p.D, cap), KEY_EMPTY, I32),
         vals=jnp.zeros((p.D, cap), I32),
+        wts=jnp.zeros((p.D, cap), I32),
         seqs=jnp.zeros((p.D, cap), I32),
         counts=jnp.zeros((p.D,), I32),
         mins=jnp.full((p.D,), KEY_EMPTY, I32),
-        maxs=jnp.full((p.D,), TOMBSTONE, I32),
+        maxs=jnp.full((p.D,), _KEY_MIN, I32),
         blooms=jnp.zeros((p.D, w), jnp.uint32),
         fences=jnp.full((p.D, p.n_fences(level)), KEY_EMPTY, I32),
         n_runs=jnp.zeros((), I32),
     )
 
 
-def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
+def index_new_run(p: SLSMParams, level: int, k, v, w_, s, cnt):
     """Pad a merged run to level capacity; build its Bloom filter and
     min/max index (paper 2.3) and fence pointers every mu slots (2.4).
 
@@ -65,7 +72,7 @@ def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
     w = p.bloom_words_physical(cap, p.level_eps(level))
     pad = cap - k.shape[0]
     if pad < 0:  # deepest-level compaction scratch is larger than cap
-        k, v, s = k[:cap], v[:cap], s[:cap]
+        k, v, w_, s = k[:cap], v[:cap], w_[:cap], s[:cap]
     # build the filter at the pre-pad width: a spill's merged run is often
     # far narrower than its destination capacity (the deepest level's xD
     # bonus especially), and the scatter inside bloom_build processes
@@ -77,18 +84,20 @@ def index_new_run(p: SLSMParams, level: int, k, v, s, cnt):
     if pad > 0:
         k = jnp.concatenate([k, jnp.full((pad,), KEY_EMPTY, I32)])
         v = jnp.concatenate([v, jnp.zeros((pad,), I32)])
+        w_ = jnp.concatenate([w_, jnp.zeros((pad,), I32)])
         s = jnp.concatenate([s, jnp.zeros((pad,), I32)])
     fences = RU.build_fences(k, p.mu, p.n_fences(level))
     mn, mx = RU.run_minmax(k, cnt)
-    return k, v, s, filt, fences, mn, mx
+    return k, v, w_, s, filt, fences, mn, mx
 
 
-def set_level_run(lv: LevelState, slot, k, v, s, cnt, filt, fences, mn, mx,
+def set_level_run(lv: LevelState, slot, k, v, w, s, cnt, filt, fences, mn, mx,
                   bump: int = 1) -> LevelState:
     """Install an indexed run into `slot` (runs land append-order, newest
     last — the recency order Do-Merge relies on, paper 2.5)."""
     return lv._replace(
         keys=lv.keys.at[slot].set(k), vals=lv.vals.at[slot].set(v),
+        wts=lv.wts.at[slot].set(w),
         seqs=lv.seqs.at[slot].set(s), counts=lv.counts.at[slot].set(cnt),
         mins=lv.mins.at[slot].set(mn), maxs=lv.maxs.at[slot].set(mx),
         blooms=lv.blooms.at[slot].set(filt),
@@ -106,8 +115,9 @@ def shift_level(p: SLSMParams, lv: LevelState, n: int) -> LevelState:
         return jnp.concatenate([a[n:], jnp.full(tail_shape, fill, a.dtype)])
     return LevelState(
         keys=roll(lv.keys, KEY_EMPTY), vals=roll(lv.vals, 0),
+        wts=roll(lv.wts, 0),
         seqs=roll(lv.seqs, 0), counts=roll(lv.counts, 0),
-        mins=roll(lv.mins, KEY_EMPTY), maxs=roll(lv.maxs, TOMBSTONE),
+        mins=roll(lv.mins, KEY_EMPTY), maxs=roll(lv.maxs, _KEY_MIN),
         blooms=roll(lv.blooms, 0), fences=roll(lv.fences, KEY_EMPTY),
         n_runs=lv.n_runs - n,
     )

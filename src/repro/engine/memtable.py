@@ -7,6 +7,9 @@ duplicate keys (3.9.1) is the newest-wins dedup. Sealing turns Rn staged
 elements into an immutable sorted run with a Bloom filter and min/max
 index — the moment the active skiplist becomes a memory run.
 
+Records are weighted (DESIGN.md §13): every lane carries a weight (+1
+insert, -1 delete) in its own SoA plane alongside keys/vals/seqs.
+
 Every op here exists in two forms: `<name>_impl` (pure, vmappable —
 the sharded engine maps them over the shard axis) and the jitted,
 donating single-tree wrapper the `SLSM` driver calls.
@@ -21,21 +24,26 @@ import jax.numpy as jnp
 
 from repro.core import bloom as BL
 from repro.core import runs as RU
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 from repro.engine.levels import LevelState, empty_level
 
 I32 = jnp.int32
+
+# -inf key sentinel for "max key of an empty run"
+_KEY_MIN = -(2 ** 31)
 
 
 class SLSMState(NamedTuple):
     # staging buffer == the active run (kept key-sorted, newest-wins deduped)
     stage_keys: jax.Array   # (2*Rn,)
     stage_vals: jax.Array
+    stage_wts: jax.Array    # (2*Rn,) record weights: +1 insert, -1 delete
     stage_seqs: jax.Array
     stage_count: jax.Array  # ()
     # sealed memory runs
     buf_keys: jax.Array     # (R, Rn)
     buf_vals: jax.Array
+    buf_wts: jax.Array      # (R, Rn)
     buf_seqs: jax.Array
     buf_counts: jax.Array   # (R,)
     buf_mins: jax.Array     # (R,)
@@ -55,14 +63,16 @@ def init_state(p: SLSMParams, n_levels: int = 0) -> SLSMState:
     return SLSMState(
         stage_keys=jnp.full((p.stage_cap,), KEY_EMPTY, I32),
         stage_vals=jnp.zeros((p.stage_cap,), I32),
+        stage_wts=jnp.zeros((p.stage_cap,), I32),
         stage_seqs=jnp.zeros((p.stage_cap,), I32),
         stage_count=jnp.zeros((), I32),
         buf_keys=jnp.full((p.R, p.Rn), KEY_EMPTY, I32),
         buf_vals=jnp.zeros((p.R, p.Rn), I32),
+        buf_wts=jnp.zeros((p.R, p.Rn), I32),
         buf_seqs=jnp.zeros((p.R, p.Rn), I32),
         buf_counts=jnp.zeros((p.R,), I32),
         buf_mins=jnp.full((p.R,), KEY_EMPTY, I32),
-        buf_maxs=jnp.full((p.R,), TOMBSTONE, I32),
+        buf_maxs=jnp.full((p.R,), _KEY_MIN, I32),
         buf_blooms=jnp.zeros((p.R, wb), jnp.uint32),
         run_count=jnp.zeros((), I32),
         next_seq=jnp.zeros((), I32),
@@ -75,17 +85,21 @@ def init_state(p: SLSMParams, n_levels: int = 0) -> SLSMState:
 # --------------------------------------------------------------------------
 
 def stage_append_impl(p: SLSMParams, state: SLSMState, keys: jax.Array,
-                      vals: jax.Array, n_valid: jax.Array) -> SLSMState:
+                      vals: jax.Array, wts: jax.Array,
+                      n_valid: jax.Array) -> SLSMState:
     """Append an Rn-sized chunk into the active run, then re-sort + dedup.
 
     The active skiplist's O(log Rn) ordered insert becomes a batched
     sort of the 2*Rn staging region; the paper's in-place update of
-    duplicate keys (3.9.1) is the newest-wins dedup.
+    duplicate keys (3.9.1) is the newest-wins dedup (each record
+    retracts its predecessor, so keeping the newest IS the telescoped
+    weight sum — DESIGN.md §13).
     """
     rn = p.Rn
     pos = jnp.arange(rn, dtype=I32)
     valid = pos < n_valid
     ck = jnp.where(valid, keys.astype(I32), KEY_EMPTY)
+    cw = jnp.where(valid, wts.astype(I32), 0)
     # seqnos only on valid lanes: next_seq advances by n_valid, so stamping
     # padded lanes (pos >= n_valid) would collide with the NEXT chunk's
     # live seqnos — masked to 0, the same dead value compact() uses
@@ -93,12 +107,14 @@ def stage_append_impl(p: SLSMParams, state: SLSMState, keys: jax.Array,
     sk = jax.lax.dynamic_update_slice(state.stage_keys, ck, (state.stage_count,))
     sv = jax.lax.dynamic_update_slice(state.stage_vals, vals.astype(I32),
                                       (state.stage_count,))
+    sw = jax.lax.dynamic_update_slice(state.stage_wts, cw, (state.stage_count,))
     ss = jax.lax.dynamic_update_slice(state.stage_seqs, cs, (state.stage_count,))
-    k, v, s = RU.sort_by_key_seq(sk, sv, ss)
-    ok = RU.newest_wins_mask(k, v, drop_tombstones=False)
-    k, v, s, cnt = RU.compact(k, v, s, ok)
-    return state._replace(stage_keys=k, stage_vals=v, stage_seqs=s,
-                          stage_count=cnt, next_seq=state.next_seq + n_valid)
+    k, v, w, s = RU.sort_records(sk, sv, sw, ss)
+    ok = RU.survivor_mask(k, w, drop_annihilated=False)
+    k, v, w, s, cnt = RU.compact(k, v, w, s, ok)
+    return state._replace(stage_keys=k, stage_vals=v, stage_wts=w,
+                          stage_seqs=s, stage_count=cnt,
+                          next_seq=state.next_seq + n_valid)
 
 
 stage_append = functools.partial(jax.jit, static_argnums=0,
@@ -114,18 +130,20 @@ def seal_run_impl(p: SLSMParams, state: SLSMState) -> SLSMState:
     rn = p.Rn
     bits, _, kk = p.bloom_geometry(rn, p.mem_eps)
     wb = p.bloom_words_physical(rn, p.mem_eps)
-    rk, rv, rs = (state.stage_keys[:rn], state.stage_vals[:rn],
-                  state.stage_seqs[:rn])
+    rk, rv, rw, rs = (state.stage_keys[:rn], state.stage_vals[:rn],
+                      state.stage_wts[:rn], state.stage_seqs[:rn])
     slot = state.run_count
     filt = BL.bloom_build(rk, jnp.ones((rn,), bool), wb, kk, bits)
     empty_tail = jnp.full((rn,), KEY_EMPTY, I32)
     return state._replace(
         stage_keys=jnp.concatenate([state.stage_keys[rn:], empty_tail]),
         stage_vals=jnp.concatenate([state.stage_vals[rn:], jnp.zeros_like(empty_tail)]),
+        stage_wts=jnp.concatenate([state.stage_wts[rn:], jnp.zeros_like(empty_tail)]),
         stage_seqs=jnp.concatenate([state.stage_seqs[rn:], jnp.zeros_like(empty_tail)]),
         stage_count=state.stage_count - rn,
         buf_keys=state.buf_keys.at[slot].set(rk),
         buf_vals=state.buf_vals.at[slot].set(rv),
+        buf_wts=state.buf_wts.at[slot].set(rw),
         buf_seqs=state.buf_seqs.at[slot].set(rs),
         buf_counts=state.buf_counts.at[slot].set(rn),
         buf_mins=state.buf_mins.at[slot].set(rk[0]),

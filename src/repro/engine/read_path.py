@@ -1,9 +1,13 @@
-"""Read path (paper 2.7/2.9): point lookups and range queries.
+"""Read path (paper 2.7/2.9): point lookups, range queries, aggregates.
 
 Lookups walk newest -> oldest across every structure — staging buffer,
 sealed memory runs, then each disk level — keeping the match with the
-highest seqno. Disk levels are gated by min/max windows AND Bloom
-positives (paper 2.3) before any page is touched.
+highest seqno. Records are weighted (DESIGN.md §13): presence is the
+sign of the newest record's weight (each op retracts its predecessor, so
+the per-key weight sum telescopes to the newest record's weight — a
+negative weight IS the key's absence; no reserved value in the payload
+domain). Disk levels are gated by min/max windows AND Bloom positives
+(paper 2.3) before any page is touched.
 
 Two disk-search strategies:
   dense  — every (run, query) pair does the fence+page work, gated after
@@ -27,7 +31,9 @@ merges them through the backend's sorted-segment merge-dedup op — the
 jnp row sort or the Pallas `range_merge` tournament kernel — so a
 scan's device work tracks its window, not the tree's capacity.
 `range_many` is the batched multi-scan form, padded and bucketed like
-`lookup_many`.
+`lookup_many`. `aggregate_many` rides the same candidate machinery but
+reduces the merged keep mask directly — count(lo, hi) and sum(lo, hi)
+without materializing rows, and without the `max_range` cut.
 
 All ops exist as pure `_impl` forms (vmappable — the sharded engine maps
 the dense lookup over shards) plus jitted wrappers. `lookup_many` is the
@@ -43,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import KEY_EMPTY, SEQ_NONE, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SEQ_NONE, SLSMParams
 from repro.engine.backend import (candidate_gate, fence_window_bounds,
                                   get_backend, lookup_level_many,
                                   strided_fences)
@@ -56,43 +62,49 @@ from repro.engine.memtable import SLSMState
 I32 = jnp.int32
 
 
-def consider(best_seq, best_val, seq_c, val_c):
+def consider(best_seq, best_val, best_wt, seq_c, val_c, wt_c):
     """Newest-wins fold (paper 2.7): keep the candidate iff its seqno is
-    higher — the batched form of 'the highest-ranked run wins'."""
+    higher — the batched form of 'the highest-ranked run wins'. The
+    weight rides with the winner: presence is decided once, at the end,
+    from the newest record's weight sign."""
     take = seq_c > best_seq
     return (jnp.where(take, seq_c, best_seq),
-            jnp.where(take, val_c, best_val))
+            jnp.where(take, val_c, best_val),
+            jnp.where(take, wt_c, best_wt))
 
 
 def search_stage(state: SLSMState, qs: jax.Array):
     """Probe the staging buffer (the active run, paper 2.1) for Q queries;
-    returns per-query (seq, val) with seq=SEQ_NONE on miss."""
+    returns per-query (seq, val, wt) with seq=SEQ_NONE on miss."""
     eq = state.stage_keys[None, :] == qs[:, None]            # (Q, 2Rn)
     seqm = jnp.where(eq, state.stage_seqs[None, :], SEQ_NONE)
     j = jnp.argmax(seqm, axis=1)
     seq_c = jnp.take_along_axis(seqm, j[:, None], axis=1)[:, 0]
-    val_c = state.stage_vals[j]
-    return seq_c, jnp.where(seq_c >= 0, val_c, 0)
+    hit = seq_c >= 0
+    return (seq_c, jnp.where(hit, state.stage_vals[j], 0),
+            jnp.where(hit, state.stage_wts[j], 0))
 
 
-def search_sorted_run(keys, vals, seqs, count, qs):
+def search_sorted_run(keys, vals, wts, seqs, count, qs):
     """Binary search one sorted run for a batch of queries (paper 2.7:
     memory runs are searched directly — no fence pointers)."""
     i = jnp.searchsorted(keys, qs).astype(I32)
     ic = jnp.minimum(i, keys.shape[0] - 1)
     hit = (i < count) & (keys[ic] == qs)
-    return (jnp.where(hit, seqs[ic], SEQ_NONE), jnp.where(hit, vals[ic], 0))
+    return (jnp.where(hit, seqs[ic], SEQ_NONE), jnp.where(hit, vals[ic], 0),
+            jnp.where(hit, wts[ic], 0))
 
 
 def search_memory_runs(state: SLSMState, qs: jax.Array):
     """All R sealed memory runs in one vmapped pass (paper 2.2/2.7);
     newest-wins across runs via the per-query argmax over seqnos."""
-    seqs_r, vals_r = jax.vmap(
-        lambda k, v, s, c: search_sorted_run(k, v, s, c, qs)
-    )(state.buf_keys, state.buf_vals, state.buf_seqs, state.buf_counts)
+    seqs_r, vals_r, wts_r = jax.vmap(
+        lambda k, v, w, s, c: search_sorted_run(k, v, w, s, c, qs)
+    )(state.buf_keys, state.buf_vals, state.buf_wts, state.buf_seqs,
+      state.buf_counts)
     j = jnp.argmax(seqs_r, axis=0)                            # (Q,)
     q_iota = jnp.arange(qs.shape[0])
-    return seqs_r[j, q_iota], vals_r[j, q_iota]
+    return seqs_r[j, q_iota], vals_r[j, q_iota], wts_r[j, q_iota]
 
 
 def level_gate(p: SLSMParams, lv: LevelState, level: int, qs: jax.Array):
@@ -125,9 +137,10 @@ def search_level_dense(p: SLSMParams, lv: LevelState, level: int,
     seqs_d = jnp.where(hit, jnp.take_along_axis(lv.seqs, idxc, axis=1),
                        SEQ_NONE)
     vals_d = jnp.where(hit, jnp.take_along_axis(lv.vals, idxc, axis=1), 0)
+    wts_d = jnp.where(hit, jnp.take_along_axis(lv.wts, idxc, axis=1), 0)
     j = jnp.argmax(seqs_d, axis=0)
     q_iota = jnp.arange(qs.shape[0])
-    return seqs_d[j, q_iota], vals_d[j, q_iota]
+    return seqs_d[j, q_iota], vals_d[j, q_iota], wts_d[j, q_iota]
 
 
 def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
@@ -166,17 +179,22 @@ def search_level_sparse(p: SLSMParams, lv: LevelState, level: int,
         hit = (off < mu_eff) & (win[offc] == q) & (st + offc < lv.counts[d])
         idx = st + offc
         return (jnp.where(hit, lv.seqs[d, idx], SEQ_NONE),
-                jnp.where(hit, lv.vals[d, idx], 0))
+                jnp.where(hit, lv.vals[d, idx], 0),
+                jnp.where(hit, lv.wts[d, idx], 0))
 
-    seq_c, val_c = jax.vmap(one)(d_c, qk)
+    seq_c, val_c, wt_c = jax.vmap(one)(d_c, qk)
     seq_c = jnp.where(ok, seq_c, SEQ_NONE)
     best_seq = jnp.full((q_n,), SEQ_NONE, I32).at[q_c].max(
         jnp.where(ok, seq_c, SEQ_NONE), mode="drop")
     win_mask = ok & (seq_c == best_seq[q_c]) & (seq_c >= 0)
-    best_val = jnp.full((q_n,), np.iinfo(np.int32).min, I32).at[q_c].max(
-        jnp.where(win_mask, val_c, np.iinfo(np.int32).min), mode="drop")
-    best_val = jnp.where(best_seq >= 0, best_val, 0)
-    return best_seq, best_val
+    imin = np.iinfo(np.int32).min
+    best_val = jnp.full((q_n,), imin, I32).at[q_c].max(
+        jnp.where(win_mask, val_c, imin), mode="drop")
+    best_wt = jnp.full((q_n,), imin, I32).at[q_c].max(
+        jnp.where(win_mask, wt_c, imin), mode="drop")
+    found = best_seq >= 0
+    return (best_seq, jnp.where(found, best_val, 0),
+            jnp.where(found, best_wt, 0))
 
 
 def _skip_if_empty(occupied, search_fn, q_n: int):
@@ -192,14 +210,18 @@ def _skip_if_empty(occupied, search_fn, q_n: int):
     loss vs the ungated pass."""
     return jax.lax.cond(
         occupied, search_fn,
-        lambda: (jnp.full((q_n,), SEQ_NONE, I32), jnp.zeros((q_n,), I32)))
+        lambda: (jnp.full((q_n,), SEQ_NONE, I32), jnp.zeros((q_n,), I32),
+                 jnp.zeros((q_n,), I32)))
 
 
 def lookup_batch_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
                       sparse: bool = False, skip_empty: bool = False):
     """Point lookups, newest-to-oldest across every structure (paper 2.7).
 
-    Returns (vals, found). Tombstoned keys report found=False (paper 2.8).
+    Returns (vals, found). Deleted keys report found=False (paper 2.8):
+    the newest record's weight is negative — the telescoped Z-set weight
+    sum — so presence is its sign, and every int32 value (any payload
+    bit pattern) is storable and retrievable.
 
     ``skip_empty`` (static; the adaptive tuner's read path sets it) wraps
     the memory-run search and each disk level's pass in a traced
@@ -209,23 +231,26 @@ def lookup_batch_impl(p: SLSMParams, state: SLSMState, qs: jax.Array,
     """
     qs = qs.astype(I32)
     q_n = qs.shape[0]
-    best_seq, best_val = search_stage(state, qs)
+    best_seq, best_val, best_wt = search_stage(state, qs)
     if skip_empty:
-        s2, v2 = _skip_if_empty(state.run_count > 0,
-                                lambda: search_memory_runs(state, qs), q_n)
+        s2, v2, w2 = _skip_if_empty(state.run_count > 0,
+                                    lambda: search_memory_runs(state, qs),
+                                    q_n)
     else:
-        s2, v2 = search_memory_runs(state, qs)
-    best_seq, best_val = consider(best_seq, best_val, s2, v2)
+        s2, v2, w2 = search_memory_runs(state, qs)
+    best_seq, best_val, best_wt = consider(best_seq, best_val, best_wt,
+                                           s2, v2, w2)
     for level, lv in enumerate(state.levels):
         fn = search_level_sparse if sparse else search_level_dense
         if skip_empty:
-            s3, v3 = _skip_if_empty(
+            s3, v3, w3 = _skip_if_empty(
                 lv.n_runs > 0,
                 functools.partial(fn, p, lv, level, qs), q_n)
         else:
-            s3, v3 = fn(p, lv, level, qs)
-        best_seq, best_val = consider(best_seq, best_val, s3, v3)
-    found = (best_seq >= 0) & (best_val != TOMBSTONE)
+            s3, v3, w3 = fn(p, lv, level, qs)
+        best_seq, best_val, best_wt = consider(best_seq, best_val, best_wt,
+                                               s3, v3, w3)
+    found = (best_seq >= 0) & (best_wt > 0)
     return jnp.where(found, best_val, 0), found
 
 
@@ -300,7 +325,7 @@ def _range_group_bounds(p: SLSMParams, state: SLSMState, los: jax.Array,
 
     Returns a list of groups, one per structure family — the staging
     buffer, the sealed memory runs, then each materialized disk level —
-    each a tuple ``(keys2d (N, cap), vals2d, seqs2d, starts (Q, N),
+    each a tuple ``(keys2d (N, cap), vals2d, wts2d, seqs2d, starts (Q, N),
     ends (Q, N))``. Memory structures are bounded by plain binary
     search; disk runs go through the fence pointers
     (`backend.fence_window_bounds`) under the level's effective stride
@@ -318,10 +343,11 @@ def _range_group_bounds(p: SLSMParams, state: SLSMState, los: jax.Array,
     groups = []
     st, en = sorted_bounds(state.stage_keys, state.stage_count)
     groups.append((state.stage_keys[None], state.stage_vals[None],
-                   state.stage_seqs[None], st[:, None], en[:, None]))
+                   state.stage_wts[None], state.stage_seqs[None],
+                   st[:, None], en[:, None]))
     st, en = jax.vmap(sorted_bounds)(state.buf_keys, state.buf_counts)
-    groups.append((state.buf_keys, state.buf_vals, state.buf_seqs,
-                   st.T, en.T))
+    groups.append((state.buf_keys, state.buf_vals, state.buf_wts,
+                   state.buf_seqs, st.T, en.T))
     for level, lv in enumerate(state.levels):
         stride, mu_eff = p.fence_view(level)
         fences = strided_fences(lv.fences, stride)
@@ -339,40 +365,29 @@ def _range_group_bounds(p: SLSMParams, state: SLSMState, los: jax.Array,
         zeros = jnp.zeros((q_n, lv.keys.shape[0]), I32)
         st, en = jax.lax.cond(jnp.any(touched), level_bounds,
                               lambda: (zeros, zeros))
-        groups.append((lv.keys, lv.vals, lv.seqs, st, en))
+        groups.append((lv.keys, lv.vals, lv.wts, lv.seqs, st, en))
     return groups
 
 
-def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
-                    his: jax.Array):
-    """Q range scans [lo, hi) in one fused pass (paper 2.9, DESIGN.md §10).
+def _gather_candidates(p: SLSMParams, state: SLSMState, los: jax.Array,
+                       his: jax.Array):
+    """Front-compacted candidate gather shared by the range and aggregate
+    engines: fence-prune every structure to its in-window extent, fill
+    the static ``range_cand_eff`` budget sequentially, and apply the
+    budget-overflow cut (everything at or past the first key any
+    structure's extent was cut at is dropped, so dedup over the
+    survivors is exact — PR 3's contract, budgeted).
 
-    Per scan: fence-prune every structure to its contiguous in-window
-    extent, gather the extents front-compacted into one candidate row of
-    static width ``range_cand_eff`` (a budget, not per-structure
-    padding — a scan's device work is O(its window), never O(capacity)),
-    then one backend-dispatched sorted-segment merge applies newest-wins
-    dedup and tombstone elision before the single ``max_range`` cut.
-
-    Returns ``(keys (Q, max_range), vals, counts (Q,), truncated (Q,))``,
-    rows key-sorted and KEY_EMPTY-padded past their count. Exactness
-    contract: a result row is always a correct sorted *prefix* of the
-    window's live keys; ``truncated`` is False iff the row is the whole
-    window — it is raised when the live keys exceed ``max_range`` or
-    when the candidate budget overflowed (a structure's in-window extent
-    was cut; the result then stops at the first key the cut could have
-    affected, so stale versions and tombstones still cancel exactly —
-    PR 3's full-window dedup contract, budgeted).
+    Returns ``(k, v, w, s, offsets, partial)``: (Q, C) candidate lanes
+    (KEY_EMPTY / zero past each row's fill), (Q, P+1) exclusive segment
+    boundaries, and the (Q, P) per-part overflow flags.
     """
-    be = get_backend(p.backend)
-    mr = p.max_range
     cand = p.range_cand_eff(len(state.levels))
-    los, his = los.astype(I32), his.astype(I32)
     q_n = los.shape[0]
 
     groups = _range_group_bounds(p, state, los, his)
-    starts = jnp.concatenate([g[3] for g in groups], axis=1)   # (Q, P)
-    ends = jnp.concatenate([g[4] for g in groups], axis=1)
+    starts = jnp.concatenate([g[4] for g in groups], axis=1)   # (Q, P)
+    ends = jnp.concatenate([g[5] for g in groups], axis=1)
     exts = jnp.maximum(ends - starts, 0)
     n_parts = starts.shape[1]
 
@@ -398,18 +413,20 @@ def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
 
     k = jnp.full((q_n, cand), KEY_EMPTY, I32)
     v = jnp.zeros((q_n, cand), I32)
+    w = jnp.zeros((q_n, cand), I32)
     s = jnp.zeros((q_n, cand), I32)
     # per-part key at the first excluded in-window element (the cut
     # boundary a budget overflow imposes); KEY_EMPTY where nothing is cut
     cut_keys = jnp.full((q_n, n_parts), KEY_EMPTY, I32)
     g0 = 0
-    for gk, gv, gs, gst, _ in groups:
+    for gk, gv, gw, gs, gst, _ in groups:
         n_g, cap_g = gk.shape
         in_g = (part >= g0) & (part < g0 + n_g) & (j[None, :] < total[:, None])
         d = jnp.clip(part - g0, 0, n_g - 1)
         srcc = jnp.clip(src, 0, cap_g - 1)
         k = jnp.where(in_g, gk[d, srcc], k)
         v = jnp.where(in_g, gv[d, srcc], v)
+        w = jnp.where(in_g, gw[d, srcc], w)
         s = jnp.where(in_g, gs[d, srcc], s)
         cut_idx = jnp.clip(gst + taken[:, g0:g0 + n_g], 0, cap_g - 1)
         d_iota = jnp.broadcast_to(jnp.arange(n_g), (q_n, n_g))
@@ -425,9 +442,41 @@ def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
     ok = k < cut[:, None]
     k = jnp.where(ok, k, KEY_EMPTY)
     v = jnp.where(ok, v, 0)
+    w = jnp.where(ok, w, 0)
     s = jnp.where(ok, s, 0)
+    return k, v, w, s, offsets, partial
 
-    k, v, s, keep = be.range_merge(k, v, s, offsets, True)
+
+def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
+                    his: jax.Array):
+    """Q range scans [lo, hi) in one fused pass (paper 2.9, DESIGN.md §10).
+
+    Per scan: fence-prune every structure to its contiguous in-window
+    extent, gather the extents front-compacted into one candidate row of
+    static width ``range_cand_eff`` (a budget, not per-structure
+    padding — a scan's device work is O(its window), never O(capacity)),
+    then one backend-dispatched sorted-segment merge applies the weighted
+    survivor rule (newest-wins dedup + annihilation of negative-weight
+    keys) before the single ``max_range`` cut.
+
+    Returns ``(keys (Q, max_range), vals, counts (Q,), truncated (Q,))``,
+    rows key-sorted and KEY_EMPTY-padded past their count. Exactness
+    contract: a result row is always a correct sorted *prefix* of the
+    window's live keys; ``truncated`` is False iff the row is the whole
+    window — it is raised when the live keys exceed ``max_range`` or
+    when the candidate budget overflowed (a structure's in-window extent
+    was cut; the result then stops at the first key the cut could have
+    affected, so stale versions and delete records still cancel exactly
+    — PR 3's full-window dedup contract, budgeted).
+    """
+    be = get_backend(p.backend)
+    mr = p.max_range
+    los, his = los.astype(I32), his.astype(I32)
+    q_n = los.shape[0]
+
+    k, v, w, s, offsets, partial = _gather_candidates(p, state, los, his)
+
+    k, v, w, s, keep = be.range_merge(k, v, w, s, offsets, True)
     live = keep.sum(axis=1, dtype=I32)
     pos = jnp.cumsum(keep, axis=1, dtype=I32) - 1
     idx = jnp.where(keep, pos, mr)
@@ -441,9 +490,9 @@ def range_scan_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
 
 def range_query_impl(p: SLSMParams, state: SLSMState, lo: jax.Array,
                      hi: jax.Array):
-    """All live (key, value) with lo <= key < hi, newest-wins, tombstones
-    dropped — the single-scan form of `range_scan_impl` (one row of the
-    batched engine; same exactness contract).
+    """All live (key, value) with lo <= key < hi, newest-wins, deletes
+    annihilated — the single-scan form of `range_scan_impl` (one row of
+    the batched engine; same exactness contract).
 
     Returns (keys, vals, count, truncated): up to max_range results,
     key-sorted; `truncated` False guarantees the result is the whole
@@ -477,3 +526,39 @@ def range_many_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
 
 
 range_many = functools.partial(jax.jit, static_argnums=0)(range_many_impl)
+
+
+# --------------------------------------------------------------------------
+# aggregates — count / sum over a window, riding the scan machinery
+# --------------------------------------------------------------------------
+
+def aggregate_many_impl(p: SLSMParams, state: SLSMState, los: jax.Array,
+                        his: jax.Array, n_valid: jax.Array):
+    """Q windowed aggregates in one fused pass: ``count(lo, hi)`` and
+    ``sum(lo, hi)`` over the live keys of each window [lo, hi).
+
+    Rides the exact same fence-pruned candidate gather + backend
+    merge-dedup as `range_scan_impl` (DESIGN.md §10), but reduces the
+    keep mask directly instead of scattering rows — so there is no
+    ``max_range`` cut at all: an aggregate is exact whenever the
+    candidate budget held (``truncated`` False), however wide the
+    window. Sums are int32 with wraparound (the engine's value domain).
+
+    Returns ``(counts (Q,), sums (Q,), truncated (Q,))``; padded lanes
+    (>= n_valid) report zeros / False.
+    """
+    be = get_backend(p.backend)
+    los, his = los.astype(I32), his.astype(I32)
+
+    k, v, w, s, offsets, partial = _gather_candidates(p, state, los, his)
+    k, v, w, s, keep = be.range_merge(k, v, w, s, offsets, True)
+    counts = keep.sum(axis=1, dtype=I32)
+    sums = jnp.where(keep, v, 0).sum(axis=1, dtype=I32)
+    trunc = jnp.any(partial, axis=1)
+    lane = jnp.arange(los.shape[0], dtype=I32) < n_valid
+    return (jnp.where(lane, counts, 0), jnp.where(lane, sums, 0),
+            jnp.where(lane, trunc, False))
+
+
+aggregate_many = functools.partial(
+    jax.jit, static_argnums=0)(aggregate_many_impl)

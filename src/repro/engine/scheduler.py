@@ -41,9 +41,11 @@ Pacing invariants (DESIGN.md §8):
     RuntimeError a few chunks sooner than merge_budget=0 — the remedy is
     the same either way (increase max_levels).
 
-Tombstone elision stays the host decision it was in the synchronous
-cascade: a step drops tombstones iff its output becomes the deepest data
-*at the moment the step runs* (paper 2.5/2.8).
+Annihilation stays the host decision it was in the synchronous cascade:
+a step elides zero-sum (deleted) keys iff its output becomes the deepest
+data *at the moment the step runs* (paper 2.5/2.8). Each merge step also
+books the Z-set telemetry (rows in/out, annihilated rows) host-side —
+the counts ride occupancy counters the scheduler already reads.
 
 The adaptive tuner (repro.engine.tuner, DESIGN.md §9) rides this same
 machinery: a decided allocation switch surfaces as a fifth step kind,
@@ -186,10 +188,11 @@ def backlog_cost(steps: Sequence[MergeStep]) -> int:
     return sum(s.cost for s in steps)
 
 
-def drop_tombstones_into(state, target_level: int) -> bool:
-    """Deletes commit when the merge output becomes the deepest data
-    (paper 2.5/2.8) — evaluated at step-run time, exactly as the
-    synchronous cascade evaluated it at recursion time."""
+def drop_annihilated_into(state, target_level: int) -> bool:
+    """Deletes commit (negative-weight records annihilate) when the merge
+    output becomes the deepest data (paper 2.5/2.8) — evaluated at
+    step-run time, exactly as the synchronous cascade evaluated it at
+    recursion time."""
     for lv in state.levels[target_level:]:
         if int(lv.n_runs) > 0:
             return False
@@ -236,6 +239,17 @@ class MergeScheduler:
                 levels=drv.state.levels
                 + (empty_level(self.p, len(drv.state.levels)),))
 
+    def _book_merge(self, rows_in: int, rows_out: int) -> None:
+        """Z-set merge telemetry (DESIGN.md §13): rows entering the merge
+        vs. rows surviving it. The gap is dedup + annihilation — rows the
+        weighted algebra kept out of the output, whose payloads the Ghost
+        gather never touched (4 bytes of payload each)."""
+        st = self.drv.stats
+        st["rows_merged_in"] += rows_in
+        st["rows_merged_out"] += rows_out
+        st["rows_annihilated"] += rows_in - rows_out
+        st["ghost_payload_bytes_skipped"] += 4 * (rows_in - rows_out)
+
     def run_step(self, step: MergeStep) -> None:
         """Execute one step as a single jitted device dispatch (or, for
         RETUNE, the driver's filter-rebuild + active-params swap) and
@@ -251,19 +265,31 @@ class MergeScheduler:
             drv.stats["seals"] += 1
         elif step.kind == FLUSH:
             self._materialize(0)
+            mr = p.runs_merged_eff
+            rows_in = int(jnp.sum(drv.state.buf_counts[:mr]))
+            slot = int(drv.state.levels[0].n_runs)
             drv.state = merge_buffer_to_level0(
-                p, drv.state, drop_tombstones_into(drv.state, 0))
+                p, drv.state, drop_annihilated_into(drv.state, 0))
+            self._book_merge(rows_in,
+                             int(drv.state.levels[0].counts[slot]))
             drv.stats["flushes"] += 1
         elif step.kind == SPILL:
             self._materialize(step.level + 1)
+            n_merge = self.policy.runs_to_spill(
+                p, int(drv.state.levels[step.level].n_runs))
+            rows_in = int(jnp.sum(
+                drv.state.levels[step.level].counts[:n_merge]))
+            slot = int(drv.state.levels[step.level + 1].n_runs)
             drv.state = merge_level_down(
-                p, drv.state, step.level,
-                self.policy.runs_to_spill(
-                    p, int(drv.state.levels[step.level].n_runs)),
-                drop_tombstones_into(drv.state, step.level + 1))
+                p, drv.state, step.level, n_merge,
+                drop_annihilated_into(drv.state, step.level + 1))
+            self._book_merge(
+                rows_in,
+                int(drv.state.levels[step.level + 1].counts[slot]))
             drv.stats["spills"] += 1
         else:   # COMPACT
             last = p.max_levels - 1
+            rows_in = int(jnp.sum(drv.state.levels[last].counts))
             new_state, raw = compact_last_level(p, drv.state)
             cap = p.level_cap(last)
             if int(raw) > cap:
@@ -272,6 +298,7 @@ class MergeScheduler:
                     f"live elements): increase max_levels beyond "
                     f"{p.max_levels}")
             drv.state = new_state
+            self._book_merge(rows_in, int(raw))
             drv.stats["compactions"] += 1
 
     # -- forced chain (== the legacy synchronous cascade) ------------------
@@ -463,7 +490,7 @@ class MergeScheduler:
 
         Static shapes make the set enumerable up front: each step op is
         jit-specialized on (params, levels-pytree structure, and for
-        spills the static n_merge / tombstone flag), so the programs a
+        spills the static n_merge / annihilation flag), so the programs a
         run will ever need are exactly the combinations below. Programs
         are shape-specialized, not value-specialized — executing each
         once on a throwaway zero state compiles the real path. Without
@@ -495,10 +522,11 @@ class MergeScheduler:
             rn = p.Rn
             dk = jnp.full((rn,), 0, jnp.int32)
             dv = jnp.zeros((rn,), jnp.int32)
+            dw = jnp.ones((rn,), jnp.int32)
             for n_levels in range(p.max_levels + 1):
                 # fresh dummies per call: these ops donate their state
                 outs.append(stage_append(p, init_state(p, n_levels), dk, dv,
-                                         jnp.int32(0)))
+                                         dw, jnp.int32(0)))
                 outs.append(seal_run(p, init_state(p, n_levels)))
                 if len(param_sets) > 1:
                     outs.append(retune_filters(p, init_state(p, n_levels)))

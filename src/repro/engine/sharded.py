@@ -25,10 +25,11 @@ unchanged.
 Two deliberate simplifications vs the single-tree driver:
   * all `max_levels` tiers are preallocated at init so every shard
     shares one pytree structure (no per-shard lazy growth);
-  * tombstones are elided only at deepest-level compaction — always
-    legal (paper 2.5/2.8); the per-shard "is the target the deepest
-    occupied level" refinement would make `drop_tombstones` a traced
-    per-shard value inside ops that specialize on it statically.
+  * annihilated records (weight sums <= 0, DESIGN.md §13) are dropped
+    only at deepest-level compaction — always legal (paper 2.5/2.8);
+    the per-shard "is the target the deepest occupied level"
+    refinement would make `drop_annihilated` a traced per-shard value
+    inside ops that specialize on it statically.
 
 Compaction is the paper's tiering policy. Lookups use the dense read
 path (the sparse path's candidate compaction does not vmap); queries are
@@ -46,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 from repro.engine import compaction as CP
 from repro.engine import memtable as MT
 from repro.engine import read_path as RP
@@ -97,10 +98,10 @@ def _select(mask: jax.Array, new, old):
 
 
 @functools.partial(jax.jit, static_argnums=0, donate_argnums=1)
-def _stage_append_sharded(p: SLSMParams, state, keys, vals, n_valid):
+def _stage_append_sharded(p: SLSMParams, state, keys, vals, wts, n_valid):
     return jax.vmap(
-        lambda st, k, v, n: MT.stage_append_impl(p, st, k, v, n)
-    )(state, keys, vals, n_valid)
+        lambda st, k, v, w, n: MT.stage_append_impl(p, st, k, v, w, n)
+    )(state, keys, vals, wts, n_valid)
 
 
 @functools.partial(jax.jit, static_argnums=0)
@@ -190,15 +191,28 @@ def _range_many_sharded(p: SLSMParams, state, los, his, n_valid):
     return _merge_shard_ranges(p, k, v, c, tr)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6), donate_argnums=1)
-def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
-                       skip_empty: bool = False):
+@functools.partial(jax.jit, static_argnums=0)
+def _aggregate_many_sharded(p: SLSMParams, state, los, his, n_valid):
+    """Q windowed aggregates against all S shards in one dispatch:
+    every shard reduces its own live rows (`read_path.aggregate_many_impl`
+    vmapped over the shard axis) and the disjoint per-shard partials fold
+    by int32 addition — counts and wraparound sums are both associative,
+    so the global aggregate needs no row merge at all. ``truncated[i]``
+    is true when any shard's candidate gather overflowed for window i."""
+    c, s, t = jax.vmap(
+        lambda st: RP.aggregate_many_impl(p, st, los, his, n_valid))(state)
+    return c.sum(axis=0), s.sum(axis=0), t.any(axis=0)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 7), donate_argnums=1)
+def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, wts,
+                       n_valid, skip_empty: bool = False):
     """Sharded mixed-op tape: one `lax.scan` over T tagged slots, every
     branch the single-tree tape's op vmapped over the shard axis.
 
     xs are ``opcodes (T,)`` (one op kind per slot — the stream is
-    global), ``keys/vals (T, S, Rn)`` and ``n_valid (T, S)`` host-routed
-    per shard. WRITE slots append per shard and seal in-scan under a
+    global), ``keys/vals/wts (T, S, Rn)`` and ``n_valid (T, S)``
+    host-routed per shard. WRITE slots append per shard and seal in-scan under a
     per-shard mask (compute-both + `_select`, the same lockstep price
     every masked maintenance op pays); LOOKUP slots answer each shard's
     routed lanes; RANGE slots broadcast their (lo, hi) lanes to every
@@ -217,20 +231,21 @@ def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
                 jnp.zeros((rb,), bool),              # range truncated
                 jnp.zeros((), I32))                  # seals this slot
 
-    def nop(st, k, v, n):
+    def nop(st, k, v, w, n):
         return st, zeros()
 
-    def write(st, k, v, n):
+    def write(st, k, v, w, n):
         new = jax.vmap(
-            lambda s_, k_, v_, n_: MT.stage_append_impl(p, s_, k_, v_, n_)
-        )(st, k, v, n)
+            lambda s_, k_, v_, w_, n_: MT.stage_append_impl(p, s_, k_, v_,
+                                                            w_, n_)
+        )(st, k, v, w, n)
         mask = new.stage_count >= p.Rn
         sealed = jax.vmap(lambda s_: MT.seal_run_impl(p, s_))(new)
         out = zeros()
         return (_select(mask, sealed, new),
                 out[:6] + (mask.sum(dtype=I32),))
 
-    def lookup(st, k, v, n):
+    def lookup(st, k, v, w, n):
         lv, lf = jax.vmap(
             lambda s_, k_, n_: RP.lookup_many_impl(p, s_, k_, n_, False,
                                                    skip_empty)
@@ -238,7 +253,7 @@ def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
         out = zeros()
         return st, (lv, lf) + out[2:]
 
-    def range_(st, k, v, n):
+    def range_(st, k, v, w, n):
         los, his, nr = k[0, :rb], v[0, :rb], n[0]
         kk, vv, cc, tt = jax.vmap(
             lambda s_: RP.range_many_impl(p, s_, los, his, nr))(st)
@@ -247,13 +262,14 @@ def _tape_exec_sharded(p: SLSMParams, state, opcodes, keys, vals, n_valid,
         return st, out[:2] + (rk, rv, rc, rt) + out[6:]
 
     def body(st, xs):
-        op, k, v, n = xs
+        op, k, v, w, n = xs
         return jax.lax.switch(jnp.clip(op, 0, 3),
-                              [nop, write, lookup, range_], st, k, v, n)
+                              [nop, write, lookup, range_], st, k, v, w, n)
 
     return jax.lax.scan(body, state,
                         (opcodes.astype(I32), keys.astype(I32),
-                         vals.astype(I32), n_valid.astype(I32)))
+                         vals.astype(I32), wts.astype(I32),
+                         n_valid.astype(I32)))
 
 
 # --------------------------------------------------------------------------
@@ -283,7 +299,10 @@ class ShardedSLSM:
         # backlog_peak = most pending steps observed on any ONE shard
         self.stats = collections.Counter(seals=0, flushes=0, spills=0,
                                          compactions=0, backlog_peak=0,
-                                         retunes=0, reads=0, writes=0)
+                                         retunes=0, reads=0, writes=0,
+                                         rows_merged_in=0, rows_merged_out=0,
+                                         rows_annihilated=0,
+                                         ghost_payload_bytes_skipped=0)
         # durability surface (DESIGN.md §12): write ops are logged at the
         # driver boundary BEFORE shard routing, so single-tree and
         # sharded engines fed the same stream produce byte-identical
@@ -304,47 +323,52 @@ class ShardedSLSM:
         vals = np.asarray(vals, np.int32).reshape(-1)
         assert keys.shape == vals.shape
         reject_reserved(keys, vals, op="insert")
-        self._insert(keys, vals)
+        self._insert(keys, vals, np.ones_like(keys))
 
-    def _insert(self, keys: np.ndarray, vals: np.ndarray) -> None:
-        """Post-validation write path (delete() enters here: its tombstone
-        values are the engine's own, not user data). With durability on,
-        the whole op is WAL-logged pre-routing as one record and
-        group-committed before returning (one fsync per driver call —
-        SLSM._insert's contract, byte-identical records)."""
+    def _insert(self, keys: np.ndarray, vals: np.ndarray,
+                wts: np.ndarray) -> None:
+        """Post-validation weighted write path (delete() enters here with
+        weight -1 records). With durability on, the whole op is
+        WAL-logged pre-routing as one record and group-committed before
+        returning (one fsync per driver call — SLSM._insert's contract,
+        byte-identical records)."""
         if len(keys) == 0:
             return
         log = self.durability is not None and not self._replaying
         if log:
-            self.durability.log_write(keys, vals)
+            self.durability.log_write(keys, vals, wts)
         self.stats["writes"] += len(keys)
         self.tuner.note_writes(len(keys))
         sid = shard_ids(keys, self.S)
-        buckets = [(keys[sid == s], vals[sid == s]) for s in range(self.S)]
+        buckets = [(keys[sid == s], vals[sid == s], wts[sid == s])
+                   for s in range(self.S)]
         rn = self.p.Rn
-        rounds = max((len(bk) + rn - 1) // rn for bk, _ in buckets)
+        rounds = max((len(bk) + rn - 1) // rn for bk, _, _ in buckets)
         for r in range(rounds):
             ck = np.full((self.S, rn), KEY_EMPTY, np.int32)
             cv = np.zeros((self.S, rn), np.int32)
+            cw = np.zeros((self.S, rn), np.int32)
             n = np.zeros((self.S,), np.int32)
-            for s, (bk, bv) in enumerate(buckets):
+            for s, (bk, bv, bw) in enumerate(buckets):
                 seg = bk[r * rn:(r + 1) * rn]
                 n[s] = len(seg)
                 ck[s, :len(seg)] = seg
                 cv[s, :len(seg)] = bv[r * rn:(r + 1) * rn]
+                cw[s, :len(seg)] = bw[r * rn:(r + 1) * rn]
             self.state = _stage_append_sharded(
                 self.p_active, self.state, jnp.asarray(ck), jnp.asarray(cv),
-                jnp.asarray(n))
+                jnp.asarray(cw), jnp.asarray(n))
             self._maintain()
         if log:
             self.durability.sync()
 
     def delete(self, keys) -> None:
-        """Tombstone inserts (paper 2.8); elided at deepest-level
-        compaction (paper 2.5)."""
+        """Weight -1 records (paper 2.8 tombstones as Z-set retractions —
+        DESIGN.md §13); annihilated at deepest-level compaction
+        (paper 2.5)."""
         keys = np.asarray(keys, np.int32).reshape(-1)
         reject_reserved(keys, op="delete")
-        self._insert(keys, np.full_like(keys, TOMBSTONE))
+        self._insert(keys, np.zeros_like(keys), np.full_like(keys, -1))
 
     # -- merge scheduling (per-shard step masks over the vmapped ops) ------
     def _occupancies(self) -> list:
@@ -356,24 +380,50 @@ class ShardedSLSM:
                               tuple(int(lr[s]) for lr in per_level))
                 for s in range(self.S)]
 
+    def _book_merge(self, rows_in: int, rows_out: int) -> None:
+        """Z-set merge telemetry over the masked shards of one step
+        (mirrors `MergeScheduler._book_merge` — DESIGN.md §13): the
+        in/out gap is dedup + annihilation, rows whose payloads the
+        Ghost gather never touched (4 bytes each)."""
+        st = self.stats
+        st["rows_merged_in"] += rows_in
+        st["rows_merged_out"] += rows_out
+        st["rows_annihilated"] += rows_in - rows_out
+        st["ghost_payload_bytes_skipped"] += 4 * (rows_in - rows_out)
+
     def _apply_step(self, kind: str, level: int, mask: np.ndarray) -> None:
         """Run one step kind for every masked shard in a single vmapped
         dispatch; unmasked shards pass through unchanged."""
         p, jm = self.p_active, jnp.asarray(mask)
+        idx = np.flatnonzero(mask)
         if kind == SCH.SEAL:
             self.state = _seal_where(p, self.state, jm)
             self.stats["seals"] += int(mask.sum())
         elif kind == SCH.FLUSH:
+            mr = p.runs_merged_eff
+            rows_in = int(np.asarray(
+                self.state.buf_counts)[idx, :mr].sum())
+            slots = np.asarray(self.state.levels[0].n_runs)[idx]
             self.state = _flush_where(p, self.state, jm)
+            self._book_merge(rows_in, int(np.asarray(
+                self.state.levels[0].counts)[idx, slots].sum()))
             self.stats["flushes"] += int(mask.sum())
         elif kind == SCH.SPILL:
+            nm = p.disk_runs_merged
+            rows_in = int(np.asarray(
+                self.state.levels[level].counts)[idx, :nm].sum())
+            slots = np.asarray(self.state.levels[level + 1].n_runs)[idx]
             self.state = _merge_level_down_where(
-                p, self.state, level, p.disk_runs_merged, jm)
+                p, self.state, level, nm, jm)
+            self._book_merge(rows_in, int(np.asarray(
+                self.state.levels[level + 1].counts)[idx, slots].sum()))
             self.stats["spills"] += int(mask.sum())
         else:   # COMPACT
+            last = p.max_levels - 1
+            rows_in = int(np.asarray(self.state.levels[last].counts)[idx].sum())
             new_state, raw = _compact_last_where(p, self.state, jm)
             raws = np.asarray(raw)[mask]
-            cap = p.level_cap(p.max_levels - 1)
+            cap = p.level_cap(last)
             if (raws > cap).any():
                 # raise before committing: the compacted state silently
                 # truncates the overflowing run (same order as engine.py)
@@ -382,6 +432,7 @@ class ShardedSLSM:
                     f"live elements in a shard): increase max_levels beyond "
                     f"{p.max_levels}")
             self.state = new_state
+            self._book_merge(rows_in, int(raws.sum()))
             self.stats["compactions"] += int(mask.sum())
 
     def _step_masks(self, kind: str, level: int, occs) -> np.ndarray:
@@ -505,6 +556,7 @@ class ShardedSLSM:
         for p in param_sets:
             outs.append(_stage_append_sharded(  # donates: own dummy
                 p, stacked(), jnp.zeros((self.S, p.Rn), jnp.int32),
+                jnp.zeros((self.S, p.Rn), jnp.int32),
                 jnp.zeros((self.S, p.Rn), jnp.int32),
                 jnp.zeros((self.S,), jnp.int32)))
             if len(param_sets) > 1:             # donates: own dummy
@@ -684,12 +736,46 @@ class ShardedSLSM:
                 self.p_active, self.state, los, his, n),
             self.p.max_range, ranges)
 
+    def aggregate_many(self, ranges):
+        """Batched windowed aggregates over the shard fleet: every shard
+        reduces its own live rows in ONE vmapped dispatch and the
+        disjoint partial counts/sums fold by addition
+        (`_aggregate_many_sharded`) — same numpy return contract as
+        `SLSM.aggregate_many` (``counts, sums, truncated``), exact past
+        `max_range`, int32-wraparound sums."""
+        r = np.asarray(ranges, np.int32).reshape(-1, 2)
+        q = r.shape[0]
+        if q == 0:
+            return (np.zeros(0, np.int32), np.zeros(0, np.int32),
+                    np.zeros(0, bool))
+        width = range_bucket(q)
+        los = np.zeros(width, np.int32)
+        his = np.zeros(width, np.int32)
+        los[:q], his[:q] = r[:, 0], r[:, 1]
+        c, s, t = _aggregate_many_sharded(self.p_active, self.state,
+                                          jnp.asarray(los), jnp.asarray(his),
+                                          jnp.int32(q))
+        return np.asarray(c)[:q], np.asarray(s)[:q], np.asarray(t)[:q]
+
+    def count(self, lo: int, hi: int) -> int:
+        """Live-key count over [lo, hi) across all shards (exact;
+        one-window `aggregate_many`)."""
+        c, _, _ = self.aggregate_many([(lo, hi)])
+        return int(c[0])
+
+    def sum(self, lo: int, hi: int) -> int:
+        """Sum of live values over [lo, hi) across all shards (int32
+        wraparound; one-window `aggregate_many`)."""
+        _, s, _ = self.aggregate_many([(lo, hi)])
+        return int(s[0])
+
     # -- mixed-op tape (repro.engine.tape, DESIGN.md §11) -------------------
-    def _route_lanes(self, keys, vals=None):
+    def _route_lanes(self, keys, vals=None, wts=None):
         """Route one chunk's lanes to their owner shards. Returns
-        ``(k (S, Rn), v (S, Rn), n (S,), sid, pos)`` — sid/pos are each
-        input lane's (shard, rank-within-shard) coordinates, the scatter
-        map for lookup results (same vectorized routing as `lookup`)."""
+        ``(k (S, Rn), v (S, Rn), w (S, Rn), n (S,), sid, pos)`` — sid/pos
+        are each input lane's (shard, rank-within-shard) coordinates, the
+        scatter map for lookup results (same vectorized routing as
+        `lookup`)."""
         rn = self.p.Rn
         qs = np.asarray(keys, np.int32).reshape(-1)
         sid = shard_ids(qs, self.S)
@@ -704,7 +790,10 @@ class ShardedSLSM:
         v = np.zeros((self.S, rn), np.int32)
         if vals is not None:
             v[sid, pos] = np.asarray(vals, np.int32).reshape(-1)
-        return k, v, counts.astype(np.int32), sid, pos
+        w = np.zeros((self.S, rn), np.int32)
+        if wts is not None:
+            w[sid, pos] = np.asarray(wts, np.int32).reshape(-1)
+        return k, v, w, counts.astype(np.int32), sid, pos
 
     def tape_write_capacity(self) -> int:
         """Max write keys the next `run_tape` call may carry — the
@@ -780,8 +869,10 @@ class ShardedSLSM:
                 if ch.kind == "write":
                     k = np.asarray(ch.keys, np.int32).reshape(-1)
                     if k.size:
+                        w = (np.ones_like(k) if ch.wts is None
+                             else np.asarray(ch.wts, np.int32).reshape(-1))
                         self.durability.log_write(
-                            k, np.asarray(ch.vals, np.int32).reshape(-1))
+                            k, np.asarray(ch.vals, np.int32).reshape(-1), w)
         rb = TP.range_lanes(self.p_active)
         results = [0] * len(chunks)
         work = list(enumerate(chunks))
@@ -794,14 +885,16 @@ class ShardedSLSM:
                 if ch.kind == "write":
                     k = np.asarray(ch.keys, np.int32).reshape(-1)
                     v = np.asarray(ch.vals, np.int32).reshape(-1)
+                    w = (np.ones_like(k) if ch.wts is None
+                         else np.asarray(ch.wts, np.int32).reshape(-1))
                     if budget <= 0:
                         break
                     if k.size > budget:
                         seg.append(TP.TapeChunk("write", k[:budget],
-                                                v[:budget]))
+                                                v[:budget], w[:budget]))
                         seg_idx.append(i)
                         work[0] = (i, TP.TapeChunk("write", k[budget:],
-                                                   v[budget:]))
+                                                   v[budget:], w[budget:]))
                         budget = 0
                         continue
                     budget -= k.size
@@ -828,6 +921,7 @@ class ShardedSLSM:
         ops = np.zeros(t_pad, np.int32)
         keys = np.full((t_pad, self.S, rn), KEY_EMPTY, np.int32)
         vals = np.zeros((t_pad, self.S, rn), np.int32)
+        wts = np.zeros((t_pad, self.S, rn), np.int32)
         nv = np.zeros((t_pad, self.S), np.int32)
         scatter = [None] * t
         seal_need = np.asarray(self.state.stage_count).astype(np.int64)
@@ -844,10 +938,14 @@ class ShardedSLSM:
                 vals[i, :, :len(his)] = his[None, :]
                 nv[i, :] = len(los)
                 continue
-            k, v, n, sid, pos = self._route_lanes(
-                ch.keys, ch.vals if ch.kind == "write" else None)
+            if ch.kind == "write":
+                cw = (np.ones(len(np.asarray(ch.keys).reshape(-1)), np.int32)
+                      if ch.wts is None else ch.wts)
+                k, v, w, n, sid, pos = self._route_lanes(ch.keys, ch.vals, cw)
+            else:
+                k, v, w, n, sid, pos = self._route_lanes(ch.keys)
             ops[i] = TP.OPCODES[ch.kind]
-            keys[i], vals[i], nv[i] = k, v, n
+            keys[i], vals[i], wts[i], nv[i] = k, v, w, n
             scatter[i] = (sid, pos)
             if ch.kind == "write":
                 seal_need += np.bincount(sid, minlength=self.S)
@@ -856,7 +954,8 @@ class ShardedSLSM:
             self._reserve_run_slots(need)
         self.state, ys = _tape_exec_sharded(
             p, self.state, jnp.asarray(ops), jnp.asarray(keys),
-            jnp.asarray(vals), jnp.asarray(nv), self.tuner.enabled)
+            jnp.asarray(vals), jnp.asarray(wts), jnp.asarray(nv),
+            self.tuner.enabled)
         lv, lf, rk, rv, rc, rt, sealed = (np.asarray(y) for y in ys)
         for i, ch in enumerate(seg):
             j = seg_idx[i]
@@ -890,6 +989,7 @@ class ShardedSLSM:
                     p, st, jnp.zeros((t,), jnp.int32),
                     jnp.full((t, self.S, p.Rn), KEY_EMPTY, jnp.int32),
                     jnp.zeros((t, self.S, p.Rn), jnp.int32),
+                    jnp.zeros((t, self.S, p.Rn), jnp.int32),
                     jnp.zeros((t, self.S), jnp.int32), skip))
         jax.block_until_ready(outs)
 
@@ -901,7 +1001,8 @@ class ShardedSLSM:
         fleet."""
         return {"driver": "sharded",
                 "params": WAL.params_to_dict(self.p),
-                "policy": "tiering", "n_shards": self.S}
+                "policy": "tiering", "n_shards": self.S,
+                "wal": WAL.WAL_FORMAT}
 
     def _snapshot_meta(self) -> dict:
         """Host-side state riding a snapshot beside the stacked pytree
@@ -950,9 +1051,9 @@ class ShardedSLSM:
         try:
             n = 0
             for rec in records:
-                if rec.kind == WAL.REC_WRITE:
-                    k, v = WAL.decode_write(rec.payload)
-                    self._insert(k, v)
+                if rec.kind in WAL.WRITE_KINDS:
+                    k, v, w = WAL.decode_write(rec.payload, rec.kind)
+                    self._insert(k, v, w)
                 elif rec.kind == WAL.REC_RETUNE:
                     if self.tuner.enabled:
                         self.tuner.target = rec.payload.decode()
@@ -1005,8 +1106,9 @@ class ShardedSLSM:
     @property
     def n_live(self) -> int:
         """Resident elements across all shards' stages, memory runs, and
-        disk levels (duplicates/tombstones count until merges elide
-        them) — the fleet-wide sibling of `SLSM.n_live`."""
+        disk levels (duplicates and negative-weight delete records count
+        until merges annihilate them) — the fleet-wide sibling of
+        `SLSM.n_live`."""
         n = int(self.state.stage_count.sum()) + int(self.state.buf_counts.sum())
         for lv in self.state.levels:
             n += int(lv.counts.sum())

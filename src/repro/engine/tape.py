@@ -12,7 +12,8 @@ whose carry is the engine state and whose xs are T tagged slots —
 
   opcode (T,) i32        OP_NOP | OP_WRITE | OP_LOOKUP | OP_RANGE
   keys   (T, Rn) i32     write keys / lookup queries / range los lanes
-  vals   (T, Rn) i32     write values (TOMBSTONE = delete) / range his
+  vals   (T, Rn) i32     write values / range his
+  wts    (T, Rn) i32     write record weights (+1 insert, -1 delete)
   n_valid (T,) i32       live lanes in the slot
 
 Each slot's body `lax.switch`es on the opcode into the engine's own
@@ -71,14 +72,16 @@ class TapeChunk(NamedTuple):
     """One coalesced same-kind op chunk, host-side.
 
     kind: 'write' | 'lookup' | 'range'. For writes, `keys`/`vals` are
-    the staged pairs (TOMBSTONE values are deletes) — at most Rn of
-    them. For lookups, `keys` are the queries (vals unused) — at most
-    Rn. For ranges, `keys` are the lo bounds and `vals` the hi bounds —
-    at most `range_lanes(p)` scans.
+    the staged pairs and `wts` the record weights (+1 insert, -1
+    delete; None means all +1) — at most Rn of them. For lookups,
+    `keys` are the queries (vals/wts unused) — at most Rn. For ranges,
+    `keys` are the lo bounds and `vals` the hi bounds — at most
+    `range_lanes(p)` scans.
     """
     kind: str
     keys: np.ndarray
     vals: np.ndarray
+    wts: np.ndarray | None = None
 
 
 def chunk_capacity(p: SLSMParams, kind: str) -> int:
@@ -92,10 +95,11 @@ def build_tape(p: SLSMParams, chunks: Sequence[TapeChunk],
                slots: int | None = None):
     """Pack host chunks into the tape's padded slot arrays.
 
-    Returns ``(opcodes (T,), keys (T, Rn), vals (T, Rn), n_valid (T,))``
-    numpy arrays with ``T = tape_bucket(len(chunks))`` (or the explicit
-    `slots` override, which must hold them); slots past the chunk list
-    are NOP. Each chunk must respect `chunk_capacity`.
+    Returns ``(opcodes (T,), keys (T, Rn), vals (T, Rn), wts (T, Rn),
+    n_valid (T,))`` numpy arrays with ``T = tape_bucket(len(chunks))``
+    (or the explicit `slots` override, which must hold them); slots past
+    the chunk list are NOP. Each chunk must respect `chunk_capacity`. A
+    write chunk with ``wts=None`` stages all-insert (+1) weights.
     """
     n = len(chunks)
     t = tape_bucket(n) if slots is None else slots
@@ -105,6 +109,7 @@ def build_tape(p: SLSMParams, chunks: Sequence[TapeChunk],
     ops = np.zeros(t, np.int32)
     keys = np.full((t, rn), KEY_EMPTY, np.int32)
     vals = np.zeros((t, rn), np.int32)
+    wts = np.zeros((t, rn), np.int32)
     nv = np.zeros(t, np.int32)
     for i, ch in enumerate(chunks):
         cap = chunk_capacity(p, ch.kind)
@@ -117,8 +122,12 @@ def build_tape(p: SLSMParams, chunks: Sequence[TapeChunk],
         ops[i] = OPCODES[ch.kind]
         keys[i, :len(k)] = k
         vals[i, :len(v)] = v
+        if ch.kind == "write":
+            w = (np.ones(len(k), np.int32) if ch.wts is None
+                 else np.asarray(ch.wts, np.int32).reshape(-1))
+            wts[i, :len(w)] = w
         nv[i] = len(k)
-    return ops, keys, vals, nv
+    return ops, keys, vals, wts, nv
 
 
 def _slot_zeros(p: SLSMParams, width: int):
@@ -135,7 +144,8 @@ def _slot_zeros(p: SLSMParams, width: int):
 
 
 def tape_exec_impl(p: SLSMParams, state, opcodes: jax.Array,
-                   keys: jax.Array, vals: jax.Array, n_valid: jax.Array,
+                   keys: jax.Array, vals: jax.Array, wts: jax.Array,
+                   n_valid: jax.Array,
                    sparse: bool = False, skip_empty: bool = False):
     """Run a T-slot mixed-op tape as one `lax.scan` (pure; vmappable).
 
@@ -153,39 +163,40 @@ def tape_exec_impl(p: SLSMParams, state, opcodes: jax.Array,
     rb = range_lanes(p)
     width = keys.shape[1]
 
-    def nop(st, k, v, n):
+    def nop(st, k, v, w, n):
         return st, _slot_zeros(p, width)
 
-    def write(st, k, v, n):
-        st = MT.stage_append_impl(p, st, k, v, n)
+    def write(st, k, v, w, n):
+        st = MT.stage_append_impl(p, st, k, v, w, n)
         do_seal = st.stage_count >= p.Rn
         st = jax.lax.cond(do_seal, lambda s: MT.seal_run_impl(p, s),
                           lambda s: s, st)
         out = _slot_zeros(p, width)
         return st, out[:6] + (do_seal.astype(I32),)
 
-    def lookup(st, k, v, n):
+    def lookup(st, k, v, w, n):
         lv, lf = RP.lookup_many_impl(p, st, k, n, sparse, skip_empty)
         out = _slot_zeros(p, width)
         return st, (lv, lf) + out[2:]
 
-    def range_(st, k, v, n):
+    def range_(st, k, v, w, n):
         rk, rv, rc, rt = RP.range_many_impl(p, st, k[:rb], v[:rb], n)
         out = _slot_zeros(p, width)
         return st, out[:2] + (rk, rv, rc, rt) + out[6:]
 
     def body(st, xs):
-        op, k, v, n = xs
+        op, k, v, w, n = xs
         return jax.lax.switch(jnp.clip(op, 0, 3),
-                              [nop, write, lookup, range_], st, k, v, n)
+                              [nop, write, lookup, range_], st, k, v, w, n)
 
     return jax.lax.scan(body, state,
                         (opcodes.astype(I32), keys.astype(I32),
-                         vals.astype(I32), n_valid.astype(I32)))
+                         vals.astype(I32), wts.astype(I32),
+                         n_valid.astype(I32)))
 
 
 tape_exec = functools.partial(
-    jax.jit, static_argnums=(0, 6, 7), donate_argnums=1)(tape_exec_impl)
+    jax.jit, static_argnums=(0, 7, 8), donate_argnums=1)(tape_exec_impl)
 
 
 def unpack_tape(p: SLSMParams, chunks: Sequence[TapeChunk], ys) -> List:

@@ -40,9 +40,15 @@ torn final record is *dropped cleanly*, never partially applied — and
 Record kinds:
 
     REC_META    json engine fingerprint (driver kind, params, shards) —
-                always the first record, verified on reattach
-    REC_WRITE   one driver-boundary write chunk: n u32, keys int32[n],
-                vals int32[n] (a TOMBSTONE value is a delete)
+                always the first record, verified on reattach; carries
+                ``"wal": 2`` (the weighted-record format version — not
+                part of the engine fingerprint, so v1 dirs reattach)
+    REC_WRITE   legacy (format 1) write chunk: n u32, keys int32[n],
+                vals int32[n] (a TOMBSTONE value is a delete) — decoded
+                for replay compatibility, never written anymore
+    REC_WRITE2  one driver-boundary weighted write chunk (DESIGN.md
+                §13): n u32, keys int32[n], vals int32[n], wts int8[n]
+                (+1 insert, -1 delete)
     REC_RETUNE  one applied tuner allocation switch (utf-8 preset name)
 
 Fsync batching: `WalWriter.append` only buffers; `Durability.sync`
@@ -86,8 +92,12 @@ _CRC_BODY_LEN = _HEADER.size - 4          # crc covers header-after-crc+payload
 _MAX_PAYLOAD = 1 << 28                    # sanity bound while scanning
 
 REC_META = 0      # json engine fingerprint (first record of every WAL)
-REC_WRITE = 1     # one driver-boundary write chunk (keys+vals int32)
+REC_WRITE = 1     # legacy write chunk (keys+vals int32; TOMBSTONE = delete)
 REC_RETUNE = 2    # one applied tuner allocation switch (preset name)
+REC_WRITE2 = 3    # weighted write chunk (keys+vals int32, wts int8)
+
+WAL_FORMAT = 2    # record-format version stamped into the META record
+WRITE_KINDS = (REC_WRITE, REC_WRITE2)
 
 
 class WalRecord(NamedTuple):
@@ -116,25 +126,45 @@ def encode_record(seqno: int, kind: int, payload: bytes) -> bytes:
     return _HEADER.pack(crc, len(payload), seqno, kind) + payload
 
 
-def encode_write(keys, vals) -> bytes:
-    """REC_WRITE payload: n u32 + keys int32[n] + vals int32[n] — one
-    driver-boundary write chunk (a TOMBSTONE value marks a delete)."""
+def encode_write(keys, vals, wts) -> bytes:
+    """REC_WRITE2 payload: n u32 + keys int32[n] + vals int32[n] +
+    wts int8[n] — one driver-boundary weighted write chunk (weight +1 is
+    an insert, -1 a delete; DESIGN.md §13)."""
     k = np.ascontiguousarray(np.asarray(keys, np.int32).reshape(-1))
     v = np.ascontiguousarray(np.asarray(vals, np.int32).reshape(-1))
-    if k.shape != v.shape:
-        raise ValueError("encode_write: keys and vals must match")
-    return struct.pack("<I", k.size) + k.tobytes() + v.tobytes()
+    w = np.ascontiguousarray(np.asarray(wts, np.int8).reshape(-1))
+    if k.shape != v.shape or k.shape != w.shape:
+        raise ValueError("encode_write: keys, vals and wts must match")
+    return struct.pack("<I", k.size) + k.tobytes() + v.tobytes() + w.tobytes()
 
 
-def decode_write(payload: bytes) -> Tuple[np.ndarray, np.ndarray]:
-    """Inverse of `encode_write`: -> (keys int32[n], vals int32[n])."""
+def decode_write(payload: bytes, kind: int = REC_WRITE2
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Decode a write chunk of either format to weighted form:
+    -> (keys int32[n], vals int32[n], wts int32[n]).
+
+    REC_WRITE2 decodes natively; a legacy REC_WRITE record maps its
+    reserved TOMBSTONE value to a -1-weight delete with payload 0 — the
+    one place the historical sentinel survives, so pre-weighted WAL
+    directories replay exactly."""
     (n,) = struct.unpack_from("<I", payload, 0)
+    if kind == REC_WRITE2:
+        if len(payload) != 4 + 9 * n:
+            raise ValueError(f"malformed REC_WRITE2 payload: n={n}, "
+                             f"{len(payload)} bytes")
+        k = np.frombuffer(payload, np.int32, count=n, offset=4)
+        v = np.frombuffer(payload, np.int32, count=n, offset=4 + 4 * n)
+        w = np.frombuffer(payload, np.int8, count=n, offset=4 + 8 * n)
+        return k.copy(), v.copy(), w.astype(np.int32)
     if len(payload) != 4 + 8 * n:
         raise ValueError(f"malformed REC_WRITE payload: n={n}, "
                          f"{len(payload)} bytes")
+    from repro.core.params import TOMBSTONE
     k = np.frombuffer(payload, np.int32, count=n, offset=4)
     v = np.frombuffer(payload, np.int32, count=n, offset=4 + 4 * n)
-    return k.copy(), v.copy()
+    is_del = v == np.int32(TOMBSTONE)
+    w = np.where(is_del, np.int32(-1), np.int32(1))
+    return k.copy(), np.where(is_del, np.int32(0), v), w
 
 
 def read_wal(path) -> Tuple[List[WalRecord], int]:
@@ -490,7 +520,12 @@ class Durability:
         """Write the leading META record on a fresh WAL, or verify an
         existing one matches `meta` — attaching an engine with different
         params/driver kind to a populated durability directory is a
-        configuration error, not something replay can paper over."""
+        configuration error, not something replay can paper over.
+
+        The ``"wal"`` record-format version is stripped from both sides
+        of the comparison: it versions the WRITE payload codec, not the
+        engine, and replay decodes either format — so a v1 (pre-
+        weighted) directory reattaches and upgrades in place."""
         w = self.writer
         if w.head is None:
             w.append(REC_META, json.dumps(_canon(meta),
@@ -498,7 +533,8 @@ class Durability:
             self.sync()
             return
         existing = json.loads(w.head.payload.decode())
-        if existing != _canon(meta):
+        strip = lambda d: {k: v for k, v in d.items() if k != "wal"}
+        if strip(existing) != strip(_canon(meta)):
             raise ValueError(
                 f"durability dir {self.dir} belongs to a different engine "
                 f"configuration (logged {existing.get('driver')!r} "
@@ -513,11 +549,11 @@ class Durability:
             return json.loads(records[0].payload.decode())
         return None
 
-    def log_write(self, keys, vals) -> int:
-        """Buffer one driver-boundary write chunk; returns its seqno.
-        Durable only after the next `sync` (the driver calls it before
-        any result of the op can reach a client)."""
-        return self.writer.append(REC_WRITE, encode_write(keys, vals))
+    def log_write(self, keys, vals, wts) -> int:
+        """Buffer one driver-boundary weighted write chunk; returns its
+        seqno. Durable only after the next `sync` (the driver calls it
+        before any result of the op can reach a client)."""
+        return self.writer.append(REC_WRITE2, encode_write(keys, vals, wts))
 
     def log_retune(self, target: str) -> int:
         """Buffer one applied tuner allocation switch; returns its

@@ -9,15 +9,23 @@ makes every step dense:
     split is found by a branch-free binary search on the diagonal, one
     search per output lane, all lanes in lockstep on the VPU;
   * k-way merge = a log2(k) tournament of two-way merges (ops.py);
-  * newest-wins / tombstone-commit = a shift-compare epilogue (ops.py),
-    exactly the paper's "only the highest-ranked run's value is written".
+  * weighted survivor mask (newest-wins + annihilation commit) = a
+    shift-compare + weight-sign epilogue (ops.py), exactly the paper's
+    "only the highest-ranked run's value is written" with deletes as
+    -1-weight records (DESIGN.md §13).
+
+The merge network carries the (key, weight, seq) lanes plus a provenance
+index — NOT the payload lane. Payloads are gathered once, after the
+tournament, through the surviving rows' source indices (the Ghost
+property: annihilated rows never cost payload bandwidth inside the
+merge).
 
 Ordering is lexicographic on (key, seq) — the paper's run-recency rule
 generalized to global seqnos.
 
 VMEM: both inputs are grid-resident (constant index_map); each grid step
-writes one OUT_TILE of the output. Inputs up to ~256K elements/side
-(3 arrays x 2 sides x 4B ≈ 6 MiB) fit v5e VMEM; larger merges split at
+writes one OUT_TILE of the output. Inputs up to ~200K elements/side
+(4 arrays x 2 sides x 4B ≈ 6 MiB) fit v5e VMEM; larger merges split at
 the tournament layer in ops.py.
 """
 from __future__ import annotations
@@ -37,13 +45,14 @@ def _before(ak, as_, bk, bs):
     return (ak < bk) | ((ak == bk) & (as_ < bs))
 
 
-def _merge_kernel(ak_ref, av_ref, as_ref, bk_ref, bv_ref, bs_ref,
-                  ok_ref, ov_ref, os_ref, *, n: int, m: int):
+def _merge_kernel(ak_ref, aw_ref, as_ref, ai_ref,
+                  bk_ref, bw_ref, bs_ref, bi_ref,
+                  ok_ref, ow_ref, os_ref, oi_ref, *, n: int, m: int):
     tile = ok_ref.shape[0]
     t = pl.program_id(0) * tile + jnp.arange(tile, dtype=jnp.int32)
 
-    ak, av, as_ = ak_ref[...], av_ref[...], as_ref[...]
-    bk, bv, bs = bk_ref[...], bv_ref[...], bs_ref[...]
+    ak, aw, as_, aidx = ak_ref[...], aw_ref[...], as_ref[...], ai_ref[...]
+    bk, bw, bs, bidx = bk_ref[...], bw_ref[...], bs_ref[...], bi_ref[...]
 
     # merge-path diagonal binary search: find i = #elements taken from a
     # among the first t outputs. Invariant: i in [max(0, t-m), min(t, n)].
@@ -71,26 +80,31 @@ def _merge_kernel(ak_ref, av_ref, as_ref, bk_ref, bv_ref, bs_ref,
     bj = jnp.clip(j, 0, m - 1)
     take_a = (j >= m) | ((i < n) & _before(ak[ai], as_[ai], bk[bj], bs[bj]))
     ok_ref[...] = jnp.where(take_a, ak[ai], bk[bj])
-    ov_ref[...] = jnp.where(take_a, av[ai], bv[bj])
+    ow_ref[...] = jnp.where(take_a, aw[ai], bw[bj])
     os_ref[...] = jnp.where(take_a, as_[ai], bs[bj])
+    oi_ref[...] = jnp.where(take_a, aidx[ai], bidx[bj])
 
 
-def merge_two_pallas(ak, av, as_, bk, bv, bs, interpret: bool = True):
-    """Merge two (key, seq)-sorted runs into one sorted (N+M,) run."""
+def merge_two_pallas(ak, aw, as_, aidx, bk, bw, bs, bidx,
+                     interpret: bool = True):
+    """Merge two (key, seq)-sorted runs into one sorted (N+M,) run.
+
+    Lanes are (key, weight, seq, source-index); the payload never enters
+    the kernel — callers gather it through the surviving indices.
+    """
     n, m = ak.shape[0], bk.shape[0]
     total = n + m
     assert total % OUT_TILE == 0, f"pad inputs so N+M % {OUT_TILE} == 0"
     grid = (total // OUT_TILE,)
     resident = lambda shape: pl.BlockSpec((shape,), lambda i: (0,))
     out_spec = pl.BlockSpec((OUT_TILE,), lambda i: (i,))
-    shapes = [jax.ShapeDtypeStruct((total,), jnp.int32)] * 3
+    shapes = [jax.ShapeDtypeStruct((total,), jnp.int32)] * 4
     return pl.pallas_call(
         functools.partial(_merge_kernel, n=n, m=m),
         out_shape=shapes,
         grid=grid,
-        in_specs=[resident(n), resident(n), resident(n),
-                  resident(m), resident(m), resident(m)],
-        out_specs=[out_spec, out_spec, out_spec],
+        in_specs=[resident(n)] * 4 + [resident(m)] * 4,
+        out_specs=[out_spec] * 4,
         interpret=interpret,
         name="slsm_heap_merge",
-    )(ak, av, as_, bk, bv, bs)
+    )(ak, aw, as_, aidx, bk, bw, bs, bidx)

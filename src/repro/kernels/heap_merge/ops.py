@@ -1,7 +1,10 @@
-"""Public HeapMerge op: tournament of Pallas two-way merges + newest-wins.
+"""Public HeapMerge op: tournament of Pallas two-way merges + weighted dedup.
 
 Matches the engine's `merge_runs` output exactly (same compaction layout)
-— the engine can swap this in for the sort-based path on TPU.
+— the engine can swap this in for the sort-based path on TPU. Only the
+(key, weight, seq, source-index) lanes run the tournament; the payload
+lane is gathered once at the end through the surviving rows' indices
+(the Ghost property, DESIGN.md §13).
 """
 from __future__ import annotations
 
@@ -26,34 +29,48 @@ def _pad_to(arr, total, fill):
     return jnp.concatenate([arr, jnp.full((pad,), fill, arr.dtype)])
 
 
-@functools.partial(jax.jit, static_argnums=3)
-def heap_merge_op(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+@functools.partial(jax.jit, static_argnums=4)
+def heap_merge_op(keys2d, vals2d, wts2d, seqs2d, drop_annihilated: bool):
     """Merge k sorted runs (k, cap) -> compacted run (k*cap,), newest wins.
 
-    log2(k) tournament passes of the merge-path kernel, then the dedup /
-    tombstone-commit epilogue. Returns (keys, vals, seqs, count).
+    log2(k) tournament passes of the merge-path kernel over the
+    (key, weight, seq, index) lanes, then the weighted survivor epilogue
+    (annihilation commit when `drop_annihilated`) and one payload gather.
+    Returns (keys, vals, wts, seqs, count).
     """
-    k = keys2d.shape[0]
-    runs = [(keys2d[i].astype(jnp.int32), vals2d[i].astype(jnp.int32),
-             seqs2d[i].astype(jnp.int32)) for i in range(k)]
+    k, cap = keys2d.shape
     interpret = not _on_tpu()
+    runs = [(keys2d[i].astype(jnp.int32), wts2d[i].astype(jnp.int32),
+             seqs2d[i].astype(jnp.int32),
+             jnp.arange(cap, dtype=jnp.int32) + i * cap)
+            for i in range(k)]
     while len(runs) > 1:
         nxt = []
         for i in range(0, len(runs) - 1, 2):
-            (ak, av, as_), (bk, bv, bs) = runs[i], runs[i + 1]
+            (ak, aw, as_, ai), (bk, bw, bs, bi) = runs[i], runs[i + 1]
             tgt_a = ((ak.shape[0] + OUT_TILE - 1) // OUT_TILE) * OUT_TILE
             tgt_b = ((bk.shape[0] + OUT_TILE - 1) // OUT_TILE) * OUT_TILE
             ak = _pad_to(ak, tgt_a, KEY_EMPTY)
-            av, as_ = _pad_to(av, tgt_a, 0), _pad_to(as_, tgt_a, 0)
+            aw, as_ = _pad_to(aw, tgt_a, 0), _pad_to(as_, tgt_a, 0)
+            ai = _pad_to(ai, tgt_a, 0)
             bk = _pad_to(bk, tgt_b, KEY_EMPTY)
-            bv, bs = _pad_to(bv, tgt_b, 0), _pad_to(bs, tgt_b, 0)
-            nxt.append(merge_two_pallas(ak, av, as_, bk, bv, bs,
+            bw, bs = _pad_to(bw, tgt_b, 0), _pad_to(bs, tgt_b, 0)
+            bi = _pad_to(bi, tgt_b, 0)
+            nxt.append(merge_two_pallas(ak, aw, as_, ai, bk, bw, bs, bi,
                                         interpret=interpret))
         if len(runs) % 2:
             nxt.append(runs[-1])
         runs = nxt
-    mk, mv, ms = runs[0]
-    valid = RU.newest_wins_mask(mk, mv, drop_tombstones)
-    out_k, out_v, out_s, cnt = RU.compact(mk, mv, ms, valid)
+    mk, mw, ms, mi = runs[0]
+    valid = RU.survivor_mask(mk, mw, drop_annihilated)
+    order = jnp.argsort((~valid).astype(jnp.int32), stable=True)
+    ok = valid[order]
+    out_k = jnp.where(ok, mk[order], KEY_EMPTY)
+    out_w = jnp.where(ok, mw[order], 0)
+    out_s = jnp.where(ok, ms[order], 0)
+    # payload gather — survivors only (annihilated rows never touch vals)
+    flat_v = vals2d.reshape(-1).astype(jnp.int32)
+    out_v = jnp.where(ok, flat_v[mi[order]], 0)
     total = keys2d.shape[0] * keys2d.shape[1]
-    return out_k[:total], out_v[:total], out_s[:total], cnt
+    return (out_k[:total], out_v[:total], out_w[:total], out_s[:total],
+            valid.sum(dtype=jnp.int32))

@@ -1,18 +1,19 @@
 """Pure-jnp oracle for heap_merge: multi-operand stable sort + the same
-newest-wins epilogue as the engine core."""
+weighted survivor epilogue as the engine core."""
 from __future__ import annotations
 
 from repro.core import runs as RU
 
 
-def merge_two_ref(ak, av, as_, bk, bv, bs):
+def merge_two_ref(ak, av, aw, as_, bk, bv, bw, bs):
     import jax.numpy as jnp
     k = jnp.concatenate([ak, bk])
     v = jnp.concatenate([av, bv])
+    w = jnp.concatenate([aw, bw])
     s = jnp.concatenate([as_, bs])
-    return RU.sort_by_key_seq(k, v, s)
+    return RU.sort_records(k, v, w, s)
 
 
-def heap_merge_ref(keys2d, vals2d, seqs2d, drop_tombstones: bool):
+def heap_merge_ref(keys2d, vals2d, wts2d, seqs2d, drop_annihilated: bool):
     """Full k-way merge + dedup oracle (== engine's merge_runs)."""
-    return RU.merge_runs(keys2d, vals2d, seqs2d, drop_tombstones)
+    return RU.merge_runs(keys2d, vals2d, wts2d, seqs2d, drop_annihilated)

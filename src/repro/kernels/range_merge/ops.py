@@ -2,8 +2,10 @@
 
 Matches `range_merge_ref` (the jnp sort-based form the jnp backend uses)
 exactly: rows come back (key, seq)-sorted with a keep mask that applies
-newest-wins dedup and (optionally) tombstone dropping — computed by the
-kernel during the final merge round, not by a separate sort pass.
+the weighted survivor rule (newest-wins, annihilation when requested) —
+computed by the kernel during the final merge round, not by a separate
+sort pass. Only the (key, weight, seq, index) lanes run the tournament;
+payloads are gathered once at the end through the rows' source indices.
 """
 from __future__ import annotations
 
@@ -20,21 +22,22 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.jit, static_argnums=4)
-def range_merge_op(keys, vals, seqs, offsets, drop_tombstones: bool):
+@functools.partial(jax.jit, static_argnums=5)
+def range_merge_op(keys, vals, wts, seqs, offsets, drop_annihilated: bool):
     """Merge P sorted segments per candidate row (paper 2.9).
 
-    keys/vals/seqs: (Q, C) int32 rows, each holding P sorted-by-(key,
+    keys/vals/wts/seqs: (Q, C) int32 rows, each holding P sorted-by-(key,
     seq) segments back to back; offsets: (Q, P+1) int32 exclusive
     segment boundaries (lanes past offsets[:, P] are padding). Returns
-    (keys, vals, seqs, keep): rows in global (key, seq) order, `keep`
-    marking the newest live copy of every key (tombstones dropped when
-    `drop_tombstones`).
+    (keys, vals, wts, seqs, keep): rows in global (key, seq) order,
+    `keep` marking the newest copy of every key (negative-weight rows
+    dropped when `drop_annihilated`).
     """
     q, cand = keys.shape
     n_seg = offsets.shape[1] - 1
     keys = keys.astype(jnp.int32)
     vals = vals.astype(jnp.int32)
+    wts = wts.astype(jnp.int32)
     seqs = seqs.astype(jnp.int32)
     offsets = offsets.astype(jnp.int32)
 
@@ -45,6 +48,7 @@ def range_merge_op(keys, vals, seqs, offsets, drop_tombstones: bool):
         pk = jnp.full((q, cp - cand), KEY_EMPTY, jnp.int32)
         keys = jnp.concatenate([keys, pk], axis=1)
         vals = jnp.concatenate([vals, jnp.zeros_like(pk)], axis=1)
+        wts = jnp.concatenate([wts, jnp.zeros_like(pk)], axis=1)
         seqs = jnp.concatenate([seqs, jnp.zeros_like(pk)], axis=1)
     s0 = max(2, 1 << (n_seg - 1).bit_length())
     if s0 != n_seg:
@@ -52,15 +56,22 @@ def range_merge_op(keys, vals, seqs, offsets, drop_tombstones: bool):
         offsets = jnp.concatenate([offsets, tail], axis=1)
 
     interpret = not _on_tpu()
+    idx = jnp.broadcast_to(jnp.arange(cp, dtype=jnp.int32), (q, cp))
+    mk, mw, ms = keys, wts, seqs
     off = offsets
     segs = s0
     while segs > 2:
-        keys, vals, seqs = merge_round_pallas(
-            keys, vals, seqs, off, final=False,
-            drop_tombstones=drop_tombstones, interpret=interpret)
+        mk, mw, ms, idx = merge_round_pallas(
+            mk, mw, ms, idx, off, final=False,
+            drop_annihilated=drop_annihilated, interpret=interpret)
         off = off[:, ::2]
         segs //= 2
-    keys, vals, seqs, keep = merge_round_pallas(
-        keys, vals, seqs, off, final=True,
-        drop_tombstones=drop_tombstones, interpret=interpret)
-    return keys[:, :cand], vals[:, :cand], seqs[:, :cand], keep[:, :cand]
+    mk, mw, ms, idx, keep = merge_round_pallas(
+        mk, mw, ms, idx, off, final=True,
+        drop_annihilated=drop_annihilated, interpret=interpret)
+    # payload gather — one pass, after the tournament; padding lanes
+    # (KEY_EMPTY) are forced to 0 so both backends agree bitwise there
+    mv = jnp.take_along_axis(vals, idx, axis=1)
+    mv = jnp.where(mk == KEY_EMPTY, 0, mv)
+    return (mk[:, :cand], mv[:, :cand], mw[:, :cand], ms[:, :cand],
+            keep[:, :cand])

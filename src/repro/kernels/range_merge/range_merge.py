@@ -4,9 +4,14 @@ The range engine gathers each scan's candidates — the contiguous
 in-window slice of every structure — into one (Q, C) row buffer holding
 P sorted segments at per-query offsets. This kernel turns those rows
 into a single (key, seq)-sorted stream per scan, and on the final
-tournament round computes the newest-wins / tombstone-drop keep mask
-*during* the merge, replacing the read path's historical
-O(total-capacity * log) global sort with O(window) merge work.
+tournament round computes the weighted survivor keep mask *during* the
+merge, replacing the read path's historical O(total-capacity * log)
+global sort with O(window) merge work.
+
+The tournament carries the (key, weight, seq) lanes plus a provenance
+index — NOT the payload lane (the Ghost property, DESIGN.md §13): the
+caller gathers payloads once, after the final round, through the
+surviving rows' source indices.
 
 Shape of the computation:
 
@@ -23,8 +28,10 @@ Shape of the computation:
     final round also emits the keep mask: an output element survives iff
     it is not padding, the next merged element carries a different key
     (newest-wins — seqnos are globally unique, so the last element of an
-    equal-key block is the newest copy), and it is not a committed
-    tombstone.
+    equal-key block is the newest copy, and its weight is the telescoped
+    per-key weight sum), and — when annihilation is requested — its
+    weight is positive (a negative weight is a delete record: the key is
+    absent).
 
 Ordering is lexicographic on (key, seq), the same rule every other merge
 in the engine uses.
@@ -39,7 +46,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.params import KEY_EMPTY as _KEY_EMPTY
-from repro.core.params import TOMBSTONE as _TOMBSTONE
 from repro.kernels.common import upper_bound
 
 OUT_TILE = 512
@@ -75,7 +81,7 @@ def _merge_path(bk, bs, a_lo, n, a_hi, m, tt, steps: int):
     return lo
 
 
-def _pick(bk, bv, bs, a_lo, n, a_hi, m, i, j):
+def _pick(bk, bw, bs, bi, a_lo, n, a_hi, m, i, j):
     """Gather the pair element a merge position (i, j) emits."""
     ai = a_lo + jnp.clip(i, 0, jnp.maximum(n - 1, 0))
     bj = a_hi + jnp.clip(j, 0, jnp.maximum(m - 1, 0))
@@ -83,18 +89,19 @@ def _pick(bk, bv, bs, a_lo, n, a_hi, m, i, j):
                                            jnp.take(bk, bj),
                                            jnp.take(bs, bj)))
     k = jnp.where(take_a, jnp.take(bk, ai), jnp.take(bk, bj))
-    v = jnp.where(take_a, jnp.take(bv, ai), jnp.take(bv, bj))
+    w = jnp.where(take_a, jnp.take(bw, ai), jnp.take(bw, bj))
     s = jnp.where(take_a, jnp.take(bs, ai), jnp.take(bs, bj))
-    return k, v, s, take_a
+    ix = jnp.where(take_a, jnp.take(bi, ai), jnp.take(bi, bj))
+    return k, w, s, ix, take_a
 
 
-def _round_kernel(bk_ref, bv_ref, bs_ref, off_ref,
-                  ok_ref, ov_ref, os_ref, *refs, n_seg: int, cand: int,
-                  final: bool, drop_tombstones: bool):
+def _round_kernel(bk_ref, bw_ref, bs_ref, bi_ref, off_ref,
+                  ok_ref, ow_ref, os_ref, oi_ref, *refs, n_seg: int,
+                  cand: int, final: bool, drop_annihilated: bool):
     tile = ok_ref.shape[1]
     t = pl.program_id(1) * tile + jnp.arange(tile, dtype=jnp.int32)
 
-    bk, bv, bs = bk_ref[0, :], bv_ref[0, :], bs_ref[0, :]
+    bk, bw, bs, bi = bk_ref[0, :], bw_ref[0, :], bs_ref[0, :], bi_ref[0, :]
     off = off_ref[0, :]                              # (n_seg + 1,)
     total = off[n_seg]
 
@@ -110,34 +117,38 @@ def _round_kernel(bk_ref, bv_ref, bs_ref, off_ref,
     steps = max(1, math.ceil(math.log2(cand + 1)) + 1)
     i = _merge_path(bk, bs, a_lo, n, a_hi, m, tt, steps)
     j = tt - i
-    k, v, s, take_a = _pick(bk, bv, bs, a_lo, n, a_hi, m, i, j)
+    k, w, s, ix, take_a = _pick(bk, bw, bs, bi, a_lo, n, a_hi, m, i, j)
     valid = t < total
     ok_ref[0, :] = jnp.where(valid, k, _KEY_EMPTY)
-    ov_ref[0, :] = jnp.where(valid, v, 0)
+    ow_ref[0, :] = jnp.where(valid, w, 0)
     os_ref[0, :] = jnp.where(valid, s, 0)
+    oi_ref[0, :] = jnp.where(valid, ix, 0)
 
     if final:
-        # newest-wins mask, computed during the merge: the element at t
-        # survives iff the *next* merged element (split advanced by one
-        # on the taken side) carries a different key. The final round
+        # weighted survivor mask, computed during the merge: the element
+        # at t survives iff the *next* merged element (split advanced by
+        # one on the taken side) carries a different key. The final round
         # merges the last two segments, so the pair stream IS the global
-        # (key, seq) order and the neighbor test is exact.
+        # (key, seq) order and the neighbor test is exact. The surviving
+        # record's weight is the telescoped per-key weight sum; when
+        # committing annihilation, a non-positive weight drops the key.
         keep_ref = refs[0]
         i2 = i + take_a.astype(jnp.int32)
         j2 = (tt + 1) - i2
-        nk, _, _, _ = _pick(bk, bv, bs, a_lo, n, a_hi, m, i2, j2)
+        nk, _, _, _, _ = _pick(bk, bw, bs, bi, a_lo, n, a_hi, m, i2, j2)
         nk = jnp.where(t + 1 < total, nk, _KEY_EMPTY)
         keep = valid & (k != _KEY_EMPTY) & (k != nk)
-        if drop_tombstones:
-            keep &= v != _TOMBSTONE
+        if drop_annihilated:
+            keep &= w > 0
         keep_ref[0, :] = keep
 
 
-def merge_round_pallas(bk, bv, bs, off, *, final: bool,
-                       drop_tombstones: bool, interpret: bool = True):
+def merge_round_pallas(bk, bw, bs, bi, off, *, final: bool,
+                       drop_annihilated: bool, interpret: bool = True):
     """One tournament round over (Q, C) candidate rows: merge adjacent
     segment pairs (boundaries in `off`, shape (Q, n_seg+1), n_seg even).
-    Returns merged (keys, vals, seqs) and, when `final`, the keep mask."""
+    Lanes are (key, weight, seq, source-index). Returns the merged lanes
+    and, when `final`, the keep mask."""
     q, cand = bk.shape
     n_seg = off.shape[1] - 1
     assert n_seg >= 2 and n_seg % 2 == 0, "segment count must be even >= 2"
@@ -145,18 +156,18 @@ def merge_round_pallas(bk, bv, bs, off, *, final: bool,
     grid = (q, cand // OUT_TILE)
     row = lambda width: pl.BlockSpec((1, width), lambda i, t: (i, 0))
     out_spec = pl.BlockSpec((1, OUT_TILE), lambda i, t: (i, t))
-    shapes = [jax.ShapeDtypeStruct((q, cand), jnp.int32)] * 3
-    out_specs = [out_spec] * 3
+    shapes = [jax.ShapeDtypeStruct((q, cand), jnp.int32)] * 4
+    out_specs = [out_spec] * 4
     if final:
         shapes.append(jax.ShapeDtypeStruct((q, cand), jnp.bool_))
         out_specs.append(out_spec)
     return pl.pallas_call(
         functools.partial(_round_kernel, n_seg=n_seg, cand=cand, final=final,
-                          drop_tombstones=drop_tombstones),
+                          drop_annihilated=drop_annihilated),
         out_shape=shapes,
         grid=grid,
-        in_specs=[row(cand)] * 3 + [row(n_seg + 1)],
+        in_specs=[row(cand)] * 4 + [row(n_seg + 1)],
         out_specs=out_specs,
         interpret=interpret,
         name="slsm_range_merge",
-    )(bk, bv, bs, off)
+    )(bk, bw, bs, bi, off)

@@ -1,15 +1,17 @@
 """Pure-jnp oracle for range_merge: per-row (key, seq) sort + the same
-newest-wins / tombstone-drop mask, computed after the fact. This is also
-the jnp backend's production range-merge path (backend.py)."""
+weighted survivor mask, computed after the fact. This is also the jnp
+backend's production range-merge path (backend.py). Payloads ride a
+post-sort gather through each row's source indices — the same Ghost
+shape as the kernel, so both backends agree bitwise."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.params import KEY_EMPTY, TOMBSTONE
+from repro.core.params import KEY_EMPTY
 
 
-def range_merge_ref(keys, vals, seqs, offsets, drop_tombstones: bool):
+def range_merge_ref(keys, vals, wts, seqs, offsets, drop_annihilated: bool):
     """Sort-based equivalent of `range_merge_op` (same output contract).
 
     `offsets` is accepted for interface parity and ignored: sorting each
@@ -17,11 +19,16 @@ def range_merge_ref(keys, vals, seqs, offsets, drop_tombstones: bool):
     the rows hold the same multiset.
     """
     del offsets
-    k, s, v = jax.lax.sort((keys.astype(jnp.int32), seqs.astype(jnp.int32),
-                            vals.astype(jnp.int32)), num_keys=2)
+    q, cand = keys.shape
+    idx = jnp.broadcast_to(jnp.arange(cand, dtype=jnp.int32), (q, cand))
+    k, s, w, idx = jax.lax.sort(
+        (keys.astype(jnp.int32), seqs.astype(jnp.int32),
+         wts.astype(jnp.int32), idx), num_keys=2)
     nxt = jnp.concatenate(
         [k[:, 1:], jnp.full((k.shape[0], 1), KEY_EMPTY, k.dtype)], axis=1)
     keep = (k != KEY_EMPTY) & (k != nxt)
-    if drop_tombstones:
-        keep &= v != TOMBSTONE
-    return k, v, s, keep
+    if drop_annihilated:
+        keep &= w > 0
+    v = jnp.take_along_axis(vals.astype(jnp.int32), idx, axis=1)
+    v = jnp.where(k == KEY_EMPTY, 0, v)
+    return k, v, w, s, keep

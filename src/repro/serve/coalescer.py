@@ -11,9 +11,10 @@ per-op driver calls (the oracle property tests/test_serving.py pins).
 
 Request kinds map onto tape op kinds:
 
-  insert -> write  (keys/vals as submitted)
-  delete -> write  (vals = TOMBSTONE, the engine's own delete marker —
-                    deletes therefore coalesce WITH adjacent inserts)
+  insert -> write  (keys/vals as submitted, weight +1 lanes)
+  delete -> write  (weight -1 lanes with payload 0 — the Z-set
+                    retraction, DESIGN.md §13; deletes therefore
+                    coalesce WITH adjacent inserts)
   lookup -> lookup
   range  -> range  (keys = lo bounds, vals = hi bounds)
 
@@ -30,10 +31,10 @@ from typing import List, NamedTuple, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.params import TOMBSTONE, SLSMParams
+from repro.core.params import SLSMParams
 from repro.engine import tape as TP
 
-# request kind -> tape op kind (deletes are tombstone writes, so they
+# request kind -> tape op kind (deletes are weight -1 writes, so they
 # coalesce with adjacent inserts into one write chunk)
 OP_OF = {"insert": "write", "delete": "write",
          "lookup": "lookup", "range": "range"}
@@ -65,24 +66,30 @@ def coalesce(p: SLSMParams, tickets: Sequence
     cur_kind: str | None = None
     cur_keys: List[np.ndarray] = []
     cur_vals: List[np.ndarray] = []
+    cur_wts: List[np.ndarray] = []
     cur_len = 0
 
     def close() -> None:
-        nonlocal cur_kind, cur_keys, cur_vals, cur_len
+        nonlocal cur_kind, cur_keys, cur_vals, cur_wts, cur_len
         if cur_kind is not None:
+            w = (np.concatenate(cur_wts) if cur_kind == "write" else None)
             chunks.append(TP.TapeChunk(cur_kind, np.concatenate(cur_keys),
-                                       np.concatenate(cur_vals)))
-            cur_kind, cur_keys, cur_vals, cur_len = None, [], [], 0
+                                       np.concatenate(cur_vals), w))
+            cur_kind, cur_keys, cur_vals, cur_wts, cur_len = (
+                None, [], [], [], 0)
 
     for t in tickets:
         kind = OP_OF[t.kind]
         keys = np.asarray(t.keys, np.int32).reshape(-1)
         if t.kind == "delete":
-            vals = np.full_like(keys, TOMBSTONE)
+            vals = np.zeros_like(keys)
+            wts = np.full_like(keys, -1)
         elif t.kind == "lookup":
             vals = np.zeros_like(keys)
+            wts = np.zeros_like(keys)
         else:
             vals = np.asarray(t.vals, np.int32).reshape(-1)
+            wts = np.ones_like(keys)
         cap = TP.chunk_capacity(p, kind)
         place: List[Placement] = []
         off = 0
@@ -97,6 +104,7 @@ def coalesce(p: SLSMParams, tickets: Sequence
                 continue
             cur_keys.append(keys[off:off + take])
             cur_vals.append(vals[off:off + take])
+            cur_wts.append(wts[off:off + take])
             place.append(Placement(len(chunks), cur_len, take, off))
             cur_len += take
             off += take

@@ -142,7 +142,7 @@ def durable_write_ops(wal_path) -> int:
     """How many write ops the well-formed WAL prefix holds — the oracle
     prefix length j (one WRITE record per op, by construction)."""
     return sum(1 for r in WAL.read_wal(wal_path)[0]
-               if r.kind == WAL.REC_WRITE)
+               if r.kind in WAL.WRITE_KINDS)
 
 
 class CrashHarness:

@@ -44,7 +44,7 @@ def test_torn_tail_byte_level(harness, driver, backend):
     ref = harness.reference(driver, backend, n_ops=_n_ops(backend))
     offsets = ref["offsets"]
     writes = [(rec, s, e) for rec, s, e in offsets
-              if rec.kind == WAL.REC_WRITE]
+              if rec.kind in WAL.WRITE_KINDS]
     targets = writes[-2:] if backend == "jnp" else writes[-1:]
     for rec, start, end in targets:
         for cut in (start + 1, start + _HDR, start + _HDR + 5, end - 1):
@@ -53,7 +53,7 @@ def test_torn_tail_byte_level(harness, driver, backend):
             assert_same_answers(probe_answers(drv), want)
             # the torn record itself is not in the durable prefix
             assert j < sum(1 for r, _, _ in offsets
-                           if r.kind == WAL.REC_WRITE and r.seqno <= rec.seqno)
+                           if r.kind in WAL.WRITE_KINDS and r.seqno <= rec.seqno)
 
 
 @pytest.mark.parametrize("driver,backend", _cells())
@@ -63,7 +63,7 @@ def test_chunk_boundary_cuts(harness, driver, backend):
     from harness import probe_answers
     ref = harness.reference(driver, backend, n_ops=_n_ops(backend))
     writes = [(rec, s, e) for rec, s, e in ref["offsets"]
-              if rec.kind == WAL.REC_WRITE]
+              if rec.kind in WAL.WRITE_KINDS]
     picks = ([0, len(writes) // 2, len(writes) - 1] if backend == "jnp"
              else [len(writes) - 1])
     seen_j = set()
@@ -90,7 +90,7 @@ def test_mid_seal_and_mid_spill(harness, driver, backend):
     n_ops = 12 if driver == "sharded" else _n_ops(backend)
     ref = harness.reference(driver, backend, n_ops=n_ops)
     writes = [(rec, s, e) for rec, s, e in ref["offsets"]
-              if rec.kind == WAL.REC_WRITE]
+              if rec.kind in WAL.WRITE_KINDS]
     seal_ops = [i for i, d in enumerate(ref["deltas"]) if d["seals"]]
     spill_ops = [i for i, d in enumerate(ref["deltas"]) if d["spills"]]
     assert seal_ops, "stream too small: no op sealed"
@@ -153,7 +153,7 @@ def test_crash_around_snapshot_watermark(harness, driver):
     assert len(snaps) == 1
     watermark = snaps[0][0]
     writes = [(rec, s, e) for rec, s, e in ref["offsets"]
-              if rec.kind == WAL.REC_WRITE]
+              if rec.kind in WAL.WRITE_KINDS]
     before = [e for rec, s, e in writes if rec.seqno < watermark][-2]
     after = [e for rec, s, e in writes if rec.seqno > watermark]
     for cut in (before, after[0], after[-1], after[-1] - 3):

@@ -35,7 +35,7 @@ def test_drivers_log_identical_record_streams(harness):
     assert s_recs[0][0] == h_recs[0][0] == WAL.REC_META
     assert s_recs[0][1] != h_recs[0][1]          # fingerprints differ
     assert s_recs[1:] == h_recs[1:]              # op streams identical
-    assert all(k == WAL.REC_WRITE for k, _ in s_recs[1:])
+    assert all(k in WAL.WRITE_KINDS for k, _ in s_recs[1:])
 
 
 @pytest.mark.parametrize("record_index", [2, 7, -1])
@@ -47,7 +47,7 @@ def test_crash_parity_at_same_record(harness, record_index):
     answers = {}
     for driver, ref in refs.items():
         writes = [(r, s, e) for r, s, e in ref["offsets"]
-                  if r.kind == WAL.REC_WRITE]
+                  if r.kind in WAL.WRITE_KINDS]
         rec, start, end = writes[record_index]
         for tag, cut in (("end", end), ("mid", start + WAL._HEADER.size + 2)):
             drv, j = harness.restore_at(ref, driver, cut=cut)
@@ -65,7 +65,7 @@ def test_torn_final_record_dropped_cleanly(harness, tmp_path):
     for driver in ("single", "sharded"):
         ref = harness.reference(driver, "jnp")
         writes = [(r, s, e) for r, s, e in ref["offsets"]
-                  if r.kind == WAL.REC_WRITE]
+                  if r.kind in WAL.WRITE_KINDS]
         _, start, end = writes[-1]
         cut = end - 5                      # mid-payload: CRC must reject
         drv, j = harness.restore_at(ref, driver, cut=cut)

@@ -26,18 +26,36 @@ from harness import (apply_ops, assert_same_answers, make_engine,
 def test_write_codec_roundtrip():
     k = np.array([5, -3, 7], np.int32)
     v = np.array([50, -30, 70], np.int32)
-    k2, v2 = WAL.decode_write(WAL.encode_write(k, v))
+    w = np.array([1, -1, 1], np.int8)
+    k2, v2, w2 = WAL.decode_write(WAL.encode_write(k, v, w))
     np.testing.assert_array_equal(k, k2)
     np.testing.assert_array_equal(v, v2)
+    np.testing.assert_array_equal(w, w2)
     # empty chunks frame fine too (drivers skip logging them, but the
     # codec itself is total)
-    k3, v3 = WAL.decode_write(WAL.encode_write([], []))
-    assert k3.size == 0 and v3.size == 0
+    k3, v3, w3 = WAL.decode_write(WAL.encode_write([], [], []))
+    assert k3.size == 0 and v3.size == 0 and w3.size == 0
 
 
 def test_write_codec_shape_mismatch():
     with pytest.raises(ValueError, match="must match"):
-        WAL.encode_write([1, 2], [1])
+        WAL.encode_write([1, 2], [1], [1, 1])
+    with pytest.raises(ValueError, match="must match"):
+        WAL.encode_write([1, 2], [1, 2], [1])
+
+
+def test_legacy_write_record_decodes_as_weighted():
+    """A format-1 REC_WRITE payload (keys+vals, TOMBSTONE value means
+    delete) decodes to weighted form: wt -1 + payload 0 on the
+    TOMBSTONE lanes, wt +1 elsewhere — pre-§13 logs replay exactly."""
+    from repro.core.params import TOMBSTONE
+    k = np.array([5, 9, 11], np.int32)
+    v = np.array([50, TOMBSTONE, 110], np.int32)
+    payload = struct.pack("<I", 3) + k.tobytes() + v.tobytes()
+    k2, v2, w2 = WAL.decode_write(payload, WAL.REC_WRITE)
+    np.testing.assert_array_equal(k2, k)
+    np.testing.assert_array_equal(v2, [50, 0, 110])
+    np.testing.assert_array_equal(w2, [1, -1, 1])
 
 
 def test_read_wal_missing_and_bad_magic(tmp_path):
@@ -76,8 +94,10 @@ def test_read_wal_stops_at_seqno_gap(tmp_path):
 
 def test_read_wal_drops_short_tail(tmp_path):
     p = tmp_path / "wal.log"
-    rec = WAL.encode_record(0, WAL.REC_WRITE, WAL.encode_write([1], [2]))
-    torn = WAL.encode_record(1, WAL.REC_WRITE, WAL.encode_write([3], [4]))
+    rec = WAL.encode_record(0, WAL.REC_WRITE2,
+                            WAL.encode_write([1], [2], [1]))
+    torn = WAL.encode_record(1, WAL.REC_WRITE2,
+                             WAL.encode_write([3], [4], [1]))
     for cut in (1, WAL._HEADER.size, len(torn) - 1):
         _write_raw(p, [rec, torn[:cut]])
         records, good = WAL.read_wal(p)
@@ -87,7 +107,7 @@ def test_read_wal_drops_short_tail(tmp_path):
 
 def test_read_wal_rejects_implausible_length(tmp_path):
     p = tmp_path / "wal.log"
-    head = WAL._HEADER.pack(0, WAL._MAX_PAYLOAD + 1, 0, WAL.REC_WRITE)
+    head = WAL._HEADER.pack(0, WAL._MAX_PAYLOAD + 1, 0, WAL.REC_WRITE2)
     _write_raw(p, [head + b"x" * 64])
     assert WAL.read_wal(p)[0] == []
 
@@ -241,7 +261,8 @@ def test_should_snapshot_threshold(tmp_path):
     assert not dur.should_snapshot()       # no writer yet
     while not dur.should_snapshot():
         dur.log_write(np.arange(8, dtype=np.int32),
-                      np.arange(8, dtype=np.int32))
+                      np.arange(8, dtype=np.int32),
+                      np.ones(8, dtype=np.int8))
         dur.sync()
     st = dur.stats()
     assert st["bytes_since_snapshot"] >= 256
@@ -305,7 +326,7 @@ def test_restore_then_continue_writing(tmp_path):
     records, _ = WAL.read_wal(Path(tmp_path) / "wal.log")
     seqs = [r.seqno for r in records]
     assert seqs == list(range(len(seqs)))
-    assert sum(1 for r in records if r.kind == WAL.REC_WRITE) == 6
+    assert sum(1 for r in records if r.kind in WAL.WRITE_KINDS) == 6
     want = make_engine("single", p)
     apply_ops(want, ops)
     assert_same_answers(probe_answers(got), probe_answers(want))

@@ -264,11 +264,11 @@ def test_schema_rejects_malformed_documents(bench_doc):
 
 
 def test_schema_v6_durability_block(bench_doc):
-    """SCHEMA_VERSION 6: metrics.durability is a required (nullable)
-    key on v6 documents, enforced only there — committed v5 trajectory
-    points predate the WAL and stay valid."""
+    """SCHEMA_VERSION 6+: metrics.durability is a required (nullable)
+    key from v6 on — committed v5 trajectory points predate the WAL
+    and stay valid."""
     _, doc = bench_doc
-    assert doc["schema_version"] == 6
+    assert doc["schema_version"] == SCH.SCHEMA_VERSION
     assert doc["metrics"]["durability"] is None   # WAL-off run
 
     bad = json.loads(json.dumps(doc))
@@ -289,6 +289,40 @@ def test_schema_v6_durability_block(bench_doc):
     good["metrics"]["durability"]["restore_ms"] = 80.0
     good["metrics"]["durability"]["wal_records"] = 0
     assert any("wal_records" in e for e in SCH.validate(good))
+
+
+def test_schema_v7_zset_block(bench_doc):
+    """SCHEMA_VERSION 7: metrics.zset (weighted-merge telemetry,
+    DESIGN.md §13) is a required key whose counters must form a
+    consistent ledger — annihilated == in − out, out ≤ in, nothing
+    negative. v5/v6 documents predate the weighted algebra and are
+    exempt (compat window)."""
+    _, doc = bench_doc
+    zs = doc["metrics"]["zset"]
+    assert zs["rows_merged_in"] >= zs["rows_merged_out"] >= 0
+    assert (zs["rows_annihilated"]
+            == zs["rows_merged_in"] - zs["rows_merged_out"])
+
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["zset"]
+    assert any("zset" in e for e in SCH.validate(bad))
+    # the same document labeled v6 predates the block and is exempt
+    bad["schema_version"] = 6
+    assert SCH.validate(bad) == []
+
+    bad = json.loads(json.dumps(doc))
+    bad["metrics"]["zset"]["rows_annihilated"] += 1
+    assert any("rows_annihilated" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    bad["metrics"]["zset"]["rows_merged_out"] = (
+        bad["metrics"]["zset"]["rows_merged_in"] + 1)
+    assert any("rows_merged_out" in e for e in SCH.validate(bad))
+
+    bad = json.loads(json.dumps(doc))
+    bad["metrics"]["zset"]["ghost_payload_bytes_skipped"] = -4
+    assert any("ghost_payload_bytes_skipped" in e
+               for e in SCH.validate(bad))
 
 
 def test_sweep_durability_family():

@@ -279,14 +279,12 @@ def test_sharded_range_parity_and_truncated_flags():
 
 @pytest.mark.parametrize("engine", ["single", "sharded"])
 def test_reserved_sentinels_rejected(engine):
-    from repro.core.params import KEY_EMPTY, TOMBSTONE
+    from repro.core.params import KEY_EMPTY
     t = (SLSM(SMALL) if engine == "single"
          else ShardedSLSM(SMALL, n_shards=2))
     ok_keys = np.asarray([1, 2], np.int32)
     with pytest.raises(ValueError, match="KEY_EMPTY"):
         t.insert(np.asarray([1, KEY_EMPTY], np.int32), ok_keys)
-    with pytest.raises(ValueError, match="TOMBSTONE"):
-        t.insert(ok_keys, np.asarray([0, TOMBSTONE], np.int32))
     with pytest.raises(ValueError, match="KEY_EMPTY"):
         t.delete(np.asarray([KEY_EMPTY], np.int32))
     with pytest.raises(ValueError, match="KEY_EMPTY"):
@@ -295,11 +293,44 @@ def test_reserved_sentinels_rejected(engine):
         t.lookup_many(np.asarray([3, KEY_EMPTY], np.int32))
     # the regression the guard closes: a KEY_EMPTY lookup used to
     # false-positive against empty stage slots (seq 0 >= 0); and the
-    # extreme-but-legal neighbours must still work
+    # extreme-but-legal neighbour key must still work
     t.insert(np.asarray([KEY_EMPTY - 1], np.int32),
-             np.asarray([int(TOMBSTONE) + 1], np.int32))
+             np.asarray([77], np.int32))
     vals, found = t.lookup(np.asarray([KEY_EMPTY - 1], np.int32))
-    assert found.all() and vals[0] == TOMBSTONE + 1
+    assert found.all() and vals[0] == 77
+
+
+@pytest.mark.parametrize("engine", ["single", "sharded"])
+def test_full_int32_value_domain_round_trips(engine):
+    """Regression (ISSUE 8): the legacy engine reserved TOMBSTONE
+    (int32 min) as a value sentinel and rejected it at insert. The
+    weighted record algebra carries deletes in the weight lane, so
+    EVERY int32 is now a legal value — including the old sentinel and
+    both domain extremes — and must round-trip through insert, lookup,
+    delete, and re-insert."""
+    t = (SLSM(SMALL) if engine == "single"
+         else ShardedSLSM(SMALL, n_shards=2))
+    lo, hi = np.iinfo(np.int32).min, np.iinfo(np.int32).max
+    keys = np.asarray([10, 20, 30, 40], np.int32)
+    vals = np.asarray([lo, lo + 1, hi, 0], np.int32)  # lo == old TOMBSTONE
+    t.insert(keys, vals)
+    got, found = t.lookup_many(keys)
+    assert found.all()
+    np.testing.assert_array_equal(np.asarray(got), vals)
+    # extreme values survive delete + re-insert (newest-wins)
+    t.delete(keys[:2])
+    _, found = t.lookup_many(keys[:2])
+    assert not np.asarray(found).any()
+    t.insert(keys[:2], vals[2:])
+    got, found = t.lookup_many(keys)
+    assert np.asarray(found).all()
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray([hi, 0, hi, 0], np.int32))
+    # range scans return the sentinel-valued rows too
+    rk, rv = t.range(5, 45)
+    np.testing.assert_array_equal(np.asarray(rk), keys)
+    np.testing.assert_array_equal(np.asarray(rv),
+                                  np.asarray([hi, 0, hi, 0], np.int32))
 
 
 # -- seqno uniqueness across chunked inserts ---------------------------------

@@ -1,18 +1,19 @@
 """HeapMerge equivalents: sort-based, rank-based, and the Pallas
-tournament all agree (paper Algorithm 1 semantics). The hypothesis
-sweep lives in test_merge_props.py; the seeded agreement test here
-keeps cross-path coverage when hypothesis is absent."""
+tournament all agree (paper Algorithm 1 semantics over weighted
+records, DESIGN.md §13). The hypothesis sweep lives in
+test_merge_props.py; the seeded agreement test here keeps cross-path
+coverage when hypothesis is absent."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import runs as RU
-from repro.core.params import KEY_EMPTY, TOMBSTONE
+from repro.core.params import KEY_EMPTY
 from repro.kernels.heap_merge import heap_merge_op
 
 
-def make_runs(rng, k, cap, dup_rate=0.3):
-    ks, vs, ss = [], [], []
+def make_runs(rng, k, cap, dup_rate=0.3, del_rate=0.15):
+    ks, vs, ws, ss = [], [], [], []
     seq = 0
     for _ in range(k):
         n = int(rng.integers(1, cap + 1))
@@ -23,17 +24,21 @@ def make_runs(rng, k, cap, dup_rate=0.3):
         run_k[:n] = np.sort(kk)
         run_v = np.zeros(cap, np.int32)
         run_v[:n] = rng.integers(-50, 50, n)
-        run_v[:n][rng.random(n) < 0.15] = TOMBSTONE
+        run_w = np.zeros(cap, np.int8)
+        run_w[:n] = 1
+        dels = rng.random(n) < del_rate       # weight -1: a retraction
+        run_w[:n][dels] = -1
+        run_v[:n][dels] = 0                   # deletes carry no payload
         run_s = np.zeros(cap, np.int32)
         order = rng.permutation(n)  # seqs not aligned with key order
         run_s[:n] = seq + order
         seq += n
-        ks.append(run_k); vs.append(run_v); ss.append(run_s)
+        ks.append(run_k); vs.append(run_v); ws.append(run_w); ss.append(run_s)
     return (jnp.asarray(np.stack(ks)), jnp.asarray(np.stack(vs)),
-            jnp.asarray(np.stack(ss)))
+            jnp.asarray(np.stack(ws)), jnp.asarray(np.stack(ss)))
 
 
-def oracle_merge(K, V, S, drop):
+def oracle_merge(K, V, W, S, drop):
     items = {}
     best_seq = {}
     for r in range(K.shape[0]):
@@ -43,9 +48,11 @@ def oracle_merge(K, V, S, drop):
                 continue
             if key not in best_seq or int(S[r, i]) > best_seq[key]:
                 best_seq[key] = int(S[r, i])
-                items[key] = (int(V[r, i]), int(S[r, i]))
-    out = sorted((k, v, s) for k, (v, s) in items.items()
-                 if not (drop and v == int(TOMBSTONE)))
+                items[key] = (int(V[r, i]), int(W[r, i]), int(S[r, i]))
+    # newest-wins; drop_annihilated elides keys whose surviving weight
+    # is <= 0 (the delete commits — paper 2.5/2.8 recast as Z-sets)
+    out = sorted((k, v, w, s) for k, (v, w, s) in items.items()
+                 if not (drop and w <= 0))
     return out
 
 
@@ -54,22 +61,51 @@ def oracle_merge(K, V, S, drop):
 ])
 def test_merge_paths_agree_seeded(k, cap, seed, drop):
     rng = np.random.default_rng(seed)
-    K, V, S = make_runs(rng, k, cap)
-    expect = oracle_merge(np.asarray(K), np.asarray(V), np.asarray(S), drop)
+    K, V, W, S = make_runs(rng, k, cap)
+    expect = oracle_merge(np.asarray(K), np.asarray(V), np.asarray(W),
+                          np.asarray(S), drop)
 
     for fn in (RU.merge_runs, RU.merge_kway_ranked, heap_merge_op):
-        mk, mv, ms, cnt = fn(K, V, S, drop)
+        mk, mv, mw, ms, cnt = fn(K, V, W, S, drop)
         got = list(zip(np.asarray(mk)[:int(cnt)].tolist(),
                        np.asarray(mv)[:int(cnt)].tolist(),
+                       np.asarray(mw)[:int(cnt)].tolist(),
                        np.asarray(ms)[:int(cnt)].tolist()))
         assert got == expect, fn.__name__
 
 
 def test_merge_keeps_order_and_padding():
     rng = np.random.default_rng(1)
-    K, V, S = make_runs(rng, 3, 32)
-    mk, mv, ms, cnt = RU.merge_runs(K, V, S, False)
+    K, V, W, S = make_runs(rng, 3, 32)
+    mk, mv, mw, ms, cnt = RU.merge_runs(K, V, W, S, False)
     n = int(cnt)
     arr = np.asarray(mk)
     assert (np.diff(arr[:n]) > 0).all()          # strictly sorted, unique
     assert (arr[n:] == KEY_EMPTY).all()          # compacted padding
+    assert (np.asarray(mw)[:n] != 0).all()       # survivors carry weight
+    assert (np.asarray(mw)[n:] == 0).all()       # padding weight-neutral
+
+
+def test_annihilation_drops_matched_pairs():
+    """An insert and its retraction (newer seq) cancel under drop=True:
+    the key vanishes and the count shrinks by both rows."""
+    cap = 8
+    K = np.full((2, cap), KEY_EMPTY, np.int32)
+    V = np.zeros((2, cap), np.int32)
+    W = np.zeros((2, cap), np.int8)
+    S = np.zeros((2, cap), np.int32)
+    K[0, :3] = [5, 9, 12]; V[0, :3] = [50, 90, 120]; W[0, :3] = 1
+    S[0, :3] = [0, 1, 2]
+    K[1, :2] = [9, 30]; V[1, :2] = [0, 300]
+    W[1, :2] = [-1, 1]; S[1, :2] = [3, 4]
+    args = (jnp.asarray(K), jnp.asarray(V), jnp.asarray(W), jnp.asarray(S))
+    mk, mv, mw, ms, cnt = RU.merge_runs(*args, True)
+    assert int(cnt) == 3
+    assert np.asarray(mk)[:3].tolist() == [5, 12, 30]
+    assert np.asarray(mv)[:3].tolist() == [50, 120, 300]
+    # without drop the retraction survives (negative weight propagates
+    # until a merge creates the deepest data)
+    mk, mv, mw, ms, cnt = RU.merge_runs(*args, False)
+    assert int(cnt) == 4
+    assert np.asarray(mk)[:4].tolist() == [5, 9, 12, 30]
+    assert np.asarray(mw)[:4].tolist() == [1, -1, 1, 1]

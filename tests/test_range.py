@@ -21,7 +21,7 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core.oracle import DictOracle
-from repro.core.params import KEY_EMPTY, TOMBSTONE, SLSMParams, TuningPolicy
+from repro.core.params import KEY_EMPTY, SLSMParams, TuningPolicy
 from repro.engine import SLSM, ShardedSLSM
 from repro.kernels.range_merge import range_merge_op, range_merge_ref
 
@@ -251,6 +251,7 @@ def test_range_merge_kernel_matches_ref(rng, q, widths):
     for drop in (False, True):
         k = np.full((q, cand), KEY_EMPTY, np.int32)
         v = np.zeros((q, cand), np.int32)
+        wt = np.zeros((q, cand), np.int8)
         s = np.zeros((q, cand), np.int32)
         off = np.zeros((q, len(widths) + 1), np.int32)
         seq = 0
@@ -260,17 +261,19 @@ def test_range_merge_kernel_matches_ref(rng, q, widths):
                 e = int(rng.integers(0, w + 1))
                 k[qi, pos:pos + e] = np.sort(
                     rng.integers(0, 60, e)).astype(np.int32)
+                dels = rng.random(e) < 0.3        # weight -1 retractions
                 v[qi, pos:pos + e] = np.where(
-                    rng.random(e) < 0.3, TOMBSTONE,
-                    rng.integers(0, 100, e)).astype(np.int32)
+                    dels, 0, rng.integers(0, 100, e)).astype(np.int32)
+                wt[qi, pos:pos + e] = np.where(dels, -1, 1)
                 s[qi, pos:pos + e] = np.arange(seq, seq + e)
                 seq += e
                 pos += e
                 off[qi, pi + 1] = pos
-        args = (jnp.asarray(k), jnp.asarray(v), jnp.asarray(s),
-                jnp.asarray(off), drop)
+        args = (jnp.asarray(k), jnp.asarray(v), jnp.asarray(wt),
+                jnp.asarray(s), jnp.asarray(off), drop)
         got = range_merge_op(*args)
         want = range_merge_ref(*args)
-        for name, g, w in zip(("keys", "vals", "seqs", "keep"), got, want):
+        for name, g, w in zip(("keys", "vals", "wts", "seqs", "keep"),
+                              got, want):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
                                           err_msg=f"{name} drop={drop}")

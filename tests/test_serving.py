@@ -23,7 +23,7 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
-from repro.core.params import TOMBSTONE, SLSMParams
+from repro.core.params import KEY_EMPTY, SLSMParams
 from repro.engine import SLSM, ShardedSLSM
 from repro.engine import tape as TP
 from repro.engine import sharded as SH
@@ -197,14 +197,16 @@ def test_coalesce_hazard_ordering():
 
 
 def test_coalesce_deletes_merge_with_inserts():
-    """Deletes are tombstone writes: adjacent insert+delete share one
-    write chunk, with the engine's own TOMBSTONE marker as the value."""
+    """Deletes are weight -1 writes (DESIGN.md §13): adjacent
+    insert+delete share one write chunk, the delete lanes carrying
+    payload 0 and weight -1 beside the inserts' weight +1."""
     p = small_params()
     chunks, _ = coalesce(p, [_ticket("insert", [2, 4], [7, 8]),
                              _ticket("delete", [6])])
     assert len(chunks) == 1 and chunks[0].kind == "write"
     np.testing.assert_array_equal(chunks[0].keys, [2, 4, 6])
-    np.testing.assert_array_equal(chunks[0].vals, [7, 8, TOMBSTONE])
+    np.testing.assert_array_equal(chunks[0].vals, [7, 8, 0])
+    np.testing.assert_array_equal(chunks[0].wts, [1, 1, -1])
 
 
 def test_coalesce_capacity_split_roundtrip():
@@ -330,10 +332,13 @@ def test_submit_validates_at_the_boundary():
     with pytest.raises(ValueError):
         srv.submit("c", "upsert", [2])
     with pytest.raises(ValueError):
-        srv.submit("c", "insert", [2], [TOMBSTONE])
+        srv.submit("c", "insert", [2, KEY_EMPTY], [1, 2])
     with pytest.raises(ValueError):
         srv.submit("c", "insert", [2, 4], [1])
     assert srv.pending == 0                      # nothing poisoned the window
+    # the old reserved-value sentinel is now a legal payload (ISSUE 8)
+    srv.submit("c", "insert", [2], [np.iinfo(np.int32).min])
+    assert srv.pending == 1
 
 
 def test_async_frontend_roundtrip():

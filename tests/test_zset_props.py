@@ -1,0 +1,265 @@
+"""Z-set property sweep (ISSUE 8, DESIGN.md §13): arbitrary weighted
+op interleavings (insert / delete / re-insert) vs the dict oracle, on
+both drivers, probed mid-maintenance — plus weighted kernel-vs-ref
+parity and batched-aggregate exactness.
+
+The hypothesis `@given` sweeps activate when hypothesis is installed;
+the seeded deterministic sweeps below always run (they drive the same
+generators and checkers from fixed seeds), so the weighted algebra is
+exercised even on a bare interpreter.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.oracle import DictOracle
+from repro.core.params import KEY_EMPTY, SLSMParams, TuningPolicy
+from repro.engine.engine import SLSM
+from repro.engine.sharded import ShardedSLSM
+from repro.kernels.heap_merge import heap_merge_op, heap_merge_ref
+from repro.kernels.range_merge import range_merge_op, range_merge_ref
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+# small geometry: a few dozen ops cross seals, flushes, spills, and
+# deepest-level compactions, so annihilation actually happens mid-test;
+# merge_budget=1 paces the cascade so probes land mid-seal / mid-spill
+# (the scheduler's backlog is live between ops), and the adaptive tuner
+# may interleave RETUNE steps into the same backlog
+PACED = SLSMParams(R=3, Rn=16, eps=0.02, D=2, m=0.5, mu=8, max_levels=3,
+                   max_range=512, merge_budget=1,
+                   tuning=TuningPolicy(mode="adaptive"))
+
+KEYSPACE = 70
+OP_KINDS = ("insert", "delete", "reinsert", "lookup", "range",
+            "aggregate", "drain")
+
+
+def _gen_ops(rng, n_ops=None):
+    n = int(rng.integers(6, 29)) if n_ops is None else n_ops
+    return [(OP_KINDS[int(rng.integers(0, len(OP_KINDS)))],
+             int(rng.integers(1, 41))) for _ in range(n)]
+
+
+def _probe(t, o, rng):
+    qs = rng.integers(-5, KEYSPACE + 10, size=16).astype(np.int32)
+    gv, gf = t.lookup_many(qs)
+    wv, wf = o.lookup(qs)
+    np.testing.assert_array_equal(np.asarray(gf), wf)
+    np.testing.assert_array_equal(np.asarray(gv)[wf], wv[wf])
+
+
+def _run_interleaving(t, ops_list, seed):
+    """Drive one weighted interleaving through driver t and the oracle,
+    checking every observable after every op (no drain barrier first —
+    reads must be exact mid-backlog)."""
+    rng = np.random.default_rng(seed)
+    o = DictOracle()
+    deleted = np.zeros(0, np.int32)
+    for op, span in ops_list:
+        if op == "insert":
+            ks = rng.integers(0, KEYSPACE, size=span).astype(np.int32)
+            vs = rng.integers(-(2**31), 2**31, size=ks.shape,
+                              dtype=np.int64).astype(np.int32)
+            t.insert(ks, vs); o.insert(ks, vs)
+        elif op == "delete":
+            ks = rng.integers(0, KEYSPACE,
+                              size=span // 3 + 1).astype(np.int32)
+            t.delete(ks); o.delete(ks)
+            deleted = np.unique(np.concatenate([deleted, ks]))
+        elif op == "reinsert":
+            # resurrect previously-deleted keys: the -1 record must be
+            # overridden by the newer +1 (delete does NOT poison a key)
+            if deleted.size == 0:
+                continue
+            ks = deleted[:span].astype(np.int32)
+            vs = rng.integers(0, 999, size=ks.shape).astype(np.int32)
+            t.insert(ks, vs); o.insert(ks, vs)
+        elif op == "lookup":
+            _probe(t, o, rng)
+        elif op == "range":
+            lo = int(rng.integers(-5, KEYSPACE))
+            k1, v1 = t.range(lo, lo + span)
+            k2, v2 = o.range(lo, lo + span)
+            np.testing.assert_array_equal(np.asarray(k1), k2)
+            np.testing.assert_array_equal(np.asarray(v1), v2)
+        elif op == "aggregate":
+            lo = int(rng.integers(-5, KEYSPACE))
+            want = o.aggregate(lo, lo + span)
+            assert (t.count(lo, lo + span), t.sum(lo, lo + span)) == want
+        else:
+            t.drain()          # mid-stream merge barrier, then keep going
+            _probe(t, o, rng)
+    t.drain()
+    _probe(t, o, rng)
+    k1, v1 = t.range(-5, KEYSPACE + 10)
+    k2, v2 = o.range(-5, KEYSPACE + 10)
+    np.testing.assert_array_equal(np.asarray(k1), k2)
+    np.testing.assert_array_equal(np.asarray(v1), v2)
+
+
+def _make_driver(engine):
+    return (SLSM(PACED) if engine == "single"
+            else ShardedSLSM(PACED, n_shards=2))
+
+
+@pytest.mark.parametrize("engine", ["single", "sharded"])
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_weighted_interleavings_vs_oracle_seeded(engine, seed):
+    rng = np.random.default_rng(seed)
+    _run_interleaving(_make_driver(engine), _gen_ops(rng), seed + 1)
+
+
+# -- weighted kernel-vs-ref parity -------------------------------------------
+
+def _weighted_runs(rng, k, cap):
+    K = np.full((k, cap), KEY_EMPTY, np.int32)
+    V = np.zeros((k, cap), np.int32)
+    W = np.zeros((k, cap), np.int8)
+    S = np.zeros((k, cap), np.int32)
+    seq = 0
+    for r in range(k):
+        n = int(rng.integers(0, cap + 1))
+        kk = np.unique(rng.integers(0, 3 * cap, n)).astype(np.int32)
+        n = len(kk)
+        K[r, :n] = np.sort(kk)
+        dels = rng.random(n) < 0.35
+        V[r, :n] = np.where(dels, 0, rng.integers(-999, 999, n))
+        W[r, :n] = np.where(dels, -1, 1)
+        order = rng.permutation(n)
+        S[r, :n] = seq + order
+        seq += n
+    return K, V, W, S
+
+
+def _check_heap_merge_parity(k, cap, seed, drop):
+    rng = np.random.default_rng(seed)
+    K, V, W, S = _weighted_runs(rng, k, cap)
+    args = (jnp.asarray(K), jnp.asarray(V), jnp.asarray(W), jnp.asarray(S))
+    got = heap_merge_op(*args, drop)
+    want = heap_merge_ref(*args, drop)
+    for name, g, w in zip(("keys", "vals", "wts", "seqs", "count"),
+                          got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{name} drop={drop}")
+
+
+def _check_range_merge_parity(q, cap, seed, drop):
+    rng = np.random.default_rng(seed)
+    K = np.full((q, cap), KEY_EMPTY, np.int32)
+    V = np.zeros((q, cap), np.int32)
+    W = np.zeros((q, cap), np.int8)
+    S = np.zeros((q, cap), np.int32)
+    parts = int(rng.integers(1, 4))
+    off = np.zeros((q, parts + 1), np.int32)
+    seq = 0
+    for qi in range(q):
+        pos = 0
+        for pi in range(parts):
+            e = int(rng.integers(0, (cap - pos) // (parts - pi) + 1))
+            K[qi, pos:pos + e] = np.sort(
+                rng.integers(0, 50, e)).astype(np.int32)
+            dels = rng.random(e) < 0.35
+            V[qi, pos:pos + e] = np.where(dels, 0, rng.integers(0, 999, e))
+            W[qi, pos:pos + e] = np.where(dels, -1, 1)
+            S[qi, pos:pos + e] = np.arange(seq, seq + e)
+            seq += e
+            pos += e
+            off[qi, pi + 1] = pos
+    args = (jnp.asarray(K), jnp.asarray(V), jnp.asarray(W), jnp.asarray(S),
+            jnp.asarray(off), drop)
+    got = range_merge_op(*args)
+    want = range_merge_ref(*args)
+    for name, g, w in zip(("keys", "vals", "wts", "seqs", "keep"),
+                          got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"{name} drop={drop}")
+
+
+@pytest.mark.parametrize("k,cap,seed,drop", [
+    (2, 24, 11, False), (4, 48, 12, True), (5, 16, 13, True),
+])
+def test_weighted_heap_merge_parity_seeded(k, cap, seed, drop):
+    _check_heap_merge_parity(k, cap, seed, drop)
+
+
+@pytest.mark.parametrize("q,cap,seed,drop", [
+    (1, 32, 21, True), (3, 24, 22, False), (4, 40, 23, True),
+])
+def test_weighted_range_merge_parity_seeded(q, cap, seed, drop):
+    _check_range_merge_parity(q, cap, seed, drop)
+
+
+# -- batched aggregates vs the oracle ----------------------------------------
+
+def _check_aggregates(seed, n_ranges, engine):
+    rng = np.random.default_rng(seed)
+    t, o = _make_driver(engine), DictOracle()
+    for _ in range(4):
+        ks = rng.integers(0, KEYSPACE, size=30).astype(np.int32)
+        vs = rng.integers(-(2**31), 2**31, size=ks.shape,
+                          dtype=np.int64).astype(np.int32)
+        t.insert(ks, vs); o.insert(ks, vs)
+        dk = rng.integers(0, KEYSPACE, size=8).astype(np.int32)
+        t.delete(dk); o.delete(dk)
+    ranges = []
+    for _ in range(n_ranges):
+        lo = int(rng.integers(-5, KEYSPACE))
+        ranges.append((lo, lo + int(rng.integers(0, KEYSPACE))))
+    cnt, tot, trunc = t.aggregate_many(ranges)
+    assert not np.asarray(trunc).any()
+    for i, (lo, hi) in enumerate(ranges):
+        want_c, want_s = o.aggregate(lo, hi)
+        assert (int(cnt[i]), int(tot[i])) == (want_c, want_s), (lo, hi)
+
+
+@pytest.mark.parametrize("engine", ["single", "sharded"])
+@pytest.mark.parametrize("seed,n_ranges", [(31, 1), (32, 5), (33, 9)])
+def test_aggregate_many_matches_oracle_seeded(seed, n_ranges, engine):
+    _check_aggregates(seed, n_ranges, engine)
+
+
+# -- hypothesis sweeps (same checkers, adversarial generation) ---------------
+
+if HAVE_HYPOTHESIS:
+    ops_strategy = st.lists(
+        st.tuples(st.sampled_from(OP_KINDS), st.integers(1, 40)),
+        min_size=6, max_size=28)
+
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(ops=ops_strategy, seed=st.integers(0, 2**31 - 1))
+    def test_weighted_interleavings_vs_oracle_single(ops, seed):
+        _run_interleaving(SLSM(PACED), ops, seed)
+
+    @settings(max_examples=6, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(ops=ops_strategy, seed=st.integers(0, 2**31 - 1))
+    def test_weighted_interleavings_vs_oracle_sharded(ops, seed):
+        _run_interleaving(ShardedSLSM(PACED, n_shards=2), ops, seed)
+
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(k=st.integers(2, 5), cap=st.integers(4, 48),
+           seed=st.integers(0, 2**31 - 1), drop=st.booleans())
+    def test_weighted_heap_merge_kernel_matches_ref(k, cap, seed, drop):
+        _check_heap_merge_parity(k, cap, seed, drop)
+
+    @settings(max_examples=20, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(q=st.integers(1, 4), cap=st.integers(2, 40),
+           seed=st.integers(0, 2**31 - 1), drop=st.booleans())
+    def test_weighted_range_merge_kernel_matches_ref(q, cap, seed, drop):
+        _check_range_merge_parity(q, cap, seed, drop)
+
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=list(HealthCheck))
+    @given(seed=st.integers(0, 2**31 - 1), n_ranges=st.integers(1, 9),
+           engine=st.sampled_from(["single", "sharded"]))
+    def test_aggregate_many_matches_oracle(seed, n_ranges, engine):
+        _check_aggregates(seed, n_ranges, engine)

@@ -42,14 +42,14 @@ import numpy as np
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-from repro.core.params import TOMBSTONE, SLSMParams  # noqa: E402
+from repro.core.params import SLSMParams  # noqa: E402
 from repro.engine import wal as WAL  # noqa: E402
 from repro.engine.engine import SLSM  # noqa: E402
 
 # the stream runs unbounded, so the live key set must stay well under
 # the tiny tree's deepest-level capacity (512 at this geometry):
 # newest-wins dedup bounds live elements by the keyspace + in-flight
-# tombstones
+# negative-weight delete records
 KEY_SPACE = 300
 OP_SIZE = 48
 
@@ -64,8 +64,8 @@ def params() -> SLSMParams:
 def op(i: int):
     """The i-th op of the unbounded deterministic stream (same math in
     child and parent — the oracle replays exactly what the child fed).
-    Every 4th op is a tombstone batch; one op == one driver call == one
-    WAL WRITE record."""
+    Every 4th op is a delete batch (weight -1 WAL records); one op ==
+    one driver call == one WAL WRITE record."""
     rng = np.random.default_rng(100_000 + i)
     keys = rng.integers(0, KEY_SPACE, OP_SIZE).astype(np.int32)
     if i % 4 == 3:
@@ -139,8 +139,9 @@ def run_parent(durdir: str, kill_after_bytes: int) -> int:
     print(f"killed serving child at {os.path.getsize(wal_path)} WAL bytes")
     records, good = WAL.read_wal(wal_path)
     torn = os.path.getsize(wal_path) - good
-    writes = [r for r in records if r.kind == WAL.REC_WRITE]
+    writes = [r for r in records if r.kind in WAL.WRITE_KINDS]
     snaps = WAL.list_snapshots(durdir)
+    n_neg = 0
     print(f"durable prefix: {len(records)} records ({len(writes)} write "
           f"chunks), {torn} torn tail bytes, {len(snaps)} snapshot(s)")
     if not writes:
@@ -152,12 +153,13 @@ def run_parent(durdir: str, kill_after_bytes: int) -> int:
     restore_ms = (time.perf_counter() - t0) * 1e3
 
     # the oracle: a fresh non-durable engine fed the decoded durable
-    # chunks in log order through the public API (tombstone-valued lanes
+    # chunks in log order through the public API (negative-weight lanes
     # are deletes — the engine's own on-log delete encoding)
     oracle = SLSM(params())
     for rec in writes:
-        k, v = WAL.decode_write(rec.payload)
-        is_del = v == TOMBSTONE
+        k, v, w = WAL.decode_write(rec.payload, rec.kind)
+        is_del = w <= 0
+        n_neg += int(is_del.sum())
         start = 0
         for i in range(1, len(k) + 1):       # runs of same op kind,
             if i == len(k) or is_del[i] != is_del[start]:   # order kept
@@ -166,6 +168,10 @@ def run_parent(durdir: str, kill_after_bytes: int) -> int:
                 else:
                     oracle.insert(k[start:i], v[start:i])
                 start = i
+    if n_neg == 0:
+        print("FAIL: the durable WAL prefix carries no negative-weight "
+              "records — the kill landed before any delete was logged")
+        return 1
 
     gv, gf, gr = probe(restored)
     wv, wf, wr = probe(oracle)
@@ -186,7 +192,8 @@ def run_parent(durdir: str, kill_after_bytes: int) -> int:
         return 1
     print(f"OK: restore is oracle-exact at chunk boundary {len(writes)} "
           f"(replayed {restored.stats['replayed_records']} records, "
-          f"restore {restore_ms:.0f}ms, stats restore_us={reported_us})")
+          f"{n_neg} negative-weight lanes, restore {restore_ms:.0f}ms, "
+          f"stats restore_us={reported_us})")
     return 0
 
 
