@@ -25,7 +25,7 @@ MARK_END = "<!-- BENCH_TABLE_END -->"
 
 # canonical scenarios first (trajectory headliners), then sweeps sorted
 _CANONICAL_ORDER = ("uniform", "sequential", "zipfian", "delete_heavy",
-                    "range_scan", "shifting", "serving")
+                    "range_scan", "shifting", "serving", "replication")
 
 
 def _fmt_ops(x: float) -> str:
@@ -64,8 +64,8 @@ def render_table(docs: list) -> str:
     platform)."""
     head = ("| scenario | insert ops/s | insert p99 | lookup ops/s "
             "| lookup p99 | speedup | range scans/s | annihilated "
-            "| bloom FP | tuner | platform |\n"
-            "|---|---|---|---|---|---|---|---|---|---|---|")
+            "| replication | bloom FP | tuner | platform |\n"
+            "|---|---|---|---|---|---|---|---|---|---|---|---|")
     rows = [head]
     for doc in docs:
         m = doc["metrics"]
@@ -85,6 +85,16 @@ def render_table(docs: list) -> str:
         else:
             ann_cell = "-"
         platform = doc.get("env", {}).get("platform", "-")
+        # v8+: follower apply throughput + failover wall time (the
+        # metrics.replication block, DESIGN.md §14); '-' on older docs
+        # and on scenarios that attach no followers
+        rep = m.get("replication")
+        if rep:
+            exact = "exact" if rep["promoted_exact"] else "DIVERGED"
+            rep_cell = (f"{rep['followers']}f {_fmt_ops(rep['apply_ops_per_s'])} "
+                        f"apply/s, {rep['failover_ms']:.0f}ms {exact}")
+        else:
+            rep_cell = "-"
         srv = m.get("serving")
         if srv:
             co = srv["coalesced"]
@@ -107,6 +117,7 @@ def render_table(docs: list) -> str:
             f"| {speedup} "
             f"| {range_cell} "
             f"| {ann_cell} "
+            f"| {rep_cell} "
             f"| {m['bloom']['fp_rate_measured']:.1e} "
             f"| {tuner_cell} "
             f"| {platform} |")

@@ -328,6 +328,88 @@ def _run_ranges_batched(tree, ranges: np.ndarray
     return phase, stats
 
 
+def _run_replication(tree, n_followers: int, w: Workload
+                     ) -> Dict[str, Any]:
+    """The metrics.replication block (DESIGN.md §14).
+
+    Attaches `n_followers` fresh in-process followers at the genesis
+    cursor of the run's now-complete WAL — so the timed convergence
+    loop streams the *entire* durable log through ship -> validate ->
+    append-verbatim -> group-commit -> chunk-apply on every follower —
+    then promotes one follower and times the failover: `promote()`
+    (epoch bump, transport teardown) through its first answered read.
+    Answer-exactness is checked against the leader on the workload's
+    own key stream (found lanes bitwise + one range window)."""
+    from repro.engine import replication as R
+
+    leader = R.Leader(tree)
+    tree.durability.sync()
+    # seed each follower with ONLY the leader's META header, so the
+    # timed loop streams every post-genesis record over the wire (a
+    # full `bootstrap` would copy the log and leave nothing to ship)
+    meta_rec, _start, meta_end = WAL.record_offsets(
+        tree.durability.wal_path)[0]
+    header = tree.durability.wal_path.read_bytes()[:meta_end]
+    ship_total = len(tree.durability.read_records()) - 1
+    probe = np.unique(w.keys[:2048].astype(np.int32))
+    with tempfile.TemporaryDirectory(prefix="bench_repl_") as d:
+        fols = []
+        for i in range(n_followers):
+            fdir = Path(d) / f"f{i}"
+            fdir.mkdir(parents=True)
+            (fdir / "wal.log").write_bytes(header)
+            link = R.QueueLink()
+            fol = R.Follower(fdir, link.follower)
+            fol.link = link
+            leader.attach(link.leader,
+                          R.Cursor(meta_end, meta_rec.seqno + 1,
+                                   meta_rec.epoch))
+            fols.append(fol)
+        lag_peak = leader.stats()["follower_lag_records"]
+        t0 = time.perf_counter()
+        R.converge(leader, *fols)
+        apply_wall = time.perf_counter() - t0
+        st = leader.stats()
+        applied = sum(f.counters["applied_records"] for f in fols)
+
+        # failover: sever one follower's transport, promote, first read
+        t0 = time.perf_counter()
+        prom = fols[0].promote()
+        pv, pf = prom.lookup_many(probe)
+        jax.block_until_ready((pv, pf))
+        failover_ms = (time.perf_counter() - t0) * 1e3
+        lv, lf = tree.lookup_many(probe)
+        lk, lvv = tree.range(int(probe[0]), int(probe[-1]) + 1)
+        pk, pvv = prom.range(int(probe[0]), int(probe[-1]) + 1)
+        f_np, pf_np = np.asarray(lf), np.asarray(pf)
+        exact = bool(
+            np.array_equal(f_np, pf_np)
+            and np.array_equal(np.asarray(lv)[f_np], np.asarray(pv)[pf_np])
+            and np.array_equal(np.asarray(lk), np.asarray(pk))
+            and np.array_equal(np.asarray(lvv), np.asarray(pvv)))
+        block = {
+            "followers": int(n_followers),
+            "shipped_records": int(st["shipped_records"]),
+            "shipped_bytes": int(st["shipped_bytes"]),
+            "lag_records_peak": int(lag_peak),
+            "lag_records_final": int(st["follower_lag_records"]),
+            "lag_bytes_final": int(st["follower_lag_bytes"]),
+            "apply_ops_per_s": float(applied / max(apply_wall, 1e-12)),
+            "failover_ms": float(failover_ms),
+            "promoted_exact": exact,
+        }
+        for h in list(leader.handles):
+            leader.detach(h)
+        tree.replication = None
+        for f in fols:
+            f.drv.durability.close()
+    if block["lag_records_final"] != 0 or applied < n_followers * ship_total:
+        raise RuntimeError(
+            f"replication did not drain: {block} (applied {applied} of "
+            f"{n_followers}x{ship_total})")
+    return block
+
+
 def _measure_durability(tree) -> Dict[str, Any]:
     """The metrics.durability block of a WAL-on run (DESIGN.md §12).
 
@@ -467,6 +549,14 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
         ranges_batched, range_stats = _run_ranges_batched(tree, w.ranges)
         n_batched_lookups = len(lookups)
     fp_rate, _, n_probed = measured_fp_rate(tree, w.absent)
+    if sc.replication > 0 and not sc.durability:
+        raise ValueError(f"scenario {sc.name!r}: replication requires a "
+                         "durable leader (set durability=True)")
+    # replication streams the finished log BEFORE _measure_durability
+    # snapshots it (the followers must replay from genesis, not sync
+    # from a snapshot)
+    replication = (_run_replication(tree, sc.replication, w)
+                   if sc.replication > 0 else None)
     durability = _measure_durability(tree) if sc.durability else None
     if wal_ctx is not None:
         tree.durability.close()
@@ -517,6 +607,7 @@ def run_scenario(sc: Scenario, out_dir: str | Path,
                       "fp_rate_measured": fp_rate,
                       "n_probed": n_probed},
             "durability": durability,
+            "replication": replication,
         },
         "env": _env(),
     }

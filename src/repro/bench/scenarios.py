@@ -2,10 +2,12 @@
 
 A `Scenario` = one workload family + one full engine configuration
 (SLSMParams overrides, compaction policy, shard count). The canonical
-seven (`--scenario all`) cover the workload taxonomy — uniform,
+eight (`--scenario all`) cover the workload taxonomy — uniform,
 sequential, zipfian, delete-heavy, range-scan, the mid-run `shifting`
-scenario that proves the adaptive tuner, and the closed-loop `serving`
-scenario that proves the continuous-batching layer — at the CPU-scaled
+scenario that proves the adaptive tuner, the closed-loop `serving`
+scenario that proves the continuous-batching layer, and the
+`replication` scenario that prices single-leader replication over the
+WAL (follower lag + failover, DESIGN.md §14) — at the CPU-scaled
 paper baseline; the sweep families (`--scenario sweeps`, or one of
 `sweep-R|sweep-Rn|sweep-D|sweep-m|sweep-eps|sweep-merge-budget|
 sweep-policy|sweep-backend|sweep-shards|sweep-durability|sweep-tuner`)
@@ -93,6 +95,9 @@ class Scenario:
     n_shards: int = 1                          # 1 = single tree, >1 = ShardedSLSM
     seed: int = 0
     durability: bool = False                   # WAL + fsync on (DESIGN.md §12)
+    replication: int = 0                       # followers to attach after the
+                                               # phases (requires durability;
+                                               # DESIGN.md §14)
 
     def engine_params(self) -> SLSMParams:
         """The scenario's full `SLSMParams`: the CPU-scaled paper
@@ -100,7 +105,7 @@ class Scenario:
         return bench_params(**self.params)
 
 
-# -- the canonical seven: one per workload family (--scenario all) ---------
+# -- the canonical eight: one per workload family (--scenario all) ---------
 
 # the adaptive tuner's policy for the canonical shifting point: decide
 # every 512 ops so both phases see decisions even at the smoke profile
@@ -126,6 +131,11 @@ CANONICAL: List[Scenario] = [
     # closed-loop offered-load sweep, coalesced mixed-op tape dispatch vs
     # the per-request baseline at the top offered load
     Scenario("serving", "serving"),
+    # single-leader replication over the WAL (DESIGN.md §14): the uniform
+    # load on a fsyncing leader, then two followers stream the full log
+    # (apply throughput + lag drain), and one is promoted (failover wall
+    # time + answer-exactness) — the metrics.replication block
+    Scenario("replication", "uniform", durability=True, replication=2),
 ]
 
 
@@ -193,7 +203,7 @@ SCENARIOS: Dict[str, Scenario] = {
 
 
 def scenarios_for(selector: str) -> List[Scenario]:
-    """Resolve a CLI selector: 'all' (canonical seven), 'sweeps' (every
+    """Resolve a CLI selector: 'all' (canonical eight), 'sweeps' (every
     sweep), a sweep family ('sweep-R'), a scenario name, or a
     comma-separated mix of the above."""
     out: List[Scenario] = []

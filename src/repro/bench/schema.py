@@ -96,6 +96,21 @@ Document shape (SCHEMA_VERSION 7):
                       WRITE chunks that replay processed, and whether
                       the log fsynced at each group commit. null on
                       WAL-off runs.
+    replication       {followers, shipped_records, shipped_bytes,
+                      lag_records_peak, lag_records_final,
+                      lag_bytes_final, apply_ops_per_s, failover_ms,
+                      promoted_exact}|None   (v8+, required key) the
+                      single-leader replication block (DESIGN.md §14),
+                      emitted by the `replication` scenario: follower
+                      count, frames shipped over the in-process wire,
+                      the worst follower lag at attach (peak) and after
+                      convergence (final — 0 on a healthy run), the
+                      follower-side replay throughput in WAL records/s,
+                      the wall time from `promote()` to the promoted
+                      engine's first answered read, and whether the
+                      promoted follower's answers matched the leader's
+                      bitwise on the found lanes. null on every other
+                      scenario.
   env               {jax, numpy, python, platform, timestamp}
 
   serving-point := {clients int    offered load (closed-loop clients)
@@ -143,14 +158,20 @@ SCHEMA_VERSION history:
       merge telemetry — rows in/out of every merge, annihilated rows,
       Ghost-gather payload bytes skipped, DESIGN.md §13); v5/v6
       documents remain valid, the new key is enforced on v7 only.
+  8 — replication PR: required-but-nullable metrics.replication block
+      (single-leader replication over the WAL — shipped frames,
+      follower lag, failover wall time, answer-exactness of the
+      promoted follower, DESIGN.md §14) emitted by the `replication`
+      scenario; v5-v7 documents remain valid, the new key is enforced
+      on v8 only.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 7
-# accepted on read: the committed trajectory keeps its v5/v6 documents
-COMPAT_VERSIONS = (5, 6, 7)
+SCHEMA_VERSION = 8
+# accepted on read: the committed trajectory keeps its v5-v7 documents
+COMPAT_VERSIONS = (5, 6, 7, 8)
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -420,6 +441,35 @@ def validate(doc: Any) -> List[str]:
                     if isinstance(wr, int) and wr <= 0:
                         errs.append(f"{where}.wal_records: a WAL-on run "
                                     f"must have logged records ({wr})")
+        # v8+: the replication block is a required (nullable) key — null
+        # on every non-replication scenario; earlier documents predate
+        # the replication layer and are exempt
+        if ver is not None and ver >= 8:
+            if "replication" not in met:
+                errs.append("metrics: missing key 'replication' (use null "
+                            "for non-replication scenarios)")
+            elif met["replication"] is not None:
+                rep = _typed(met, "replication", dict, errs, "metrics")
+                if rep is not None:
+                    where = "metrics.replication"
+                    for key, typ in (("followers", int),
+                                     ("shipped_records", int),
+                                     ("shipped_bytes", int),
+                                     ("lag_records_peak", int),
+                                     ("lag_records_final", int),
+                                     ("lag_bytes_final", int),
+                                     ("apply_ops_per_s", float),
+                                     ("failover_ms", float)):
+                        v = _typed(rep, key, typ, errs, where)
+                        if isinstance(v, (int, float)) and v < 0:
+                            errs.append(f"{where}.{key}: negative ({v})")
+                    for key in ("followers", "shipped_records",
+                                "shipped_bytes"):
+                        v = rep.get(key)
+                        if isinstance(v, int) and v <= 0:
+                            errs.append(f"{where}.{key}: a replication "
+                                        f"run must ship ({key}={v})")
+                    _typed(rep, "promoted_exact", bool, errs, where)
 
     env = _typed(doc, "env", dict, errs, "document")
     if env is not None:

@@ -13,6 +13,9 @@ Layer map (DESIGN.md has the full tour):
   tape.py       — device-resident mixed-op tape (lax.scan interpreter)
   wal.py        — durability: CRC-framed sequence-numbered WAL + atomic
                   pytree snapshots + the Durability manager (restore())
+  replication.py— single-leader replication over the WAL: Leader ships
+                  durable frames verbatim, Follower replays + acks,
+                  promote() is the explicit failover
   engine.py     — the host-side `SLSM` driver
   sharded.py    — S hash-partitioned trees in one vmapped pytree
 
@@ -45,7 +48,9 @@ from repro.engine.tuner import (Allocation, ReadModePolicy,  # noqa: F401
                                 Tuner, allocation_bytes, build_presets,
                                 monkey_eps_per_level, retune_filters)
 from repro.engine.wal import (Durability, SnapshotError,  # noqa: F401
-                              WalRecord, WalWriter, as_durability,
-                              list_snapshots, load_latest_snapshot,
-                              read_snapshot, read_wal, record_offsets,
-                              write_snapshot)
+                              WalRecord, WalTailer, WalWriter, as_durability,
+                              check_frame, list_snapshots,
+                              load_latest_snapshot, read_snapshot, read_wal,
+                              record_offsets, write_snapshot)
+from repro.engine.replication import (Follower, Leader,  # noqa: F401,E402
+                                      QueueLink, SocketListener, converge)

@@ -118,6 +118,9 @@ class SLSM:
         self.durability = WAL.as_durability(durability)
         if self.durability is not None:
             self.durability.ensure_header(self._wal_meta())
+        # replication hook (DESIGN.md §14): a replication.Leader /
+        # .Follower claims this; repro.serve pumps it between windows
+        self.replication = None
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -685,6 +688,43 @@ class SLSM:
         drv._replay([r for r in records if r.seqno > watermark])
         drv.stats["restore_us"] += int((time.perf_counter() - t0) * 1e6)
         return drv
+
+    @classmethod
+    def open_replica(cls, path, *, fsync: bool = False):
+        """Open a replication follower over a bootstrapped directory
+        (DESIGN.md §14): a plain `restore` of the leader's shipped
+        snapshot + WAL tail, but with a *replica-mode* durability layer
+        — the log is a verbatim copy of the leader's stream (extended
+        only by ``Durability.append_frame``), so no local META record
+        is ever injected into it. The returned engine is what
+        `repro.engine.replication.Follower` drives."""
+        return cls.restore(path, durability=WAL.Durability(
+            path, fsync=fsync, replica=True))
+
+    def apply_replicated(self, records) -> int:
+        """Apply decoded leader WAL records through the same chunk-apply
+        programs `restore` replays with (re-logging suppressed — the
+        follower's durability layer appended the raw frames verbatim
+        before this is called). Returns the records applied; the
+        cumulative count rides ``stats['replayed_records']``."""
+        before = self.stats["replayed_records"]
+        self._replay(records)
+        return self.stats["replayed_records"] - before
+
+    def promote(self) -> "SLSM":
+        """Failover: turn this replica into a writable leader. Bumps
+        the WAL epoch (so stale pre-failover bytes the reused file may
+        expose later are rejected by the prefix rule) and re-enables
+        local logging; seqnos resume after the last applied record.
+        Returns self. The transport-level half (dropping unacked
+        buffered frames) lives in ``replication.Follower.promote``,
+        which calls this."""
+        if self.durability is None:
+            raise ValueError("promote() requires a durability layer")
+        self.durability.writer.bump_epoch()
+        self.durability.replica = False
+        self.stats["promotions"] += 1
+        return self
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -1,0 +1,606 @@
+"""Single-leader replication over the WAL (DESIGN.md §14).
+
+The durability layer's WAL (DESIGN.md §12) is already a replication
+log: CRC-framed records with strictly-consecutive seqnos, a snapshot
+codec with a seqno watermark, and replay through the engines' existing
+chunk-apply programs. This module ships that stream:
+
+  * the **leader** is any durable driver (`SLSM` / `ShardedSLSM`): a
+    `Leader` wraps it, `bootstrap` copies its newest snapshot + WAL
+    tail into a follower directory (the initial sync), and `ship`
+    tails the leader's *durable* log bytes (`wal.WalTailer`) and sends
+    each frame verbatim over a pluggable transport;
+  * a **follower** opens that directory via ``open_replica`` (a plain
+    `restore` under a replica-mode durability layer), then `apply`s
+    incoming frames: validate (`wal.check_frame`), de-duplicate and
+    reorder by seqno, append verbatim (`Durability.append_frame` — the
+    follower's WAL stays a bitwise copy of the leader's stream), sync,
+    replay through `apply_replicated`, and ack;
+  * transports are an in-process `QueueLink` (tests inject faults by
+    mutating its deques) and a localhost socket pair
+    (`SocketListener` / `connect` → `SocketEnd`, length-prefixed
+    messages whose torn tails drop with the connection);
+  * **failover** is explicit: `Follower.promote` drops unacked
+    buffered frames (never acked ⇒ never durable anywhere), detaches
+    the transport, and calls the engine's ``promote()`` — WAL epoch
+    bump + local logging re-enabled — returning a writable leader
+    whose answers bitwise-match a fresh engine fed the acked prefix.
+
+Consistency model: read-your-writes on the leader (the driver's
+log-before-ack group commit is untouched — replication ships only
+*durable* bytes, so nothing a follower applies can ever be un-acked on
+the leader); followers are eventually consistent and serve the batched
+read paths (`lookup_many` / `range_many`) at their applied watermark.
+Lag is bounded and observable: `Leader.stats()` reports
+``follower_lag_records`` / ``follower_lag_bytes`` from follower acks.
+
+The fault-injection suite (``tests/replication/``) proves answer-exact
+failover under leader SIGKILL, torn stream tails, duplicated /
+reordered / dropped delivery, and mid-RETUNE cuts, on both drivers ×
+both backends.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import select
+import shutil
+import socket
+import struct
+from pathlib import Path
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+from repro.engine import wal as WAL
+from repro.engine.engine import SLSM
+from repro.engine.sharded import ShardedSLSM
+
+# stream message framing (byte-stream transports): type u8 | len u32 | payload
+_MSG = struct.Struct("<BI")
+_ACK = struct.Struct("<qQB")        # applied seqno i64 | applied bytes u64 | gap u8
+T_FRAME = 1                         # payload = one verbatim WAL frame
+T_ACK = 2                           # payload = _ACK
+
+
+class Cursor(NamedTuple):
+    """A shipping position in the leader's WAL: byte `offset`, the
+    `next_seqno` expected there (None = accept any first record), and
+    the minimum `epoch` of subsequent frames."""
+
+    offset: int
+    next_seqno: Optional[int]
+    epoch: int = 0
+
+
+# --------------------------------------------------------------------------
+# transports
+# --------------------------------------------------------------------------
+
+class QueueEnd:
+    """One end of a `QueueLink`. The leader end uses
+    `send_frames`/`recv_acks`; the follower end `recv_frames`/`send_ack`.
+    Setting ``closed`` simulates a severed link (sends raise, receives
+    return nothing) — the partition fault tests flip it directly."""
+
+    def __init__(self, link: "QueueLink", is_leader: bool):
+        self.link = link
+        self.is_leader = is_leader
+        self.closed = False
+
+    def _check_open(self) -> None:
+        if self.closed:
+            raise BrokenPipeError("replication link closed")
+
+    def send_frames(self, frames: List[bytes]) -> None:
+        """Enqueue raw WAL frames toward the follower."""
+        self._check_open()
+        self.link.frames.extend(frames)
+
+    def recv_frames(self) -> List[bytes]:
+        """Drain every in-flight frame (empty when closed)."""
+        if self.closed:
+            return []
+        out = list(self.link.frames)
+        self.link.frames.clear()
+        return out
+
+    def send_ack(self, seqno: int, nbytes: int, gap: bool = False) -> None:
+        """Enqueue one follower ack toward the leader."""
+        self._check_open()
+        self.link.acks.append((seqno, nbytes, gap))
+
+    def recv_acks(self) -> List[Tuple[int, int, bool]]:
+        """Drain every in-flight ``(applied_seqno, applied_bytes, gap)``."""
+        if self.closed:
+            return []
+        out = list(self.link.acks)
+        self.link.acks.clear()
+        return out
+
+    def close(self) -> None:
+        """Sever this end of the link."""
+        self.closed = True
+
+
+class QueueLink:
+    """In-process transport: a leader end and a follower end over two
+    deques. The wire is inspectable — ``frames`` holds raw frame bytes
+    heading to the follower, ``acks`` the ack tuples heading back — so
+    fault tests duplicate, reorder, drop, or bit-flip in-flight frames
+    by mutating the deques between pumps."""
+
+    def __init__(self):
+        self.frames: collections.deque = collections.deque()
+        self.acks: collections.deque = collections.deque()
+        self.leader = QueueEnd(self, is_leader=True)
+        self.follower = QueueEnd(self, is_leader=False)
+
+
+class SocketEnd:
+    """One end of a localhost replication stream.
+
+    Messages are length-prefixed (``type u8 | len u32 | payload``); a
+    partially received message — the torn stream tail a dying peer
+    leaves — stays buffered and is dropped with the connection, the
+    transport-level mirror of the WAL's torn-tail rule. Receives are
+    non-blocking (`select`-gated drains); sends are blocking and mark
+    the end ``closed`` on a dead peer."""
+
+    def __init__(self, sock: socket.socket):
+        sock.setblocking(True)
+        self.sock = sock
+        self.closed = False
+        self._buf = b""
+
+    def _pump(self) -> None:
+        while not self.closed:
+            try:
+                r, _, _ = select.select([self.sock], [], [], 0)
+            except (OSError, ValueError):
+                self.closed = True
+                return
+            if not r:
+                return
+            try:
+                data = self.sock.recv(1 << 16)
+            except OSError:
+                data = b""
+            if not data:
+                self.closed = True
+                return
+            self._buf += data
+
+    def _messages(self) -> List[Tuple[int, bytes]]:
+        out, off = [], 0
+        while off + _MSG.size <= len(self._buf):
+            t, n = _MSG.unpack_from(self._buf, off)
+            if off + _MSG.size + n > len(self._buf):
+                break                   # torn tail: stays pending
+            out.append((t, self._buf[off + _MSG.size:off + _MSG.size + n]))
+            off += _MSG.size + n
+        self._buf = self._buf[off:]
+        return out
+
+    def send_frames(self, frames: List[bytes]) -> None:
+        """Send raw WAL frames, one message each, in one write."""
+        self._send(b"".join(_MSG.pack(T_FRAME, len(f)) + f for f in frames))
+
+    def send_ack(self, seqno: int, nbytes: int, gap: bool = False) -> None:
+        """Send one ``(applied_seqno, applied_bytes, gap)`` ack."""
+        self._send(_MSG.pack(T_ACK, _ACK.size)
+                   + _ACK.pack(seqno, nbytes, 1 if gap else 0))
+
+    def _send(self, blob: bytes) -> None:
+        if self.closed:
+            raise BrokenPipeError("replication stream closed")
+        try:
+            self.sock.sendall(blob)
+        except OSError as e:
+            self.closed = True
+            raise BrokenPipeError(f"replication peer gone: {e}") from e
+
+    def recv_frames(self) -> List[bytes]:
+        """Drain every fully received frame message."""
+        self._pump()
+        return [p for t, p in self._messages() if t == T_FRAME]
+
+    def recv_acks(self) -> List[Tuple[int, int, bool]]:
+        """Drain every fully received ack message."""
+        self._pump()
+        return [(s, b, bool(g)) for t, p in self._messages()
+                if t == T_ACK and len(p) == _ACK.size
+                for s, b, g in (_ACK.unpack(p),)]
+
+    def close(self) -> None:
+        """Close the socket (idempotent)."""
+        self.closed = True
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class SocketListener:
+    """Follower-side localhost listener: binds an ephemeral port
+    (``port=0``) and accepts the leader's single connection."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(1)
+        self.host, self.port = self._sock.getsockname()[:2]
+
+    def accept(self, timeout: float = 30.0) -> SocketEnd:
+        """Block (up to `timeout`) for the leader to connect; returns
+        the follower's `SocketEnd`."""
+        self._sock.settimeout(timeout)
+        conn, _ = self._sock.accept()
+        return SocketEnd(conn)
+
+    def close(self) -> None:
+        """Stop listening (established ends stay usable)."""
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def connect(host: str, port: int, timeout: float = 30.0) -> SocketEnd:
+    """Leader-side dial: connect to a follower's `SocketListener` and
+    return the leader's `SocketEnd`."""
+    return SocketEnd(socket.create_connection((host, port), timeout=timeout))
+
+
+# --------------------------------------------------------------------------
+# leader
+# --------------------------------------------------------------------------
+
+class _FollowerHandle:
+    """Leader-side per-follower state: its transport end, its shipping
+    tailer, and the ack-derived lag accounting."""
+
+    def __init__(self, end, cursor: Cursor):
+        self.end = end
+        self.tailer: WAL.WalTailer
+        self.base_offset = cursor.offset
+        self.acked_seqno = (cursor.next_seqno - 1
+                            if cursor.next_seqno is not None else -1)
+        self.acked_bytes = 0
+        self.sent_records = 0
+        self.sent_bytes = 0
+        self.retransmits = 0
+        self.dead = False
+
+
+class Leader:
+    """Replication source wrapped around one durable driver.
+
+    ``Leader(drv)`` claims ``drv.replication`` (so `repro.serve` pumps
+    shipping between windows); `add_follower` bootstraps + attaches an
+    in-process follower in one call, while `bootstrap` + `attach` wire
+    a remote one over any transport end. `pump` (= `ship` + ack drain)
+    only ever reads *durable* WAL bytes — the leader's log-before-ack
+    guarantee is untouched, and nothing a follower applies can be
+    un-acked on the leader."""
+
+    def __init__(self, drv):
+        if drv.durability is None:
+            raise ValueError("replication requires a durable leader: "
+                             "construct the engine with durability=...")
+        self.drv = drv
+        self.handles: List[_FollowerHandle] = []
+        drv.replication = self
+
+    # -- wiring -------------------------------------------------------------
+    def bootstrap(self, dst_dir) -> Cursor:
+        """Initial sync: copy the newest snapshot (if any) plus every
+        well-formed WAL frame past its watermark into `dst_dir`, and
+        return the `Cursor` where shipping to that follower starts.
+        The copied tail preserves the leader's frame bytes verbatim, so
+        the follower's log begins as a bitwise slice of the leader's."""
+        dur = self.drv.durability
+        dur.sync()
+        dst = Path(dst_dir)
+        dst.mkdir(parents=True, exist_ok=True)
+        records, good = WAL.read_wal(dur.wal_path)
+        watermark = -1
+        snaps = WAL.list_snapshots(dur.dir)
+        if snaps:
+            num, spath = snaps[-1]
+            shutil.copytree(spath, dst / spath.name, dirs_exist_ok=True)
+            watermark = num
+        tail_start = good
+        for rec, start, _end in WAL.record_offsets(dur.wal_path):
+            if rec.seqno > watermark:
+                tail_start = start
+                break
+        data = dur.wal_path.read_bytes()[:good] if dur.wal_path.exists() \
+            else WAL.MAGIC
+        (dst / "wal.log").write_bytes(WAL.MAGIC + data[tail_start:])
+        if records:
+            nxt, epoch = records[-1].seqno + 1, records[-1].epoch
+        elif watermark >= 0:
+            nxt, epoch = watermark + 1, 0
+        else:
+            nxt, epoch = None, 0
+        return Cursor(good, nxt, epoch)
+
+    def attach(self, end, cursor: Optional[Cursor] = None) -> _FollowerHandle:
+        """Start shipping to transport `end` from `cursor` (default:
+        genesis — the whole log, META included). Returns the handle
+        `stats()` reports lag for."""
+        if cursor is None:
+            cursor = Cursor(len(WAL.MAGIC), None, 0)
+        h = _FollowerHandle(end, cursor)
+        h.tailer = WAL.WalTailer(self.drv.durability.wal_path,
+                                 offset=cursor.offset,
+                                 next_seqno=cursor.next_seqno,
+                                 epoch=cursor.epoch)
+        self.handles.append(h)
+        return h
+
+    def add_follower(self, directory, *, driver: Optional[str] = None,
+                     fsync: bool = False) -> "Follower":
+        """Bootstrap `directory`, open a `Follower` over it, and attach
+        it through an in-process `QueueLink` (reachable as
+        ``follower.link`` for fault injection). `driver` defaults to
+        the leader's own kind."""
+        cursor = self.bootstrap(directory)
+        if driver is None:
+            driver = ("sharded" if isinstance(self.drv, ShardedSLSM)
+                      else "single")
+        link = QueueLink()
+        fol = Follower(directory, link.follower, driver=driver, fsync=fsync)
+        fol.link = link
+        self.attach(link.leader, cursor)
+        return fol
+
+    def detach(self, handle: _FollowerHandle) -> None:
+        """Stop shipping to `handle` (its transport end is closed)."""
+        if handle in self.handles:
+            self.handles.remove(handle)
+        try:
+            handle.end.close()
+        except OSError:
+            pass
+
+    # -- shipping -----------------------------------------------------------
+    def _offset_of(self, seqno: int) -> Optional[Cursor]:
+        """Locate `seqno` in the leader's WAL for a retransmit rewind."""
+        for rec, start, _end in WAL.record_offsets(
+                self.drv.durability.wal_path):
+            if rec.seqno == seqno:
+                return Cursor(start, seqno, 0)
+        return None
+
+    def ship(self, max_records: Optional[int] = None) -> int:
+        """Tail the durable log and send each new frame verbatim to
+        every live follower; then drain acks (a gap ack rewinds that
+        follower's cursor — retransmission, with duplicates dropped by
+        the follower's seqno filter). Returns frames sent."""
+        n = 0
+        for h in self.handles:
+            if h.dead:
+                continue
+            polled = h.tailer.poll(max_records)
+            if polled:
+                try:
+                    h.end.send_frames([f for _, f in polled])
+                except (BrokenPipeError, OSError):
+                    h.dead = True
+                    continue
+                h.sent_records += len(polled)
+                h.sent_bytes += sum(len(f) for _, f in polled)
+                n += len(polled)
+        self._drain_acks()
+        return n
+
+    def _drain_acks(self) -> None:
+        for h in self.handles:
+            if h.dead:
+                continue
+            try:
+                acks = h.end.recv_acks()
+            except (BrokenPipeError, OSError):
+                h.dead = True
+                continue
+            for seqno, nbytes, gap in acks:
+                if seqno > h.acked_seqno:
+                    h.acked_seqno = seqno
+                if nbytes > h.acked_bytes:
+                    h.acked_bytes = nbytes
+                if gap:
+                    cur = self._offset_of(seqno + 1)
+                    if cur is not None:
+                        h.tailer.rewind(cur.offset, cur.next_seqno, cur.epoch)
+                        h.retransmits += 1
+
+    def pump(self) -> int:
+        """One replication turn: ship new frames + drain acks (the hook
+        `repro.serve.Server.pump` drives between windows)."""
+        return self.ship()
+
+    # -- telemetry ----------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """Leader-side replication telemetry. ``follower_lag_records``
+        / ``follower_lag_bytes`` are the *worst* follower's distance
+        behind the leader's durable log (ack-derived; per-follower
+        detail under ``per_follower``)."""
+        w = self.drv.durability.writer
+        last, size = w.last_seqno, w.size
+        per = []
+        for h in self.handles:
+            lag_r = max(0, last - h.acked_seqno)
+            lag_b = max(0, size - (h.base_offset + h.acked_bytes))
+            per.append({"acked_seqno": int(h.acked_seqno),
+                        "lag_records": int(lag_r),
+                        "lag_bytes": int(lag_b),
+                        "sent_records": int(h.sent_records),
+                        "sent_bytes": int(h.sent_bytes),
+                        "retransmits": int(h.retransmits),
+                        "alive": not h.dead})
+        return {
+            "role": "leader",
+            "followers": len(per),
+            "last_seqno": int(last),
+            "wal_bytes": int(size),
+            "shipped_records": int(sum(h.sent_records for h in self.handles)),
+            "shipped_bytes": int(sum(h.sent_bytes for h in self.handles)),
+            "follower_lag_records": max((p["lag_records"] for p in per),
+                                        default=0),
+            "follower_lag_bytes": max((p["lag_bytes"] for p in per),
+                                      default=0),
+            "per_follower": per,
+        }
+
+
+# --------------------------------------------------------------------------
+# follower
+# --------------------------------------------------------------------------
+
+class Follower:
+    """Replication sink: a replica engine plus the apply loop.
+
+    Opens `directory` (a `Leader.bootstrap` product — or a promoted
+    follower's own dir on restart) via the engine's ``open_replica``,
+    then each `apply`/`pump`: receive frames, validate every one with
+    `wal.check_frame` (a corrupted frame is counted ``rejected`` and
+    dropped *without poisoning the stream* — later frames still
+    apply), drop duplicates (seqno ≤ applied watermark), buffer
+    out-of-order arrivals by seqno, and apply each consecutive frame:
+    append verbatim to the replica WAL, group-commit, replay through
+    the engine's chunk-apply programs, ack ``(seqno, bytes)``. A gap
+    (buffered frames with the next-expected one missing) is signalled
+    on the ack so the leader rewinds and retransmits.
+
+    Reads (`lookup_many` / `range_many` / `aggregate_many` on ``drv``)
+    are eventually consistent at the applied watermark. `promote` is
+    the failover exit: returns the engine as a writable leader."""
+
+    def __init__(self, directory, end=None, *, driver: str = "single",
+                 fsync: bool = False):
+        cls = ShardedSLSM if driver == "sharded" else SLSM
+        self.drv = cls.open_replica(directory, fsync=fsync)
+        self.drv.replication = self
+        self.end = end
+        self.link: Optional[QueueLink] = None   # set by Leader.add_follower
+        self.pending: Dict[int, Tuple[WAL.WalRecord, bytes]] = {}
+        self.promoted = False
+        self.counters = collections.Counter(
+            applied_records=0, applied_bytes=0, duplicates=0, rejected=0,
+            gap_signals=0, buffered_peak=0)
+
+    @property
+    def last_seqno(self) -> int:
+        """The applied (and durable) watermark: seqno of the last
+        record in the replica's WAL."""
+        return self.drv.durability.writer.last_seqno
+
+    def ingest(self, frames: List[bytes],
+               max_records: Optional[int] = None) -> int:
+        """Feed raw frames through the full apply pipeline (the
+        transport-free seam the fault tests drive directly). Returns
+        records applied."""
+        if self.promoted:
+            return 0
+        dur = self.drv.durability
+        for f in frames:
+            rec = WAL.check_frame(f)
+            if rec is None:
+                self.counters["rejected"] += 1
+                continue
+            if rec.seqno <= self.last_seqno or rec.seqno in self.pending:
+                self.counters["duplicates"] += 1
+                continue
+            self.pending[rec.seqno] = (rec, f)
+        applied = 0
+        while self.pending and (max_records is None
+                                or applied < max_records):
+            item = self.pending.pop(self.last_seqno + 1, None)
+            if item is None:
+                break
+            rec, f = item
+            try:
+                dur.append_frame(f)
+            except ValueError:          # epoch regression / stale frame
+                self.counters["rejected"] += 1
+                continue
+            self.drv.apply_replicated([rec])
+            self.counters["applied_records"] += 1
+            self.counters["applied_bytes"] += len(f)
+            applied += 1
+        self.counters["buffered_peak"] = max(self.counters["buffered_peak"],
+                                             len(self.pending))
+        if applied:
+            dur.sync()
+        gap = bool(self.pending
+                   and min(self.pending) > self.last_seqno + 1)
+        if (applied or gap) and self.end is not None:
+            if gap:
+                self.counters["gap_signals"] += 1
+            try:
+                self.end.send_ack(self.last_seqno,
+                                  self.counters["applied_bytes"], gap=gap)
+            except (BrokenPipeError, OSError):
+                pass                    # leader gone; promote() decides
+        return applied
+
+    def apply(self, max_records: Optional[int] = None) -> int:
+        """Receive from the transport and `ingest`. Returns records
+        applied (0 when detached or already promoted)."""
+        if self.end is None or self.promoted:
+            return 0
+        return self.ingest(self.end.recv_frames(), max_records)
+
+    def pump(self) -> int:
+        """One replication turn (the `repro.serve` hook): = `apply`."""
+        return self.apply()
+
+    def promote(self):
+        """Failover: make this follower the leader. Unacked buffered
+        frames are dropped (never acked ⇒ never durable anywhere —
+        clients were never told they happened), the transport is
+        detached, and the engine's ``promote()`` bumps the WAL epoch
+        and re-enables local logging, so the seqno stream resumes right
+        after the last applied record and any stale pre-failover bytes
+        the reused log file might expose later are rejected by the
+        prefix rule's epoch check. Returns the now-writable engine."""
+        self.pending.clear()
+        if self.end is not None:
+            try:
+                self.end.close()
+            except OSError:
+                pass
+            self.end = None
+        self.promoted = True
+        drv = self.drv.promote()
+        drv.replication = None
+        return drv
+
+    def stats(self) -> Dict[str, Any]:
+        """Follower-side replication telemetry: applied watermark,
+        reorder-buffer occupancy, and the duplicate/reject counters."""
+        return {
+            "role": "follower",
+            "promoted": self.promoted,
+            "applied_seqno": int(self.last_seqno),
+            "reorder_buffered": len(self.pending),
+            **{k: int(v) for k, v in self.counters.items()},
+        }
+
+
+def converge(leader: Leader, *followers: Follower,
+             max_rounds: int = 1000) -> int:
+    """Pump `leader` and `followers` until every follower's ack says it
+    has applied the leader's whole durable log (lag 0). Returns rounds
+    used; raises RuntimeError when `max_rounds` pumps don't converge
+    (e.g. a severed link)."""
+    for r in range(max_rounds):
+        leader.pump()
+        for f in followers:
+            f.pump()
+        leader.pump()                   # drain the acks just sent
+        if leader.stats()["follower_lag_records"] == 0:
+            return r + 1
+    raise RuntimeError("replication did not converge: "
+                       + json.dumps(leader.stats()))

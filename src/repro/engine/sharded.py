@@ -312,6 +312,9 @@ class ShardedSLSM:
         self.durability = WAL.as_durability(durability)
         if self.durability is not None:
             self.durability.ensure_header(self._wal_meta())
+        # replication hook (DESIGN.md §14): a replication.Leader /
+        # .Follower claims this; repro.serve pumps it between windows
+        self.replication = None
 
     # -- write path -------------------------------------------------------
     def insert(self, keys, vals) -> None:
@@ -1101,6 +1104,36 @@ class ShardedSLSM:
         drv._replay([r for r in records if r.seqno > watermark])
         drv.stats["restore_us"] += int((time.perf_counter() - t0) * 1e6)
         return drv
+
+    @classmethod
+    def open_replica(cls, path, *, fsync: bool = False):
+        """Open a sharded replication follower over a bootstrapped
+        directory — `SLSM.open_replica`'s contract: a plain `restore`
+        under a replica-mode durability layer that never injects a
+        local META record (the log is the leader's stream, verbatim).
+        WAL records are pre-routing, so a sharded follower replays a
+        sharded leader's stream byte-identically."""
+        return cls.restore(path, durability=WAL.Durability(
+            path, fsync=fsync, replica=True))
+
+    def apply_replicated(self, records) -> int:
+        """Apply decoded leader WAL records through the vmapped
+        chunk-apply programs with re-logging suppressed (see
+        `SLSM.apply_replicated`). Returns the records applied."""
+        before = self.stats["replayed_records"]
+        self._replay(records)
+        return self.stats["replayed_records"] - before
+
+    def promote(self) -> "ShardedSLSM":
+        """Failover: turn this replica fleet into a writable leader —
+        `SLSM.promote`'s contract (epoch bump + local logging
+        re-enabled; seqnos resume after the last applied record)."""
+        if self.durability is None:
+            raise ValueError("promote() requires a durability layer")
+        self.durability.writer.bump_epoch()
+        self.durability.replica = False
+        self.stats["promotions"] += 1
+        return self
 
     # -- stats ----------------------------------------------------------------
     @property

@@ -27,8 +27,8 @@ chunk boundaries, and mid-seal/mid-spill/mid-RETUNE crash points.
 WAL file format (little-endian):
 
     magic  b"SLSMWAL1"
-    record := crc32 u32 | length u32 | seqno u64 | kind u8 | pad[3]
-              | payload[length]
+    record := crc32 u32 | length u32 | seqno u64 | kind u8 | epoch u8
+              | pad[2] | payload[length]
 
 The crc32 covers everything after the crc field (length through
 payload), so a torn or bit-flipped tail is rejected as a unit; seqnos
@@ -36,6 +36,19 @@ are strictly consecutive, so a valid-looking record after a gap is
 rejected too. `read_wal` returns the longest well-formed prefix — a
 torn final record is *dropped cleanly*, never partially applied — and
 `WalWriter` truncates that torn tail before resuming appends.
+
+The epoch byte (one of the format-1/2 pad bytes, so old logs decode as
+epoch 0) guards *file reuse across failovers*: `promote()` bumps the
+writer's epoch, so stale bytes from a previous incarnation that happen
+to sit past a record-aligned truncation point — with the right next
+seqno — are rejected by the prefix rule's non-decreasing-epoch check
+instead of being replayed as live records.
+
+Replication (DESIGN.md §14) rides this same framing: `WalTailer`
+incrementally yields each newly durable frame *verbatim* so a leader
+can ship raw frame bytes, and `WalWriter.append_frame` lets a follower
+append them byte-identically, preserving the leader's seqno/epoch
+stamps — leader WAL and follower WAL are bitwise-equal streams.
 
 Record kinds:
 
@@ -86,8 +99,9 @@ from repro.core.params import SLSMParams, TuningPolicy
 
 MAGIC = b"SLSMWAL1"
 
-# record framing: crc32 u32 | payload length u32 | seqno u64 | kind u8 | pad3
-_HEADER = struct.Struct("<IIQB3x")
+# record framing: crc32 u32 | payload length u32 | seqno u64 | kind u8
+#                 | epoch u8 | pad2
+_HEADER = struct.Struct("<IIQBB2x")
 _CRC_BODY_LEN = _HEADER.size - 4          # crc covers header-after-crc+payload
 _MAX_PAYLOAD = 1 << 28                    # sanity bound while scanning
 
@@ -101,12 +115,15 @@ WRITE_KINDS = (REC_WRITE, REC_WRITE2)
 
 
 class WalRecord(NamedTuple):
-    """One decoded WAL record: its sequence number, kind tag, and raw
-    payload bytes (see the module docstring for the payload codecs)."""
+    """One decoded WAL record: its sequence number, kind tag, raw
+    payload bytes (see the module docstring for the payload codecs),
+    and the failover epoch it was stamped under (0 until the first
+    `promote()` of the log's lineage)."""
 
     seqno: int
     kind: int
     payload: bytes
+    epoch: int = 0
 
 
 class SnapshotError(RuntimeError):
@@ -118,12 +135,13 @@ class SnapshotError(RuntimeError):
 # record codecs
 # --------------------------------------------------------------------------
 
-def encode_record(seqno: int, kind: int, payload: bytes) -> bytes:
-    """Frame one record: crc32 header (covering length/seqno/kind and the
-    payload) + payload bytes."""
-    head = _HEADER.pack(0, len(payload), seqno, kind)
+def encode_record(seqno: int, kind: int, payload: bytes,
+                  epoch: int = 0) -> bytes:
+    """Frame one record: crc32 header (covering length/seqno/kind/epoch
+    and the payload) + payload bytes."""
+    head = _HEADER.pack(0, len(payload), seqno, kind, epoch)
     crc = zlib.crc32(head[4:] + payload) & 0xFFFFFFFF
-    return _HEADER.pack(crc, len(payload), seqno, kind) + payload
+    return _HEADER.pack(crc, len(payload), seqno, kind, epoch) + payload
 
 
 def encode_write(keys, vals, wts) -> bytes:
@@ -172,12 +190,15 @@ def read_wal(path) -> Tuple[List[WalRecord], int]:
 
     Returns ``(records, good_bytes)``: every record up to — but not
     including — the first framing violation (short header, implausible
-    length, CRC mismatch, or a non-consecutive seqno), and the byte
-    offset where that violation starts. A torn or corrupted tail is
-    thereby dropped as a unit: no partial record is ever surfaced.
-    ``good_bytes == 0`` means the file (or its magic) is unreadable and
-    a resuming writer must start it over. A missing file decodes to
-    ``([], 0)``.
+    length, CRC mismatch, a non-consecutive seqno, or a *decreasing*
+    epoch), and the byte offset where that violation starts. A torn or
+    corrupted tail is thereby dropped as a unit: no partial record is
+    ever surfaced. The epoch check is what makes ``promote()``'s file
+    reuse safe — stale pre-failover bytes past a record-aligned cut
+    carry an older epoch and are rejected even when their seqno happens
+    to be consecutive. ``good_bytes == 0`` means the file (or its
+    magic) is unreadable and a resuming writer must start it over. A
+    missing file decodes to ``([], 0)``.
     """
     p = Path(path)
     if not p.exists():
@@ -188,8 +209,9 @@ def read_wal(path) -> Tuple[List[WalRecord], int]:
     records: List[WalRecord] = []
     off = len(MAGIC)
     prev: Optional[int] = None
+    prev_epoch = 0
     while off + _HEADER.size <= len(data):
-        crc, length, seqno, kind = _HEADER.unpack_from(data, off)
+        crc, length, seqno, kind, epoch = _HEADER.unpack_from(data, off)
         end = off + _HEADER.size + length
         if length > _MAX_PAYLOAD or end > len(data):
             break
@@ -197,11 +219,94 @@ def read_wal(path) -> Tuple[List[WalRecord], int]:
             break
         if prev is not None and seqno != prev + 1:
             break
+        if epoch < prev_epoch:
+            break
         records.append(WalRecord(seqno, kind,
-                                 bytes(data[off + _HEADER.size:end])))
+                                 bytes(data[off + _HEADER.size:end]),
+                                 epoch))
         prev = seqno
+        prev_epoch = epoch
         off = end
     return records, off
+
+
+def check_frame(frame: bytes) -> Optional[WalRecord]:
+    """Validate one standalone framed record (exact length, CRC) and
+    decode it, or return None if the bytes are not a complete well-
+    formed frame — the follower-side gate that rejects a corrupted or
+    torn replication message without poisoning the stream."""
+    if len(frame) < _HEADER.size:
+        return None
+    crc, length, seqno, kind, epoch = _HEADER.unpack_from(frame, 0)
+    if length > _MAX_PAYLOAD or len(frame) != _HEADER.size + length:
+        return None
+    if zlib.crc32(frame[4:]) & 0xFFFFFFFF != crc:
+        return None
+    return WalRecord(seqno, kind, bytes(frame[_HEADER.size:]), epoch)
+
+
+class WalTailer:
+    """Incremental reader of a live WAL's durable frame stream.
+
+    A replication leader's shipping cursor: `poll` reads the file from
+    a byte offset and yields each newly appended well-formed frame
+    exactly once, as ``(record, raw_frame_bytes)`` — raw bytes so
+    frames ship verbatim and a follower's `WalWriter.append_frame`
+    reproduces the leader's log bitwise. The `read_wal` prefix rule
+    applies incrementally: a frame surfaces only when fully present
+    with a valid CRC, the expected consecutive seqno, and a
+    non-decreasing epoch; a torn tail stays pending until the writer
+    completes it.
+    """
+
+    def __init__(self, path, offset: Optional[int] = None,
+                 next_seqno: Optional[int] = None, epoch: int = 0):
+        self.path = Path(path)
+        self.offset = len(MAGIC) if offset is None else offset
+        self.next_seqno = next_seqno    # None = accept any first seqno
+        self.epoch = epoch
+
+    def poll(self, max_records: Optional[int] = None
+             ) -> List[Tuple[WalRecord, bytes]]:
+        """Read every frame that became durable since the last poll
+        (up to `max_records`), advancing the cursor past each."""
+        out: List[Tuple[WalRecord, bytes]] = []
+        if not self.path.exists():
+            return out
+        with open(self.path, "rb") as f:
+            f.seek(self.offset)
+            data = f.read()
+        off = 0
+        while off + _HEADER.size <= len(data):
+            if max_records is not None and len(out) >= max_records:
+                break
+            crc, length, seqno, kind, epoch = _HEADER.unpack_from(data, off)
+            end = off + _HEADER.size + length
+            if length > _MAX_PAYLOAD or end > len(data):
+                break
+            frame = bytes(data[off:end])
+            if zlib.crc32(frame[4:]) & 0xFFFFFFFF != crc:
+                break
+            if self.next_seqno is not None and seqno != self.next_seqno:
+                break
+            if epoch < self.epoch:
+                break
+            out.append((WalRecord(seqno, kind, frame[_HEADER.size:], epoch),
+                        frame))
+            self.next_seqno = seqno + 1
+            self.epoch = epoch
+            self.offset += len(frame)
+            off = end
+        return out
+
+    def rewind(self, offset: int, next_seqno: Optional[int],
+               epoch: int = 0) -> None:
+        """Reset the cursor (leader retransmit after a follower reports
+        a gap): the next `poll` re-reads from `offset` expecting
+        `next_seqno`."""
+        self.offset = offset
+        self.next_seqno = next_seqno
+        self.epoch = epoch
 
 
 def record_offsets(path) -> List[Tuple[WalRecord, int, int]]:
@@ -231,6 +336,7 @@ class WalWriter:
     def __init__(self, path, min_next_seqno: int = 0):
         self.path = Path(path)
         self.head: Optional[WalRecord] = None   # the META record, if any
+        self.epoch = 0                          # failover epoch stamp
         if self.path.exists():
             records, good = read_wal(self.path)
             if good == 0:
@@ -240,6 +346,7 @@ class WalWriter:
                 with open(self.path, "r+b") as f:
                     f.truncate(good)            # drop the torn tail
             self.next_seqno = records[-1].seqno + 1 if records else 0
+            self.epoch = records[-1].epoch if records else 0
             if records and records[0].kind == REC_META:
                 self.head = records[0]
         else:
@@ -262,14 +369,49 @@ class WalWriter:
         """Buffer one framed record; returns the seqno it was stamped
         with. Nothing reaches the OS until `sync`."""
         seqno = self.next_seqno
-        rec = encode_record(seqno, kind, payload)
+        rec = encode_record(seqno, kind, payload, self.epoch)
         self._buf.append(rec)
         self.next_seqno += 1
         self.size += len(rec)
         self.records += 1
         if kind == REC_META and self.head is None:
-            self.head = WalRecord(seqno, kind, payload)
+            self.head = WalRecord(seqno, kind, payload, self.epoch)
         return seqno
+
+    def append_frame(self, frame: bytes) -> int:
+        """Buffer one *pre-framed* record verbatim (the replication
+        follower path): the frame must pass `check_frame`, carry this
+        writer's exact next seqno, and not regress the epoch — its
+        leader-assigned stamps are preserved byte-identically. Returns
+        the frame's seqno; raises ValueError on any violation (the
+        caller drops or re-requests the frame, the log is untouched)."""
+        rec = check_frame(frame)
+        if rec is None:
+            raise ValueError("append_frame: malformed frame (CRC/framing)")
+        if rec.seqno != self.next_seqno:
+            raise ValueError(f"append_frame: seqno {rec.seqno} != expected "
+                             f"{self.next_seqno}")
+        if rec.epoch < self.epoch:
+            raise ValueError(f"append_frame: epoch regressed "
+                             f"({rec.epoch} < {self.epoch})")
+        self._buf.append(frame)
+        self.next_seqno = rec.seqno + 1
+        self.epoch = rec.epoch
+        self.size += len(frame)
+        self.records += 1
+        if rec.kind == REC_META and self.head is None:
+            self.head = rec
+        return rec.seqno
+
+    def bump_epoch(self) -> int:
+        """Advance the failover epoch stamped into subsequent records —
+        called by a follower's ``promote()`` so any stale bytes a later
+        crash exposes from the pre-failover lineage are rejected by the
+        prefix rule's epoch check. Returns the new epoch."""
+        if self.epoch >= 0xFF:
+            raise ValueError("epoch exhausted (255 failovers on one log)")
+        self.epoch += 1
+        return self.epoch
 
     def sync(self, fsync: bool = True) -> None:
         """Group commit: one OS write of every buffered record, then —
@@ -487,16 +629,23 @@ class Durability:
 
     ``fsync=False`` keeps the write+flush (process-crash durability,
     what the injection tests simulate) but skips the disk barrier — for
-    tests and benches that do not model power loss."""
+    tests and benches that do not model power loss.
+
+    ``replica=True`` marks a replication follower's log: the WAL is a
+    shipped copy of the leader's stream (bootstrapped from a snapshot +
+    tail, extended via `append_frame`), so `ensure_header` never
+    injects a local META record — a tail-only log stays a verbatim
+    continuation of the leader's seqno stream."""
 
     def __init__(self, directory, *, fsync: bool = True,
                  snapshot_every_bytes: int = 1 << 20,
-                 keep_snapshots: int = 2):
+                 keep_snapshots: int = 2, replica: bool = False):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         gc_tmp_snapshots(self.dir)
         self.wal_path = self.dir / "wal.log"
         self.fsync = fsync
+        self.replica = replica
         self.snapshot_every_bytes = snapshot_every_bytes
         self.keep_snapshots = keep_snapshots
         self._writer: Optional[WalWriter] = None
@@ -525,9 +674,19 @@ class Durability:
         The ``"wal"`` record-format version is stripped from both sides
         of the comparison: it versions the WRITE payload codec, not the
         engine, and replay decodes either format — so a v1 (pre-
-        weighted) directory reattaches and upgrades in place."""
+        weighted) directory reattaches and upgrades in place.
+
+        A META record is only ever written to a *genuinely fresh* log
+        (no records, no snapshot watermark) — a headless log that
+        already holds records, or resumes past a watermark, is
+        mid-stream (a replica's tail-only bootstrap, or snapshot-only
+        recovery) and injecting a META there would corrupt the seqno
+        stream; the fingerprint is then verified via the snapshot's
+        copy by `restore` instead."""
         w = self.writer
         if w.head is None:
+            if self.replica or w.last_seqno >= 0:
+                return
             w.append(REC_META, json.dumps(_canon(meta),
                                           sort_keys=True).encode())
             self.sync()
@@ -554,6 +713,13 @@ class Durability:
         seqno. Durable only after the next `sync` (the driver calls it
         before any result of the op can reach a client)."""
         return self.writer.append(REC_WRITE2, encode_write(keys, vals, wts))
+
+    def append_frame(self, frame: bytes) -> int:
+        """Buffer one leader-framed record verbatim (the replication
+        follower path — see `WalWriter.append_frame`): leader-assigned
+        seqno/epoch stamps are preserved, so the follower's log is a
+        bitwise copy of the leader's stream. Durable after `sync`."""
+        return self.writer.append_frame(frame)
 
     def log_retune(self, target: str) -> int:
         """Buffer one applied tuner allocation switch; returns its
@@ -613,6 +779,7 @@ class Durability:
             "wal_bytes": int(size),
             "wal_records": int(self._writer.records if self._writer else 0),
             "wal_syncs": int(self._writer.syncs if self._writer else 0),
+            "replica": bool(self.replica),
             "snapshots": int(self.counters["snapshots"]),
             "snapshot_ms_last": float(self.last_snapshot_ms),
             "bytes_since_snapshot": int(max(0, size

@@ -16,6 +16,13 @@ Usage::
 The context manager starts the pump task on entry and drains on exit.
 Each submit parks the ticket's result in an `asyncio.Future` the pump
 resolves when the ticket's window executes.
+
+Replication rides the same pump task: the server's idle pumps drive
+the engine's replication endpoint (DESIGN.md §14), so an
+``AsyncServer`` over a follower keeps applying the leader's stream
+between client reads with no extra machinery, and one over a leader
+keeps shipping. A follower server (``Server(tree, role="follower")``)
+rejects write submits at intake; route writes to the leader.
 """
 from __future__ import annotations
 
@@ -33,6 +40,11 @@ class AsyncServer:
         self.poll_s = poll_s
         self._task: asyncio.Task | None = None
         self._stop = False
+
+    @property
+    def role(self) -> str:
+        """The wrapped server's replication role (leader/follower)."""
+        return self.server.role
 
     async def submit(self, client: str, kind: str, keys,
                      vals=None) -> Any:

@@ -25,6 +25,16 @@ Per-client latency accounting rides the tickets: every reply stamps
 enqueue->reply seconds into the server's client ledgers, and `stats()`
 folds them into p50/p99/p999/max-stall percentiles per client and
 overall.
+
+Replication roles (DESIGN.md §14): ``role="leader"`` (default) serves
+the full op set with read-your-writes (log-before-ack is the window
+boundary's group commit, and replication ships only durable bytes);
+``role="follower"`` fronts a replica engine — write submits are
+rejected at intake, reads serve the eventually-consistent applied
+watermark. Either way, when the engine carries a
+``repro.engine.replication`` endpoint (``tree.replication``), the pump
+drives it between windows and in idle gaps: shipping on a leader,
+applying on a follower.
 """
 from __future__ import annotations
 
@@ -206,13 +216,20 @@ class Server:
     the serving bench measures the tape against. Both modes share the
     submit/window/accounting machinery, so their latency numbers are
     directly comparable.
+
+    ``role`` selects the replication stance (module docstring):
+    ``"leader"`` accepts everything, ``"follower"`` rejects write
+    submits (the stream is the only writer of a replica).
     """
 
     def __init__(self, tree, *, window: WindowPolicy | None = None,
                  governor: Governor | None = None, mode: str = "coalesced",
-                 clock=time.perf_counter):
+                 role: str = "leader", clock=time.perf_counter):
         if mode not in ("coalesced", "per_request"):
             raise ValueError(f"unknown serve mode {mode!r}")
+        if role not in ("leader", "follower"):
+            raise ValueError(f"unknown serve role {role!r}")
+        self.role = role
         self.tree = tree
         self.window = window or WindowPolicy()
         self.governor = governor or Governor()
@@ -238,6 +255,10 @@ class Server:
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r}; "
                              f"options: {KINDS}")
+        if self.role == "follower" and kind in ("insert", "delete"):
+            raise ValueError(
+                f"follower is read-only: {kind!r} must go to the leader "
+                "(the replication stream is a replica's only writer)")
         keys = np.asarray(keys, np.int32).reshape(-1)
         if kind == "insert":
             vals = np.asarray(vals, np.int32).reshape(-1)
@@ -287,10 +308,15 @@ class Server:
         allowance there and 0 is returned. After a served window the
         governor spends the window's accrued merge budget — both happen
         strictly *between* device dispatches, so maintenance never rides
-        inside a request's tape (DESIGN.md §11).
+        inside a request's tape (DESIGN.md §11). Replication (when the
+        engine carries an endpoint) is pumped in the same seams: after
+        each window and in every idle gap — shipping durable frames on
+        a leader, applying received ones on a follower — so it never
+        rides inside a request's dispatch either.
         """
         if not self._pending:
             self.governor.idle(self.tree)
+            self._pump_replication()
             return 0
         if not (force or self.poll()):
             return 0
@@ -315,7 +341,16 @@ class Server:
         self.counters["windows"] += 1
         self.window.closed(batch_ops)
         self.governor.window_done(self.tree, write_ops)
+        self._pump_replication()
         return len(batch)
+
+    def _pump_replication(self) -> None:
+        """Drive the engine's replication endpoint (no-op when absent):
+        a leader ships the window's now-durable frames, a follower
+        applies whatever the stream delivered."""
+        rep = getattr(self.tree, "replication", None)
+        if rep is not None:
+            rep.pump()
 
     def _serve_per_request(self, batch: List[Ticket]) -> None:
         """Baseline dispatch: one classic driver call per request, in
@@ -364,14 +399,18 @@ class Server:
         bytes/records/syncs, snapshots, last snapshot ms). A restored
         engine's ``engine`` block carries its ``restore_us`` /
         ``replayed_records``, so recovery stall time is first-class
-        telemetry."""
+        telemetry. With replication attached, the ``replication`` block
+        carries the endpoint's stats — on a leader that includes
+        ``follower_lag_records`` / ``follower_lag_bytes``."""
         overall: List[float] = []
         clients = {}
         for c, lat in sorted(self._lat.items()):
             clients[c] = _percentiles(lat)
             overall.extend(lat)
         dur = getattr(self.tree, "durability", None)
+        rep = getattr(self.tree, "replication", None)
         return {
+            "role": self.role,
             "clients": clients,
             "overall": _percentiles(overall) if overall else None,
             "counters": dict(self.counters),
@@ -383,4 +422,5 @@ class Server:
                        "max_ops": self.window.max_ops},
             "engine": {k: int(v) for k, v in self.tree.stats.items()},
             "durability": dur.stats() if dur is not None else None,
+            "replication": rep.stats() if rep is not None else None,
         }

@@ -107,9 +107,52 @@ def test_read_wal_drops_short_tail(tmp_path):
 
 def test_read_wal_rejects_implausible_length(tmp_path):
     p = tmp_path / "wal.log"
-    head = WAL._HEADER.pack(0, WAL._MAX_PAYLOAD + 1, 0, WAL.REC_WRITE2)
+    head = WAL._HEADER.pack(0, WAL._MAX_PAYLOAD + 1, 0, WAL.REC_WRITE2, 0)
     _write_raw(p, [head + b"x" * 64])
     assert WAL.read_wal(p)[0] == []
+
+
+def test_read_wal_rejects_stale_prior_epoch_tail(tmp_path):
+    """ISSUE 9 regression: promote() reuses the WAL file in place. A
+    crash cut that lands *exactly on a record boundary* can expose
+    stale frames from the pre-failover lineage past it — CRC-valid and,
+    when the new lineage wrote fewer records, seqno-consecutive too.
+    The prefix rule must reject them anyway: they carry an older
+    epoch."""
+    p = tmp_path / "wal.log"
+    old = [WAL.encode_record(s, WAL.REC_RETUNE, b"old", epoch=0)
+           for s in range(10)]
+    new = [WAL.encode_record(s, WAL.REC_RETUNE, b"new", epoch=1)
+           for s in (6, 7)]
+    # post-crash file: live prefix [0..5 @e0][6..7 @e1], then stale
+    # pre-promote frames 8..9 @e0 record-aligned past the cut
+    stale = old[8:]
+    _write_raw(p, old[:6] + new + stale)
+    records, good = WAL.read_wal(p)
+    assert [r.seqno for r in records] == list(range(8))
+    assert [r.epoch for r in records] == [0] * 6 + [1, 1]
+    # the stale frames are individually well-formed and seqno-
+    # consecutive — the epoch check is the only thing rejecting them
+    assert WAL.check_frame(stale[0]).seqno == 8
+    assert good == os.path.getsize(p) - sum(len(f) for f in stale)
+    # and a resuming writer truncates them away, continuing at epoch 1
+    w = WAL.WalWriter(p)
+    assert (w.next_seqno, w.epoch) == (8, 1)
+    w.close()
+    assert os.path.getsize(p) == good
+
+
+def test_check_frame_total():
+    frame = WAL.encode_record(7, WAL.REC_RETUNE, b"x", epoch=3)
+    rec = WAL.check_frame(frame)
+    assert (rec.seqno, rec.kind, rec.payload, rec.epoch) == (
+        7, WAL.REC_RETUNE, b"x", 3)
+    assert WAL.check_frame(frame[:-1]) is None          # truncated
+    assert WAL.check_frame(frame + b"y") is None        # trailing junk
+    bad = bytearray(frame)
+    bad[WAL._HEADER.size] ^= 0xFF
+    assert WAL.check_frame(bytes(bad)) is None          # payload flip
+    assert WAL.check_frame(b"") is None
 
 
 # --------------------------------------------------------------------------
@@ -163,6 +206,93 @@ def test_writer_append_buffers_until_sync(tmp_path):
     assert w.syncs == 1
     w.sync(fsync=False)                    # empty batch: no-op
     assert w.syncs == 1
+    w.close()
+
+
+def test_writer_bump_epoch_stamps_and_resumes(tmp_path):
+    p = tmp_path / "wal.log"
+    w = WAL.WalWriter(p)
+    w.append(WAL.REC_RETUNE, b"a")
+    assert w.bump_epoch() == 1
+    w.append(WAL.REC_RETUNE, b"b")
+    w.close()
+    records, _ = WAL.read_wal(p)
+    assert [(r.seqno, r.epoch) for r in records] == [(0, 0), (1, 1)]
+    w2 = WAL.WalWriter(p)                  # reopen resumes at epoch 1
+    assert w2.epoch == 1
+    w2.append(WAL.REC_RETUNE, b"c")
+    w2.close()
+    assert WAL.read_wal(p)[0][-1].epoch == 1
+
+
+def test_append_frame_verbatim_and_validated(tmp_path):
+    leader = WAL.WalWriter(tmp_path / "leader.log")
+    for i in range(3):
+        leader.append(WAL.REC_RETUNE, f"r{i}".encode())
+    leader.close()
+    frames = [WAL.encode_record(r.seqno, r.kind, r.payload, r.epoch)
+              for r in WAL.read_wal(leader.path)[0]]
+    f = WAL.WalWriter(tmp_path / "follower.log")
+    with pytest.raises(ValueError, match="seqno"):
+        f.append_frame(frames[1])          # gap: 1 before 0
+    f.append_frame(frames[0])
+    bad = bytearray(frames[1])
+    bad[-1] ^= 0xFF
+    with pytest.raises(ValueError, match="malformed"):
+        f.append_frame(bytes(bad))         # CRC flip rejected
+    f.append_frame(frames[1])              # ...without poisoning the log
+    f.append_frame(frames[2])
+    with pytest.raises(ValueError, match="epoch regressed"):
+        f.bump_epoch()
+        f.append_frame(WAL.encode_record(3, WAL.REC_RETUNE, b"x", epoch=0))
+    f.close()
+    # follower log is a bitwise copy of the leader's stream
+    assert (tmp_path / "follower.log").read_bytes() == \
+        (tmp_path / "leader.log").read_bytes()
+
+
+def test_wal_tailer_yields_each_frame_once(tmp_path):
+    p = tmp_path / "wal.log"
+    w = WAL.WalWriter(p)
+    t = WAL.WalTailer(p)
+    assert t.poll() == []
+    w.append(WAL.REC_RETUNE, b"a")
+    assert t.poll() == []                  # buffered, not durable
+    w.sync(fsync=False)
+    got = t.poll()
+    assert [(r.seqno, r.payload) for r, _ in got] == [(0, b"a")]
+    assert t.poll() == []                  # exactly once
+    w.append(WAL.REC_RETUNE, b"b")
+    w.append(WAL.REC_RETUNE, b"c")
+    w.sync(fsync=False)
+    assert [r.seqno for r, _ in t.poll(max_records=1)] == [1]
+    assert [r.seqno for r, _ in t.poll()] == [2]
+    # a torn tail stays pending until the writer completes it
+    frame = WAL.encode_record(3, WAL.REC_RETUNE, b"d", epoch=0)
+    with open(p, "ab") as fh:
+        fh.write(frame[:7])
+    assert t.poll() == []
+    with open(p, "ab") as fh:
+        fh.write(frame[7:])
+    assert [r.seqno for r, _ in t.poll()] == [3]
+    # shipped frames are the file's bytes verbatim
+    t2 = WAL.WalTailer(p)
+    assert b"".join(f for _, f in t2.poll()) == p.read_bytes()[len(WAL.MAGIC):]
+    w.close()
+
+
+def test_wal_tailer_rewind_retransmits(tmp_path):
+    p = tmp_path / "wal.log"
+    w = WAL.WalWriter(p)
+    offs = [len(WAL.MAGIC)]
+    for i in range(3):
+        w.append(WAL.REC_RETUNE, f"r{i}".encode())
+        w.sync(fsync=False)
+        offs.append(w.size)
+    t = WAL.WalTailer(p)
+    assert [r.seqno for r, _ in t.poll()] == [0, 1, 2]
+    t.rewind(offs[1], 1)
+    assert [r.seqno for r, _ in t.poll()] == [1, 2]
     w.close()
 
 
@@ -267,8 +397,9 @@ def test_should_snapshot_threshold(tmp_path):
     st = dur.stats()
     assert st["bytes_since_snapshot"] >= 256
     assert st["wal_records"] == st["wal_syncs"] > 0
-    assert set(st) == {"wal_bytes", "wal_records", "wal_syncs", "snapshots",
-                       "snapshot_ms_last", "bytes_since_snapshot"}
+    assert set(st) == {"wal_bytes", "wal_records", "wal_syncs", "replica",
+                       "snapshots", "snapshot_ms_last",
+                       "bytes_since_snapshot"}
     dur.close()
 
 

@@ -1,0 +1,8 @@
+"""Path setup for the replication suite: the shared machinery lives in
+``repl_harness.py`` (named distinctly from the durability suite's
+``harness.py`` — both test directories land on sys.path in a full
+run, and the replication harness itself imports the durability one)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -1,0 +1,84 @@
+"""Shared machinery for the replication suite (DESIGN.md §14).
+
+Extends the crash-point harness (``tests/durability/harness.py`` — the
+deterministic op stream, the tiny geometry, the bitwise answer probes)
+with replication wiring: build a durable leader, bootstrap + attach an
+in-process follower over a `QueueLink` (the inspectable wire the fault
+tests mutate), and the two oracles the suite's claims reduce to:
+
+  * the **convergence oracle**: after `converge`, a follower answers
+    bitwise like the leader (and like a `DictOracle` fed the same
+    stream);
+  * the **failover oracle**: a promoted follower answers bitwise like
+    a fresh engine fed exactly the follower's durable WRITE prefix —
+    the acked prefix, since a follower acks only synced frames.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "durability"))
+
+from harness import (BACKENDS, DRIVERS, KEY_SPACE, apply_ops,  # noqa: F401,E402
+                     assert_same_answers, durable_write_ops, make_engine,
+                     probe_answers, small_params, write_stream)
+
+from repro.engine import replication as R  # noqa: E402
+from repro.engine import wal as WAL        # noqa: E402
+
+
+def make_leader(durdir, driver="single", backend="jnp", adaptive=False,
+                fsync=False):
+    """One durable engine + its `Leader` (tiny geometry, no snapshot
+    threshold — tests snapshot explicitly when they want one)."""
+    p = small_params(backend, adaptive)
+    dur = WAL.Durability(durdir, fsync=fsync, snapshot_every_bytes=1 << 30)
+    drv = make_engine(driver, p, durability=dur)
+    return drv, R.Leader(drv)
+
+
+def leader_with_follower(tmp_path, driver="single", backend="jnp",
+                         adaptive=False, n_prefix=0, snapshot=False,
+                         ops=None):
+    """The standard fixture: a leader that has already absorbed
+    ``ops[:n_prefix]`` (optionally snapshotting after), plus one
+    freshly bootstrapped QueueLink follower. Returns
+    ``(drv, leader, follower, ops)``."""
+    drv, leader = make_leader(tmp_path / "leader", driver, backend, adaptive)
+    if ops is None:
+        ops = write_stream(n_ops=12)
+    apply_ops(drv, ops, upto=n_prefix)
+    if snapshot:
+        drv.snapshot()
+    fol = leader.add_follower(tmp_path / "follower")
+    return drv, leader, fol, ops
+
+
+def acked_prefix_answers(follower, driver, backend, adaptive=False,
+                         ops=None, leader_dir=None):
+    """The failover oracle's answers: a fresh *non-durable* engine fed
+    exactly the write-op prefix that is durable in the follower
+    (= the acked prefix: followers ack only after group commit).
+
+    With `leader_dir` the prefix length is counted from the *leader's*
+    log at the follower's applied watermark — required when the
+    follower was bootstrapped from a snapshot (its own WAL then holds
+    only the tail records, but its state holds the snapshot's too)."""
+    if leader_dir is not None:
+        wm = follower.last_seqno
+        j = sum(1 for r in WAL.read_wal(Path(leader_dir) / "wal.log")[0]
+                if r.kind in WAL.WRITE_KINDS and r.seqno <= wm)
+    else:
+        j = durable_write_ops(follower.drv.durability.wal_path)
+    oracle = make_engine(driver, small_params(backend, adaptive))
+    apply_ops(oracle, ops, upto=j)
+    return probe_answers(oracle), j
+
+
+def pump_rounds(leader, follower, rounds=3):
+    """A bounded number of pump turns (no convergence requirement —
+    the fault tests drive the wire in between)."""
+    for _ in range(rounds):
+        leader.pump()
+        follower.pump()
+    leader.pump()

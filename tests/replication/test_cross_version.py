@@ -1,0 +1,98 @@
+"""WAL format-2 cross-version replication (ISSUE 9 satellite): a
+follower replaying a legacy format-1 ``REC_WRITE`` stream (reserved
+TOMBSTONE value = delete) converges bitwise with one replaying the
+equivalent weighted ``REC_WRITE2`` stream — the promise that a
+format-2 follower can trail a not-yet-upgraded format-1 leader.
+
+The equivalence is exact by construction: `wal.decode_write` maps a
+legacy TOMBSTONE hit to the weighted ``(val 0, wt −1)`` record, which
+is byte-for-byte what the modern driver logs for a delete.
+"""
+import struct
+
+import numpy as np
+
+from repl_harness import (apply_ops, assert_same_answers, make_leader,
+                          probe_answers, write_stream)
+
+from repro.core.params import TOMBSTONE
+from repro.engine import replication as R
+from repro.engine import wal as WAL
+
+
+def _legacy_frames(ops, first_seqno, epoch=0):
+    """Hand-encode an op stream as format-1 REC_WRITE frames (n u32 +
+    keys int32[n] + vals int32[n]; TOMBSTONE value = delete)."""
+    frames, seq = [], first_seqno
+    for kind, keys, vals in ops:
+        k = np.ascontiguousarray(np.asarray(keys, np.int32).reshape(-1))
+        if kind == "insert":
+            v = np.ascontiguousarray(np.asarray(vals, np.int32))
+        else:
+            v = np.full(k.size, TOMBSTONE, np.int32)
+        payload = struct.pack("<I", k.size) + k.tobytes() + v.tobytes()
+        frames.append(WAL.encode_record(seq, WAL.REC_WRITE, payload,
+                                        epoch))
+        seq += 1
+    return frames
+
+
+def test_legacy_write_stream_matches_write2(tmp_path):
+    """Two followers of the same genesis: one trails the live WRITE2
+    leader, one ingests the hand-encoded legacy stream for the same
+    ops — their answers (and durable watermarks) are bitwise equal."""
+    drv, leader = make_leader(tmp_path / "leader")
+    cur = leader.bootstrap(tmp_path / "legacy")   # fresh: MAGIC + META
+    fol2 = leader.add_follower(tmp_path / "w2")
+    fol1 = R.Follower(tmp_path / "legacy")        # transport-free ingest
+    ops = write_stream(n_ops=8)
+    apply_ops(drv, ops)
+    R.converge(leader, fol2)
+    fol1.ingest(_legacy_frames(ops, cur.next_seqno))
+    assert fol1.last_seqno == fol2.last_seqno
+    assert fol1.stats()["rejected"] == 0
+    assert_same_answers(probe_answers(fol1.drv), probe_answers(fol2.drv))
+    # the legacy replica log decodes to the same weighted chunks
+    recs1 = [r for r in WAL.read_wal(tmp_path / "legacy" / "wal.log")[0]
+             if r.kind in WAL.WRITE_KINDS]
+    recs2 = [r for r in WAL.read_wal(tmp_path / "w2" / "wal.log")[0]
+             if r.kind in WAL.WRITE_KINDS]
+    assert [r.kind for r in recs1] == [WAL.REC_WRITE] * len(ops)
+    assert [r.kind for r in recs2] == [WAL.REC_WRITE2] * len(ops)
+    for a, b in zip(recs1, recs2):
+        ka, va, wa = WAL.decode_write(a.payload, a.kind)
+        kb, vb, wb = WAL.decode_write(b.payload, b.kind)
+        np.testing.assert_array_equal(ka, kb)
+        np.testing.assert_array_equal(va, vb)
+        np.testing.assert_array_equal(wa, wb)
+
+
+def test_mixed_format_stream_applies_in_order(tmp_path):
+    """A mid-stream format upgrade (legacy frames then WRITE2 frames on
+    one connection) applies seamlessly: seqnos stay consecutive, and
+    the replica matches an engine fed the full op stream."""
+    drv, leader = make_leader(tmp_path / "leader")
+    cur = leader.bootstrap(tmp_path / "mixed")
+    fol = R.Follower(tmp_path / "mixed")
+    ops = write_stream(n_ops=8)
+    legacy = _legacy_frames(ops[:4], cur.next_seqno)
+    seq = cur.next_seqno + 4
+    modern = []
+    for kind, keys, vals in ops[4:]:
+        k = np.asarray(keys, np.int32).reshape(-1)
+        if kind == "insert":
+            v, w = np.asarray(vals, np.int32), np.ones_like(k)
+        else:
+            v, w = np.zeros_like(k), np.full_like(k, -1)
+        modern.append(WAL.encode_record(seq, WAL.REC_WRITE2,
+                                        WAL.encode_write(k, v, w)))
+        seq += 1
+    applied = fol.ingest(legacy + modern)
+    assert applied == len(ops)
+    # restore of the mixed-format replica dir replays both formats
+    fol.drv.durability.close()
+    from repro.engine import SLSM
+    back = SLSM.restore(tmp_path / "mixed")
+    apply_ops(drv, ops)
+    assert_same_answers(probe_answers(back), probe_answers(drv))
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))

@@ -1,0 +1,176 @@
+"""Replication oracle suite (ISSUE 9 satellite): a seeded interleaved
+leader-writes / follower-reads sweep checked against `DictOracle`
+(mirroring ``tests/test_zset_props.py``), on both drivers × both
+backends.
+
+The claims:
+
+  * **read-your-writes on the leader**: every write is visible to the
+    very next leader read (log-before-ack is the driver boundary's
+    group commit; replication never weakens it);
+  * **prefix consistency on the follower**: a mid-stream follower read
+    equals a `DictOracle` fed exactly the follower's durable write
+    prefix — never a torn or interpolated state;
+  * **convergence**: after `converge()`, follower answers are bitwise
+    the leader's (and the oracle's).
+"""
+import numpy as np
+import pytest
+
+from repl_harness import (BACKENDS, DRIVERS, KEY_SPACE,
+                          assert_same_answers, durable_write_ops,
+                          leader_with_follower, probe_answers)
+
+from repro.core.oracle import DictOracle
+from repro.engine import replication as R
+
+
+def _op_stream(rng, n_ops, op_size=32):
+    """Seeded mixed stream (inserts with overwrites + slab deletes)."""
+    ops = []
+    for i in range(n_ops):
+        keys = rng.integers(0, KEY_SPACE, op_size).astype(np.int32)
+        if i % 4 == 3:
+            ops.append(("delete", keys[:op_size // 3], None))
+        else:
+            vals = rng.integers(0, 1 << 20, op_size).astype(np.int32)
+            ops.append(("insert", keys, vals))
+    return ops
+
+
+def _oracle_upto(ops, j):
+    """A DictOracle fed ops[:j]."""
+    o = DictOracle()
+    for kind, keys, vals in ops[:j]:
+        if kind == "insert":
+            o.insert(keys, vals)
+        else:
+            o.delete(keys)
+    return o
+
+
+def _assert_matches_oracle(drv, oracle, probe):
+    vals, found = drv.lookup_many(probe)
+    want_v, want_f = oracle.lookup(probe)
+    np.testing.assert_array_equal(np.asarray(found), want_f)
+    np.testing.assert_array_equal(np.asarray(vals)[np.asarray(found)],
+                                  want_v[want_f])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_interleaved_sweep_vs_dict_oracle(tmp_path, driver, backend):
+    rng = np.random.default_rng(7)
+    ops = _op_stream(rng, n_ops=12)
+    drv, leader, fol, _ = leader_with_follower(
+        tmp_path, driver, backend, ops=ops, n_prefix=0)
+    probe = np.arange(0, KEY_SPACE, 7, dtype=np.int32)
+    for i, (kind, keys, vals) in enumerate(ops):
+        if kind == "insert":
+            drv.insert(keys, vals)
+        else:
+            drv.delete(keys)
+        # read-your-writes on the leader: this op's keys answer from
+        # the full prefix immediately
+        _assert_matches_oracle(drv, _oracle_upto(ops, i + 1), keys)
+        if i % 3 == 2:
+            leader.pump()
+            fol.pump()
+            # follower serves a consistent durable prefix — exactly its
+            # WAL's write-record count, never a partial window
+            j = durable_write_ops(fol.drv.durability.wal_path)
+            assert j <= i + 1
+            _assert_matches_oracle(fol.drv, _oracle_upto(ops, j), probe)
+    rounds = R.converge(leader, fol)
+    assert rounds >= 1 and leader.stats()["follower_lag_records"] == 0
+    # converged: follower is bitwise the leader, both match the oracle
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+    _assert_matches_oracle(fol.drv, _oracle_upto(ops, len(ops)), probe)
+
+
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_follower_reads_are_batched_paths(tmp_path, driver):
+    """Followers serve the batched read paths (`lookup_many`,
+    `range_many`, `aggregate_many`) at their applied watermark."""
+    drv, leader, fol, ops = leader_with_follower(tmp_path, driver,
+                                                 n_prefix=8)
+    R.converge(leader, fol)
+    o = _oracle_upto(ops, durable_write_ops(fol.drv.durability.wal_path))
+    lo, hi = 100, 1800
+    k, v = fol.drv.range(lo, hi)
+    wk, wv = o.range(lo, hi)
+    np.testing.assert_array_equal(np.asarray(k), wk)
+    np.testing.assert_array_equal(np.asarray(v), wv)
+    bounds = np.array([[0, 500], [100, 1800]], np.int32)
+    keys_b, vals_b, counts, _ = fol.drv.range_many(bounds)
+    for lane, (blo, bhi) in enumerate(bounds):
+        wk, wv = o.range(int(blo), int(bhi))
+        n = int(counts[lane])
+        np.testing.assert_array_equal(np.asarray(keys_b[lane])[:n], wk)
+        np.testing.assert_array_equal(np.asarray(vals_b[lane])[:n], wv)
+    cnt, tot, _trunc = fol.drv.aggregate_many(
+        [(int(blo), int(bhi)) for blo, bhi in bounds])
+    for lane, (blo, bhi) in enumerate(bounds):
+        want_c, want_s = o.aggregate(int(blo), int(bhi))
+        assert (int(cnt[lane]), int(tot[lane])) == (want_c, want_s)
+
+
+def test_lag_telemetry_tracks_unshipped_tail(tmp_path):
+    """`follower_lag_records`/`_bytes` rise with the unshipped durable
+    tail and fall to exactly 0 on convergence."""
+    drv, leader, fol, ops = leader_with_follower(tmp_path, n_prefix=0)
+    st0 = leader.stats()
+    assert st0["followers"] == 1 and st0["follower_lag_records"] == 0
+    from repl_harness import apply_ops
+    apply_ops(drv, ops, upto=6)
+    st = leader.stats()
+    assert st["follower_lag_records"] >= 6          # one record per op
+    assert st["follower_lag_bytes"] > 0
+    R.converge(leader, fol)
+    st2 = leader.stats()
+    assert st2["follower_lag_records"] == 0
+    assert st2["follower_lag_bytes"] == 0
+    assert st2["shipped_records"] >= 6
+    fst = fol.stats()
+    assert fst["applied_seqno"] == st2["last_seqno"]
+    assert fst["duplicates"] == fst["rejected"] == 0
+
+
+def test_hypothesis_interleaving_converges(tmp_path_factory):
+    """Hypothesis variant (importorskip-gated): arbitrary interleavings
+    of writes, pumps, and wire perturbations still converge to the
+    DictOracle answer."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=15, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(st.lists(st.tuples(st.sampled_from(["ins", "del", "pump"]),
+                                  st.integers(0, 2 ** 32 - 1)),
+                        min_size=1, max_size=12),
+               st.randoms(use_true_random=False))
+    def run(script, wire_rng):
+        tmp = tmp_path_factory.mktemp("hyp")
+        drv, leader, fol, _ = leader_with_follower(tmp, "single", "jnp")
+        oracle = DictOracle()
+        for step, seed in script:
+            rng = np.random.default_rng(seed)
+            keys = rng.integers(0, 500, 16).astype(np.int32)
+            if step == "ins":
+                vals = rng.integers(0, 1 << 20, 16).astype(np.int32)
+                drv.insert(keys, vals)
+                oracle.insert(keys, vals)
+            elif step == "del":
+                drv.delete(keys[:5])
+                oracle.delete(keys[:5])
+            else:
+                leader.pump()
+                if wire_rng.random() < 0.5 and fol.link.frames:
+                    fol.link.frames.rotate(1)       # reorder in flight
+                fol.pump()
+        R.converge(leader, fol)
+        probe = np.arange(0, 500, 3, dtype=np.int32)
+        _assert_matches_oracle(fol.drv, oracle, probe)
+        _assert_matches_oracle(drv, oracle, probe)
+
+    run()

@@ -1,0 +1,93 @@
+"""Replication roles in `repro.serve` (DESIGN.md §14): a leader server
+ships durable frames in its pump seams (after windows, in idle gaps),
+a follower server applies the stream in the same seams, serves the
+batched read paths eventually-consistently, and rejects write submits
+at intake. Read-your-writes holds through the serving layer on the
+leader (log-before-ack: the WAL record is durable before the window
+replies)."""
+import numpy as np
+import pytest
+
+from repl_harness import (assert_same_answers, leader_with_follower,
+                          probe_answers)
+
+from repro.engine import replication as R
+from repro.serve import AsyncServer, Server, WindowPolicy
+
+
+def test_follower_server_rejects_writes(tmp_path):
+    """Write submits bounce at intake (nothing poisons the window);
+    reads serve at the applied watermark."""
+    drv, leader, fol, ops = leader_with_follower(tmp_path, n_prefix=4)
+    R.converge(leader, fol)
+    srv = Server(fol.drv, role="follower")
+    with pytest.raises(ValueError, match="read-only"):
+        srv.submit("c", "insert", np.int32([2]), np.int32([1]))
+    with pytest.raises(ValueError, match="read-only"):
+        srv.submit("c", "delete", np.int32([2]))
+    assert srv.pending == 0
+    probe = np.int32([0, 3, 6, 9])
+    t = srv.submit("c", "lookup", probe)
+    srv.pump(force=True)
+    assert t.done
+    want_v, want_f = fol.drv.lookup_many(probe)
+    np.testing.assert_array_equal(np.asarray(t.result[0]),
+                                  np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(t.result[1]),
+                                  np.asarray(want_f))
+    st = srv.stats()
+    assert st["role"] == "follower"
+    assert st["replication"]["role"] == "follower"
+    assert AsyncServer(srv).role == "follower"
+    with pytest.raises(ValueError):
+        Server(fol.drv, role="observer")
+
+
+def test_leader_server_read_your_writes_and_ships(tmp_path):
+    """A lookup submitted after an insert sees it in the very same
+    window (the tape's hazard order = submission order, and the WAL
+    record is durable before the reply); the pump's replication hook
+    ships the window to the follower without extra machinery."""
+    drv, leader, fol, _ = leader_with_follower(tmp_path)
+    srv = Server(drv, role="leader", window=WindowPolicy(max_ops=64))
+    keys = np.int32([10, 20, 30])
+    vals = keys * 3
+    srv.submit("w", "insert", keys, vals)
+    t = srv.submit("w", "lookup", keys)
+    srv.pump(force=True)
+    assert t.done
+    np.testing.assert_array_equal(np.asarray(t.result[1]),
+                                  [True, True, True])
+    np.testing.assert_array_equal(np.asarray(t.result[0]), vals)
+    st = srv.stats()
+    assert st["role"] == "leader"
+    assert st["replication"]["followers"] == 1
+    assert st["replication"]["shipped_records"] >= 1
+    # idle pumps on both sides converge the follower
+    for _ in range(4):
+        srv.pump()
+        fol.pump()
+    assert leader.stats()["follower_lag_records"] == 0
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+
+
+def test_leader_and_follower_servers_end_to_end(tmp_path):
+    """Two servers over one replication pair: writes land on the
+    leader server, idle pumps carry them across, and the follower
+    server answers them — eventual consistency through `repro.serve`
+    alone (no direct engine calls)."""
+    drv, leader, fol, _ = leader_with_follower(tmp_path)
+    lsrv = Server(drv, role="leader")
+    fsrv = Server(fol.drv, role="follower")
+    keys = np.int32([2, 4, 6])
+    vals = np.int32([20, 40, 60])
+    lsrv.submit("w", "insert", keys, vals)
+    lsrv.pump(force=True)               # serve + ship
+    fsrv.pump()                         # idle gap: apply the stream
+    t = fsrv.submit("r", "lookup", keys)
+    fsrv.pump(force=True)
+    assert t.done
+    np.testing.assert_array_equal(np.asarray(t.result[1]),
+                                  [True, True, True])
+    np.testing.assert_array_equal(np.asarray(t.result[0]), vals)
+    assert fsrv.stats()["replication"]["applied_records"] >= 1

@@ -164,7 +164,7 @@ def test_maintenance_counters_track_merges():
 def test_scenarios_for_selectors():
     assert [s.name for s in scenarios_for("all")] == [
         "uniform", "sequential", "zipfian", "delete_heavy", "range_scan",
-        "shifting", "serving"]
+        "shifting", "serving", "replication"]
     sweep = scenarios_for("sweep-R")
     assert all(s.name.startswith("sweep_R") for s in sweep)
     mixed = scenarios_for("uniform,sweep-policy,uniform")
@@ -323,6 +323,41 @@ def test_schema_v7_zset_block(bench_doc):
     bad["metrics"]["zset"]["ghost_payload_bytes_skipped"] = -4
     assert any("ghost_payload_bytes_skipped" in e
                for e in SCH.validate(bad))
+
+
+def test_schema_v8_replication_block(bench_doc):
+    """SCHEMA_VERSION 8: metrics.replication is a required (nullable)
+    key — null on scenarios that attach no followers, a full
+    lag/failover ledger on the `replication` scenario. v5-v7 documents
+    predate the layer and are exempt (compat window)."""
+    _, doc = bench_doc
+    assert doc["schema_version"] == SCH.SCHEMA_VERSION
+    assert doc["metrics"]["replication"] is None  # no followers attached
+
+    bad = json.loads(json.dumps(doc))
+    del bad["metrics"]["replication"]
+    assert any("replication" in e for e in SCH.validate(bad))
+    # the same document labeled v7 predates the block and is exempt
+    bad["schema_version"] = 7
+    assert SCH.validate(bad) == []
+
+    good = json.loads(json.dumps(doc))
+    good["metrics"]["replication"] = {
+        "followers": 2, "shipped_records": 104, "shipped_bytes": 54_000,
+        "lag_records_peak": 26, "lag_records_final": 0,
+        "lag_bytes_final": 0, "apply_ops_per_s": 85.4,
+        "failover_ms": 941.0, "promoted_exact": True}
+    assert SCH.validate(good) == []
+    good["metrics"]["replication"]["shipped_records"] = 0
+    assert any("shipped_records" in e for e in SCH.validate(good))
+    good["metrics"]["replication"]["shipped_records"] = 104
+    good["metrics"]["replication"]["lag_records_final"] = -1
+    assert any("lag_records_final" in e for e in SCH.validate(good))
+    good["metrics"]["replication"]["lag_records_final"] = 0
+    good["metrics"]["replication"]["promoted_exact"] = "yes"
+    assert any("promoted_exact" in e for e in SCH.validate(good))
+    del good["metrics"]["replication"]["failover_ms"]
+    assert any("failover_ms" in e for e in SCH.validate(good))
 
 
 def test_sweep_durability_family():

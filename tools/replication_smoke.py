@@ -1,0 +1,237 @@
+#!/usr/bin/env python
+"""Replication failover smoke: SIGKILL a live replicating leader
+process mid-stream, promote the follower, prove answer-exact failover
+(CI's `replication-smoke` job, DESIGN.md §14).
+
+Parent/child harness in one file (the replication twin of
+`tools/recovery_smoke.py`):
+
+  * child (``--child``): a durable continuous-batching leader server
+    (`repro.serve.Server(role="leader")` over `SLSM` + fsync WAL) whose
+    engine carries a `repro.engine.replication.Leader`. It bootstraps
+    the follower directory, dials the parent's socket listener, and
+    serves an unbounded deterministic op stream — every pump seam ships
+    the window's durable frames. It never exits on its own.
+  * parent (default): listens on a localhost socket, accepts the
+    child's connection, opens a `Follower` over the bootstrapped
+    directory, and applies the live stream. Once enough records have
+    applied it SIGKILLs the child mid-stream — no shutdown hook, the
+    honest leader death — pumps the torn remainder, and `promote()`s.
+    The promoted engine must answer bitwise like a fresh non-durable
+    engine fed the *decoded durable WRITE prefix of the follower's own
+    WAL* (the acked prefix — exactly what clients were told happened),
+    and must immediately accept writes at the bumped epoch.
+
+Exit 0 == failover is answer-exact. Any mismatch, a follower that
+applied records its WAL doesn't hold, or a promoted engine that
+rejects writes is a hard failure.
+
+Usage:
+    python tools/replication_smoke.py [--kill-after-records N]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core.params import SLSMParams  # noqa: E402
+from repro.engine import replication as R  # noqa: E402
+from repro.engine import wal as WAL  # noqa: E402
+from repro.engine.engine import SLSM  # noqa: E402
+
+KEY_SPACE = 300
+OP_SIZE = 48
+BOOT_PREFIX = 6       # ops the child absorbs before bootstrapping
+
+
+def params() -> SLSMParams:
+    """Tiny geometry (as in tests/replication): a few hundred ops cover
+    seals, flushes, and spills, so the kill lands on a busy tree."""
+    return SLSMParams(R=2, Rn=32, eps=1e-2, D=2, m=1.0, mu=16, max_levels=3,
+                      max_range=2048, merge_budget=1, backend="jnp")
+
+
+def op(i: int):
+    """The i-th op of the unbounded deterministic stream (same math in
+    child and parent); every 4th op deletes. One op == one WAL WRITE
+    record."""
+    rng = np.random.default_rng(200_000 + i)
+    keys = rng.integers(0, KEY_SPACE, OP_SIZE).astype(np.int32)
+    if i % 4 == 3:
+        return ("delete", keys[:OP_SIZE // 3], None)
+    vals = rng.integers(0, 1 << 20, OP_SIZE).astype(np.int32)
+    return ("insert", keys, vals)
+
+
+def probe(drv):
+    """Full-keyspace stride lookup + range sweep, as plain numpy."""
+    qs = np.arange(0, KEY_SPACE, dtype=np.int32)
+    v, f = drv.lookup_many(qs)
+    ranges = [drv.range(lo, hi)
+              for lo, hi in ((0, KEY_SPACE), (17, 80), (100, 250))]
+    return (np.asarray(v), np.asarray(f),
+            [(np.asarray(k), np.asarray(vv)) for k, vv in ranges])
+
+
+def run_child(leader_dir: str, fol_dir: str, port: int) -> None:
+    """Bootstrap the follower dir, dial the parent, then serve (and
+    ship) the deterministic stream forever (until killed)."""
+    from repro.serve.server import Server
+
+    dur = WAL.Durability(leader_dir, fsync=True,
+                         snapshot_every_bytes=1 << 30)
+    drv = SLSM(params(), durability=dur)
+    leader = R.Leader(drv)
+    srv = Server(drv, role="leader")
+    i = 0
+    for i in range(BOOT_PREFIX):
+        kind, keys, vals = op(i)
+        if kind == "insert":
+            srv.submit("smoke", "insert", keys, vals)
+        else:
+            srv.submit("smoke", "delete", keys)
+        srv.pump(force=True)
+    cursor = leader.bootstrap(fol_dir)
+    leader.attach(R.connect("127.0.0.1", port), cursor)
+    i = BOOT_PREFIX
+    while True:
+        kind, keys, vals = op(i)
+        if kind == "insert":
+            srv.submit("smoke", "insert", keys, vals)
+        else:
+            srv.submit("smoke", "delete", keys)
+        srv.pump(force=True)       # serve + group-commit + ship
+        if i % 8 == 7:
+            srv.pump()             # idle gap: drain acks
+        i += 1
+
+
+def run_parent(leader_dir: str, fol_dir: str,
+               kill_after_records: int) -> int:
+    lis = R.SocketListener()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    child = subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "--child",
+         "--dir", leader_dir, "--fol-dir", fol_dir,
+         "--port", str(lis.port)], env=env)
+    try:
+        end = lis.accept(timeout=300)
+        lis.close()
+        fol = R.Follower(fol_dir, end)
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            fol.pump()
+            if fol.counters["applied_records"] >= kill_after_records:
+                break
+            if child.poll() is not None:
+                print("FAIL: child exited before the kill "
+                      f"(rc={child.returncode})")
+                return 1
+            time.sleep(0.01)
+        else:
+            print("FAIL: follower never applied enough of the stream")
+            return 1
+        child.send_signal(signal.SIGKILL)   # leader dies mid-stream
+        child.wait()
+    finally:
+        if child.poll() is None:
+            child.kill()
+            child.wait()
+
+    fol.pump()                      # the torn remainder must not raise
+    st = fol.stats()
+    print(f"killed leader at follower watermark {st['applied_seqno']} "
+          f"({st['applied_records']} applied, "
+          f"{st['duplicates']} dups, {st['rejected']} rejected)")
+
+    prom = fol.promote()
+    if prom.durability.writer.epoch < 1:
+        print("FAIL: promote did not bump the WAL epoch")
+        return 1
+
+    # the oracle: a fresh non-durable engine fed the decoded durable
+    # WRITE prefix of the follower's own WAL, in log order
+    records, _good = WAL.read_wal(os.path.join(fol_dir, "wal.log"))
+    writes = [r for r in records if r.kind in WAL.WRITE_KINDS]
+    if not writes:
+        print("FAIL: nothing durable reached the follower before the kill")
+        return 1
+    if int(prom.durability.writer.last_seqno) != int(records[-1].seqno):
+        print("FAIL: follower applied records its WAL does not hold")
+        return 1
+    n_neg = 0
+    oracle = SLSM(params())
+    for rec in writes:
+        k, v, w = WAL.decode_write(rec.payload, rec.kind)
+        is_del = w <= 0
+        n_neg += int(is_del.sum())
+        start = 0
+        for i in range(1, len(k) + 1):
+            if i == len(k) or is_del[i] != is_del[start]:
+                if is_del[start]:
+                    oracle.delete(k[start:i])
+                else:
+                    oracle.insert(k[start:i], v[start:i])
+                start = i
+    if n_neg == 0:
+        print("FAIL: the durable prefix carries no negative-weight "
+              "records — the kill landed before any delete shipped")
+        return 1
+
+    gv, gf, gr = probe(prom)
+    wv, wf, wr = probe(oracle)
+    if not (np.array_equal(gf, wf) and np.array_equal(gv, wv)):
+        print("FAIL: promoted lookups diverge from the acked-prefix oracle")
+        return 1
+    for (gk, gvv), (wk, wvv) in zip(gr, wr):
+        if not (np.array_equal(gk, wk) and np.array_equal(gvv, wvv)):
+            print("FAIL: promoted range scans diverge from the oracle")
+            return 1
+
+    # the promoted node is a writable leader at the bumped epoch
+    keys = np.array([1, 3, 5], np.int32)
+    prom.insert(keys, keys * 7)
+    v, f = prom.lookup_many(keys)
+    if not (np.asarray(f).all()
+            and np.array_equal(np.asarray(v), keys * 7)):
+        print("FAIL: promoted engine rejected or lost a post-failover write")
+        return 1
+    print(f"OK: failover is answer-exact at write-chunk boundary "
+          f"{len(writes)} ({n_neg} negative-weight lanes, epoch "
+          f"{prom.durability.writer.epoch}, post-failover writes land)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--child", action="store_true")
+    ap.add_argument("--dir", default=None)
+    ap.add_argument("--fol-dir", default=None)
+    ap.add_argument("--port", type=int, default=None)
+    ap.add_argument("--kill-after-records", type=int, default=40,
+                    help="applied follower records that trigger the kill")
+    args = ap.parse_args()
+    if args.child:
+        run_child(args.dir, args.fol_dir, args.port)
+        return 0
+    with tempfile.TemporaryDirectory(prefix="replication_smoke_") as d:
+        ldir = os.path.join(d, "leader")
+        fdir = os.path.join(d, "follower")
+        os.makedirs(ldir, exist_ok=True)
+        return run_parent(ldir, fdir, args.kill_after_records)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
