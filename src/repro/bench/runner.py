@@ -328,6 +328,100 @@ def _run_ranges_batched(tree, ranges: np.ndarray
     return phase, stats
 
 
+def _fresh_engine(tree, dur):
+    """A fresh durable engine of the measured engine's own kind (the
+    self-healing act builds its own small cluster)."""
+    if isinstance(tree, ShardedSLSM):
+        return ShardedSLSM(tree.p, n_shards=tree.S, durability=dur)
+    return SLSM(tree.p, policy=tree.policy, durability=dur)
+
+
+def _run_selfheal(tree, w: Workload) -> Dict[str, Any]:
+    """The v9 self-healing keys of metrics.replication (DESIGN.md §15).
+
+    A fresh quorum-ack cluster on the *real* clock: a segmented-WAL
+    leader (`ack_mode="quorum", quorum=2`) with a short lease streams a
+    write stream to two auto-promote followers, snapshots and prunes
+    (``wal_pruned_bytes``), then is partitioned — not killed, its ends
+    simply stop being pumped — and the measurement is the wall time
+    until a follower's lease expires, the deterministic successor rule
+    fires, and the automatically promoted engine answers its first read
+    (``failover_auto_ms``). ``rpo_records`` counts quorum-acked writes
+    the successor is missing — 0 by construction: an ack is only
+    released once k followers hold the bytes."""
+    from repro.engine import replication as R
+
+    lease_s = 0.2
+    with tempfile.TemporaryDirectory(prefix="bench_heal_") as td:
+        d = Path(td)
+        dur = WAL.Durability(d / "leader", fsync=False,
+                             snapshot_every_bytes=1 << 30,
+                             segment_bytes=2048)
+        drv = _fresh_engine(tree, dur)
+        leader = R.Leader(drv, ack_mode="quorum", quorum=2,
+                          lease_s=lease_s)
+        fols = [leader.add_follower(d / f"f{i}", auto_promote=True)
+                for i in range(2)]
+        keys = np.unique(w.keys[:1024].astype(np.int32))
+        probe = keys[:256]
+        for i in range(0, len(keys), 64):
+            chunk = keys[i:i + 64]
+            drv.insert(chunk, (chunk % 65536) * 3 + 1)
+            leader.pump()
+            for f in fols:
+                f.pump()
+        # the pruning leg: snapshot -> ack round-trip -> prune drops
+        # every sealed segment below min(snapshot, follower acks)
+        drv.snapshot()
+        leader.pump()
+        for f in fols:
+            f.pump()
+        leader.pump()               # drain the final acks + heartbeat
+        leader.prune()
+        pruned_bytes = int(dur.stats()["wal_pruned_bytes"])
+        acked = int(leader.quorum_seqno())
+
+        # partition (not kill): the leader's pump simply stops, so no
+        # heartbeat renews the followers' leases — the real clock runs
+        t_part = time.perf_counter()
+        new_lead = None
+        deadline = t_part + 60.0
+        while new_lead is None and time.perf_counter() < deadline:
+            for f in fols:
+                f.pump()
+                if f.new_leader is not None:
+                    new_lead = f.new_leader
+                    break
+            time.sleep(lease_s / 40)
+        if new_lead is None:
+            raise RuntimeError("self-healing act: no automatic promotion "
+                               f"within {deadline - t_part:.0f}s "
+                               f"(lease_s={lease_s})")
+        pv, pf = new_lead.drv.lookup_many(probe)
+        jax.block_until_ready((pv, pf))
+        failover_auto_ms = (time.perf_counter() - t_part) * 1e3
+        rpo = max(0, acked - int(
+            new_lead.drv.durability.writer.last_seqno))
+        expiries = sum(f.counters["lease_expiries"] for f in fols)
+        lv, lf = drv.lookup_many(probe)
+        if not (np.array_equal(np.asarray(lf), np.asarray(pf))
+                and np.array_equal(np.asarray(lv)[np.asarray(lf)],
+                                   np.asarray(pv)[np.asarray(pf)])):
+            raise RuntimeError("self-healing act: promoted successor "
+                               "answers differ from the old leader's")
+        for ld in (leader, new_lead):
+            for h in list(ld.handles):
+                ld.detach(h)
+        drv.replication = None
+        dur.close()
+        for f in fols:
+            f.drv.durability.close()
+    return {"failover_auto_ms": float(failover_auto_ms),
+            "rpo_records": int(rpo),
+            "wal_pruned_bytes": pruned_bytes,
+            "lease_expiries": int(expiries)}
+
+
 def _run_replication(tree, n_followers: int, w: Workload
                      ) -> Dict[str, Any]:
     """The metrics.replication block (DESIGN.md §14).
@@ -339,7 +433,10 @@ def _run_replication(tree, n_followers: int, w: Workload
     then promotes one follower and times the failover: `promote()`
     (epoch bump, transport teardown) through its first answered read.
     Answer-exactness is checked against the leader on the workload's
-    own key stream (found lanes bitwise + one range window)."""
+    own key stream (found lanes bitwise + one range window). The v9
+    self-healing keys (automatic lease failover, quorum-ack RPO, WAL
+    pruning — DESIGN.md §15) come from `_run_selfheal`'s own small
+    real-clock cluster and ride the same block."""
     from repro.engine import replication as R
 
     leader = R.Leader(tree)
@@ -397,6 +494,7 @@ def _run_replication(tree, n_followers: int, w: Workload
             "apply_ops_per_s": float(applied / max(apply_wall, 1e-12)),
             "failover_ms": float(failover_ms),
             "promoted_exact": exact,
+            **_run_selfheal(tree, w),
         }
         for h in list(leader.handles):
             leader.detach(h)

@@ -99,18 +99,29 @@ Document shape (SCHEMA_VERSION 7):
     replication       {followers, shipped_records, shipped_bytes,
                       lag_records_peak, lag_records_final,
                       lag_bytes_final, apply_ops_per_s, failover_ms,
-                      promoted_exact}|None   (v8+, required key) the
-                      single-leader replication block (DESIGN.md §14),
-                      emitted by the `replication` scenario: follower
-                      count, frames shipped over the in-process wire,
-                      the worst follower lag at attach (peak) and after
-                      convergence (final — 0 on a healthy run), the
-                      follower-side replay throughput in WAL records/s,
-                      the wall time from `promote()` to the promoted
-                      engine's first answered read, and whether the
-                      promoted follower's answers matched the leader's
-                      bitwise on the found lanes. null on every other
-                      scenario.
+                      promoted_exact, failover_auto_ms, rpo_records,
+                      wal_pruned_bytes, lease_expiries}|None   (v8+,
+                      required key; the last four v9+) the
+                      single-leader replication block (DESIGN.md
+                      §14-§15), emitted by the `replication` scenario:
+                      follower count, frames shipped over the
+                      in-process wire, the worst follower lag at attach
+                      (peak) and after convergence (final — 0 on a
+                      healthy run), the follower-side replay throughput
+                      in WAL records/s, the wall time from `promote()`
+                      to the promoted engine's first answered read, and
+                      whether the promoted follower's answers matched
+                      the leader's bitwise on the found lanes. The v9
+                      self-healing keys: ``failover_auto_ms`` the wall
+                      time from leader partition to the successor's
+                      lease-expiry *automatic* promotion answering its
+                      first read, ``rpo_records`` the client-acked
+                      writes lost by that failover (0 by construction
+                      in quorum ack mode), ``wal_pruned_bytes`` the
+                      sealed log bytes watermark-bounded pruning
+                      reclaimed during the run, and ``lease_expiries``
+                      the follower-observed lease expiries. null on
+                      every other scenario.
   env               {jax, numpy, python, platform, timestamp}
 
   serving-point := {clients int    offered load (closed-loop clients)
@@ -164,14 +175,19 @@ SCHEMA_VERSION history:
       promoted follower, DESIGN.md §14) emitted by the `replication`
       scenario; v5-v7 documents remain valid, the new key is enforced
       on v8 only.
+  9 — self-healing replication PR: metrics.replication gains the
+      failover_auto_ms / rpo_records / wal_pruned_bytes /
+      lease_expiries keys (leases + automatic promotion, quorum acks,
+      watermark-bounded WAL pruning — DESIGN.md §15); v8 documents
+      remain valid, the new keys are enforced on v9 only.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, List
 
-SCHEMA_VERSION = 8
-# accepted on read: the committed trajectory keeps its v5-v7 documents
-COMPAT_VERSIONS = (5, 6, 7, 8)
+SCHEMA_VERSION = 9
+# accepted on read: the committed trajectory keeps its v5-v8 documents
+COMPAT_VERSIONS = (5, 6, 7, 8, 9)
 
 _PHASE_KEYS = {"ops": int, "wall_s": float, "ops_per_s": float,
                "p50_us": float, "p99_us": float, "p999_us": float,
@@ -470,6 +486,22 @@ def validate(doc: Any) -> List[str]:
                             errs.append(f"{where}.{key}: a replication "
                                         f"run must ship ({key}={v})")
                     _typed(rep, "promoted_exact", bool, errs, where)
+                    # v9: the self-healing keys (leases, quorum acks,
+                    # pruning); v8 documents predate them
+                    if ver >= 9:
+                        for key, typ in (("failover_auto_ms", float),
+                                         ("rpo_records", int),
+                                         ("wal_pruned_bytes", int),
+                                         ("lease_expiries", int)):
+                            v = _typed(rep, key, typ, errs, where)
+                            if isinstance(v, (int, float)) and v < 0:
+                                errs.append(f"{where}.{key}: "
+                                            f"negative ({v})")
+                        le = rep.get("lease_expiries")
+                        if isinstance(le, int) and le <= 0:
+                            errs.append(f"{where}.lease_expiries: an "
+                                        "automatic failover requires an "
+                                        f"observed lease expiry ({le})")
 
     env = _typed(doc, "env", dict, errs, "document")
     if env is not None:

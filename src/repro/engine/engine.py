@@ -119,10 +119,30 @@ class SLSM:
         if self.durability is not None:
             self.durability.ensure_header(self._wal_meta())
         # replication hook (DESIGN.md §14): a replication.Leader /
-        # .Follower claims this; repro.serve pumps it between windows
+        # .Follower claims this; repro.serve pumps it between windows.
+        # fenced (DESIGN.md §15) = a deposed leader: writes raise until
+        # a future promote() — the guard that keeps a partitioned old
+        # leader from diverging from the cluster
         self.replication = None
+        self.fenced = False
 
     # -- write path -------------------------------------------------------
+    def _guard_writes(self) -> None:
+        """Reject writes into a read-only engine: a fenced (deposed)
+        leader or a replica follower (DESIGN.md §15). Replay and
+        `apply_replicated` bypass this via ``_replaying``."""
+        if self._replaying:
+            return
+        if self.fenced:
+            raise RuntimeError(
+                "write rejected: this engine was fenced (deposed leader) "
+                "— demote() happened; rejoin via the new leader's "
+                "bootstrap or promote() to lead again")
+        if self.durability is not None and self.durability.replica:
+            raise RuntimeError(
+                "write rejected: replica engines are read-only until "
+                "promote()")
+
     def insert(self, keys, vals) -> None:
         """Batched insert (paper Algorithm 1/2): stage in Rn-sized chunks;
         after each chunk the scheduler runs up to `merge_budget` voluntary
@@ -142,6 +162,8 @@ class SLSM:
         one WAL record before any device state changes and
         group-committed before returning (one fsync per driver call, not
         per chunk — DESIGN.md §12)."""
+        if len(keys) > 0:
+            self._guard_writes()
         log = (self.durability is not None and not self._replaying
                and len(keys) > 0)
         if log:
@@ -418,6 +440,8 @@ class SLSM:
                 last_reads = k
             elif ch.kind != "range":
                 raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        if n_writes:
+            self._guard_writes()
         # durability: one WAL record per write chunk (stream order is
         # preserved; segmentation below never reorders writes), group-
         # committed before this call returns — the serving layer stamps
@@ -723,7 +747,19 @@ class SLSM:
             raise ValueError("promote() requires a durability layer")
         self.durability.writer.bump_epoch()
         self.durability.replica = False
+        self.fenced = False
         self.stats["promotions"] += 1
+        return self
+
+    def demote(self) -> "SLSM":
+        """Fence this engine against writes (the deposed-leader exit,
+        DESIGN.md §15): a leader that learned — via an ack at a higher
+        epoch — that an automatic failover superseded it must stop
+        accepting writes *immediately*, even mid-partition. Reads stay
+        served (stale until rejoin); every write raises until a future
+        `promote()`. Returns self."""
+        self.fenced = True
+        self.stats["demotions"] += 1
         return self
 
     # -- stats ----------------------------------------------------------------

@@ -1,4 +1,4 @@
-"""Single-leader replication over the WAL (DESIGN.md §14).
+"""Single-leader replication over the WAL (DESIGN.md §14–§15).
 
 The durability layer's WAL (DESIGN.md §12) is already a replication
 log: CRC-framed records with strictly-consecutive seqnos, a snapshot
@@ -13,40 +13,75 @@ chunk-apply programs. This module ships that stream:
   * a **follower** opens that directory via ``open_replica`` (a plain
     `restore` under a replica-mode durability layer), then `apply`s
     incoming frames: validate (`wal.check_frame`), de-duplicate and
-    reorder by seqno, append verbatim (`Durability.append_frame` — the
-    follower's WAL stays a bitwise copy of the leader's stream), sync,
-    replay through `apply_replicated`, and ack;
+    reorder by seqno (in a *bounded* buffer), append verbatim
+    (`Durability.append_frame` — the follower's WAL stays a bitwise
+    copy of the leader's stream), sync, replay through
+    `apply_replicated`, and ack;
   * transports are an in-process `QueueLink` (tests inject faults by
     mutating its deques) and a localhost socket pair
     (`SocketListener` / `connect` → `SocketEnd`, length-prefixed
-    messages whose torn tails drop with the connection);
-  * **failover** is explicit: `Follower.promote` drops unacked
-    buffered frames (never acked ⇒ never durable anywhere), detaches
-    the transport, and calls the engine's ``promote()`` — WAL epoch
-    bump + local logging re-enabled — returning a writable leader
-    whose answers bitwise-match a fresh engine fed the acked prefix.
+    messages whose torn tails drop with the connection); both raise a
+    typed `TransportError` on a severed link, and connect/accept retry
+    with exponential backoff + jitter up to a deadline.
+
+Self-healing (DESIGN.md §15) closes the failover loop:
+
+  * **leases** — the leader stamps heartbeat control messages into the
+    ship stream (`T_CTRL`, never a logged WAL record): its epoch,
+    durable watermark, the lease duration, and the ack roster. A
+    follower holds a lease on a *monotonic clock* from each heartbeat;
+    when the lease expires, the deterministic successor rule — highest
+    applied watermark, lowest follower id on ties, evaluated over the
+    last roster merged with the follower's own watermark — elects
+    exactly one follower, which `promote(lead=True)`s automatically.
+  * **epoch fencing** — acks carry the acker's WAL epoch. A promoted
+    successor adopts its old transport end as a *fence end*: any frame
+    the deposed leader still ships is answered with an ack at the
+    bumped epoch, and every live follower likewise acks at the epoch
+    it applies. The deposed leader sees ``ack.epoch > own epoch``,
+    marks itself `deposed`, fences its engine against writes
+    (``drv.fenced``), and `demote()`s — rejoining is a fresh
+    `bootstrap` from the new leader (the engines' write guard makes a
+    partitioned deposed leader *reject* writes instead of diverging).
+  * **quorum acks** — ``Leader(ack_mode="quorum", quorum=k)`` exposes
+    `quorum_seqno()`, the k-th highest live follower ack; the serving
+    layer holds client write acks until the commit watermark clears it
+    (zero RPO: the successor rule picks the highest applied watermark,
+    which is ≥ every quorum-released write).
+  * **watermark-bounded pruning** — `Leader.prune()` truncates sealed
+    WAL segments below min(newest snapshot watermark, minimum ack over
+    *all* attached followers, dead or alive), so `bootstrap` of any
+    attached follower always finds its tail; late joiners bootstrap
+    from snapshot + retained tail.
 
 Consistency model: read-your-writes on the leader (the driver's
 log-before-ack group commit is untouched — replication ships only
 *durable* bytes, so nothing a follower applies can ever be un-acked on
-the leader); followers are eventually consistent and serve the batched
-read paths (`lookup_many` / `range_many`) at their applied watermark.
-Lag is bounded and observable: `Leader.stats()` reports
+the leader; in quorum mode client acks are additionally held for k
+follower confirmations); followers are eventually consistent and serve
+the batched read paths (`lookup_many` / `range_many`) at their applied
+watermark. Lag is bounded and observable: `Leader.stats()` reports
 ``follower_lag_records`` / ``follower_lag_bytes`` from follower acks.
 
 The fault-injection suite (``tests/replication/``) proves answer-exact
 failover under leader SIGKILL, torn stream tails, duplicated /
-reordered / dropped delivery, and mid-RETUNE cuts, on both drivers ×
-both backends.
+reordered / dropped delivery, mid-RETUNE cuts, lease expiry, live
+deposed-leader partitions, quorum loss, and prune races, on both
+drivers × both backends. Leases are cooperative failure detection, not
+consensus: the successor rule is deterministic given a roster, and
+epoch fencing converges a transient double-leader, but clients of a
+deposed leader can read stale data until its next ack round-trip.
 """
 from __future__ import annotations
 
 import collections
 import json
+import random
 import select
 import shutil
 import socket
 import struct
+import time
 from pathlib import Path
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -56,15 +91,27 @@ from repro.engine.sharded import ShardedSLSM
 
 # stream message framing (byte-stream transports): type u8 | len u32 | payload
 _MSG = struct.Struct("<BI")
-_ACK = struct.Struct("<qQB")        # applied seqno i64 | applied bytes u64 | gap u8
+# applied seqno i64 | applied bytes u64 | gap u8 | acker's WAL epoch u8
+_ACK = struct.Struct("<qQBB")
 T_FRAME = 1                         # payload = one verbatim WAL frame
 T_ACK = 2                           # payload = _ACK
+T_CTRL = 3                          # payload = json heartbeat/lease message
+
+
+class TransportError(ConnectionError):
+    """A replication transport failed: the peer is gone, the link was
+    severed, or a dial/accept deadline expired. Subclasses
+    `ConnectionError` so pre-existing ``except OSError`` paths keep
+    working; the leader's `ship` converts it into detach (and later
+    `reattach`) instead of letting it escape a pump."""
 
 
 class Cursor(NamedTuple):
-    """A shipping position in the leader's WAL: byte `offset`, the
-    `next_seqno` expected there (None = accept any first record), and
-    the minimum `epoch` of subsequent frames."""
+    """A shipping position in the leader's WAL: byte `offset` (the
+    leader-log bytes already covered at bootstrap — lag-bytes
+    accounting only; shipping itself is seqno-addressed), the
+    `next_seqno` expected (None = accept any first record), and the
+    minimum `epoch` of subsequent frames."""
 
     offset: int
     next_seqno: Optional[int]
@@ -77,9 +124,10 @@ class Cursor(NamedTuple):
 
 class QueueEnd:
     """One end of a `QueueLink`. The leader end uses
-    `send_frames`/`recv_acks`; the follower end `recv_frames`/`send_ack`.
-    Setting ``closed`` simulates a severed link (sends raise, receives
-    return nothing) — the partition fault tests flip it directly."""
+    `send_frames`/`send_ctrl`/`recv_acks`; the follower end
+    `recv_frames`/`recv_ctrl`/`send_ack`. Setting ``closed`` simulates
+    a severed link (sends raise `TransportError`, receives return
+    nothing) — the partition fault tests flip it directly."""
 
     def __init__(self, link: "QueueLink", is_leader: bool):
         self.link = link
@@ -88,7 +136,7 @@ class QueueEnd:
 
     def _check_open(self) -> None:
         if self.closed:
-            raise BrokenPipeError("replication link closed")
+            raise TransportError("replication link closed")
 
     def send_frames(self, frames: List[bytes]) -> None:
         """Enqueue raw WAL frames toward the follower."""
@@ -103,17 +151,34 @@ class QueueEnd:
         self.link.frames.clear()
         return out
 
-    def send_ack(self, seqno: int, nbytes: int, gap: bool = False) -> None:
+    def send_ack(self, seqno: int, nbytes: int, gap: bool = False,
+                 epoch: int = 0) -> None:
         """Enqueue one follower ack toward the leader."""
         self._check_open()
-        self.link.acks.append((seqno, nbytes, gap))
+        self.link.acks.append((seqno, nbytes, gap, epoch))
 
-    def recv_acks(self) -> List[Tuple[int, int, bool]]:
-        """Drain every in-flight ``(applied_seqno, applied_bytes, gap)``."""
+    def recv_acks(self) -> List[Tuple[int, int, bool, int]]:
+        """Drain every in-flight ``(applied_seqno, applied_bytes, gap,
+        epoch)`` (legacy 3-tuples injected by tests decode as epoch
+        0)."""
         if self.closed:
             return []
-        out = list(self.link.acks)
+        out = [tuple(a) + (0,) * (4 - len(a)) for a in self.link.acks]
         self.link.acks.clear()
+        return out
+
+    def send_ctrl(self, msg: Dict[str, Any]) -> None:
+        """Enqueue one heartbeat/lease control message (leader →
+        follower; never a logged WAL record)."""
+        self._check_open()
+        self.link.ctrl.append(dict(msg))
+
+    def recv_ctrl(self) -> List[Dict[str, Any]]:
+        """Drain every in-flight control message."""
+        if self.closed:
+            return []
+        out = list(self.link.ctrl)
+        self.link.ctrl.clear()
         return out
 
     def close(self) -> None:
@@ -122,15 +187,17 @@ class QueueEnd:
 
 
 class QueueLink:
-    """In-process transport: a leader end and a follower end over two
+    """In-process transport: a leader end and a follower end over three
     deques. The wire is inspectable — ``frames`` holds raw frame bytes
-    heading to the follower, ``acks`` the ack tuples heading back — so
-    fault tests duplicate, reorder, drop, or bit-flip in-flight frames
-    by mutating the deques between pumps."""
+    heading to the follower, ``acks`` the ack tuples heading back,
+    ``ctrl`` the heartbeat messages — so fault tests duplicate,
+    reorder, drop, or bit-flip in-flight traffic by mutating the
+    deques between pumps."""
 
     def __init__(self):
         self.frames: collections.deque = collections.deque()
         self.acks: collections.deque = collections.deque()
+        self.ctrl: collections.deque = collections.deque()
         self.leader = QueueEnd(self, is_leader=True)
         self.follower = QueueEnd(self, is_leader=False)
 
@@ -142,14 +209,18 @@ class SocketEnd:
     partially received message — the torn stream tail a dying peer
     leaves — stays buffered and is dropped with the connection, the
     transport-level mirror of the WAL's torn-tail rule. Receives are
-    non-blocking (`select`-gated drains); sends are blocking and mark
-    the end ``closed`` on a dead peer."""
+    non-blocking (`select`-gated drains) into per-type inboxes, so
+    draining frames never discards a control message that arrived in
+    the same burst; sends are blocking and raise `TransportError` on a
+    dead peer."""
 
     def __init__(self, sock: socket.socket):
         sock.setblocking(True)
         self.sock = sock
         self.closed = False
         self._buf = b""
+        self._in: Dict[int, List[bytes]] = {T_FRAME: [], T_ACK: [],
+                                            T_CTRL: []}
 
     def _pump(self) -> None:
         while not self.closed:
@@ -169,46 +240,70 @@ class SocketEnd:
                 return
             self._buf += data
 
-    def _messages(self) -> List[Tuple[int, bytes]]:
-        out, off = [], 0
+    def _drain(self) -> None:
+        self._pump()
+        off = 0
         while off + _MSG.size <= len(self._buf):
             t, n = _MSG.unpack_from(self._buf, off)
             if off + _MSG.size + n > len(self._buf):
                 break                   # torn tail: stays pending
-            out.append((t, self._buf[off + _MSG.size:off + _MSG.size + n]))
+            if t in self._in:
+                self._in[t].append(self._buf[off + _MSG.size:
+                                             off + _MSG.size + n])
             off += _MSG.size + n
         self._buf = self._buf[off:]
+
+    def _take(self, t: int) -> List[bytes]:
+        self._drain()
+        out, self._in[t] = self._in[t], []
         return out
 
     def send_frames(self, frames: List[bytes]) -> None:
         """Send raw WAL frames, one message each, in one write."""
         self._send(b"".join(_MSG.pack(T_FRAME, len(f)) + f for f in frames))
 
-    def send_ack(self, seqno: int, nbytes: int, gap: bool = False) -> None:
-        """Send one ``(applied_seqno, applied_bytes, gap)`` ack."""
+    def send_ack(self, seqno: int, nbytes: int, gap: bool = False,
+                 epoch: int = 0) -> None:
+        """Send one ``(applied_seqno, applied_bytes, gap, epoch)`` ack."""
         self._send(_MSG.pack(T_ACK, _ACK.size)
-                   + _ACK.pack(seqno, nbytes, 1 if gap else 0))
+                   + _ACK.pack(seqno, nbytes, 1 if gap else 0, epoch & 0xFF))
+
+    def send_ctrl(self, msg: Dict[str, Any]) -> None:
+        """Send one json heartbeat/lease control message."""
+        blob = json.dumps(msg).encode()
+        self._send(_MSG.pack(T_CTRL, len(blob)) + blob)
 
     def _send(self, blob: bytes) -> None:
         if self.closed:
-            raise BrokenPipeError("replication stream closed")
+            raise TransportError("replication stream closed")
         try:
             self.sock.sendall(blob)
         except OSError as e:
             self.closed = True
-            raise BrokenPipeError(f"replication peer gone: {e}") from e
+            raise TransportError(f"replication peer gone: {e}") from e
 
     def recv_frames(self) -> List[bytes]:
         """Drain every fully received frame message."""
-        self._pump()
-        return [p for t, p in self._messages() if t == T_FRAME]
+        return self._take(T_FRAME)
 
-    def recv_acks(self) -> List[Tuple[int, int, bool]]:
+    def recv_acks(self) -> List[Tuple[int, int, bool, int]]:
         """Drain every fully received ack message."""
-        self._pump()
-        return [(s, b, bool(g)) for t, p in self._messages()
-                if t == T_ACK and len(p) == _ACK.size
-                for s, b, g in (_ACK.unpack(p),)]
+        return [(s, b, bool(g), e) for p in self._take(T_ACK)
+                if len(p) == _ACK.size
+                for s, b, g, e in (_ACK.unpack(p),)]
+
+    def recv_ctrl(self) -> List[Dict[str, Any]]:
+        """Drain every fully received control message (malformed json
+        is dropped — control traffic is advisory, never durable)."""
+        out = []
+        for p in self._take(T_CTRL):
+            try:
+                msg = json.loads(p.decode())
+            except (UnicodeDecodeError, ValueError):
+                continue
+            if isinstance(msg, dict):
+                out.append(msg)
+        return out
 
     def close(self) -> None:
         """Close the socket (idempotent)."""
@@ -231,11 +326,31 @@ class SocketListener:
         self.host, self.port = self._sock.getsockname()[:2]
 
     def accept(self, timeout: float = 30.0) -> SocketEnd:
-        """Block (up to `timeout`) for the leader to connect; returns
-        the follower's `SocketEnd`."""
-        self._sock.settimeout(timeout)
-        conn, _ = self._sock.accept()
-        return SocketEnd(conn)
+        """Wait (up to the `timeout` deadline) for the leader to
+        connect, retrying transient accept failures with exponential
+        backoff + jitter instead of dying on the first `OSError`.
+        Raises `TransportError` when the deadline expires."""
+        deadline = time.monotonic() + timeout
+        delay, attempts = 0.05, 0
+        rng = random.Random(self.port)
+        while True:
+            attempts += 1
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TransportError(
+                    f"accept on :{self.port} timed out after "
+                    f"{attempts - 1} attempts ({timeout:.1f}s)")
+            self._sock.settimeout(min(max(delay, 0.05), remaining))
+            try:
+                conn, _ = self._sock.accept()
+                return SocketEnd(conn)
+            except socket.timeout:
+                continue                # the deadline check bounds us
+            except OSError:
+                # transient accept failure: back off with jitter
+                time.sleep(min(delay * (0.5 + rng.random()),
+                               max(0.0, deadline - time.monotonic())))
+                delay = min(delay * 2, 2.0)
 
     def close(self) -> None:
         """Stop listening (established ends stay usable)."""
@@ -246,9 +361,30 @@ class SocketListener:
 
 
 def connect(host: str, port: int, timeout: float = 30.0) -> SocketEnd:
-    """Leader-side dial: connect to a follower's `SocketListener` and
-    return the leader's `SocketEnd`."""
-    return SocketEnd(socket.create_connection((host, port), timeout=timeout))
+    """Leader-side dial: connect to a follower's `SocketListener`,
+    retrying refused/failed attempts with exponential backoff + jitter
+    until the `timeout` deadline (a follower that is still binding its
+    listener is the common transient). Raises `TransportError` when
+    the deadline expires."""
+    deadline = time.monotonic() + timeout
+    delay, attempts = 0.05, 0
+    rng = random.Random(port)
+    last: Optional[OSError] = None
+    while True:
+        attempts += 1
+        remaining = deadline - time.monotonic()
+        if remaining <= 0:
+            raise TransportError(
+                f"connect to {host}:{port} failed after {attempts - 1} "
+                f"attempts ({timeout:.1f}s): {last}")
+        try:
+            return SocketEnd(socket.create_connection(
+                (host, port), timeout=min(max(delay, 0.05), remaining)))
+        except OSError as e:
+            last = e
+            time.sleep(min(delay * (0.5 + rng.random()),
+                           max(0.0, deadline - time.monotonic())))
+            delay = min(delay * 2, 2.0)
 
 
 # --------------------------------------------------------------------------
@@ -256,11 +392,12 @@ def connect(host: str, port: int, timeout: float = 30.0) -> SocketEnd:
 # --------------------------------------------------------------------------
 
 class _FollowerHandle:
-    """Leader-side per-follower state: its transport end, its shipping
+    """Leader-side per-follower state: its id, transport end, shipping
     tailer, and the ack-derived lag accounting."""
 
-    def __init__(self, end, cursor: Cursor):
+    def __init__(self, end, cursor: Cursor, fid: int = 0):
         self.end = end
+        self.fid = fid
         self.tailer: WAL.WalTailer
         self.base_offset = cursor.offset
         self.acked_seqno = (cursor.next_seqno - 1
@@ -270,6 +407,7 @@ class _FollowerHandle:
         self.sent_bytes = 0
         self.retransmits = 0
         self.dead = False
+        self.needs_bootstrap = False    # its cursor fell behind a prune
 
 
 class Leader:
@@ -278,172 +416,359 @@ class Leader:
     ``Leader(drv)`` claims ``drv.replication`` (so `repro.serve` pumps
     shipping between windows); `add_follower` bootstraps + attaches an
     in-process follower in one call, while `bootstrap` + `attach` wire
-    a remote one over any transport end. `pump` (= `ship` + ack drain)
-    only ever reads *durable* WAL bytes — the leader's log-before-ack
-    guarantee is untouched, and nothing a follower applies can be
-    un-acked on the leader."""
+    a remote one over any transport end. `pump` (= heartbeats + `ship`
+    + ack drain + fence replies) only ever reads *durable* WAL bytes —
+    the leader's log-before-ack guarantee is untouched, and nothing a
+    follower applies can ever be un-acked on the leader.
 
-    def __init__(self, drv):
+    ``ack_mode="quorum"`` with ``quorum=k`` does not change shipping —
+    it exposes `quorum_seqno()` (the k-th highest live follower ack,
+    -1 on quorum loss) for the serving layer to gate client write acks
+    on (DESIGN.md §15).
+
+    ``lease_s``/``heartbeat_s`` drive the failure detector: every
+    `pump` at most one heartbeat control message per `heartbeat_s`
+    (default ``lease_s / 4``) is sent to each follower, carrying the
+    lease duration and the ack roster the successor rule runs on.
+
+    A leader that observes an ack at a *higher epoch than its own* has
+    been deposed by an automatic failover: it stops shipping, fences
+    its engine (writes raise), and should `demote()` + rejoin via the
+    new leader's `bootstrap`."""
+
+    def __init__(self, drv, *, ack_mode: str = "leader", quorum: int = 1,
+                 lease_s: float = 2.0, heartbeat_s: Optional[float] = None,
+                 clock=time.monotonic):
         if drv.durability is None:
             raise ValueError("replication requires a durable leader: "
                              "construct the engine with durability=...")
+        if ack_mode not in ("leader", "quorum"):
+            raise ValueError(f"unknown ack_mode {ack_mode!r} "
+                             "(expected 'leader' or 'quorum')")
         self.drv = drv
+        self.ack_mode = ack_mode
+        self.quorum = int(quorum)
+        self.lease_s = float(lease_s)
+        self.heartbeat_s = (float(heartbeat_s) if heartbeat_s is not None
+                            else self.lease_s / 4.0)
+        self.clock = clock
         self.handles: List[_FollowerHandle] = []
+        self.fence_ends: List[Any] = []
+        self.deposed = False
+        self._next_fid = 0
+        self._last_hb: Optional[float] = None
+        self.counters = collections.Counter(
+            heartbeats=0, detaches=0, reattaches=0, fence_acks=0,
+            demotions=0, prune_calls=0, pruned_segments=0, pruned_cursors=0)
         drv.replication = self
 
     # -- wiring -------------------------------------------------------------
     def bootstrap(self, dst_dir) -> Cursor:
         """Initial sync: copy the newest snapshot (if any) plus every
-        well-formed WAL frame past its watermark into `dst_dir`, and
-        return the `Cursor` where shipping to that follower starts.
-        The copied tail preserves the leader's frame bytes verbatim, so
-        the follower's log begins as a bitwise slice of the leader's."""
+        *retained* WAL frame past its watermark — across the whole
+        segment chain — into `dst_dir`, and return the `Cursor` where
+        shipping to that follower starts. The copied tail preserves the
+        leader's frame bytes verbatim, so the follower's log begins as
+        a bitwise slice of the leader's; a pruned leader log is fine,
+        because `prune` never deletes past its snapshot watermark."""
         dur = self.drv.durability
         dur.sync()
         dst = Path(dst_dir)
         dst.mkdir(parents=True, exist_ok=True)
-        records, good = WAL.read_wal(dur.wal_path)
         watermark = -1
         snaps = WAL.list_snapshots(dur.dir)
         if snaps:
             num, spath = snaps[-1]
             shutil.copytree(spath, dst / spath.name, dirs_exist_ok=True)
             watermark = num
-        tail_start = good
-        for rec, start, _end in WAL.record_offsets(dur.wal_path):
-            if rec.seqno > watermark:
-                tail_start = start
-                break
-        data = dur.wal_path.read_bytes()[:good] if dur.wal_path.exists() \
-            else WAL.MAGIC
-        (dst / "wal.log").write_bytes(WAL.MAGIC + data[tail_start:])
-        if records:
-            nxt, epoch = records[-1].seqno + 1, records[-1].epoch
+        frames = WAL.chain_frames(dur.dir, watermark + 1)
+        (dst / "wal.log").write_bytes(WAL.MAGIC + b"".join(frames))
+        last = dur.writer.last_seqno
+        if last >= 0:
+            nxt, epoch = last + 1, dur.writer.epoch
         elif watermark >= 0:
             nxt, epoch = watermark + 1, 0
         else:
             nxt, epoch = None, 0
-        return Cursor(good, nxt, epoch)
+        return Cursor(dur.log_bytes, nxt, epoch)
 
     def attach(self, end, cursor: Optional[Cursor] = None) -> _FollowerHandle:
         """Start shipping to transport `end` from `cursor` (default:
-        genesis — the whole log, META included). Returns the handle
-        `stats()` reports lag for."""
+        genesis — the whole retained log, META included). Returns the
+        handle `stats()` reports lag for."""
         if cursor is None:
             cursor = Cursor(len(WAL.MAGIC), None, 0)
-        h = _FollowerHandle(end, cursor)
-        h.tailer = WAL.WalTailer(self.drv.durability.wal_path,
-                                 offset=cursor.offset,
-                                 next_seqno=cursor.next_seqno,
-                                 epoch=cursor.epoch)
+        h = _FollowerHandle(end, cursor, fid=self._next_fid)
+        self._next_fid += 1
+        h.tailer = WAL.WalTailer(self.drv.durability.wal_path)
+        if cursor.next_seqno is not None:
+            # seqno-addressed start: the tailer relocates it across the
+            # segment chain, wherever rolls/prunes left it
+            h.tailer.rewind_to(cursor.next_seqno, cursor.epoch)
         self.handles.append(h)
         return h
 
     def add_follower(self, directory, *, driver: Optional[str] = None,
-                     fsync: bool = False) -> "Follower":
+                     fsync: bool = False, **fol_kw) -> "Follower":
         """Bootstrap `directory`, open a `Follower` over it, and attach
         it through an in-process `QueueLink` (reachable as
         ``follower.link`` for fault injection). `driver` defaults to
-        the leader's own kind."""
+        the leader's own kind; extra keywords (``auto_promote``,
+        ``clock``, ``pending_max``) pass through to `Follower`."""
         cursor = self.bootstrap(directory)
         if driver is None:
             driver = ("sharded" if isinstance(self.drv, ShardedSLSM)
                       else "single")
         link = QueueLink()
-        fol = Follower(directory, link.follower, driver=driver, fsync=fsync)
+        fol = Follower(directory, link.follower, driver=driver, fsync=fsync,
+                       **fol_kw)
         fol.link = link
         self.attach(link.leader, cursor)
         return fol
 
     def detach(self, handle: _FollowerHandle) -> None:
-        """Stop shipping to `handle` (its transport end is closed)."""
+        """Stop shipping to `handle` (its transport end is closed and
+        its ack no longer holds back the prune floor)."""
         if handle in self.handles:
             self.handles.remove(handle)
+            self.counters["detaches"] += 1
         try:
             handle.end.close()
         except OSError:
             pass
 
-    # -- shipping -----------------------------------------------------------
-    def _offset_of(self, seqno: int) -> Optional[Cursor]:
-        """Locate `seqno` in the leader's WAL for a retransmit rewind."""
-        for rec, start, _end in WAL.record_offsets(
-                self.drv.durability.wal_path):
-            if rec.seqno == seqno:
-                return Cursor(start, seqno, 0)
-        return None
+    def reattach(self, handle: _FollowerHandle, end=None) -> None:
+        """Resume shipping to a handle `ship` marked dead (transport
+        failure): optionally swap in a fresh transport `end`, rewind
+        its cursor to the first un-acked seqno, and revive it. The
+        follower's duplicate filter makes the overlap harmless."""
+        if end is not None:
+            handle.end = end
+        handle.dead = False
+        handle.tailer.rewind_to(handle.acked_seqno + 1)
+        if handle not in self.handles:
+            self.handles.append(handle)
+        self.counters["reattaches"] += 1
 
-    def ship(self, max_records: Optional[int] = None) -> int:
-        """Tail the durable log and send each new frame verbatim to
-        every live follower; then drain acks (a gap ack rewinds that
-        follower's cursor — retransmission, with duplicates dropped by
-        the follower's seqno filter). Returns frames sent."""
-        n = 0
+    def adopt_fence(self, end) -> None:
+        """Keep a deposed predecessor's transport end as a *fence end*:
+        `pump` answers anything it still ships with an ack at this
+        leader's (bumped) epoch, which is how the old leader learns it
+        was deposed (a promoted follower passes its old end here —
+        `Follower.promote(lead=True)` does it automatically)."""
+        self.fence_ends.append(end)
+
+    # -- failure detection / leases ----------------------------------------
+    def _mark_dead(self, h: _FollowerHandle) -> None:
+        if not h.dead:
+            h.dead = True
+            self.counters["detaches"] += 1
+
+    def _heartbeat(self) -> None:
+        """Send at most one lease heartbeat per `heartbeat_s` to every
+        live follower: epoch, durable watermark, lease duration, the
+        ack roster (the successor rule's input), and the receiver's own
+        follower id."""
+        if self.deposed or not self.handles:
+            return
+        now = self.clock()
+        if self._last_hb is not None and now - self._last_hb < self.heartbeat_s:
+            return
+        self._last_hb = now
+        w = self.drv.durability.writer
+        base = {"epoch": int(w.epoch), "last_seqno": int(w.last_seqno),
+                "lease_s": self.lease_s,
+                "roster": [[h.fid, int(h.acked_seqno)]
+                           for h in self.handles if not h.dead]}
         for h in self.handles:
             if h.dead:
                 continue
-            polled = h.tailer.poll(max_records)
-            if polled:
-                try:
-                    h.end.send_frames([f for _, f in polled])
-                except (BrokenPipeError, OSError):
-                    h.dead = True
+            try:
+                h.end.send_ctrl({**base, "you": h.fid})
+            except (TransportError, OSError):
+                self._mark_dead(h)
+        self.counters["heartbeats"] += 1
+
+    def quorum_seqno(self) -> int:
+        """The replication commit watermark: in quorum mode, the k-th
+        highest live follower ack (-1 while fewer than k followers are
+        live — quorum loss, nothing new may be client-acked); in
+        leader mode, simply the leader's durable watermark."""
+        if self.ack_mode != "quorum":
+            return int(self.drv.durability.writer.last_seqno)
+        acks = sorted((h.acked_seqno for h in self.handles if not h.dead),
+                      reverse=True)
+        if len(acks) < self.quorum:
+            return -1
+        return int(acks[self.quorum - 1])
+
+    # -- shipping -----------------------------------------------------------
+    def ship(self, max_records: Optional[int] = None) -> int:
+        """Tail the durable log and send each new frame verbatim to
+        every live follower; then drain acks (a gap ack rewinds that
+        follower's cursor by seqno — retransmission, with duplicates
+        dropped by the follower's filter). A transport failure marks
+        the handle dead (`reattach` revives it); a cursor that fell
+        behind the prune floor flags ``needs_bootstrap``. Returns
+        frames sent (always 0 once deposed — a fenced leader ships
+        nothing)."""
+        n = 0
+        if not self.deposed:
+            for h in self.handles:
+                if h.dead:
                     continue
-                h.sent_records += len(polled)
-                h.sent_bytes += sum(len(f) for _, f in polled)
-                n += len(polled)
+                polled = h.tailer.poll(max_records)
+                if h.tailer.pruned_gap:
+                    # only possible for a handle attached after pruning
+                    # ran (attached acks floor `prune`): force a fresh
+                    # bootstrap instead of shipping a gapped stream
+                    self._mark_dead(h)
+                    h.needs_bootstrap = True
+                    self.counters["pruned_cursors"] += 1
+                    continue
+                if polled:
+                    try:
+                        h.end.send_frames([f for _, f in polled])
+                    except (TransportError, OSError):
+                        self._mark_dead(h)
+                        continue
+                    h.sent_records += len(polled)
+                    h.sent_bytes += sum(len(f) for _, f in polled)
+                    n += len(polled)
         self._drain_acks()
         return n
 
     def _drain_acks(self) -> None:
+        my_epoch = self.drv.durability.writer.epoch
         for h in self.handles:
             if h.dead:
                 continue
             try:
                 acks = h.end.recv_acks()
-            except (BrokenPipeError, OSError):
-                h.dead = True
+            except (TransportError, OSError):
+                self._mark_dead(h)
                 continue
-            for seqno, nbytes, gap in acks:
+            for seqno, nbytes, gap, epoch in acks:
+                if epoch > my_epoch:
+                    # an acker is already at a later epoch: an automatic
+                    # failover deposed this leader while it was
+                    # partitioned — fence the engine so no further write
+                    # can be client-acked, then the caller demote()s
+                    if not self.deposed:
+                        self.deposed = True
+                        self.drv.demote()
+                    continue
                 if seqno > h.acked_seqno:
                     h.acked_seqno = seqno
                 if nbytes > h.acked_bytes:
                     h.acked_bytes = nbytes
                 if gap:
-                    cur = self._offset_of(seqno + 1)
-                    if cur is not None:
-                        h.tailer.rewind(cur.offset, cur.next_seqno, cur.epoch)
-                        h.retransmits += 1
+                    h.tailer.rewind_to(seqno + 1)
+                    h.retransmits += 1
+
+    def _pump_fences(self) -> None:
+        """Answer anything a deposed predecessor still ships on an
+        adopted fence end with an ack at this leader's epoch (and drop
+        its stale heartbeats)."""
+        w = self.drv.durability.writer
+        for end in list(self.fence_ends):
+            try:
+                frames = end.recv_frames()
+                end.recv_ctrl()         # stale heartbeats: ignore
+                if frames:
+                    end.send_ack(int(w.last_seqno), 0, gap=False,
+                                 epoch=int(w.epoch))
+                    self.counters["fence_acks"] += 1
+            except (TransportError, OSError):
+                self.fence_ends.remove(end)
+
+    # -- pruning ------------------------------------------------------------
+    def prune(self) -> int:
+        """Watermark-bounded WAL pruning (DESIGN.md §15): truncate
+        sealed segments at or below min(newest snapshot watermark,
+        minimum acked seqno over *all* attached handles — dead ones
+        included, they may `reattach`). No snapshot or a straggling
+        follower ⇒ nothing is pruned. Returns segments deleted."""
+        dur = self.drv.durability
+        floor = dur.prune_floor()
+        for h in self.handles:
+            floor = min(floor, h.acked_seqno)
+        self.counters["prune_calls"] += 1
+        if floor < 0:
+            return 0
+        n = dur.prune(floor)
+        self.counters["pruned_segments"] += n
+        return n
 
     def pump(self) -> int:
-        """One replication turn: ship new frames + drain acks (the hook
-        `repro.serve.Server.pump` drives between windows)."""
-        return self.ship()
+        """One replication turn: lease heartbeat + ship new frames +
+        drain acks + fence replies (the hook `repro.serve.Server.pump`
+        drives between windows)."""
+        self._heartbeat()
+        n = self.ship()
+        self._pump_fences()
+        return n
+
+    def demote(self) -> Any:
+        """Deposed-leader exit: detach every follower, close fence
+        ends, fence the engine against writes (`drv.demote()` — writes
+        raise until a future `promote()`), and release
+        ``drv.replication``. Returns the now read-only engine;
+        rejoining the cluster is a fresh `bootstrap` from the new
+        leader into a new directory + `Follower` over it."""
+        for h in list(self.handles):
+            self.detach(h)
+        for end in self.fence_ends:
+            try:
+                end.close()
+            except OSError:
+                pass
+        self.fence_ends.clear()
+        self.deposed = True
+        self.counters["demotions"] += 1
+        drv = self.drv
+        drv.demote()
+        drv.replication = None
+        return drv
 
     # -- telemetry ----------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
         """Leader-side replication telemetry. ``follower_lag_records``
         / ``follower_lag_bytes`` are the *worst* follower's distance
         behind the leader's durable log (ack-derived; per-follower
-        detail under ``per_follower``)."""
-        w = self.drv.durability.writer
-        last, size = w.last_seqno, w.size
+        detail under ``per_follower``); quorum/lease state and the
+        self-healing counters ride along."""
+        dur = self.drv.durability
+        w = dur.writer
+        last, size = w.last_seqno, dur.log_bytes
         per = []
         for h in self.handles:
             lag_r = max(0, last - h.acked_seqno)
             lag_b = max(0, size - (h.base_offset + h.acked_bytes))
-            per.append({"acked_seqno": int(h.acked_seqno),
+            per.append({"fid": int(h.fid),
+                        "acked_seqno": int(h.acked_seqno),
                         "lag_records": int(lag_r),
                         "lag_bytes": int(lag_b),
                         "sent_records": int(h.sent_records),
                         "sent_bytes": int(h.sent_bytes),
                         "retransmits": int(h.retransmits),
+                        "needs_bootstrap": bool(h.needs_bootstrap),
                         "alive": not h.dead})
         return {
-            "role": "leader",
+            "role": "deposed" if self.deposed else "leader",
             "followers": len(per),
             "last_seqno": int(last),
+            "epoch": int(w.epoch),
             "wal_bytes": int(size),
+            "ack_mode": self.ack_mode,
+            "quorum": int(self.quorum),
+            "quorum_seqno": self.quorum_seqno(),
+            "lease_s": float(self.lease_s),
+            "heartbeat_s": float(self.heartbeat_s),
+            "deposed": bool(self.deposed),
+            "fence_ends": len(self.fence_ends),
+            "wal_pruned_bytes": int(dur.counters["wal_pruned_bytes"]),
+            "wal_pruned_segments": int(dur.counters["wal_pruned_segments"]),
             "shipped_records": int(sum(h.sent_records for h in self.handles)),
             "shipped_bytes": int(sum(h.sent_bytes for h in self.handles)),
             "follower_lag_records": max((p["lag_records"] for p in per),
@@ -451,6 +776,7 @@ class Leader:
             "follower_lag_bytes": max((p["lag_bytes"] for p in per),
                                       default=0),
             "per_follower": per,
+            **{k: int(v) for k, v in self.counters.items()},
         }
 
 
@@ -463,32 +789,56 @@ class Follower:
 
     Opens `directory` (a `Leader.bootstrap` product — or a promoted
     follower's own dir on restart) via the engine's ``open_replica``,
-    then each `apply`/`pump`: receive frames, validate every one with
+    then each `apply`/`pump`: receive control messages (lease
+    heartbeats) and frames, validate every frame with
     `wal.check_frame` (a corrupted frame is counted ``rejected`` and
     dropped *without poisoning the stream* — later frames still
     apply), drop duplicates (seqno ≤ applied watermark), buffer
-    out-of-order arrivals by seqno, and apply each consecutive frame:
-    append verbatim to the replica WAL, group-commit, replay through
-    the engine's chunk-apply programs, ack ``(seqno, bytes)``. A gap
-    (buffered frames with the next-expected one missing) is signalled
-    on the ack so the leader rewinds and retransmits.
+    out-of-order arrivals by seqno in a buffer bounded by
+    ``pending_max`` (overflow evicts the highest seqnos — the ones a
+    retransmit re-covers last — counts ``pending_overflow``, and
+    forces an immediate gap ack so one leader round-trip heals it),
+    and apply each consecutive frame: append verbatim to the replica
+    WAL, group-commit, replay through the engine's chunk-apply
+    programs, ack ``(seqno, bytes, gap, epoch)``.
+
+    With ``auto_promote=True`` the follower runs the failure detector:
+    each heartbeat renews a lease of the advertised duration on the
+    monotonic `clock`; when the lease expires, the successor rule —
+    highest applied watermark in the last roster (own entry replaced
+    by the live watermark), lowest follower id on ties — either
+    promotes *this* follower (``promote(lead=True)``, the new `Leader`
+    lands in ``new_leader`` and fences the old stream) or stands down
+    awaiting the designated successor's stream.
 
     Reads (`lookup_many` / `range_many` / `aggregate_many` on ``drv``)
     are eventually consistent at the applied watermark. `promote` is
     the failover exit: returns the engine as a writable leader."""
 
     def __init__(self, directory, end=None, *, driver: str = "single",
-                 fsync: bool = False):
+                 fsync: bool = False, auto_promote: bool = False,
+                 pending_max: int = 512, clock=time.monotonic):
         cls = ShardedSLSM if driver == "sharded" else SLSM
         self.drv = cls.open_replica(directory, fsync=fsync)
         self.drv.replication = self
         self.end = end
         self.link: Optional[QueueLink] = None   # set by Leader.add_follower
+        self.driver = driver
+        self.auto_promote = auto_promote
+        self.pending_max = int(pending_max)
+        self.clock = clock
         self.pending: Dict[int, Tuple[WAL.WalRecord, bytes]] = {}
         self.promoted = False
+        self.new_leader: Optional[Leader] = None
+        self.fid: Optional[int] = None          # assigned by heartbeats
+        self.roster: List[Tuple[int, int]] = []
+        self.lease_s: Optional[float] = None
+        self.lease_deadline: Optional[float] = None
+        self.leader_epoch = 0
         self.counters = collections.Counter(
             applied_records=0, applied_bytes=0, duplicates=0, rejected=0,
-            gap_signals=0, buffered_peak=0)
+            gap_signals=0, buffered_peak=0, pending_overflow=0,
+            heartbeats_seen=0, lease_expiries=0, auto_promotions=0)
 
     @property
     def last_seqno(self) -> int:
@@ -496,6 +846,7 @@ class Follower:
         record in the replica's WAL."""
         return self.drv.durability.writer.last_seqno
 
+    # -- apply path ---------------------------------------------------------
     def ingest(self, frames: List[bytes],
                max_records: Optional[int] = None) -> int:
         """Feed raw frames through the full apply pipeline (the
@@ -504,6 +855,7 @@ class Follower:
         if self.promoted:
             return 0
         dur = self.drv.durability
+        overflowed = False
         for f in frames:
             rec = WAL.check_frame(f)
             if rec is None:
@@ -512,6 +864,17 @@ class Follower:
             if rec.seqno <= self.last_seqno or rec.seqno in self.pending:
                 self.counters["duplicates"] += 1
                 continue
+            if len(self.pending) >= self.pending_max:
+                # bounded reorder buffer: keep the lowest seqnos (they
+                # unblock the consecutive chain soonest), shed the
+                # highest — the immediate gap ack below makes the
+                # leader retransmit what was shed in one round-trip
+                self.counters["pending_overflow"] += 1
+                overflowed = True
+                hi = max(self.pending)
+                if rec.seqno >= hi:
+                    continue            # incoming is the highest: drop it
+                del self.pending[hi]
             self.pending[rec.seqno] = (rec, f)
         applied = 0
         while self.pending and (max_records is None
@@ -533,58 +896,159 @@ class Follower:
                                              len(self.pending))
         if applied:
             dur.sync()
-        gap = bool(self.pending
-                   and min(self.pending) > self.last_seqno + 1)
+        gap = overflowed or bool(self.pending
+                                 and min(self.pending) > self.last_seqno + 1)
         if (applied or gap) and self.end is not None:
             if gap:
                 self.counters["gap_signals"] += 1
             try:
                 self.end.send_ack(self.last_seqno,
-                                  self.counters["applied_bytes"], gap=gap)
-            except (BrokenPipeError, OSError):
-                pass                    # leader gone; promote() decides
+                                  self.counters["applied_bytes"], gap=gap,
+                                  epoch=int(dur.writer.epoch))
+            except (TransportError, OSError):
+                pass                    # leader gone; the lease decides
         return applied
 
     def apply(self, max_records: Optional[int] = None) -> int:
-        """Receive from the transport and `ingest`. Returns records
-        applied (0 when detached or already promoted)."""
+        """Receive control messages + frames from the transport and
+        `ingest`. Returns records applied (0 when detached or already
+        promoted)."""
         if self.end is None or self.promoted:
             return 0
+        for hb in self.end.recv_ctrl():
+            self._on_heartbeat(hb)
         return self.ingest(self.end.recv_frames(), max_records)
 
     def pump(self) -> int:
-        """One replication turn (the `repro.serve` hook): = `apply`."""
-        return self.apply()
+        """One replication turn (the `repro.serve` hook): apply, then
+        run the lease failure detector.
 
-    def promote(self):
-        """Failover: make this follower the leader. Unacked buffered
-        frames are dropped (never acked ⇒ never durable anywhere —
-        clients were never told they happened), the transport is
-        detached, and the engine's ``promote()`` bumps the WAL epoch
-        and re-enables local logging, so the seqno stream resumes right
-        after the last applied record and any stale pre-failover bytes
-        the reused log file might expose later are rejected by the
-        prefix rule's epoch check. Returns the now-writable engine."""
-        self.pending.clear()
+        The detector reads the *freshest* control traffic: `apply` can
+        dwell in `ingest` for longer than a lease (a cold follower
+        compiling its first apply shapes), during which heartbeats keep
+        landing in the transport inbox. Draining them again here means
+        a live, heartbeating leader is never declared dead just because
+        we were busy applying its stream."""
+        n = self.apply()
+        if self.end is not None and not self.promoted:
+            for hb in self.end.recv_ctrl():
+                self._on_heartbeat(hb)
+        self.maybe_promote()
+        return n
+
+    # -- leases / automatic failover ---------------------------------------
+    def _on_heartbeat(self, hb: Dict[str, Any]) -> None:
+        try:
+            self.fid = int(hb["you"])
+            self.roster = [(int(f), int(a)) for f, a in hb.get("roster", [])]
+            self.lease_s = float(hb["lease_s"])
+            self.leader_epoch = int(hb.get("epoch", 0))
+        except (KeyError, TypeError, ValueError):
+            return                      # malformed control traffic: drop
+        self.lease_deadline = self.clock() + self.lease_s
+        self.counters["heartbeats_seen"] += 1
+
+    def is_successor(self) -> bool:
+        """The deterministic successor rule: does this follower win —
+        highest applied watermark, lowest follower id on ties — over
+        the last roster (own entry replaced by the live watermark)?"""
+        if self.fid is None:
+            return False
+        me = (self.last_seqno, -self.fid)
+        best = me
+        for f, a in self.roster:
+            if f == self.fid:
+                continue
+            if (a, -f) > best:
+                best = (a, -f)
+        return best == me
+
+    def maybe_promote(self) -> Optional[Leader]:
+        """The failure detector (a no-op unless ``auto_promote``): on
+        lease expiry, count it, and either promote this follower
+        (successor rule says it wins) — returning the new `Leader`,
+        also kept in ``new_leader`` — or disarm the lease and await the
+        designated successor's stream."""
+        if (not self.auto_promote or self.promoted
+                or self.lease_deadline is None
+                or self.clock() < self.lease_deadline):
+            return None
+        self.lease_deadline = None
+        self.counters["lease_expiries"] += 1
+        if not self.is_successor():
+            return None
+        self.counters["auto_promotions"] += 1
+        self.new_leader = self.promote(lead=True)
+        return self.new_leader
+
+    def reattach(self, end) -> None:
+        """Point this follower at a new transport end (rejoin after a
+        failover: the new leader `attach`es the other side). Lease
+        state resets until the new leader's first heartbeat."""
         if self.end is not None:
             try:
                 self.end.close()
             except OSError:
                 pass
-            self.end = None
+        self.end = end
+        self.lease_deadline = None
+
+    # -- failover exit ------------------------------------------------------
+    def promote(self, lead: bool = False, fence: bool = True):
+        """Failover: make this follower the leader. Unacked buffered
+        frames are dropped (never acked ⇒ never durable anywhere —
+        clients were never told they happened) and the engine's
+        ``promote()`` bumps the WAL epoch and re-enables local logging,
+        so the seqno stream resumes right after the last applied record
+        and any stale pre-failover bytes the reused log file might
+        expose later are rejected by the prefix rule's epoch check.
+
+        ``promote()`` (the PR-9 form) closes the transport and returns
+        the now-writable *engine*. ``promote(lead=True)`` instead
+        returns a ready `Leader` wrapped around it — inheriting the
+        lease duration the old leader advertised — and (with `fence`)
+        adopts the old transport end as a fence end, so a deposed
+        leader that comes back from a partition is answered at the
+        bumped epoch and fences itself."""
+        self.pending.clear()
+        old_end, self.end = self.end, None
         self.promoted = True
         drv = self.drv.promote()
         drv.replication = None
-        return drv
+        if not lead:
+            if old_end is not None:
+                try:
+                    old_end.close()
+                except OSError:
+                    pass
+            return drv
+        ldr = Leader(drv,
+                     lease_s=self.lease_s if self.lease_s else 2.0,
+                     clock=self.clock)
+        if old_end is not None:
+            if fence:
+                ldr.adopt_fence(old_end)
+            else:
+                try:
+                    old_end.close()
+                except OSError:
+                    pass
+        return ldr
 
     def stats(self) -> Dict[str, Any]:
         """Follower-side replication telemetry: applied watermark,
-        reorder-buffer occupancy, and the duplicate/reject counters."""
+        reorder-buffer occupancy/bound, lease state, and the
+        duplicate/reject/overflow counters."""
         return {
             "role": "follower",
             "promoted": self.promoted,
             "applied_seqno": int(self.last_seqno),
             "reorder_buffered": len(self.pending),
+            "pending_max": int(self.pending_max),
+            "fid": self.fid,
+            "auto_promote": bool(self.auto_promote),
+            "lease_armed": self.lease_deadline is not None,
+            "leader_epoch": int(self.leader_epoch),
             **{k: int(v) for k, v in self.counters.items()},
         }
 

@@ -313,10 +313,30 @@ class ShardedSLSM:
         if self.durability is not None:
             self.durability.ensure_header(self._wal_meta())
         # replication hook (DESIGN.md §14): a replication.Leader /
-        # .Follower claims this; repro.serve pumps it between windows
+        # .Follower claims this; repro.serve pumps it between windows.
+        # fenced (DESIGN.md §15) = a deposed leader: writes raise until
+        # a future promote()
         self.replication = None
+        self.fenced = False
 
     # -- write path -------------------------------------------------------
+    def _guard_writes(self) -> None:
+        """Reject writes into a read-only engine: a fenced (deposed)
+        leader or a replica follower (DESIGN.md §15) —
+        `SLSM._guard_writes`'s contract. Replay and `apply_replicated`
+        bypass this via ``_replaying``."""
+        if self._replaying:
+            return
+        if self.fenced:
+            raise RuntimeError(
+                "write rejected: this engine was fenced (deposed leader) "
+                "— demote() happened; rejoin via the new leader's "
+                "bootstrap or promote() to lead again")
+        if self.durability is not None and self.durability.replica:
+            raise RuntimeError(
+                "write rejected: replica engines are read-only until "
+                "promote()")
+
     def insert(self, keys, vals) -> None:
         """Batched insert (paper Algorithm 1/2, vmapped): bucket by owner
         shard, then feed all shards in lockstep Rn-chunks; each round ends
@@ -337,6 +357,7 @@ class ShardedSLSM:
         byte-identical records)."""
         if len(keys) == 0:
             return
+        self._guard_writes()
         log = self.durability is not None and not self._replaying
         if log:
             self.durability.log_write(keys, vals, wts)
@@ -863,6 +884,8 @@ class ShardedSLSM:
                 n_reads += k.size
             elif ch.kind != "range":
                 raise ValueError(f"unknown tape chunk kind {ch.kind!r}")
+        if n_writes:
+            self._guard_writes()
         # one WAL record per write chunk, pre-routing, group-committed
         # before the window's results are returned (log-before-ack —
         # SLSM.run_tape's contract, byte-identical records)
@@ -1132,7 +1155,16 @@ class ShardedSLSM:
             raise ValueError("promote() requires a durability layer")
         self.durability.writer.bump_epoch()
         self.durability.replica = False
+        self.fenced = False
         self.stats["promotions"] += 1
+        return self
+
+    def demote(self) -> "ShardedSLSM":
+        """Fence this fleet against writes (the deposed-leader exit,
+        DESIGN.md §15) — `SLSM.demote`'s contract: reads stay served,
+        writes raise until a future `promote()`. Returns self."""
+        self.fenced = True
+        self.stats["demotions"] += 1
         return self
 
     # -- stats ----------------------------------------------------------------

@@ -73,9 +73,20 @@ dispatching it.
 
 Snapshots are directories ``snap_<seqno>/`` (atomic ``.tmp-<pid>`` +
 rename publish, one ``leaf_<i>.npy`` per pytree leaf, sha256-verified
-``meta.json``), garbage-collected to ``keep_snapshots``. The WAL is
-never pruned here — replay-from-genesis stays possible, and bounding
-log growth by trimming below the watermark is future work (ROADMAP).
+``meta.json``), garbage-collected to ``keep_snapshots``.
+
+Segmented logs (DESIGN.md §15): with ``segment_bytes`` set, `sync`
+seals the active ``wal.log`` once it exceeds that size by renaming it
+to ``wal_<first_seqno>.log`` and starting a fresh active tail — the
+seqno/epoch stream continues unbroken across files, `read_wal_chain`
+decodes the whole chain with cross-file continuity enforced, and the
+`WalTailer` relocates its cursor across segment boundaries by seqno.
+`Durability.prune` then deletes sealed segments entirely at or below a
+watermark (never the active tail), which is what bounds WAL growth:
+once a snapshot covers seqno s and every attached follower has acked
+>= s, nothing below s is needed for recovery or for bootstrap
+(snapshot + retained tail). Without ``segment_bytes`` (the default)
+the log stays a single file and nothing here changes.
 """
 from __future__ import annotations
 
@@ -84,6 +95,7 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import shutil
 import struct
 import sys
@@ -245,6 +257,97 @@ def check_frame(frame: bytes) -> Optional[WalRecord]:
     return WalRecord(seqno, kind, bytes(frame[_HEADER.size:]), epoch)
 
 
+# --------------------------------------------------------------------------
+# segmented-log chain (sealed wal_<first_seqno>.log files + active wal.log)
+# --------------------------------------------------------------------------
+
+_SEG_RE = re.compile(r"^wal_(\d+)\.log$")
+
+
+def list_segments(directory) -> List[Tuple[int, Path]]:
+    """Sealed, immutable WAL segments under `directory` as
+    ``[(first_seqno, path), ...]`` sorted ascending by their first
+    record's seqno (encoded in the filename at seal time). The active
+    tail (``wal.log``) is never listed here — it is still being
+    appended to and must never be pruned."""
+    directory = Path(directory)
+    if not directory.is_dir():
+        return []
+    out = []
+    for p in directory.iterdir():
+        m = _SEG_RE.match(p.name)
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out)
+
+
+def _first_seqno(path) -> Optional[int]:
+    """Seqno of the first (possibly torn) frame header in a WAL file,
+    or None when the file is missing/empty — a cheap O(1) probe used to
+    detect that the active file was sealed and replaced underneath a
+    tailer's cursor."""
+    try:
+        with open(path, "rb") as f:
+            f.seek(len(MAGIC))
+            head = f.read(_HEADER.size)
+    except OSError:
+        return None
+    if len(head) < _HEADER.size:
+        return None
+    return _HEADER.unpack(head)[2]
+
+
+def wal_chain(directory, active: str = "wal.log") -> List[Path]:
+    """The ordered file chain of a (possibly segmented) WAL directory:
+    every sealed segment ascending, then the active tail if present."""
+    directory = Path(directory)
+    paths = [p for _, p in list_segments(directory)]
+    ap = directory / active
+    if ap.exists():
+        paths.append(ap)
+    return paths
+
+
+def read_wal_chain(directory, active: str = "wal.log"
+                   ) -> Tuple[List[WalRecord], int]:
+    """Decode the retained record stream of a whole WAL directory —
+    every sealed segment in order, then the active tail — enforcing the
+    `read_wal` prefix rule *across* file boundaries (consecutive
+    seqnos, non-decreasing epochs). Returns ``(records,
+    good_bytes_total)``; a pruned directory's stream simply starts at
+    the first retained segment's seqno instead of 0."""
+    records: List[WalRecord] = []
+    total = 0
+    prev: Optional[int] = None
+    prev_epoch = 0
+    for p in wal_chain(directory, active):
+        recs, _ = read_wal(p)
+        total += len(MAGIC)
+        for r in recs:
+            if prev is not None and r.seqno != prev + 1:
+                return records, total
+            if r.epoch < prev_epoch:
+                return records, total
+            records.append(r)
+            prev, prev_epoch = r.seqno, r.epoch
+            total += _HEADER.size + len(r.payload)
+    return records, total
+
+
+def chain_frames(directory, from_seqno: int,
+                 active: str = "wal.log") -> List[bytes]:
+    """Raw frame bytes of every retained record with ``seqno >=
+    from_seqno`` across the segment chain, in order — the verbatim tail
+    a leader's `bootstrap` copies past a snapshot watermark."""
+    t = WalTailer(Path(directory) / active)
+    frames: List[bytes] = []
+    while True:
+        got = t.poll()
+        if not got:
+            return frames
+        frames.extend(f for r, f in got if r.seqno >= from_seqno)
+
+
 class WalTailer:
     """Incremental reader of a live WAL's durable frame stream.
 
@@ -257,56 +360,200 @@ class WalTailer:
     with a valid CRC, the expected consecutive seqno, and a
     non-decreasing epoch; a torn tail stays pending until the writer
     completes it.
+
+    Segment chains: `path` names the *active* tail; when the durable
+    stream spans sealed ``wal_<first_seqno>.log`` segments, the cursor
+    hops files by seqno — a clean EOF on a sealed segment continues
+    into the next one, and a mismatch at the cursor's offset (the
+    active file was sealed and replaced underneath it) triggers a
+    relocation of `next_seqno` across the chain. `pruned_gap` is set
+    when the needed seqno was pruned away entirely: the cursor can
+    never serve it and the consumer must re-`bootstrap`.
     """
 
     def __init__(self, path, offset: Optional[int] = None,
                  next_seqno: Optional[int] = None, epoch: int = 0):
-        self.path = Path(path)
+        self.path = Path(path)          # the active tail
+        self.dir = self.path.parent
         self.offset = len(MAGIC) if offset is None else offset
         self.next_seqno = next_seqno    # None = accept any first seqno
         self.epoch = epoch
+        self.pruned_gap = False
+        self._cur = self.path           # file the cursor points into
+        self._cur_first: Optional[int] = None   # its first seqno, if seen
+        # with no explicit position, start at the head of the chain
+        self._needs_locate = offset is None and next_seqno is None
 
-    def poll(self, max_records: Optional[int] = None
-             ) -> List[Tuple[WalRecord, bytes]]:
-        """Read every frame that became durable since the last poll
-        (up to `max_records`), advancing the cursor past each."""
-        out: List[Tuple[WalRecord, bytes]] = []
-        if not self.path.exists():
-            return out
-        with open(self.path, "rb") as f:
+    def _poll_file(self, max_records: Optional[int],
+                   out: List[Tuple[WalRecord, bytes]]) -> str:
+        """Consume frames from the current file at the cursor; returns
+        why it stopped: 'budget', 'eof' (cleanly exhausted), 'torn'
+        (incomplete tail), 'mismatch' (complete frame that violates the
+        prefix rule), or 'missing' (file gone)."""
+        if not self._cur.exists():
+            return "missing"
+        with open(self._cur, "rb") as f:
             f.seek(self.offset)
             data = f.read()
         off = 0
-        while off + _HEADER.size <= len(data):
+        while True:
             if max_records is not None and len(out) >= max_records:
-                break
+                return "budget"
+            if off + _HEADER.size > len(data):
+                return "eof" if off == len(data) else "torn"
             crc, length, seqno, kind, epoch = _HEADER.unpack_from(data, off)
             end = off + _HEADER.size + length
-            if length > _MAX_PAYLOAD or end > len(data):
-                break
+            if length > _MAX_PAYLOAD:
+                return "mismatch"
+            if end > len(data):
+                return "torn"
             frame = bytes(data[off:end])
             if zlib.crc32(frame[4:]) & 0xFFFFFFFF != crc:
-                break
+                return "mismatch"
             if self.next_seqno is not None and seqno != self.next_seqno:
-                break
+                return "mismatch"
             if epoch < self.epoch:
-                break
+                return "mismatch"
+            if self.offset == len(MAGIC):
+                self._cur_first = seqno
             out.append((WalRecord(seqno, kind, frame[_HEADER.size:], epoch),
                         frame))
             self.next_seqno = seqno + 1
             self.epoch = epoch
             self.offset += len(frame)
             off = end
+
+    def _active_replaced(self) -> bool:
+        """Was the active file sealed and restarted underneath a cursor
+        positioned in it? (Its first record's seqno changed, or it shrank
+        below the cursor while once holding records.)"""
+        if self._cur != self.path:
+            return False
+        first = _first_seqno(self.path)
+        if self._cur_first is None:
+            # the cursor was parked at the head of a then-empty active:
+            # it was replaced iff the file now opens at some seqno other
+            # than the one the cursor is waiting for (that seqno was
+            # sealed into a segment underneath us)
+            return (first is not None and self.next_seqno is not None
+                    and first != self.next_seqno)
+        if first is None:
+            try:
+                size = os.path.getsize(self.path)
+            except OSError:
+                return True
+            return self.offset > size
+        return first != self._cur_first
+
+    def _locate(self) -> bool:
+        """Position the cursor at `next_seqno` (or the chain head when
+        None) by walking the segment chain. Returns False — setting
+        `pruned_gap` — when the needed seqno precedes every retained
+        frame."""
+        self._needs_locate = False
+        chain = wal_chain(self.dir, self.path.name)
+        if not chain:
+            return False
+        if self.next_seqno is None:
+            self._cur, self.offset, self._cur_first = \
+                chain[0], len(MAGIC), _first_seqno(chain[0])
+            return True
+        # last chain file whose first seqno <= next_seqno (an empty
+        # active tail is a valid final position: frames arrive later)
+        idx = None
+        for i, p in enumerate(chain):
+            first = _first_seqno(p)
+            if first is None:       # empty active tail: head of nothing
+                if idx is None:
+                    idx = i
+                break
+            if first <= self.next_seqno:
+                idx = i
+            else:
+                break
+        if idx is None:
+            self.pruned_gap = True
+            return False
+        while True:
+            p = chain[idx]
+            off = len(MAGIC)
+            try:
+                data = p.read_bytes()
+            except OSError:
+                return False
+            found_end = False
+            while off + _HEADER.size <= len(data):
+                _, length, seqno, _, _ = _HEADER.unpack_from(data, off)
+                end = off + _HEADER.size + length
+                if length > _MAX_PAYLOAD or end > len(data):
+                    break
+                if seqno >= self.next_seqno:
+                    found_end = True
+                    break
+                off = end
+            if found_end or idx == len(chain) - 1:
+                self._cur, self.offset = p, off
+                self._cur_first = _first_seqno(p)
+                return True
+            idx += 1    # seqno continues in the next chain file
+
+    def poll(self, max_records: Optional[int] = None
+             ) -> List[Tuple[WalRecord, bytes]]:
+        """Read every frame that became durable since the last poll
+        (up to `max_records`), advancing the cursor past each — hopping
+        sealed-segment boundaries transparently."""
+        out: List[Tuple[WalRecord, bytes]] = []
+        if self._needs_locate and not self._locate():
+            return out
+        relocated = False
+        for _hop in range(64):
+            status = self._poll_file(max_records, out)
+            if status == "budget":
+                break
+            if status == "eof":
+                if self._cur != self.path:
+                    if not self._locate():      # sealed: hop the chain
+                        break
+                    continue
+                if not relocated and self._active_replaced():
+                    relocated = True
+                    if self._locate():
+                        continue
+                break
+            if status in ("mismatch", "torn", "missing"):
+                # a roll may have replaced the bytes under the cursor;
+                # relocate once — a genuine violation relocates to the
+                # same spot and stays pending, exactly as before
+                if not relocated and (self._cur != self.path
+                                      or status == "missing"
+                                      or self._active_replaced()):
+                    relocated = True
+                    if self._locate():
+                        continue
+                break
         return out
 
     def rewind(self, offset: int, next_seqno: Optional[int],
                epoch: int = 0) -> None:
-        """Reset the cursor (leader retransmit after a follower reports
-        a gap): the next `poll` re-reads from `offset` expecting
-        `next_seqno`."""
+        """Reset the cursor to an explicit byte position in the active
+        file (leader retransmit after a follower reports a gap): the
+        next `poll` re-reads from `offset` expecting `next_seqno`."""
+        self._cur = self.path
+        self._cur_first = None
+        self._needs_locate = False
+        self.pruned_gap = False
         self.offset = offset
         self.next_seqno = next_seqno
         self.epoch = epoch
+
+    def rewind_to(self, next_seqno: int, epoch: int = 0) -> None:
+        """Seqno-addressed rewind (segment-chain aware): the next
+        `poll` relocates `next_seqno` across the chain, wherever the
+        rolls put it — the retransmit path that survives sealing."""
+        self.next_seqno = next_seqno
+        self.epoch = epoch
+        self.pruned_gap = False
+        self._needs_locate = True
 
 
 def record_offsets(path) -> List[Tuple[WalRecord, int, int]]:
@@ -337,6 +584,7 @@ class WalWriter:
         self.path = Path(path)
         self.head: Optional[WalRecord] = None   # the META record, if any
         self.epoch = 0                          # failover epoch stamp
+        self.first_seqno_in_file: Optional[int] = None  # segment-roll bound
         if self.path.exists():
             records, good = read_wal(self.path)
             if good == 0:
@@ -347,6 +595,8 @@ class WalWriter:
                     f.truncate(good)            # drop the torn tail
             self.next_seqno = records[-1].seqno + 1 if records else 0
             self.epoch = records[-1].epoch if records else 0
+            if records:
+                self.first_seqno_in_file = records[0].seqno
             if records and records[0].kind == REC_META:
                 self.head = records[0]
         else:
@@ -374,6 +624,8 @@ class WalWriter:
         self.next_seqno += 1
         self.size += len(rec)
         self.records += 1
+        if self.first_seqno_in_file is None:
+            self.first_seqno_in_file = seqno
         if kind == REC_META and self.head is None:
             self.head = WalRecord(seqno, kind, payload, self.epoch)
         return seqno
@@ -399,6 +651,8 @@ class WalWriter:
         self.epoch = rec.epoch
         self.size += len(frame)
         self.records += 1
+        if self.first_seqno_in_file is None:
+            self.first_seqno_in_file = rec.seqno
         if rec.kind == REC_META and self.head is None:
             self.head = rec
         return rec.seqno
@@ -635,11 +889,20 @@ class Durability:
     shipped copy of the leader's stream (bootstrapped from a snapshot +
     tail, extended via `append_frame`), so `ensure_header` never
     injects a local META record — a tail-only log stays a verbatim
-    continuation of the leader's seqno stream."""
+    continuation of the leader's seqno stream.
+
+    ``segment_bytes`` (None = a single unbounded ``wal.log``, the
+    pre-segmentation behavior) makes `sync` seal the active file into
+    ``wal_<first_seqno>.log`` once it exceeds that size; `prune` can
+    then delete sealed segments at or below a watermark (DESIGN.md §15
+    — the replication leader prunes at min(snapshot watermark, min
+    follower ack), a standalone engine at its own snapshot
+    watermark)."""
 
     def __init__(self, directory, *, fsync: bool = True,
                  snapshot_every_bytes: int = 1 << 20,
-                 keep_snapshots: int = 2, replica: bool = False):
+                 keep_snapshots: int = 2, replica: bool = False,
+                 segment_bytes: Optional[int] = None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         gc_tmp_snapshots(self.dir)
@@ -648,20 +911,35 @@ class Durability:
         self.replica = replica
         self.snapshot_every_bytes = snapshot_every_bytes
         self.keep_snapshots = keep_snapshots
+        self.segment_bytes = segment_bytes
         self._writer: Optional[WalWriter] = None
         self._bytes_at_snapshot = len(MAGIC)
+        self._sealed_bytes = sum(p.stat().st_size
+                                 for _, p in list_segments(self.dir))
         self.last_snapshot_ms = 0.0
-        self.counters = collections.Counter(snapshots=0)
+        self.counters = collections.Counter(snapshots=0, wal_rolls=0,
+                                            wal_pruned_bytes=0,
+                                            wal_pruned_segments=0)
 
     @property
     def writer(self) -> WalWriter:
         """The lazily opened `WalWriter` (opening truncates any torn
-        tail; seqnos resume past both the log and the newest snapshot's
-        watermark)."""
+        tail; seqnos resume past the log, the newest snapshot's
+        watermark, and any sealed segments — and the epoch carries over
+        a roll boundary, so a fresh active tail after a failover keeps
+        stamping the bumped epoch)."""
         if self._writer is None:
             snaps = list_snapshots(self.dir)
             min_next = snaps[-1][0] + 1 if snaps else 0
+            epoch_floor = 0
+            segs = list_segments(self.dir)
+            if segs:
+                recs, _ = read_wal(segs[-1][1])
+                if recs:
+                    min_next = max(min_next, recs[-1].seqno + 1)
+                    epoch_floor = recs[-1].epoch
             self._writer = WalWriter(self.wal_path, min_next_seqno=min_next)
+            self._writer.epoch = max(self._writer.epoch, epoch_floor)
         return self._writer
 
     # -- logging (driver write boundary) -----------------------------------
@@ -701,9 +979,12 @@ class Durability:
 
     def header_meta(self) -> Optional[Dict[str, Any]]:
         """The decoded META fingerprint of this WAL, or None when the
-        log is missing/unreadable (restore then falls back to the
-        snapshot's copy)."""
-        records, _ = read_wal(self.wal_path)
+        log is missing/unreadable — or when pruning removed the genesis
+        segment (restore then falls back to the snapshot's copy)."""
+        chain = wal_chain(self.dir)
+        if not chain:
+            return None
+        records, _ = read_wal(chain[0])
         if records and records[0].kind == REC_META:
             return json.loads(records[0].payload.decode())
         return None
@@ -730,16 +1011,94 @@ class Durability:
 
     def sync(self) -> None:
         """Group commit: flush every buffered record in one write (+ one
-        fsync unless configured off)."""
+        fsync unless configured off), then seal the active file into a
+        segment if it outgrew ``segment_bytes``."""
         self.writer.sync(fsync=self.fsync)
+        self._maybe_roll()
+
+    def _maybe_roll(self) -> None:
+        """Seal the active ``wal.log`` into ``wal_<first_seqno>.log``
+        once it exceeds ``segment_bytes`` and start a fresh active tail
+        continuing the same seqno/epoch stream. Only ever called right
+        after a sync, so the sealed file is complete and durable."""
+        if self.segment_bytes is None or self._writer is None:
+            return
+        w = self._writer
+        if w.size < self.segment_bytes or w.first_seqno_in_file is None:
+            return
+        first, nxt, epoch = w.first_seqno_in_file, w.next_seqno, w.epoch
+        w.close()
+        sealed = self.dir / f"wal_{first}.log"
+        os.rename(self.wal_path, sealed)
+        self._sealed_bytes += os.path.getsize(sealed)
+        self.counters["wal_rolls"] += 1
+        nw = WalWriter(self.wal_path, min_next_seqno=nxt)
+        nw.epoch = epoch
+        self._writer = nw
+
+    def prune(self, upto_seqno: int) -> int:
+        """Delete every sealed segment whose records all have ``seqno <=
+        upto_seqno`` (the active tail is never touched). The caller owns
+        the watermark discipline: a standalone engine passes
+        `prune_floor` (its newest snapshot's seqno), a replication
+        leader additionally floors it at the minimum follower ack so a
+        bootstrap of any attached follower still finds its tail.
+        Returns the number of segments deleted."""
+        segs = list_segments(self.dir)
+        if not segs:
+            return 0
+        # a sealed segment's last seqno = the next chain file's first - 1
+        # (the chain is gapless); the final sealed segment is bounded by
+        # the active tail's first record, or decoded directly if the
+        # active tail is still empty
+        firsts = [f for f, _ in segs]
+        active_first = (self._writer.first_seqno_in_file
+                        if self._writer is not None
+                        else _first_seqno(self.wal_path))
+        bounds = firsts[1:] + [active_first]
+        n = 0
+        for (first, p), nxt_first in zip(segs, bounds):
+            if nxt_first is not None:
+                last = nxt_first - 1
+            else:
+                recs, _ = read_wal(p)
+                last = recs[-1].seqno if recs else None
+            if last is None or last > upto_seqno:
+                break
+            sz = os.path.getsize(p)
+            os.remove(p)
+            self._sealed_bytes -= sz
+            self.counters["wal_pruned_bytes"] += sz
+            self.counters["wal_pruned_segments"] += 1
+            n += 1
+        return n
+
+    def prune_floor(self) -> int:
+        """Highest seqno local recovery no longer needs from the WAL:
+        the newest snapshot's watermark (-1 when no snapshot exists —
+        then nothing may be pruned)."""
+        snaps = list_snapshots(self.dir)
+        return snaps[-1][0] if snaps else -1
 
     def read_records(self) -> List[WalRecord]:
-        """Decode the WAL's well-formed prefix without opening a writer
+        """Decode the retained record stream — the whole segment chain,
+        sealed files then the active tail — without opening a writer
         (pure read: a torn tail is ignored here, truncated only when a
         writer attaches)."""
-        return read_wal(self.wal_path)[0]
+        return read_wal_chain(self.dir)[0]
 
     # -- snapshots ----------------------------------------------------------
+    @property
+    def log_bytes(self) -> int:
+        """Monotone bytes ever logged through this directory's WAL
+        stream (active + sealed + already-pruned) — the growth measure
+        `should_snapshot` compares, immune to rolls and prunes shrinking
+        the on-disk footprint."""
+        w_size = self._writer.size if self._writer else (
+            os.path.getsize(self.wal_path) if self.wal_path.exists() else 0)
+        return (self._sealed_bytes + int(self.counters["wal_pruned_bytes"])
+                + w_size)
+
     def should_snapshot(self) -> bool:
         """Has the WAL grown `snapshot_every_bytes` past the last
         snapshot? (The governor's idle-gap trigger.) False until the
@@ -747,7 +1106,7 @@ class Durability:
         snapshot."""
         if self._writer is None:
             return False
-        return (self._writer.size
+        return (self.log_bytes
                 - self._bytes_at_snapshot) >= self.snapshot_every_bytes
 
     def snapshot(self, drv) -> Path:
@@ -763,7 +1122,7 @@ class Durability:
         meta = {"seqno": seqno, **drv._snapshot_meta()}
         path = write_snapshot(self.dir, seqno, leaves, meta,
                               keep_last=self.keep_snapshots)
-        self._bytes_at_snapshot = self.writer.size
+        self._bytes_at_snapshot = self.log_bytes
         self.counters["snapshots"] += 1
         self.last_snapshot_ms = (time.perf_counter() - t0) * 1e3
         return path
@@ -771,18 +1130,24 @@ class Durability:
     # -- telemetry / lifecycle ----------------------------------------------
     def stats(self) -> Dict[str, Any]:
         """Durability telemetry: WAL size/record/sync counters, snapshot
-        count, last snapshot wall-time, and bytes logged since the last
-        snapshot (the `should_snapshot` residual)."""
-        size = self._writer.size if self._writer else (
+        count, last snapshot wall-time, bytes logged since the last
+        snapshot (the `should_snapshot` residual), and the segmentation
+        ledger (sealed segments on disk, rolls, pruned bytes/segments)."""
+        active = self._writer.size if self._writer else (
             os.path.getsize(self.wal_path) if self.wal_path.exists() else 0)
         return {
-            "wal_bytes": int(size),
+            "wal_bytes": int(self._sealed_bytes + active),
+            "wal_active_bytes": int(active),
+            "wal_segments": len(list_segments(self.dir)),
+            "wal_rolls": int(self.counters["wal_rolls"]),
+            "wal_pruned_bytes": int(self.counters["wal_pruned_bytes"]),
+            "wal_pruned_segments": int(self.counters["wal_pruned_segments"]),
             "wal_records": int(self._writer.records if self._writer else 0),
             "wal_syncs": int(self._writer.syncs if self._writer else 0),
             "replica": bool(self.replica),
             "snapshots": int(self.counters["snapshots"]),
             "snapshot_ms_last": float(self.last_snapshot_ms),
-            "bytes_since_snapshot": int(max(0, size
+            "bytes_since_snapshot": int(max(0, self.log_bytes
                                             - self._bytes_at_snapshot)),
         }
 

@@ -23,6 +23,12 @@ the engine's replication endpoint (DESIGN.md §14), so an
 between client reads with no extra machinery, and one over a leader
 keeps shipping. A follower server (``Server(tree, role="follower")``)
 rejects write submits at intake; route writes to the leader.
+
+Self-healing (DESIGN.md §15) needs no front-end changes either: under
+quorum acks an awaited write simply resolves later — the pump holds its
+ticket until k followers confirm the bytes and resolves the future on
+release — and the ``role`` property is live, flipping when the wrapped
+engine auto-promotes on lease expiry or fences after being deposed.
 """
 from __future__ import annotations
 

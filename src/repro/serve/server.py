@@ -35,6 +35,13 @@ watermark. Either way, when the engine carries a
 ``repro.engine.replication`` endpoint (``tree.replication``), the pump
 drives it between windows and in idle gaps: shipping on a leader,
 applying on a follower.
+
+Self-healing (DESIGN.md §15) rides the same seams: ``role`` is live —
+a follower that auto-promoted on lease expiry starts accepting writes,
+a fenced (deposed) leader stops; a quorum-mode leader holds each
+window's write acks until k followers confirm the bytes
+(`_pump_replication` releases them against ``quorum_seqno()``); and
+idle gaps run watermark-bounded WAL pruning next to snapshots.
 """
 from __future__ import annotations
 
@@ -46,6 +53,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from repro.engine.engine import reject_reserved
+from repro.engine.replication import Leader as _RepLeader
 from repro.serve.coalescer import OP_OF, coalesce, scatter
 
 KINDS = ("insert", "delete", "lookup", "range")
@@ -155,6 +163,14 @@ class Governor:
     serializes the device pytree (DESIGN.md §12) — snapshot cost rides
     the same no-client-is-waiting window as background merges, so the
     log-before-ack write path never absorbs a multi-ms snapshot stall.
+
+    On a segmented WAL (`Durability(segment_bytes=...)`) idle gaps also
+    run watermark-bounded pruning (DESIGN.md §15): a replicating leader
+    prunes through `Leader.prune()` (which additionally floors at every
+    attached follower's ack), a standalone engine through
+    `Durability.prune(prune_floor())` — either way sealed segments the
+    newest snapshot no longer needs are deleted, bounding log growth
+    without ever touching bytes a bootstrap or replay could still want.
     """
 
     idle_steps: int = 1
@@ -163,6 +179,8 @@ class Governor:
     steps_run: int = 0
     idle_steps_run: int = 0
     snapshots_run: int = 0
+    prunes_run: int = 0
+    pruned_segments: int = 0
 
     def window_done(self, tree, write_ops: int) -> int:
         """Accrue credit for the window's writes and spend whole steps
@@ -188,6 +206,15 @@ class Governor:
         if dur is not None and dur.should_snapshot():
             tree.snapshot()
             self.snapshots_run += 1
+        if dur is not None and dur.segment_bytes is not None:
+            rep = getattr(tree, "replication", None)
+            if isinstance(rep, _RepLeader):
+                dropped = rep.prune()
+            else:
+                dropped = dur.prune(dur.prune_floor())
+            if dropped:
+                self.prunes_run += 1
+                self.pruned_segments += dropped
         if self.idle_steps <= 0:
             return 0
         ran = tree.voluntary_steps(self.idle_steps)
@@ -237,10 +264,39 @@ class Server:
         self.clock = clock
         self._pending: List[Ticket] = []
         self._pending_ops = 0
+        # quorum ack mode: windows whose write tickets are executed and
+        # durable but not yet client-acked — [(commit watermark, tickets)]
+        self._unacked: List[tuple] = []
         self._lat: Dict[str, List[float]] = collections.defaultdict(list)
         self.counters = collections.Counter(
             requests=0, ops=0, windows=0, dispatches=0,
-            write_ops=0, read_ops=0, range_ops=0)
+            write_ops=0, read_ops=0, range_ops=0,
+            promotions=0, demotions=0, quorum_held=0, quorum_releases=0)
+
+    # -- role tracking ------------------------------------------------------
+    def _sync_role(self) -> None:
+        """Track self-healing role transitions (DESIGN.md §15): a
+        follower whose engine auto-promoted (its ``replication``
+        endpoint became a `Leader`) starts accepting writes; a leader
+        whose engine was fenced (deposed by a successor's epoch, or
+        still a replica) stops. The submit gate reads ``self.role``,
+        so the flip is what turns intake-level write rejection on/off."""
+        rep = getattr(self.tree, "replication", None)
+        if self.role == "follower":
+            lead = rep if isinstance(rep, _RepLeader) else getattr(
+                rep, "new_leader", None)
+            # a deposed leader endpoint on a fenced engine is NOT a
+            # promotion — it's the before-state of a demoted node
+            if (isinstance(lead, _RepLeader) and not lead.deposed
+                    and not getattr(self.tree, "fenced", False)):
+                self.role = "leader"
+                self.counters["promotions"] += 1
+        elif self.role == "leader":
+            dur = getattr(self.tree, "durability", None)
+            if getattr(self.tree, "fenced", False) or (
+                    dur is not None and dur.replica):
+                self.role = "follower"
+                self.counters["demotions"] += 1
 
     # -- intake -------------------------------------------------------------
     def submit(self, client: str, kind: str, keys, vals=None) -> Ticket:
@@ -255,6 +311,7 @@ class Server:
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r}; "
                              f"options: {KINDS}")
+        self._sync_role()
         if self.role == "follower" and kind in ("insert", "delete"):
             raise ValueError(
                 f"follower is read-only: {kind!r} must go to the leader "
@@ -313,7 +370,17 @@ class Server:
         each window and in every idle gap — shipping durable frames on
         a leader, applying received ones on a follower — so it never
         rides inside a request's dispatch either.
+
+        Under quorum acks (``Leader(ack_mode="quorum")``, DESIGN.md
+        §15) a window's *write* tickets are executed and locally
+        durable here but not client-acked: they are held on
+        ``_unacked`` tagged with the window's commit watermark (the
+        leader's durable seqno after the group commit) and released by
+        `_pump_replication` once ``quorum_seqno()`` clears it — so a
+        client-visible ack always means k followers hold the bytes and
+        failover loses nothing (RPO 0). Reads reply immediately.
         """
+        self._sync_role()
         if not self._pending:
             self.governor.idle(self.tree)
             self._pump_replication()
@@ -329,28 +396,51 @@ class Server:
             self.counters["dispatches"] += 1
         else:
             self._serve_per_request(batch)
-        t_reply = self.clock()
-        write_ops = 0
-        for t in batch:
-            t.t_reply = t_reply
-            self._lat[t.client].append(t_reply - t.t_enqueue)
-            if OP_OF[t.kind] == "write":
-                write_ops += t.n_ops
-            if t.future is not None and not t.future.done():
-                t.future.set_result(t.result)
+        write_ops = sum(t.n_ops for t in batch if OP_OF[t.kind] == "write")
+        release = batch
+        rep = getattr(self.tree, "replication", None)
+        if (isinstance(rep, _RepLeader) and rep.ack_mode == "quorum"
+                and write_ops):
+            held = [t for t in batch if OP_OF[t.kind] == "write"]
+            release = [t for t in batch if OP_OF[t.kind] != "write"]
+            watermark = int(self.tree.durability.writer.last_seqno)
+            self._unacked.append((watermark, held))
+            self.counters["quorum_held"] += len(held)
+        self._reply(release)
         self.counters["windows"] += 1
         self.window.closed(batch_ops)
         self.governor.window_done(self.tree, write_ops)
         self._pump_replication()
         return len(batch)
 
+    def _reply(self, tickets: List[Ticket]) -> None:
+        """Stamp replies: reply time, the client latency ledger, and
+        the asyncio future (when the front-end attached one)."""
+        if not tickets:
+            return
+        t_reply = self.clock()
+        for t in tickets:
+            t.t_reply = t_reply
+            self._lat[t.client].append(t_reply - t.t_enqueue)
+            if t.future is not None and not t.future.done():
+                t.future.set_result(t.result)
+
     def _pump_replication(self) -> None:
         """Drive the engine's replication endpoint (no-op when absent):
         a leader ships the window's now-durable frames, a follower
-        applies whatever the stream delivered."""
+        applies whatever the stream delivered. On a quorum leader, then
+        release every held window whose commit watermark the quorum
+        ack has cleared (in window order — acks are monotone, so a
+        cleared later window implies every earlier one)."""
         rep = getattr(self.tree, "replication", None)
         if rep is not None:
             rep.pump()
+        if self._unacked and isinstance(rep, _RepLeader):
+            q = rep.quorum_seqno()
+            while self._unacked and self._unacked[0][0] <= q:
+                _, held = self._unacked.pop(0)
+                self._reply(held)
+                self.counters["quorum_releases"] += len(held)
 
     def _serve_per_request(self, batch: List[Ticket]) -> None:
         """Baseline dispatch: one classic driver call per request, in
@@ -374,9 +464,16 @@ class Server:
         """Serve everything pending, then retire the engine's whole
         maintenance backlog (the read-equivalence barrier — after this,
         the tree answers exactly as a sequential per-op engine fed the
-        same stream)."""
+        same stream). Held quorum windows get a bounded release
+        attempt — acks can only arrive if the followers are being
+        pumped elsewhere, so an unreachable quorum leaves them held
+        (and counted in stats) instead of hanging the barrier."""
         while self._pending:
             self.pump(force=True)
+        for _ in range(64):
+            if not self._unacked:
+                break
+            self._pump_replication()
         self.tree.drain()
 
     def warm(self, full: bool = True) -> None:
@@ -401,7 +498,11 @@ class Server:
         ``replayed_records``, so recovery stall time is first-class
         telemetry. With replication attached, the ``replication`` block
         carries the endpoint's stats — on a leader that includes
-        ``follower_lag_records`` / ``follower_lag_bytes``."""
+        ``follower_lag_records`` / ``follower_lag_bytes``. ``role`` is
+        live (it flips with auto-promotion / fencing, §15), and the
+        quorum hold queue is visible as ``unacked_windows`` /
+        ``unacked_writes``."""
+        self._sync_role()
         overall: List[float] = []
         clients = {}
         for c, lat in sorted(self._lat.items()):
@@ -417,7 +518,11 @@ class Server:
             "governor": {"steps": self.governor.steps_run,
                          "idle_steps": self.governor.idle_steps_run,
                          "snapshots": self.governor.snapshots_run,
+                         "prunes": self.governor.prunes_run,
+                         "pruned_segments": self.governor.pruned_segments,
                          "credits": self.governor.credits},
+            "unacked_windows": len(self._unacked),
+            "unacked_writes": sum(len(h) for _, h in self._unacked),
             "window": {"wait_s": self.window.wait_s,
                        "max_ops": self.window.max_ops},
             "engine": {k: int(v) for k, v in self.tree.stats.items()},

@@ -397,8 +397,10 @@ def test_should_snapshot_threshold(tmp_path):
     st = dur.stats()
     assert st["bytes_since_snapshot"] >= 256
     assert st["wal_records"] == st["wal_syncs"] > 0
-    assert set(st) == {"wal_bytes", "wal_records", "wal_syncs", "replica",
-                       "snapshots", "snapshot_ms_last",
+    assert set(st) == {"wal_bytes", "wal_active_bytes", "wal_segments",
+                       "wal_rolls", "wal_pruned_bytes",
+                       "wal_pruned_segments", "wal_records", "wal_syncs",
+                       "replica", "snapshots", "snapshot_ms_last",
                        "bytes_since_snapshot"}
     dur.close()
 

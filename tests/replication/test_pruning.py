@@ -1,0 +1,186 @@
+"""WAL pruning × snapshot GC interplay (DESIGN.md §15, the prune-race
+fault cell).
+
+The claims under test:
+
+  * **floor safety** — `Leader.prune` truncates sealed segments only at
+    or below min(newest snapshot watermark, every attached follower's
+    ack — dead handles included). A straggling (even partitioned)
+    follower therefore *cannot* lose the tail it still needs: its next
+    frames are always readable from the retained chain.
+  * **snapshot+tail bootstrap** — after pruning, `bootstrap` still
+    produces a correct follower (the early segments are gone, but the
+    snapshot covers exactly what was pruned: prune never passes the
+    snapshot watermark).
+  * **prune race** — a cursor that *does* fall below the floor (only
+    possible for a handle attached after pruning already ran) is
+    detected by the tailer's ``pruned_gap`` and flagged
+    ``needs_bootstrap`` instead of shipping a gapped stream.
+  * the **property**: under a randomized interleaving of writes, rolls,
+    partial follower pumping, snapshots, and prunes, the retained chain
+    always serves every attached follower's next frame and stays
+    seqno-consecutive — on both drivers × both backends.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repl_harness import (BACKENDS, DRIVERS, apply_ops,
+                          assert_same_answers, make_engine, probe_answers,
+                          small_params, write_stream)
+
+from repro.engine import replication as R
+from repro.engine import wal as WAL
+
+
+def make_segmented_leader(tmp_path, driver="single", backend="jnp",
+                          segment_bytes=256):
+    """A durable leader whose WAL rolls aggressively (tiny segments —
+    every couple of records seals a file, so pruning has prey)."""
+    p = small_params(backend)
+    dur = WAL.Durability(tmp_path / "leader", snapshot_every_bytes=1 << 30,
+                         segment_bytes=segment_bytes)
+    drv = make_engine(driver, p, durability=dur)
+    return drv, R.Leader(drv)
+
+
+def chain_first_seqno(directory) -> int:
+    """Seqno of the first record in the retained chain."""
+    recs, _ = WAL.read_wal_chain(directory)
+    return recs[0].seqno if recs else -1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_prune_floors_at_lagging_follower_ack(tmp_path, driver, backend):
+    """A pre-snapshot-attached follower lags mid-stream; snapshotting
+    at the tip must NOT let prune delete the segments between the
+    follower's ack and the snapshot watermark — the follower still
+    converges bitwise from the retained chain."""
+    drv, leader = make_segmented_leader(tmp_path, driver, backend)
+    ops = write_stream(n_ops=16)
+    fol = leader.add_follower(tmp_path / "fol")
+    apply_ops(drv, ops, upto=6)
+    for _ in range(3):                  # follower acks the early prefix
+        leader.pump()
+        fol.pump()
+    leader.pump()
+    acked = leader.handles[0].acked_seqno
+    assert acked >= 1
+    apply_ops(drv, ops[6:])             # the leader runs far ahead...
+    drv.snapshot()                      # ...and snapshots at the tip
+    assert drv.durability.prune_floor() > acked
+    leader.prune()
+    # floor safety: everything past the follower's ack is retained
+    assert chain_first_seqno(tmp_path / "leader") <= acked + 1
+    frames = WAL.chain_frames(tmp_path / "leader", acked + 1)
+    seqs = [WAL.check_frame(f).seqno for f in frames]
+    assert seqs == list(range(acked + 1, seqs[-1] + 1))
+    R.converge(leader, fol)
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+    # once the follower has acked everything, the floor lifts and the
+    # pre-watermark segments actually go
+    pruned = leader.prune()
+    assert pruned >= 1, "full ack + snapshot must release segments"
+    assert drv.durability.stats()["wal_pruned_bytes"] > 0
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_bootstrap_after_prune_is_snapshot_plus_tail(tmp_path, driver,
+                                                     backend):
+    """With no followers holding the floor down, prune cuts to the
+    snapshot watermark; a *new* follower bootstrap then rides the
+    snapshot + retained tail and still answers bitwise."""
+    drv, leader = make_segmented_leader(tmp_path, driver, backend)
+    ops = write_stream(n_ops=16)
+    apply_ops(drv, ops, upto=10)
+    drv.snapshot()
+    apply_ops(drv, ops[10:])
+    pruned = leader.prune()
+    assert pruned >= 1, "tiny segments + mid-stream snapshot must prune"
+    assert chain_first_seqno(tmp_path / "leader") > 0, \
+        "genesis segments must be gone"
+    fol = leader.add_follower(tmp_path / "fol")
+    R.converge(leader, fol)
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+    prom = fol.promote()
+    assert_same_answers(probe_answers(prom), probe_answers(drv))
+
+
+def test_prune_without_snapshot_is_inert(tmp_path):
+    """No snapshot -> floor -1 -> nothing may be deleted, however many
+    sealed segments exist."""
+    drv, leader = make_segmented_leader(tmp_path)
+    apply_ops(drv, write_stream(n_ops=12))
+    assert drv.durability.stats()["wal_segments"] >= 2
+    assert leader.prune() == 0
+    assert drv.durability.stats()["wal_pruned_bytes"] == 0
+    assert chain_first_seqno(tmp_path / "leader") == 0
+
+
+def test_stale_cursor_after_prune_flags_bootstrap(tmp_path):
+    """The prune race: a handle attached at a genesis cursor AFTER
+    pruning already ran hits ``pruned_gap`` and is flagged
+    ``needs_bootstrap`` (dead, never shipped a gapped stream); the
+    correct path — a fresh `add_follower` bootstrap — converges."""
+    drv, leader = make_segmented_leader(tmp_path)
+    ops = write_stream(n_ops=14)
+    apply_ops(drv, ops, upto=10)
+    drv.snapshot()
+    apply_ops(drv, ops[10:])
+    assert leader.prune() >= 1
+    link = R.QueueLink()
+    h = leader.attach(link.leader, R.Cursor(len(WAL.MAGIC), 1, 0))
+    leader.ship()
+    assert h.needs_bootstrap and h.dead
+    assert leader.counters["pruned_cursors"] >= 1
+    assert not link.frames, "a gapped stream must never be shipped"
+    leader.detach(h)                    # the flagged handle's only exit
+    fol = leader.add_follower(tmp_path / "fol")
+    R.converge(leader, fol)
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_prune_race_property(tmp_path, driver, backend):
+    """Randomized interleaving of writes / partial pumping / snapshots
+    / prunes: after every prune, the retained chain (a) starts at or
+    below the attached follower's next frame, (b) is seqno-consecutive
+    to the tip, and (c) the follower ends bitwise-converged."""
+    rng = random.Random(hash((driver, backend)) & 0xFFFF)
+    drv, leader = make_segmented_leader(tmp_path, driver, backend)
+    ops = write_stream(n_ops=20)
+    fol = leader.add_follower(tmp_path / "fol")
+    i = 0
+    while i < len(ops):
+        step = rng.randint(1, 3)
+        apply_ops(drv, ops[i:i + step])
+        i += step
+        if rng.random() < 0.6:          # partial pumping: follower lags
+            leader.pump()
+            if rng.random() < 0.7:
+                fol.pump()
+            leader.pump()
+        if rng.random() < 0.4:
+            drv.snapshot()
+        leader.prune()
+        acked = leader.handles[0].acked_seqno
+        first = chain_first_seqno(tmp_path / "leader")
+        assert first <= acked + 1, \
+            f"pruned past the follower's ack ({first} > {acked + 1})"
+        recs, _ = WAL.read_wal_chain(tmp_path / "leader")
+        seqs = [r.seqno for r in recs]
+        if seqs:
+            assert seqs == list(range(seqs[0], seqs[0] + len(seqs))), \
+                "retained chain must stay seqno-consecutive"
+        else:
+            # an empty chain is legal exactly when nothing is owed:
+            # the follower acked the tip and the snapshot covers it
+            assert acked >= drv.durability.writer.last_seqno
+    R.converge(leader, fol)
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+    st = drv.durability.stats()
+    assert st["wal_rolls"] >= 2, "the property run must actually roll"

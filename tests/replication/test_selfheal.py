@@ -1,0 +1,253 @@
+"""Self-healing fault cells (DESIGN.md §15, the ISSUE 10 headline).
+
+Four new fault cells over the PR-9 suite, each answer-exact across
+both drivers × both backends:
+
+  * **lease expiry** — the leader goes silent; the deterministic
+    successor (highest acked watermark, lowest follower id) promotes
+    *automatically* on its expired lease, answers bitwise at its acked
+    prefix, and the losing follower stands down awaiting the new
+    stream;
+  * **live deposed leader** — the old leader is partitioned, not dead:
+    it keeps writing until the promoted successor's bumped-epoch fence
+    ack reaches it, at which point it fences itself (writes raise,
+    ship is inert) and can rejoin as a bootstrapped follower;
+  * **quorum loss** — with ``ack_mode="quorum"`` the commit watermark
+    collapses to -1 the moment fewer than k followers are live, and
+    every seqno at or below any previously returned watermark is
+    already durable on a promotable follower (RPO 0);
+  * **bounded reorder buffer** — a pathological reorder stream
+    overflows the pending buffer; the shed suffix costs one immediate
+    gap-signalled retransmit round, never divergence.
+
+Leases run on an injected fake clock, so every cell is deterministic —
+no sleeps, no wall-clock flake.
+"""
+import numpy as np
+import pytest
+
+from repl_harness import (BACKENDS, DRIVERS, acked_prefix_answers,
+                          apply_ops, assert_same_answers, make_engine,
+                          probe_answers, small_params, write_stream)
+
+from repro.engine import replication as R
+from repro.engine import wal as WAL
+
+
+class FakeClock:
+    """Injected monotonic time: leases expire when the test says so."""
+
+    def __init__(self, t: float = 100.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_lease_cluster(tmp_path, driver, backend, n_followers=2,
+                       lease_s=2.0, ack_mode="leader", quorum=1,
+                       n_prefix=8, ops=None):
+    """A leader with lease heartbeats on a fake clock plus
+    ``n_followers`` auto-promote followers, fully converged and acked
+    on ``ops[:n_prefix]`` (heartbeats delivered, leases armed)."""
+    clock = FakeClock()
+    p = small_params(backend)
+    dur = WAL.Durability(tmp_path / "leader", snapshot_every_bytes=1 << 30)
+    drv = make_engine(driver, p, durability=dur)
+    leader = R.Leader(drv, ack_mode=ack_mode, quorum=quorum,
+                      lease_s=lease_s, clock=clock)
+    if ops is None:
+        ops = write_stream(n_ops=12)
+    apply_ops(drv, ops, upto=n_prefix)
+    fols = [leader.add_follower(tmp_path / f"f{i}", auto_promote=True,
+                                clock=clock)
+            for i in range(n_followers)]
+    for _ in range(3):
+        leader.pump()
+        for f in fols:
+            f.pump()
+    leader.pump()                       # drain the final acks
+    for f in fols:
+        assert f.lease_deadline is not None, "lease must be armed"
+        assert f.fid is not None
+    return clock, drv, leader, fols, ops
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_lease_expiry_auto_promotes_successor(tmp_path, driver, backend):
+    """The leader goes silent past the lease: exactly the deterministic
+    successor promotes itself, answer-exact at its acked prefix; the
+    loser counts the expiry and stands down; the cluster re-forms
+    around the new leader and keeps converging bitwise."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, driver, backend)
+    # partition: the leader's pump never runs again; the clock runs on
+    clock.advance(3.0 * leader.lease_s)
+    for f in fols:
+        f.pump()
+    # both acked the same watermark -> lowest fid wins
+    assert fols[0].new_leader is not None
+    assert fols[1].new_leader is None and not fols[1].promoted
+    assert fols[0].counters["auto_promotions"] == 1
+    for f in fols:
+        assert f.counters["lease_expiries"] == 1
+    new_lead = fols[0].new_leader
+    want, j = acked_prefix_answers(fols[0], driver, backend, ops=ops)
+    assert j == len(ops[:8])
+    assert_same_answers(probe_answers(new_lead.drv), want)
+    # the losing follower rejoins the new leader's stream and converges
+    link = R.QueueLink()
+    new_lead.attach(link.leader,
+                    R.Cursor(0, fols[1].last_seqno + 1,
+                             int(new_lead.drv.durability.writer.epoch)))
+    fols[1].reattach(link.follower)
+    apply_ops(new_lead.drv, ops[8:])
+    R.converge(new_lead, fols[1])
+    assert_same_answers(probe_answers(fols[1].drv),
+                        probe_answers(new_lead.drv))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_live_deposed_leader_fences_and_rejoins(tmp_path, driver, backend):
+    """The partitioned old leader is still alive and writing: the
+    successor's fence ack (bumped epoch on the adopted end) deposes it
+    — its engine fences (writes raise), ship goes inert — and its
+    replacement data path is a fresh bootstrap from the new leader,
+    bitwise equal to the new leader's answers."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, driver, backend, n_followers=1)
+    clock.advance(3.0 * leader.lease_s)
+    fols[0].pump()
+    new_lead = fols[0].new_leader
+    assert new_lead is not None
+    assert new_lead.fence_ends, "promote(lead=True) must adopt the old end"
+    # the deposed leader doesn't know yet: it takes one more write...
+    apply_ops(drv, ops[8:9])
+    leader.pump()                       # ships into the fence
+    new_lead.pump()                     # fence answers at epoch 1
+    leader.pump()                       # ack epoch > mine -> fence self
+    assert leader.deposed
+    assert drv.fenced
+    assert new_lead.counters["fence_acks"] >= 1
+    with pytest.raises(RuntimeError, match="fenced"):
+        k = np.array([7], np.int32)
+        drv.insert(k, k)
+    assert leader.ship() == 0
+    # the unacked post-partition write died with the old epoch: the new
+    # leader answers exactly the acked prefix
+    want, j = acked_prefix_answers(fols[0], driver, backend, ops=ops)
+    assert j == 8
+    assert_same_answers(probe_answers(new_lead.drv), want)
+    # rejoin: the deposed node re-enters as a bootstrapped follower of
+    # the new leader and serves reads bitwise-equal to it
+    rejoined = new_lead.add_follower(tmp_path / "rejoined")
+    apply_ops(new_lead.drv, ops[9:])
+    R.converge(new_lead, rejoined)
+    assert_same_answers(probe_answers(rejoined.drv),
+                        probe_answers(new_lead.drv))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_quorum_loss_blocks_commit_watermark(tmp_path, driver, backend):
+    """``ack_mode="quorum"``: the commit watermark is the k-th highest
+    live ack; losing a follower below quorum collapses it to -1 (no
+    new client acks), and everything at or below the last good
+    watermark is already durable on a promotable follower — RPO 0."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, driver, backend, ack_mode="quorum", quorum=2)
+    q = leader.quorum_seqno()
+    assert q == drv.durability.writer.last_seqno, \
+        "both followers acked: the quorum watermark is the durable tip"
+    # sever one follower's transport: the next ship marks it dead
+    leader.handles[1].end.close()
+    apply_ops(drv, ops[8:])
+    leader.pump()
+    assert leader.handles[1].dead
+    assert leader.quorum_seqno() == -1, "below quorum: nothing commits"
+    # zero RPO: every record the old watermark ever covered is durable
+    # on the surviving follower, which promotes answer-exact there
+    fols[0].pump()
+    assert fols[0].last_seqno >= q
+    prom = fols[0].promote()
+    want, _ = acked_prefix_answers(fols[0], driver, backend, ops=ops)
+    assert_same_answers(probe_answers(prom), want)
+
+
+def test_slow_apply_does_not_spuriously_promote(tmp_path):
+    """The anti-flap rule: a pump that dwells in `ingest` longer than
+    the lease (a cold follower compiling apply shapes) must NOT promote
+    when the live leader's heartbeats kept arriving during the dwell —
+    the detector drains control traffic again after apply, so only a
+    leader that actually went silent expires the lease."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, "single", "jnp", n_followers=1)
+    fol = fols[0]
+
+    class SlowIngestEnd:
+        """The follower's end, with ingest dwell: receiving frames
+        burns a whole lease of clock time, during which the (live)
+        leader lands one more heartbeat in the inbox."""
+
+        def __init__(self, end):
+            self.end = end
+
+        def recv_frames(self):
+            frames = self.end.recv_frames()
+            clock.advance(2.0 * leader.lease_s)   # the slow apply...
+            leader._last_hb = None                # cadence due again
+            leader._heartbeat()                   # ...heartbeat lands
+            return frames
+
+        def __getattr__(self, name):
+            return getattr(self.end, name)
+
+    fol.end = SlowIngestEnd(fol.end)
+    apply_ops(drv, ops[8:])
+    leader.pump()
+    fol.pump()                          # dwell > lease inside this pump
+    assert fol.new_leader is None and not fol.promoted, \
+        "a heartbeating leader must never be declared dead"
+    assert fol.counters["lease_expiries"] == 0
+    fol.end = fol.end.end               # unwrap; converge normally
+    R.converge(leader, fol)
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
+
+
+def test_pending_overflow_pathological_reorder(tmp_path):
+    """A worst-case reorder stream (first frame dropped, the rest
+    delivered highest-first, buffer capped far below the stream) sheds
+    frames with ``pending_overflow`` and an *immediate* gap ack; the
+    leader's retransmit heals everything to bitwise convergence."""
+    p = small_params("jnp")
+    dur = WAL.Durability(tmp_path / "leader", snapshot_every_bytes=1 << 30)
+    drv = make_engine("single", p, durability=dur)
+    leader = R.Leader(drv)
+    ops = write_stream(n_ops=12)
+    fol = leader.add_follower(tmp_path / "fol", pending_max=3)
+    apply_ops(drv, ops)
+    leader.ship()
+    wire = fol.link.frames
+    assert len(wire) >= 8
+    dropped = wire.popleft()            # the chain head never arrives
+    frames = sorted(wire, key=lambda f: WAL.check_frame(f).seqno,
+                    reverse=True)
+    wire.clear()
+    wire.extend(frames)
+    fol.pump()
+    st = fol.stats()
+    assert st["pending_overflow"] >= 1, "cap must shed the reorder burst"
+    assert st["reorder_buffered"] <= 3, "buffer must stay bounded"
+    assert st["gap_signals"] >= 1, "overflow must gap-ack immediately"
+    assert fol.counters["applied_records"] == 0, \
+        "nothing applies before the chain head arrives"
+    del dropped
+    R.converge(leader, fol)
+    assert leader.stats()["per_follower"][0]["retransmits"] >= 1
+    assert fol.stats()["reorder_buffered"] == 0
+    assert_same_answers(probe_answers(fol.drv), probe_answers(drv))

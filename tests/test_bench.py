@@ -342,6 +342,7 @@ def test_schema_v8_replication_block(bench_doc):
     assert SCH.validate(bad) == []
 
     good = json.loads(json.dumps(doc))
+    good["schema_version"] = 8          # the pre-self-healing ledger
     good["metrics"]["replication"] = {
         "followers": 2, "shipped_records": 104, "shipped_bytes": 54_000,
         "lag_records_peak": 26, "lag_records_final": 0,
@@ -356,8 +357,46 @@ def test_schema_v8_replication_block(bench_doc):
     good["metrics"]["replication"]["lag_records_final"] = 0
     good["metrics"]["replication"]["promoted_exact"] = "yes"
     assert any("promoted_exact" in e for e in SCH.validate(good))
+    del good["metrics"]["replication"]["promoted_exact"]
     del good["metrics"]["replication"]["failover_ms"]
     assert any("failover_ms" in e for e in SCH.validate(good))
+
+
+def test_schema_v9_selfheal_keys(bench_doc):
+    """SCHEMA_VERSION 9: the replication block additionally carries the
+    self-healing ledger — failover_auto_ms / rpo_records /
+    wal_pruned_bytes / lease_expiries — with a lease expiry required
+    (the scenario must actually run the automatic-failover act). A v8
+    document without them stays valid (compat window)."""
+    _, doc = bench_doc
+    good = json.loads(json.dumps(doc))
+    rep = {
+        "followers": 2, "shipped_records": 104, "shipped_bytes": 54_000,
+        "lag_records_peak": 26, "lag_records_final": 0,
+        "lag_bytes_final": 0, "apply_ops_per_s": 85.4,
+        "failover_ms": 941.0, "promoted_exact": True,
+        "failover_auto_ms": 211.5, "rpo_records": 0,
+        "wal_pruned_bytes": 9520, "lease_expiries": 1}
+    good["metrics"]["replication"] = rep
+    assert SCH.validate(good) == []
+    for key in ("failover_auto_ms", "rpo_records", "wal_pruned_bytes",
+                "lease_expiries"):
+        bad = json.loads(json.dumps(good))
+        del bad["metrics"]["replication"][key]
+        assert any(key in e for e in SCH.validate(bad)), key
+    bad = json.loads(json.dumps(good))
+    bad["metrics"]["replication"]["rpo_records"] = -1
+    assert any("rpo_records" in e for e in SCH.validate(bad))
+    bad = json.loads(json.dumps(good))
+    bad["metrics"]["replication"]["lease_expiries"] = 0
+    assert any("lease_expiries" in e for e in SCH.validate(bad))
+    # the same block labeled v8 predates the self-healing keys
+    v8 = json.loads(json.dumps(good))
+    v8["schema_version"] = 8
+    for key in ("failover_auto_ms", "rpo_records", "wal_pruned_bytes",
+                "lease_expiries"):
+        del v8["metrics"]["replication"][key]
+    assert SCH.validate(v8) == []
 
 
 def test_sweep_durability_family():
