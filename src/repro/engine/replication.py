@@ -28,12 +28,18 @@ Self-healing (DESIGN.md §15) closes the failover loop:
 
   * **leases** — the leader stamps heartbeat control messages into the
     ship stream (`T_CTRL`, never a logged WAL record): its epoch,
-    durable watermark, the lease duration, and the ack roster. A
-    follower holds a lease on a *monotonic clock* from each heartbeat;
-    when the lease expires, the deterministic successor rule — highest
-    applied watermark, lowest follower id on ties, evaluated over the
-    last roster merged with the follower's own watermark — elects
-    exactly one follower, which `promote(lead=True)`s automatically.
+    durable watermark, the lease duration, ack mode/quorum, and the
+    ack roster. A follower holds a lease on a *monotonic clock* from
+    each heartbeat; when the lease expires, the deterministic
+    successor rule — highest *rostered* ack, lowest follower id on
+    ties, evaluated over the last roster ONLY (never a follower's own
+    live watermark, which would differ per follower and split-brain) —
+    elects exactly one follower among those sharing a roster, which
+    `promote(lead=True)`s automatically. Losers re-arm a *fallback*
+    lease instead of disarming: each further expiry with no heartbeat
+    peels one rank off the succession order, so if the designated
+    successor died in the same failure the next-ranked follower
+    eventually promotes instead of leaving the cluster leaderless.
   * **epoch fencing** — acks carry the acker's WAL epoch. A promoted
     successor adopts its old transport end as a *fence end*: any frame
     the deposed leader still ships is answered with an ack at the
@@ -44,15 +50,24 @@ Self-healing (DESIGN.md §15) closes the failover loop:
     `bootstrap` from the new leader (the engines' write guard makes a
     partitioned deposed leader *reject* writes instead of diverging).
   * **quorum acks** — ``Leader(ack_mode="quorum", quorum=k)`` exposes
-    `quorum_seqno()`, the k-th highest live follower ack; the serving
-    layer holds client write acks until the commit watermark clears it
-    (zero RPO: the successor rule picks the highest applied watermark,
-    which is ≥ every quorum-released write).
+    `quorum_seqno()`, the k-th highest *advertised* live follower ack
+    — the ack values the last heartbeat roster carried (an eager
+    heartbeat fires whenever newly drained acks would advance the
+    quorum, so advertising costs one control message, not a cadence
+    wait). The serving layer holds client write acks until the commit
+    watermark clears it. Gating on advertised acks is what makes the
+    roster-only successor rule zero-RPO: a released write is covered
+    by k roster entries, the roster maximum is ≥ the quorum watermark,
+    and the elected successor holds everything its own roster entry
+    covers.
   * **watermark-bounded pruning** — `Leader.prune()` truncates sealed
     WAL segments below min(newest snapshot watermark, minimum ack over
-    *all* attached followers, dead or alive), so `bootstrap` of any
-    attached follower always finds its tail; late joiners bootstrap
-    from snapshot + retained tail.
+    attached followers — including dead ones within ``dead_grace_s``
+    of their failure), so `bootstrap` of any attached follower always
+    finds its tail; late joiners bootstrap from snapshot + retained
+    tail. A handle dead past the grace is auto-detached so a
+    permanently gone follower cannot pin disk growth forever — if it
+    ever returns, the pruned-cursor check forces a fresh bootstrap.
 
 Consistency model: read-your-writes on the leader (the driver's
 log-before-ack group commit is untouched — replication ships only
@@ -68,9 +83,13 @@ failover under leader SIGKILL, torn stream tails, duplicated /
 reordered / dropped delivery, mid-RETUNE cuts, lease expiry, live
 deposed-leader partitions, quorum loss, and prune races, on both
 drivers × both backends. Leases are cooperative failure detection, not
-consensus: the successor rule is deterministic given a roster, and
-epoch fencing converges a transient double-leader, but clients of a
-deposed leader can read stale data until its next ack round-trip.
+consensus: the successor rule is deterministic given a roster — all
+followers holding the same roster elect exactly one — and epoch
+fencing converges a deposed predecessor, but a *partially delivered*
+roster update (some followers saw the newest heartbeat, some did not)
+can still elect divergent winners, and clients of a deposed leader can
+read stale data until its next ack round-trip. Closing those holes
+needs real consensus, which this layer deliberately is not.
 """
 from __future__ import annotations
 
@@ -402,11 +421,17 @@ class _FollowerHandle:
         self.base_offset = cursor.offset
         self.acked_seqno = (cursor.next_seqno - 1
                             if cursor.next_seqno is not None else -1)
+        # the ack value the last heartbeat roster carried for this
+        # follower (init: the bootstrap watermark, durable there by
+        # construction) — quorum commits gate on this, never on a
+        # fresher ack the successor rule has not seen
+        self.advertised_seqno = self.acked_seqno
         self.acked_bytes = 0
         self.sent_records = 0
         self.sent_bytes = 0
         self.retransmits = 0
         self.dead = False
+        self.dead_since: Optional[float] = None
         self.needs_bootstrap = False    # its cursor fell behind a prune
 
 
@@ -422,9 +447,13 @@ class Leader:
     follower applies can ever be un-acked on the leader.
 
     ``ack_mode="quorum"`` with ``quorum=k`` does not change shipping —
-    it exposes `quorum_seqno()` (the k-th highest live follower ack,
-    -1 on quorum loss) for the serving layer to gate client write acks
-    on (DESIGN.md §15).
+    it exposes `quorum_seqno()` (the k-th highest *advertised* live
+    follower ack, -1 on quorum loss) for the serving layer to gate
+    client write acks on (DESIGN.md §15). Advertised = carried by the
+    last heartbeat roster, so the successor rule's input always covers
+    every released write; `pump` heartbeats eagerly when fresh acks
+    would advance the quorum, keeping the added ack latency to one
+    control message rather than a heartbeat cadence.
 
     ``lease_s``/``heartbeat_s`` drive the failure detector: every
     `pump` at most one heartbeat control message per `heartbeat_s`
@@ -438,6 +467,7 @@ class Leader:
 
     def __init__(self, drv, *, ack_mode: str = "leader", quorum: int = 1,
                  lease_s: float = 2.0, heartbeat_s: Optional[float] = None,
+                 dead_grace_s: Optional[float] = None,
                  clock=time.monotonic):
         if drv.durability is None:
             raise ValueError("replication requires a durable leader: "
@@ -451,6 +481,11 @@ class Leader:
         self.lease_s = float(lease_s)
         self.heartbeat_s = (float(heartbeat_s) if heartbeat_s is not None
                             else self.lease_s / 4.0)
+        # how long a dead handle's frozen ack may keep pinning the
+        # prune floor before `prune` auto-detaches it (a permanently
+        # gone follower must not make WAL growth unbounded again)
+        self.dead_grace_s = (float(dead_grace_s) if dead_grace_s is not None
+                             else 8.0 * self.lease_s)
         self.clock = clock
         self.handles: List[_FollowerHandle] = []
         self.fence_ends: List[Any] = []
@@ -459,7 +494,8 @@ class Leader:
         self._last_hb: Optional[float] = None
         self.counters = collections.Counter(
             heartbeats=0, detaches=0, reattaches=0, fence_acks=0,
-            demotions=0, prune_calls=0, pruned_segments=0, pruned_cursors=0)
+            demotions=0, prune_calls=0, pruned_segments=0, pruned_cursors=0,
+            expired_handles=0)
         drv.replication = self
 
     # -- wiring -------------------------------------------------------------
@@ -545,6 +581,7 @@ class Leader:
         if end is not None:
             handle.end = end
         handle.dead = False
+        handle.dead_since = None
         handle.tailer.rewind_to(handle.acked_seqno + 1)
         if handle not in self.handles:
             self.handles.append(handle)
@@ -562,24 +599,34 @@ class Leader:
     def _mark_dead(self, h: _FollowerHandle) -> None:
         if not h.dead:
             h.dead = True
+            h.dead_since = self.clock()
             self.counters["detaches"] += 1
 
-    def _heartbeat(self) -> None:
-        """Send at most one lease heartbeat per `heartbeat_s` to every
-        live follower: epoch, durable watermark, lease duration, the
-        ack roster (the successor rule's input), and the receiver's own
-        follower id."""
+    def _heartbeat(self, force: bool = False) -> None:
+        """Send at most one lease heartbeat per `heartbeat_s` (always,
+        when `force`d) to every live follower: epoch, durable
+        watermark, lease duration, ack mode + quorum (so a promoted
+        successor inherits them), the ack roster (the successor rule's
+        input), and the receiver's own follower id. The roster values
+        sent become the handles' ``advertised_seqno`` — the quorum
+        commit watermark only ever advances over advertised acks."""
         if self.deposed or not self.handles:
             return
         now = self.clock()
-        if self._last_hb is not None and now - self._last_hb < self.heartbeat_s:
+        if (not force and self._last_hb is not None
+                and now - self._last_hb < self.heartbeat_s):
             return
         self._last_hb = now
         w = self.drv.durability.writer
+        roster = []
+        for h in self.handles:
+            if h.dead:
+                continue
+            h.advertised_seqno = int(h.acked_seqno)
+            roster.append([h.fid, h.advertised_seqno])
         base = {"epoch": int(w.epoch), "last_seqno": int(w.last_seqno),
-                "lease_s": self.lease_s,
-                "roster": [[h.fid, int(h.acked_seqno)]
-                           for h in self.handles if not h.dead]}
+                "lease_s": self.lease_s, "ack_mode": self.ack_mode,
+                "quorum": int(self.quorum), "roster": roster}
         for h in self.handles:
             if h.dead:
                 continue
@@ -589,18 +636,27 @@ class Leader:
                 self._mark_dead(h)
         self.counters["heartbeats"] += 1
 
-    def quorum_seqno(self) -> int:
-        """The replication commit watermark: in quorum mode, the k-th
-        highest live follower ack (-1 while fewer than k followers are
-        live — quorum loss, nothing new may be client-acked); in
-        leader mode, simply the leader's durable watermark."""
-        if self.ack_mode != "quorum":
-            return int(self.drv.durability.writer.last_seqno)
-        acks = sorted((h.acked_seqno for h in self.handles if not h.dead),
-                      reverse=True)
+    def _kth_live_ack(self, advertised: bool) -> int:
+        """The k-th highest live follower ack (-1 below quorum), over
+        advertised or live ack values."""
+        acks = sorted((h.advertised_seqno if advertised else h.acked_seqno
+                       for h in self.handles if not h.dead), reverse=True)
         if len(acks) < self.quorum:
             return -1
         return int(acks[self.quorum - 1])
+
+    def quorum_seqno(self) -> int:
+        """The replication commit watermark: in quorum mode, the k-th
+        highest *advertised* live follower ack (-1 while fewer than k
+        followers are live — quorum loss, nothing new may be
+        client-acked); in leader mode, simply the leader's durable
+        watermark. Advertised (not live) acks keep RPO 0 under the
+        roster-only successor rule: a write is only client-acked once
+        the roster carrying its covering acks has been broadcast, so
+        whichever follower the roster elects holds the write."""
+        if self.ack_mode != "quorum":
+            return int(self.drv.durability.writer.last_seqno)
+        return self._kth_live_ack(advertised=True)
 
     # -- shipping -----------------------------------------------------------
     def ship(self, max_records: Optional[int] = None) -> int:
@@ -686,9 +742,21 @@ class Leader:
     def prune(self) -> int:
         """Watermark-bounded WAL pruning (DESIGN.md §15): truncate
         sealed segments at or below min(newest snapshot watermark,
-        minimum acked seqno over *all* attached handles — dead ones
-        included, they may `reattach`). No snapshot or a straggling
-        follower ⇒ nothing is pruned. Returns segments deleted."""
+        minimum acked seqno over attached handles — dead ones included
+        while they are within ``dead_grace_s`` of their failure, they
+        may `reattach`). A handle dead *past* the grace is auto-
+        detached first (counted ``expired_handles``): a permanently
+        gone follower must not pin the floor — and disk growth —
+        forever. If it ever comes back, its rewound cursor trips the
+        pruned-gap check and it re-enters via a fresh bootstrap. No
+        snapshot or a straggling live follower ⇒ nothing is pruned.
+        Returns segments deleted."""
+        now = self.clock()
+        for h in list(self.handles):
+            if (h.dead and h.dead_since is not None
+                    and now - h.dead_since > self.dead_grace_s):
+                self.detach(h)
+                self.counters["expired_handles"] += 1
         dur = self.drv.durability
         floor = dur.prune_floor()
         for h in self.handles:
@@ -703,9 +771,17 @@ class Leader:
     def pump(self) -> int:
         """One replication turn: lease heartbeat + ship new frames +
         drain acks + fence replies (the hook `repro.serve.Server.pump`
-        drives between windows)."""
+        drives between windows). In quorum mode, acks just drained
+        that would advance the commit watermark trigger an *eager*
+        heartbeat — the quorum only commits over advertised acks, so
+        advertising immediately keeps quorum ack latency at one pump
+        instead of a heartbeat cadence."""
         self._heartbeat()
         n = self.ship()
+        if (self.ack_mode == "quorum" and not self.deposed
+                and self._kth_live_ack(advertised=False)
+                > self._kth_live_ack(advertised=True)):
+            self._heartbeat(force=True)
         self._pump_fences()
         return n
 
@@ -747,6 +823,7 @@ class Leader:
             lag_b = max(0, size - (h.base_offset + h.acked_bytes))
             per.append({"fid": int(h.fid),
                         "acked_seqno": int(h.acked_seqno),
+                        "advertised_seqno": int(h.advertised_seqno),
                         "lag_records": int(lag_r),
                         "lag_bytes": int(lag_b),
                         "sent_records": int(h.sent_records),
@@ -805,11 +882,15 @@ class Follower:
     With ``auto_promote=True`` the follower runs the failure detector:
     each heartbeat renews a lease of the advertised duration on the
     monotonic `clock`; when the lease expires, the successor rule —
-    highest applied watermark in the last roster (own entry replaced
-    by the live watermark), lowest follower id on ties — either
-    promotes *this* follower (``promote(lead=True)``, the new `Leader`
-    lands in ``new_leader`` and fences the old stream) or stands down
-    awaiting the designated successor's stream.
+    highest rostered ack, lowest follower id on ties, evaluated over
+    the last roster ONLY (a follower's live watermark differs per
+    follower, so mixing it in would let several caught-up followers
+    each elect themselves) — either promotes *this* follower
+    (``promote(lead=True)``, the new `Leader` lands in ``new_leader``
+    and fences the old stream) or stands down with a re-armed
+    *fallback* lease: every further expiry with no heartbeat peels one
+    rank off the succession order, so the next-ranked follower
+    eventually promotes if the designated successor died too.
 
     Reads (`lookup_many` / `range_many` / `aggregate_many` on ``drv``)
     are eventually consistent at the applied watermark. `promote` is
@@ -835,10 +916,14 @@ class Follower:
         self.lease_s: Optional[float] = None
         self.lease_deadline: Optional[float] = None
         self.leader_epoch = 0
+        self.leader_ack_mode = "leader"         # advertised by heartbeats:
+        self.leader_quorum = 1                  # survives auto-promotion
+        self._expiries_since_hb = 0
         self.counters = collections.Counter(
             applied_records=0, applied_bytes=0, duplicates=0, rejected=0,
             gap_signals=0, buffered_peak=0, pending_overflow=0,
-            heartbeats_seen=0, lease_expiries=0, auto_promotions=0)
+            heartbeats_seen=0, lease_expiries=0, auto_promotions=0,
+            standdowns=0)
 
     @property
     def last_seqno(self) -> int:
@@ -943,39 +1028,62 @@ class Follower:
             self.roster = [(int(f), int(a)) for f, a in hb.get("roster", [])]
             self.lease_s = float(hb["lease_s"])
             self.leader_epoch = int(hb.get("epoch", 0))
+            self.leader_ack_mode = str(hb.get("ack_mode",
+                                              self.leader_ack_mode))
+            self.leader_quorum = int(hb.get("quorum", self.leader_quorum))
         except (KeyError, TypeError, ValueError):
             return                      # malformed control traffic: drop
         self.lease_deadline = self.clock() + self.lease_s
+        self._expiries_since_hb = 0
         self.counters["heartbeats_seen"] += 1
 
-    def is_successor(self) -> bool:
-        """The deterministic successor rule: does this follower win —
-        highest applied watermark, lowest follower id on ties — over
-        the last roster (own entry replaced by the live watermark)?"""
+    def succession_rank(self) -> Optional[int]:
+        """This follower's position (0 = designated successor) in the
+        deterministic succession order: roster entries sorted by
+        highest rostered ack, lowest follower id on ties. Evaluated
+        over roster values ONLY — every follower holding the same
+        roster computes the same order, which is what makes the
+        election single-winner; a live applied watermark would differ
+        per follower and let several caught-up followers each elect
+        themselves (split-brain). None when this follower has no
+        roster entry (no heartbeat ever named it)."""
         if self.fid is None:
-            return False
-        me = (self.last_seqno, -self.fid)
-        best = me
-        for f, a in self.roster:
-            if f == self.fid:
-                continue
-            if (a, -f) > best:
-                best = (a, -f)
-        return best == me
+            return None
+        order = sorted(((a, -f) for f, a in self.roster), reverse=True)
+        mine = [a for f, a in self.roster if f == self.fid]
+        if not mine:
+            return None
+        return order.index((mine[0], -self.fid))
+
+    def is_successor(self) -> bool:
+        """Does the successor rule designate this follower (rank 0)?"""
+        return self.succession_rank() == 0
 
     def maybe_promote(self) -> Optional[Leader]:
         """The failure detector (a no-op unless ``auto_promote``): on
-        lease expiry, count it, and either promote this follower
-        (successor rule says it wins) — returning the new `Leader`,
-        also kept in ``new_leader`` — or disarm the lease and await the
-        designated successor's stream."""
+        lease expiry, count it, and either promote this follower —
+        returning the new `Leader`, also kept in ``new_leader`` — or
+        stand down behind a re-armed fallback lease. Each consecutive
+        expiry with no intervening heartbeat peels one rank off the
+        succession order: the designated successor (rank 0) promotes
+        on the first expiry, rank 1 on the second, and so on — so a
+        cluster whose designated successor died in the same failure
+        still converges on a leader instead of waiting for an operator
+        (at the price that the lower-ranked fallback may trail the
+        dead successor's watermark)."""
         if (not self.auto_promote or self.promoted
                 or self.lease_deadline is None
                 or self.clock() < self.lease_deadline):
             return None
-        self.lease_deadline = None
         self.counters["lease_expiries"] += 1
-        if not self.is_successor():
+        self._expiries_since_hb += 1
+        rank = self.succession_rank()
+        if rank is None or rank > self._expiries_since_hb - 1:
+            # stand down — but stay armed: if the winner's stream never
+            # arrives, the next expiry promotes the next rank
+            self.counters["standdowns"] += 1
+            self.lease_deadline = (None if rank is None
+                                   else self.clock() + (self.lease_s or 2.0))
             return None
         self.counters["auto_promotions"] += 1
         self.new_leader = self.promote(lead=True)
@@ -992,6 +1100,7 @@ class Follower:
                 pass
         self.end = end
         self.lease_deadline = None
+        self._expiries_since_hb = 0
 
     # -- failover exit ------------------------------------------------------
     def promote(self, lead: bool = False, fence: bool = True):
@@ -1006,10 +1115,14 @@ class Follower:
         ``promote()`` (the PR-9 form) closes the transport and returns
         the now-writable *engine*. ``promote(lead=True)`` instead
         returns a ready `Leader` wrapped around it — inheriting the
-        lease duration the old leader advertised — and (with `fence`)
-        adopts the old transport end as a fence end, so a deposed
-        leader that comes back from a partition is answered at the
-        bumped epoch and fences itself."""
+        lease duration AND the ack mode/quorum the old leader
+        advertised, so a quorum (zero-RPO) cluster stays a quorum
+        cluster across automatic failover (the fresh leader has no
+        followers yet, so its commit watermark is -1 and nothing is
+        client-acked until k followers re-attach — strictness, not
+        regression) — and (with `fence`) adopts the old transport end
+        as a fence end, so a deposed leader that comes back from a
+        partition is answered at the bumped epoch and fences itself."""
         self.pending.clear()
         old_end, self.end = self.end, None
         self.promoted = True
@@ -1023,6 +1136,8 @@ class Follower:
                     pass
             return drv
         ldr = Leader(drv,
+                     ack_mode=self.leader_ack_mode,
+                     quorum=self.leader_quorum,
                      lease_s=self.lease_s if self.lease_s else 2.0,
                      clock=self.clock)
         if old_end is not None:
@@ -1049,6 +1164,9 @@ class Follower:
             "auto_promote": bool(self.auto_promote),
             "lease_armed": self.lease_deadline is not None,
             "leader_epoch": int(self.leader_epoch),
+            "leader_ack_mode": self.leader_ack_mode,
+            "leader_quorum": int(self.leader_quorum),
+            "succession_rank": self.succession_rank(),
             **{k: int(v) for k, v in self.counters.items()},
         }
 

@@ -434,9 +434,20 @@ class WalTailer:
             # the cursor was parked at the head of a then-empty active:
             # it was replaced iff the file now opens at some seqno other
             # than the one the cursor is waiting for (that seqno was
-            # sealed into a segment underneath us)
-            return (first is not None and self.next_seqno is not None
-                    and first != self.next_seqno)
+            # sealed into a segment underneath us)...
+            if first is not None:
+                return (self.next_seqno is not None
+                        and first != self.next_seqno)
+            # ...or the active is empty *again* but the awaited seqno
+            # was meanwhile sealed into the chain (tiny segments can
+            # seal on every append, so the active is empty at each
+            # poll and the new frames live only in sealed segments)
+            if self.next_seqno is None:
+                return False
+            sealed = [p for p in wal_chain(self.dir, self.path.name)
+                      if p != self.path]
+            nf = _first_seqno(sealed[-1]) if sealed else None
+            return nf is not None and nf >= self.next_seqno
         if first is None:
             try:
                 size = os.path.getsize(self.path)

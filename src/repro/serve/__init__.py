@@ -22,5 +22,5 @@ never JITs.
 from repro.serve.coalescer import Placement, coalesce, scatter  # noqa: F401
 from repro.serve.frontend import AsyncServer                    # noqa: F401
 from repro.serve.loadgen import closed_loop, sustained_at_slo   # noqa: F401
-from repro.serve.server import (Governor, Server, Ticket,       # noqa: F401
-                                WindowPolicy)
+from repro.serve.server import (Governor, QuorumAckError,       # noqa: F401
+                                Server, Ticket, WindowPolicy)

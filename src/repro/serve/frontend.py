@@ -28,7 +28,10 @@ Self-healing (DESIGN.md §15) needs no front-end changes either: under
 quorum acks an awaited write simply resolves later — the pump holds its
 ticket until k followers confirm the bytes and resolves the future on
 release — and the ``role`` property is live, flipping when the wrapped
-engine auto-promotes on lease expiry or fences after being deposed.
+engine auto-promotes on lease expiry or fences after being deposed. If
+the ack becomes impossible (deposition, quorum timeout, drain), the
+held future is *rejected* with `repro.serve.QuorumAckError`, so the
+awaiting client raises instead of hanging forever.
 """
 from __future__ import annotations
 

@@ -41,7 +41,11 @@ a follower that auto-promoted on lease expiry starts accepting writes,
 a fenced (deposed) leader stops; a quorum-mode leader holds each
 window's write acks until k followers confirm the bytes
 (`_pump_replication` releases them against ``quorum_seqno()``); and
-idle gaps run watermark-bounded WAL pruning next to snapshots.
+idle gaps run watermark-bounded WAL pruning next to snapshots. A held
+write never hangs forever: if the leader is deposed, the quorum stays
+unreachable past ``quorum_timeout_s``, or `drain` exhausts its bounded
+release attempts, the held tickets fail with a typed `QuorumAckError`
+instead of leaving clients awaiting a future that never resolves.
 """
 from __future__ import annotations
 
@@ -59,6 +63,16 @@ from repro.serve.coalescer import OP_OF, coalesce, scatter
 KINDS = ("insert", "delete", "lookup", "range")
 
 
+class QuorumAckError(RuntimeError):
+    """A quorum-held write ticket cannot be client-acked: the leader
+    was deposed before k followers confirmed the bytes, or the quorum
+    stayed unreachable past the server's ``quorum_timeout_s``. The
+    write executed and is locally durable — its fate is decided by
+    whether the stream reached the successor — but the client was
+    never acked, which is exactly the §14/§15 contract: an un-acked
+    write may or may not survive failover; an acked one always does."""
+
+
 class Ticket:
     """One submitted request: identity, payload, timing, and (after its
     window executes) the result.
@@ -67,10 +81,13 @@ class Ticket:
     ``(keys, vals, counts, truncated)`` for range — the driver-call
     shapes. ``done`` flips when the reply is stamped; ``latency_s`` is
     the enqueue->reply interval the server's accounting is built on.
+    ``error`` is None on success; a quorum-held write whose ack became
+    impossible carries the `QuorumAckError` here (and raises it from
+    the asyncio future when the front-end attached one).
     """
 
     __slots__ = ("client", "kind", "keys", "vals", "t_enqueue", "t_reply",
-                 "result", "future")
+                 "result", "future", "error")
 
     def __init__(self, client: str, kind: str, keys: np.ndarray,
                  vals: np.ndarray, t_enqueue: float):
@@ -82,6 +99,7 @@ class Ticket:
         self.t_reply: Optional[float] = None
         self.result: Any = None
         self.future: Any = None   # set by the asyncio front-end
+        self.error: Optional[Exception] = None
 
     @property
     def done(self) -> bool:
@@ -251,7 +269,8 @@ class Server:
 
     def __init__(self, tree, *, window: WindowPolicy | None = None,
                  governor: Governor | None = None, mode: str = "coalesced",
-                 role: str = "leader", clock=time.perf_counter):
+                 role: str = "leader", quorum_timeout_s: float = 30.0,
+                 clock=time.perf_counter):
         if mode not in ("coalesced", "per_request"):
             raise ValueError(f"unknown serve mode {mode!r}")
         if role not in ("leader", "follower"):
@@ -261,17 +280,20 @@ class Server:
         self.window = window or WindowPolicy()
         self.governor = governor or Governor()
         self.mode = mode
+        self.quorum_timeout_s = float(quorum_timeout_s)
         self.clock = clock
         self._pending: List[Ticket] = []
         self._pending_ops = 0
         # quorum ack mode: windows whose write tickets are executed and
-        # durable but not yet client-acked — [(commit watermark, tickets)]
+        # durable but not yet client-acked —
+        # [(commit watermark, tickets, hold time)]
         self._unacked: List[tuple] = []
         self._lat: Dict[str, List[float]] = collections.defaultdict(list)
         self.counters = collections.Counter(
             requests=0, ops=0, windows=0, dispatches=0,
             write_ops=0, read_ops=0, range_ops=0,
-            promotions=0, demotions=0, quorum_held=0, quorum_releases=0)
+            promotions=0, demotions=0, quorum_held=0, quorum_releases=0,
+            quorum_failed=0)
 
     # -- role tracking ------------------------------------------------------
     def _sync_role(self) -> None:
@@ -404,7 +426,7 @@ class Server:
             held = [t for t in batch if OP_OF[t.kind] == "write"]
             release = [t for t in batch if OP_OF[t.kind] != "write"]
             watermark = int(self.tree.durability.writer.last_seqno)
-            self._unacked.append((watermark, held))
+            self._unacked.append((watermark, held, self.clock()))
             self.counters["quorum_held"] += len(held)
         self._reply(release)
         self.counters["windows"] += 1
@@ -425,22 +447,67 @@ class Server:
             if t.future is not None and not t.future.done():
                 t.future.set_result(t.result)
 
+    def _fail(self, tickets: List[Ticket], msg: str) -> None:
+        """Fail held tickets with a typed `QuorumAckError`: stamp the
+        reply time (so `done` flips and nothing re-holds them), attach
+        the error, and reject the asyncio future when one is attached —
+        an awaiting client raises instead of hanging forever. Failed
+        tickets stay out of the latency ledgers (they measure served
+        requests)."""
+        t_reply = self.clock()
+        err = QuorumAckError(msg)
+        for t in tickets:
+            t.t_reply = t_reply
+            t.error = err
+            if t.future is not None and not t.future.done():
+                t.future.set_exception(err)
+        self.counters["quorum_failed"] += len(tickets)
+
     def _pump_replication(self) -> None:
         """Drive the engine's replication endpoint (no-op when absent):
         a leader ships the window's now-durable frames, a follower
         applies whatever the stream delivered. On a quorum leader, then
         release every held window whose commit watermark the quorum
         ack has cleared (in window order — acks are monotone, so a
-        cleared later window implies every earlier one)."""
+        cleared later window implies every earlier one). Held windows
+        never hang forever: deposition (the endpoint is gone, fenced,
+        or demoted) fails them all immediately — the successor decides
+        those writes' fate now, this node can never learn it — and a
+        window still unreleased ``quorum_timeout_s`` after its hold
+        fails with a quorum-unreachable error."""
         rep = getattr(self.tree, "replication", None)
         if rep is not None:
             rep.pump()
-        if self._unacked and isinstance(rep, _RepLeader):
-            q = rep.quorum_seqno()
-            while self._unacked and self._unacked[0][0] <= q:
-                _, held = self._unacked.pop(0)
-                self._reply(held)
-                self.counters["quorum_releases"] += len(held)
+        if not self._unacked:
+            return
+        if (not isinstance(rep, _RepLeader) or rep.deposed
+                or getattr(self.tree, "fenced", False)):
+            held, self._unacked = self._unacked, []
+            for _, tickets, _ in held:
+                self._fail(tickets,
+                           "leader deposed before quorum ack: the write "
+                           "executed locally but was never client-acked; "
+                           "whether it survived rides on the successor's "
+                           "applied stream")
+            return
+        q = rep.quorum_seqno()
+        while self._unacked and self._unacked[0][0] <= q:
+            _, held, _ = self._unacked.pop(0)
+            self._reply(held)
+            self.counters["quorum_releases"] += len(held)
+        now = self.clock()
+        expired = [w for w in self._unacked
+                   if now - w[2] > self.quorum_timeout_s]
+        if expired:
+            self._unacked = [w for w in self._unacked
+                             if now - w[2] <= self.quorum_timeout_s]
+            for _, tickets, _ in expired:
+                self._fail(tickets,
+                           f"quorum not reached within "
+                           f"{self.quorum_timeout_s:.1f}s "
+                           "(quorum loss or unpumped followers): the "
+                           "write executed locally but was never "
+                           "client-acked")
 
     def _serve_per_request(self, batch: List[Ticket]) -> None:
         """Baseline dispatch: one classic driver call per request, in
@@ -466,14 +533,23 @@ class Server:
         the tree answers exactly as a sequential per-op engine fed the
         same stream). Held quorum windows get a bounded release
         attempt — acks can only arrive if the followers are being
-        pumped elsewhere, so an unreachable quorum leaves them held
-        (and counted in stats) instead of hanging the barrier."""
+        pumped elsewhere — and whatever is still held afterwards fails
+        with `QuorumAckError`: past the barrier no pump will ever run
+        again, so leaving the tickets pending would strand their
+        awaiting clients forever."""
         while self._pending:
             self.pump(force=True)
         for _ in range(64):
             if not self._unacked:
                 break
             self._pump_replication()
+        if self._unacked:
+            held, self._unacked = self._unacked, []
+            for _, tickets, _ in held:
+                self._fail(tickets,
+                           "quorum unreachable at drain: no further pump "
+                           "will run; the write executed locally but was "
+                           "never client-acked")
         self.tree.drain()
 
     def warm(self, full: bool = True) -> None:
@@ -522,7 +598,7 @@ class Server:
                          "pruned_segments": self.governor.pruned_segments,
                          "credits": self.governor.credits},
             "unacked_windows": len(self._unacked),
-            "unacked_writes": sum(len(h) for _, h in self._unacked),
+            "unacked_writes": sum(len(h) for _, h, _ in self._unacked),
             "window": {"wait_s": self.window.wait_s,
                        "max_ops": self.window.max_ops},
             "engine": {k: int(v) for k, v in self.tree.stats.items()},

@@ -296,6 +296,33 @@ def test_wal_tailer_rewind_retransmits(tmp_path):
     w.close()
 
 
+def test_wal_tailer_follows_sealing_that_leaves_active_empty(tmp_path):
+    """Tiny segments can seal on *every* sync, so the active file is
+    empty whenever the tailer looks: a cursor parked at the head of the
+    empty active must still notice that the frames it awaits were
+    sealed into the chain underneath it and hop there — a cursor that
+    only watches the active file stalls forever (the replication
+    leader would ship nothing despite a growing durable stream)."""
+    dur = WAL.Durability(tmp_path, fsync=False, segment_bytes=1)
+    dur.log_retune("r0")
+    dur.sync()                             # seals immediately: active empty
+    t = WAL.WalTailer(dur.wal_path)
+    assert [r.seqno for r, _ in t.poll()] == [0]
+    assert t.poll() == []                  # parked at the empty active head
+    for i in range(1, 4):                  # every append seals a segment
+        dur.log_retune(f"r{i}")
+        dur.sync()
+    assert (dur.wal_path.read_bytes() == WAL.MAGIC
+            and dur.stats()["wal_segments"] >= 4)
+    assert [r.seqno for r, _ in t.poll()] == [1, 2, 3], \
+        "frames sealed under a parked cursor must still ship"
+    assert t.poll() == []                  # exactly once, then parked again
+    dur.log_retune("r4")
+    dur.sync()
+    assert [r.seqno for r, _ in t.poll()] == [4]
+    dur.close()
+
+
 # --------------------------------------------------------------------------
 # snapshot codec
 # --------------------------------------------------------------------------

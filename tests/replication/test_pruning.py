@@ -143,6 +143,56 @@ def test_stale_cursor_after_prune_flags_bootstrap(tmp_path):
     assert_same_answers(probe_answers(fol.drv), probe_answers(drv))
 
 
+def test_dead_handle_past_grace_stops_pinning_prune(tmp_path):
+    """REVIEW regression: a permanently gone follower (its handle is
+    dead but never detached) must not block WAL pruning forever.
+    Within ``dead_grace_s`` its frozen ack floors the prune (it may
+    still `reattach` and resume); past the grace `prune` auto-detaches
+    it, the floor lifts to the snapshot watermark, and a returning
+    replica re-enters via a fresh bootstrap."""
+    clock = [100.0]
+    p = small_params("jnp")
+    dur = WAL.Durability(tmp_path / "leader", snapshot_every_bytes=1 << 30,
+                         segment_bytes=256)
+    drv = make_engine("single", p, durability=dur)
+    leader = R.Leader(drv, lease_s=2.0, clock=lambda: clock[0])
+    ops = write_stream(n_ops=16)
+    fol = leader.add_follower(tmp_path / "fol")
+    apply_ops(drv, ops, upto=6)
+    for _ in range(3):
+        leader.pump()
+        fol.pump()
+    leader.pump()
+    acked = leader.handles[0].acked_seqno
+    assert acked >= 1
+    # the follower dies for good: sever its end; the next ship fails
+    # the send and marks the handle dead (never detached)
+    leader.handles[0].end.close()
+    apply_ops(drv, ops[6:14])
+    leader.pump()
+    assert leader.handles[0].dead
+    drv.snapshot()
+    apply_ops(drv, ops[14:])            # a live tail past the watermark
+    assert drv.durability.prune_floor() > acked
+    # within the grace the dead ack still floors: the tail it would
+    # need on reattach is retained
+    leader.prune()
+    assert chain_first_seqno(tmp_path / "leader") <= acked + 1
+    assert leader.handles and leader.counters["expired_handles"] == 0
+    # past the grace the handle is auto-detached and the floor lifts
+    clock[0] += leader.dead_grace_s + 1.0
+    assert leader.prune() >= 1
+    assert not leader.handles, "the expired handle must be detached"
+    assert leader.counters["expired_handles"] == 1
+    assert chain_first_seqno(tmp_path / "leader") > acked + 1, \
+        "the dead ack must stop pinning the floor"
+    # the returning replica's path is a fresh bootstrap, which still
+    # converges bitwise off the snapshot + retained tail
+    fol2 = leader.add_follower(tmp_path / "fol2")
+    R.converge(leader, fol2)
+    assert_same_answers(probe_answers(fol2.drv), probe_answers(drv))
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("driver", DRIVERS)
 def test_prune_race_property(tmp_path, driver, backend):

@@ -179,6 +179,80 @@ def test_quorum_loss_blocks_commit_watermark(tmp_path, driver, backend):
     assert_same_answers(probe_answers(prom), want)
 
 
+@pytest.mark.parametrize("driver", DRIVERS)
+def test_fresh_live_watermarks_elect_exactly_one(tmp_path, driver):
+    """The split-brain regression: frames ship every pump but rosters
+    only every heartbeat cadence, so a leader that dies right after
+    shipping leaves EVERY caught-up follower's live watermark ahead of
+    every rostered ack. The successor rule must evaluate roster values
+    only — identical input on every follower, one winner — because
+    mixing in the live watermark would let each follower see itself as
+    best and elect multiple equal-epoch leaders at once."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, driver, "jnp")
+    # post-heartbeat traffic: ship + apply + ack runs, but the frozen
+    # clock throttles the heartbeat cadence — no roster refresh
+    hbs = leader.counters["heartbeats"]
+    apply_ops(drv, ops[8:])
+    for _ in range(2):
+        leader.pump()
+        for f in fols:
+            f.pump()
+    leader.pump()
+    assert leader.counters["heartbeats"] == hbs, "no roster refresh"
+    for f in fols:
+        assert f.last_seqno > max(a for _, a in f.roster), \
+            "the regression's setup: live watermarks ahead of the roster"
+    clock.advance(3.0 * leader.lease_s)
+    for f in fols:
+        f.pump()
+    assert fols[0].new_leader is not None, "the rostered winner promotes"
+    assert fols[1].new_leader is None and not fols[1].promoted, \
+        "a fresher LIVE watermark must not out-elect the shared roster"
+    assert fols[1].counters["standdowns"] == 1
+    assert sum(f.counters["auto_promotions"] for f in fols) == 1
+
+
+def test_auto_promotion_preserves_quorum_mode(tmp_path):
+    """REVIEW regression: heartbeats advertise ack mode + quorum, and
+    `promote(lead=True)` passes them through — a zero-RPO cluster must
+    not silently revert to leader acks after its first automatic
+    failover. The fresh leader has no followers yet, so its commit
+    watermark is -1: nothing is client-acked until quorum re-forms."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, "single", "jnp", ack_mode="quorum", quorum=2)
+    assert all(f.stats()["leader_ack_mode"] == "quorum" for f in fols)
+    clock.advance(3.0 * leader.lease_s)
+    for f in fols:
+        f.pump()
+    new_lead = fols[0].new_leader
+    assert new_lead is not None
+    assert new_lead.ack_mode == "quorum" and new_lead.quorum == 2, \
+        "automatic failover must inherit the quorum ack contract"
+    assert new_lead.quorum_seqno() == -1, \
+        "no re-attached followers yet: nothing may be client-acked"
+
+
+def test_standdown_fallback_promotes_next_rank(tmp_path):
+    """REVIEW regression: a loser that stands down must re-arm a
+    fallback lease, not disarm — if the designated successor died in
+    the same failure (its stream never arrives), the second
+    consecutive expiry peels one rank and promotes the next-ranked
+    follower instead of leaving the cluster leaderless forever."""
+    clock, drv, leader, fols, ops = make_lease_cluster(
+        tmp_path, "single", "jnp")
+    clock.advance(3.0 * leader.lease_s)
+    fols[1].pump()                      # rank 1; rank 0 died too
+    assert fols[1].new_leader is None and not fols[1].promoted
+    assert fols[1].lease_deadline is not None, \
+        "stand-down must re-arm a fallback lease, not disarm"
+    clock.advance(2.0 * leader.lease_s)
+    fols[1].pump()                      # second expiry: rank 1 promotes
+    assert fols[1].new_leader is not None
+    assert fols[1].counters["lease_expiries"] == 2
+    assert fols[1].counters["auto_promotions"] == 1
+
+
 def test_slow_apply_does_not_spuriously_promote(tmp_path):
     """The anti-flap rule: a pump that dwells in `ingest` longer than
     the lease (a cold follower compiling apply shapes) must NOT promote

@@ -4,15 +4,37 @@ a follower server applies the stream in the same seams, serves the
 batched read paths eventually-consistently, and rejects write submits
 at intake. Read-your-writes holds through the serving layer on the
 leader (log-before-ack: the WAL record is durable before the window
-replies)."""
+replies). Quorum ack mode (§15) rides the same seams: write tickets
+are held until k followers confirm, released one pump after the acks
+arrive (the eager advertising heartbeat), and — the REVIEW
+regression — *fail* with a typed `QuorumAckError` on deposition,
+quorum timeout, or drain, instead of leaving clients hanging."""
+import asyncio
+
 import numpy as np
 import pytest
 
 from repl_harness import (assert_same_answers, leader_with_follower,
-                          probe_answers)
+                          make_engine, probe_answers, small_params)
 
 from repro.engine import replication as R
-from repro.serve import AsyncServer, Server, WindowPolicy
+from repro.engine import wal as WAL
+from repro.serve import AsyncServer, QuorumAckError, Server, WindowPolicy
+
+
+def quorum_server(tmp_path, *, quorum_timeout_s=30.0, clock=None):
+    """A quorum-mode (k=1) serving leader with one bootstrapped,
+    never-yet-pumped follower; optional injected clock drives both the
+    lease machinery and the server's hold timeouts."""
+    p = small_params("jnp")
+    dur = WAL.Durability(tmp_path / "leader", snapshot_every_bytes=1 << 30)
+    drv = make_engine("single", p, durability=dur)
+    kw = {} if clock is None else {"clock": clock}
+    leader = R.Leader(drv, ack_mode="quorum", quorum=1, **kw)
+    fol = leader.add_follower(tmp_path / "fol")
+    srv = Server(drv, role="leader", quorum_timeout_s=quorum_timeout_s,
+                 **kw)
+    return drv, leader, fol, srv
 
 
 def test_follower_server_rejects_writes(tmp_path):
@@ -91,3 +113,70 @@ def test_leader_and_follower_servers_end_to_end(tmp_path):
                                   [True, True, True])
     np.testing.assert_array_equal(np.asarray(t.result[0]), vals)
     assert fsrv.stats()["replication"]["applied_records"] >= 1
+
+
+def test_quorum_release_end_to_end(tmp_path):
+    """The happy path: a held write releases one pump after the
+    follower's ack arrives — the eager advertising heartbeat makes the
+    quorum watermark (advertised acks only) catch up immediately
+    instead of waiting out the heartbeat cadence."""
+    drv, leader, fol, srv = quorum_server(tmp_path)
+    t = srv.submit("w", "insert", np.int32([1, 2]), np.int32([10, 20]))
+    srv.pump(force=True)
+    assert not t.done and srv.stats()["unacked_writes"] == 1, \
+        "the write is executed + durable but held for the quorum"
+    fol.pump()                          # apply + ack
+    srv.pump()                          # drain ack, advertise, release
+    assert t.done and t.error is None
+    assert srv.counters["quorum_releases"] == 1
+    assert srv.stats()["unacked_windows"] == 0
+
+
+def test_quorum_held_writes_fail_instead_of_hanging(tmp_path):
+    """REVIEW regression: held tickets must never strand a client.
+    (a) drain fails whatever its bounded release attempt cannot clear;
+    (b) a quorum unreachable past ``quorum_timeout_s`` fails the hold;
+    (c) deposition fails every hold immediately."""
+    clock = [0.0]
+    drv, leader, fol, srv = quorum_server(
+        tmp_path, quorum_timeout_s=5.0, clock=lambda: clock[0])
+    # (a) drain: the follower is never pumped, so no ack can arrive
+    ta = srv.submit("w", "insert", np.int32([1]), np.int32([10]))
+    srv.pump(force=True)
+    assert not ta.done
+    srv.drain()
+    assert ta.done and isinstance(ta.error, QuorumAckError)
+    assert ta.result is None
+    # (b) timeout: a fresh hold expires once the clock passes the bound
+    tb = srv.submit("w", "insert", np.int32([2]), np.int32([20]))
+    srv.pump(force=True)
+    clock[0] += 10.0
+    srv.pump()
+    assert tb.done and isinstance(tb.error, QuorumAckError)
+    assert srv.stats()["unacked_windows"] == 0
+    # (c) deposition: an automatic failover deposed this leader — every
+    # held write fails now (its fate rides on the successor's stream)
+    tc = srv.submit("w", "insert", np.int32([3]), np.int32([30]))
+    srv.pump(force=True)
+    leader.deposed = True
+    drv.demote()
+    srv.pump()
+    assert tc.done and isinstance(tc.error, QuorumAckError)
+    assert srv.counters["quorum_failed"] == 3
+    assert srv.stats()["role"] == "follower", "deposed: the role flips"
+
+
+def test_async_quorum_fail_raises_not_hangs(tmp_path):
+    """The front-end face of the regression: an awaited quorum write
+    whose ack becomes impossible must raise `QuorumAckError` in the
+    awaiting client instead of hanging its future forever."""
+    drv, leader, fol, srv = quorum_server(tmp_path, quorum_timeout_s=0.2)
+
+    async def run():
+        async with AsyncServer(srv) as asrv:
+            with pytest.raises(QuorumAckError):
+                await asrv.submit("w", "insert", np.int32([5]),
+                                  np.int32([50]))
+
+    asyncio.run(run())
+    assert srv.counters["quorum_failed"] >= 1
